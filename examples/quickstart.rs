@@ -1,0 +1,64 @@
+//! Quickstart: load the AOT artifacts, run one inference through the full
+//! stack (PJRT numerics + cycle-level performance model), print the result.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use trex::config::{HwConfig, ModelConfig};
+use trex::model::build_program;
+use trex::runtime::{artifacts, ArtifactSet, PjrtRuntime};
+use trex::sim::{batch_class, simulate, SimOptions};
+
+fn main() -> anyhow::Result<()> {
+    // --- numerics: PJRT executes the jax/pallas-compiled artifact ---------
+    let rt = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let set = ArtifactSet::load(&rt, &artifacts::default_dir())?;
+    println!("loaded model '{}' ({} batch classes)", set.model_name, set.entries.len());
+    set.self_test()?;
+    println!("artifact self-test OK (PJRT outputs match jax check vectors)");
+
+    // One 12-token request → batch class B4 slot on the 32-token tiny plane.
+    let len = 12usize;
+    let class = batch_class(len, set.max_seq)?;
+    let entry = set.get(class)?;
+    let d = entry.d_model;
+    let mut x = vec![0.0f32; entry.tokens * d];
+    let mut rng = trex::util::rng::Rng::new(42);
+    for v in x.iter_mut().take(len * d) {
+        *v = rng.normal_f32() * 0.5;
+    }
+    let y = entry.exe.run_f32(&x, entry.tokens, d)?;
+    let norm: f32 = y[..len * d].iter().map(|v| v * v).sum::<f32>().sqrt();
+    println!(
+        "ran a {len}-token request in class {} → output |y| = {norm:.3} ({} values)",
+        class.name(),
+        len * d
+    );
+
+    // --- performance: the same pass on the modeled chip -------------------
+    let hw = HwConfig::default();
+    let m = ModelConfig::tiny();
+    let prog = build_program(&m, entry.seq, class.batch());
+    let stats = simulate(&hw, &prog, &SimOptions::paper(&hw));
+    println!("\nmodeled T-REX pass @ {:.2} V / {:.0} MHz:", stats.point.vdd, stats.point.freq_mhz);
+    println!("  cycles          {:>12}", stats.cycles);
+    println!(
+        "  latency         {:>12.2} µs/pass ({:.2} µs/token)",
+        stats.seconds() * 1e6,
+        stats.us_per_token()
+    );
+    println!(
+        "  energy          {:>12.3} µJ ({:.3} µJ/token)",
+        stats.energy.total_uj(),
+        stats.uj_per_token()
+    );
+    println!("  utilization     {:>12.1} %", stats.utilization(&hw) * 100.0);
+    println!(
+        "  EMA             {:>12} bytes ({:.1}% of energy)",
+        stats.ema_bytes(),
+        stats.energy.ema_share() * 100.0
+    );
+    Ok(())
+}

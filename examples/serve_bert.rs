@@ -1,0 +1,81 @@
+//! End-to-end serving driver (the EXPERIMENTS.md §E2E run).
+//!
+//! Starts the full T-REX serving stack — PJRT-compiled artifacts, dynamic
+//! batcher, engine thread — and replays a BERT-like request trace (short,
+//! variable-length NLU inputs), then reports latency, throughput,
+//! utilization, EMA and energy. Numerics run on the tiny artifact model;
+//! chip performance is simulated for the BERT-Large workload the trace
+//! represents (both are reported per response).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_bert -- [n_requests]
+//! ```
+
+use std::time::Duration;
+use trex::config::{HwConfig, ModelConfig};
+use trex::coordinator::{BatcherConfig, Engine, EngineConfig, Server, TraceGenerator};
+use trex::runtime::{artifacts, ArtifactSet, PjrtRuntime};
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let art_dir = artifacts::default_dir();
+
+    // Peek at the manifest geometry for the trace generator (the engine
+    // itself loads the artifacts inside its worker thread — PJRT executables
+    // are not Send).
+    let manifest = trex::util::json::Json::from_file(art_dir.join("manifest.json"))
+        .map_err(|e| anyhow::anyhow!("{e} — run `make artifacts` first"))?;
+    let d_model = manifest.get("model")?.get("d_model")?.as_usize()?;
+    let max_seq = manifest.get("model")?.get("max_seq")?.as_usize()?;
+
+    let perf_model = ModelConfig::bert_large();
+    let hw = HwConfig::default();
+    let art_dir2 = art_dir.clone();
+    let handle = Server::start(
+        move || {
+            let rt = PjrtRuntime::cpu()?;
+            let set = ArtifactSet::load(&rt, &art_dir2)?;
+            Engine::new(set, EngineConfig { hw, perf_model, self_test: true })
+        },
+        BatcherConfig { max_seq, max_wait: Duration::from_millis(2) },
+    );
+
+    // BERT-style trace: short inputs (mean scaled onto the artifact plane).
+    let mut gen = TraceGenerator::for_model(&ModelConfig::bert_large(), max_seq, d_model, 0xBE27);
+    println!("replaying {n_requests} BERT-like requests through the coordinator…");
+    let mut submitted = 0usize;
+    for _ in 0..n_requests {
+        handle.submit(gen.next())?;
+        submitted += 1;
+        // Light pacing: a burst every 16 requests lets deadline flushing
+        // and partial batches occur (realistic arrivals).
+        if submitted % 16 == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    // Collect all responses.
+    let mut got = 0usize;
+    let mut checksum = 0.0f64;
+    while got < n_requests {
+        let resp = handle.responses.recv_timeout(Duration::from_secs(30))?;
+        checksum += resp.output.iter().map(|v| *v as f64).sum::<f64>();
+        got += 1;
+    }
+    let report = handle.shutdown()?;
+    let j = report.json();
+    println!("\n=== serve_bert report ({got} responses, output checksum {checksum:.3}) ===");
+    println!("{}", j.to_string_pretty());
+
+    // Paper-facing summary line.
+    let util = j.get("utilization_mean")?.as_f64()?;
+    let chip_uj = j.get("chip_uj_per_request_mean")?.as_f64()?;
+    let p50 = j.get("e2e_latency_us_p50")?.as_f64()?;
+    let p99 = j.get("e2e_latency_us_p99")?.as_f64()?;
+    let rps = j.get("throughput_rps")?.as_f64()?;
+    println!(
+        "summary: {rps:.0} req/s | e2e p50 {p50:.0} µs, p99 {p99:.0} µs | \
+         modeled chip: {util:.1} util, {chip_uj:.1} µJ/request (BERT-Large plane)"
+    );
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Factorizing "training" in Rust: recover shared-dictionary structure from
+//! noisy teacher weights and show the accuracy-vs-sparsity trade-off the
+//! paper's regularizer navigates (its Fig. 23.1.3 training model).
+//!
+//! ```sh
+//! cargo run --release --example train_factorized
+//! ```
+
+use trex::bench_util::{banner, table};
+use trex::factorize::{factorize_joint, mac_counts, FactorizeOptions};
+use trex::util::mat::Mat;
+use trex::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(0x7EA);
+    let (d_in, d_out, rank, true_nnz, layers) = (64usize, 48usize, 16usize, 5usize, 6usize);
+
+    // Teachers: planted structure + 5% noise (trained weights are never
+    // exactly factorized; the regularizer pushes them toward it).
+    let ws_true = Mat::randn(d_in, rank, &mut rng);
+    let teachers: Vec<Mat> = (0..layers)
+        .map(|_| {
+            let mut wd = Mat::zeros(rank, d_out);
+            for c in 0..d_out {
+                for r in rng.sample_distinct(rank, true_nnz) {
+                    *wd.at_mut(r, c) = rng.normal_f32();
+                }
+            }
+            let clean = ws_true.matmul(&wd).unwrap();
+            let noise = Mat::randn(d_in, d_out, &mut rng).scale(0.05 * clean.fro() as f32 / (d_in as f32).sqrt());
+            clean.add(&noise).unwrap()
+        })
+        .collect();
+
+    banner("accuracy vs NZ/column (the regularizer's knob)");
+    let mut rows = Vec::new();
+    for nnz in [2usize, 3, 5, 8, 12] {
+        let f = factorize_joint(
+            &teachers,
+            FactorizeOptions { rank, nnz_per_col: nnz, iters: 12, lambda: 1e-4, seed: 3 },
+        )?;
+        let mean_err = f.rel_err.iter().sum::<f64>() / f.rel_err.len() as f64;
+        let (seq, _, dense) = mac_counts(1, d_in, d_out, rank, nnz);
+        rows.push(vec![
+            format!("{nnz}"),
+            format!("{:.2}%", nnz as f64 / rank as f64 * 100.0),
+            format!("{mean_err:.4}"),
+            format!("{:.2}x", dense as f64 / seq as f64),
+        ]);
+    }
+    table(&["NZ/col", "density", "mean rel err", "MAC reduction vs X·W"], &rows);
+    println!(
+        "\nAccuracy rises steeply until the planted support (NZ/col = {true_nnz}) is \
+         covered, then only mops up the 5% noise — while MAC reduction shrinks. \
+         That trade-off is why the paper can fix a small per-column budget with \
+         negligible accuracy loss."
+    );
+    Ok(())
+}

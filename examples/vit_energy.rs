@@ -1,0 +1,58 @@
+//! ViT inference energy/latency across the chip's operating points —
+//! a per-workload slice of Fig. 23.1.7's voltage sweep plus the EMA ledger.
+//!
+//! ```sh
+//! cargo run --release --example vit_energy
+//! ```
+
+use trex::bench_util::{banner, table};
+use trex::compress::EmaCategory;
+use trex::config::{HwConfig, ModelConfig};
+use trex::model::build_program;
+use trex::sim::{simulate, SimOptions};
+
+fn main() {
+    let hw = HwConfig::default();
+    let m = ModelConfig::vit_base();
+    let prog = build_program(&m, m.max_seq, 1);
+
+    banner("ViT-Base on T-REX: operating-point sweep");
+    let mut rows = Vec::new();
+    for &p in &hw.points {
+        let stats = simulate(&hw, &prog, &SimOptions { point: p, ..SimOptions::paper(&hw) });
+        rows.push(vec![
+            format!("{:.2}", p.vdd),
+            format!("{:.0}", p.freq_mhz),
+            format!("{:.1}", stats.us_per_token()),
+            format!("{:.2}", stats.uj_per_token()),
+            format!("{:.1}", stats.avg_power_mw()),
+            format!("{:.1}%", stats.utilization(&hw) * 100.0),
+        ]);
+    }
+    table(
+        &["Vdd (V)", "f (MHz)", "µs/token", "µJ/token", "avg mW", "util"],
+        &rows,
+    );
+
+    banner("EMA ledger (one 128-token pass)");
+    let stats = simulate(&hw, &prog, &SimOptions::paper(&hw));
+    let mut rows = Vec::new();
+    for cat in EmaCategory::ALL {
+        let bytes = stats.ema.get(cat);
+        if bytes > 0 {
+            rows.push(vec![
+                cat.name().to_string(),
+                format!("{bytes}"),
+                format!("{:.1}%", bytes as f64 / stats.ema_bytes() as f64 * 100.0),
+            ]);
+        }
+    }
+    rows.push(vec!["TOTAL".to_string(), format!("{}", stats.ema_bytes()), "100%".to_string()]);
+    table(&["category", "bytes", "share"], &rows);
+
+    println!(
+        "\nEMA energy share: {:.1}% (the paper's Fig. 23.1.1 shows up to 81% \
+         for *uncompressed* prior accelerators; T-REX's point is pushing this down)",
+        stats.energy.ema_share() * 100.0
+    );
+}

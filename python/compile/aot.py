@@ -1,0 +1,156 @@
+"""AOT compile path: lower the factorized model to HLO text artifacts.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the published `xla` 0.1.6 crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (artifacts/):
+  tiny_b{1,2,4}.hlo.txt   one executable per dynamic-batch class, weights
+                          baked in as constants (self-contained artifacts)
+  manifest.json           model geometry + artifact index + expected output
+                          checksums for the Rust runtime's self-test
+  codec_fixture.json      cross-language codec vectors (python-encoded,
+                          rust-decoded in integration_compress.rs)
+
+Usage: python -m compile.aot [--out artifacts]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import compress
+from compile.model import ModelCfg, build_params, forward_batched, reference_forward
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def codec_fixture(seed=7):
+    """Deterministic python-encoded codec vectors for the Rust decoder."""
+    rng = np.random.default_rng(seed)
+    # non-uniform 4b
+    data = rng.standard_normal(4096).astype(np.float32) * 0.07
+    lut = compress.fit_nonuniform(data, bits=4)
+    w = data[:340].reshape(17, 20)
+    nu_bytes = compress.nonuniform_bytes(w, lut)
+    # uniform 6b
+    vals = (rng.standard_normal(777) * 0.3 + 0.05).astype(np.float32)
+    offset, scale = compress.fit_uniform(vals)
+    u_codes = compress.encode_uniform(vals, offset, scale)
+    u_bytes = compress.pack_bits(u_codes, 6)
+    # delta 5b indices: 64 rows, 30 cols, 6 nnz
+    rows, cols, nnz = 64, 30, 6
+    idx = np.sort(
+        np.stack([rng.choice(rows, size=nnz, replace=False) for _ in range(cols)], axis=1),
+        axis=0,
+    )
+    d_bytes, n_escapes = compress.delta_encode_indices(idx, rows)
+    return {
+        "nonuniform": {
+            "lut": [float(x) for x in lut],
+            "rows": 17,
+            "cols": 20,
+            "values": [float(x) for x in w.ravel()],
+            "encoded_hex": nu_bytes.hex(),
+        },
+        "uniform": {
+            "offset": float(offset),
+            "scale": float(scale),
+            "bits": 6,
+            "values": [float(x) for x in vals],
+            "encoded_hex": u_bytes.hex(),
+        },
+        "delta": {
+            "rows": rows,
+            "cols": cols,
+            "nnz_per_col": nnz,
+            "delta_bits": 5,
+            "indices": [int(i) for i in idx.T.ravel()],  # column-major like rust
+            "encoded_hex": d_bytes.hex(),
+            "n_escapes": int(n_escapes),
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--seed", type=int, default=1)
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+
+    cfg = ModelCfg.tiny()
+    params = build_params(cfg, seed=args.seed)
+
+    manifest = {"model": cfg.to_json(), "artifacts": [], "format": "hlo-text"}
+    rng = np.random.default_rng(123)
+
+    for batch in (1, 2, 4):
+        seq = cfg.max_seq // batch
+        tokens = batch * seq
+        fn = lambda x: (forward_batched(cfg, params, x, batch),)
+        spec = jax.ShapeDtypeStruct((tokens, cfg.d_model), jnp.float32)
+        lowered = jax.jit(fn).lower(spec)
+        text = to_hlo_text(lowered)
+        name = f"{cfg.name}_b{batch}.hlo.txt"
+        with open(os.path.join(out, name), "w") as f:
+            f.write(text)
+
+        # Self-check vector: run the jitted fn on a fixed input; record a
+        # checksum so the Rust runtime can verify its PJRT execution.
+        x = rng.standard_normal((tokens, cfg.d_model)).astype(np.float32)
+        y = np.asarray(jax.jit(fn)(x)[0])
+        # Kernel-vs-ref guard at AOT time (per input slice).
+        yref = np.concatenate(
+            [
+                np.asarray(reference_forward(cfg, params, jnp.asarray(x[i * seq : (i + 1) * seq])))
+                for i in range(batch)
+            ],
+            axis=0,
+        )
+        err = float(np.abs(y - yref).max())
+        assert err < 0.05, f"kernel vs ref mismatch at b{batch}: {err}"
+
+        vec_name = f"{cfg.name}_b{batch}.check.bin"
+        with open(os.path.join(out, vec_name), "wb") as f:
+            f.write(x.astype("<f4").tobytes())
+            f.write(y.astype("<f4").tobytes())
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "batch": batch,
+                "seq": seq,
+                "tokens": tokens,
+                "d_model": cfg.d_model,
+                "check_vector": vec_name,
+                "input_elems": int(x.size),
+                "output_elems": int(y.size),
+                "output_sha256": hashlib.sha256(y.astype("<f4").tobytes()).hexdigest(),
+                "kernel_vs_ref_max_err": err,
+            }
+        )
+        print(f"wrote {name}: {len(text)} chars, tokens={tokens}, ref err={err:.2e}")
+
+    with open(os.path.join(out, "codec_fixture.json"), "w") as f:
+        json.dump(codec_fixture(), f, indent=1)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest + fixture written to {out}")
+
+
+if __name__ == "__main__":
+    main()

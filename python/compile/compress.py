@@ -1,0 +1,171 @@
+"""Build-time compression encoders — bit-exact peers of `rust/src/compress`.
+
+Every stream written here must decode byte-identically in Rust; the
+cross-language fixture (`aot.py --fixture`) pins that contract and
+`rust/tests/integration_compress.rs` verifies it.
+
+Bit packing is LSB-first within each byte (see rust util::bitpack).
+"""
+
+import numpy as np
+
+
+# ------------------------------ bit packing --------------------------------
+
+def pack_bits(codes, width):
+    """Pack unsigned ints (each < 2**width) LSB-first into bytes."""
+    out = bytearray()
+    acc = 0
+    nbits = 0
+    for c in codes:
+        c = int(c)
+        if c >> width:
+            raise ValueError(f"value {c} does not fit {width} bits")
+        acc |= c << nbits
+        nbits += width
+        while nbits >= 8:
+            out.append(acc & 0xFF)
+            acc >>= 8
+            nbits -= 8
+    if nbits:
+        out.append(acc & 0xFF)
+    return bytes(out)
+
+
+def unpack_bits(data, n, width):
+    out = []
+    acc = 0
+    nbits = 0
+    pos = 0
+    for _ in range(n):
+        while nbits < width:
+            acc |= data[pos] << nbits
+            pos += 1
+            nbits += 8
+        out.append(acc & ((1 << width) - 1))
+        acc >>= width
+        nbits -= width
+    return out
+
+
+# --------------------------- non-uniform 4b (W_S) ---------------------------
+
+def fit_nonuniform(data, bits=4, iters=25):
+    """Lloyd-Max scalar quantizer; returns ascending centroid LUT."""
+    data = np.asarray(data, dtype=np.float32).ravel()
+    data = data[np.isfinite(data)]
+    k = 1 << bits
+    qs = (np.arange(k) + 0.5) / k
+    lut = np.quantile(data, qs).astype(np.float32)
+    # de-dup degenerate
+    for i in range(1, k):
+        if lut[i] <= lut[i - 1]:
+            lut[i] = lut[i - 1] + 1e-6
+    for _ in range(iters):
+        edges = (lut[1:] + lut[:-1]) / 2
+        assign = np.searchsorted(edges, data)
+        sums = np.bincount(assign, weights=data, minlength=k)
+        cnts = np.bincount(assign, minlength=k)
+        nz = cnts > 0
+        lut[nz] = (sums[nz] / cnts[nz]).astype(np.float32)
+        lut = np.sort(lut)
+    return lut.astype(np.float32)
+
+
+def encode_nonuniform(w, lut):
+    """Nearest-centroid codes for each element (row-major order)."""
+    w = np.asarray(w, dtype=np.float32)
+    edges = (lut[1:] + lut[:-1]) / 2
+    return np.searchsorted(edges, w.ravel()).astype(np.uint32)
+
+
+def nonuniform_bytes(w, lut, bits=4):
+    return pack_bits(encode_nonuniform(w, lut), bits)
+
+
+def dequant_nonuniform(codes, lut):
+    return lut[np.asarray(codes, dtype=np.int64)]
+
+
+# ----------------------------- uniform 6b (W_D) -----------------------------
+
+def fit_uniform(values, bits=6):
+    values = np.asarray(values, dtype=np.float32).ravel()
+    lo = float(values.min())
+    hi = float(values.max())
+    scale = hi - lo if hi > lo else 1.0
+    return lo, scale
+
+
+def encode_uniform(values, offset, scale, bits=6):
+    levels = (1 << bits) - 1
+    t = np.clip((np.asarray(values, np.float32) - offset) / scale, 0.0, 1.0)
+    # round-half-away-from-zero to match rust's f32::round on positives
+    return np.floor(t * levels + 0.5).astype(np.uint32)
+
+
+def dequant_uniform(codes, offset, scale, bits=6):
+    levels = (1 << bits) - 1
+    return (offset + np.asarray(codes, np.float32) / levels * scale).astype(np.float32)
+
+
+# --------------------------- delta-encoded indices --------------------------
+
+def delta_encode_indices(idx_cols, rows, delta_bits=5):
+    """Encode per-column ascending row indices with 5b deltas + escapes.
+
+    idx_cols: (nnz, n) array, ascending within each column.
+    Returns (bytes, n_escapes). Matches rust compress::delta exactly.
+    """
+    abs_bits = max(int(np.ceil(np.log2(max(rows, 2)))), 1)
+    escape = (1 << delta_bits) - 1
+    stream = []  # (value, width)
+    n_escapes = 0
+    nnz, n = idx_cols.shape
+    for c in range(n):
+        prev = -1
+        for j in range(nnz):
+            r = int(idx_cols[j, c])
+            d = r - prev
+            assert d >= 1, "indices must be strictly ascending"
+            if d < escape:
+                stream.append((d, delta_bits))
+            else:
+                stream.append((escape, delta_bits))
+                stream.append((d, abs_bits))
+                n_escapes += 1
+            prev = r
+    # pack mixed widths
+    out = bytearray()
+    acc = 0
+    nbits = 0
+    for v, w in stream:
+        acc |= int(v) << nbits
+        nbits += w
+        while nbits >= 8:
+            out.append(acc & 0xFF)
+            acc >>= 8
+            nbits -= 8
+    if nbits:
+        out.append(acc & 0xFF)
+    return bytes(out), n_escapes
+
+
+def popularity_perm(idx_cols, rows):
+    """Row permutation (perm[new] = old) by descending usage, stable —
+    matches rust ReorderStrategy::Popularity."""
+    counts = np.bincount(np.asarray(idx_cols).ravel(), minlength=rows)
+    return np.argsort(-counts, kind="stable").astype(np.int64)
+
+
+def apply_row_perm(idx_cols, val_cols, perm):
+    """Apply perm[new]=old to the sparse planes, re-sorting each column."""
+    rows = len(perm)
+    old_to_new = np.empty(rows, dtype=np.int64)
+    old_to_new[perm] = np.arange(rows)
+    new_idx = old_to_new[np.asarray(idx_cols)]
+    order = np.argsort(new_idx, axis=0, kind="stable")
+    return (
+        np.take_along_axis(new_idx, order, axis=0),
+        np.take_along_axis(np.asarray(val_cols), order, axis=0),
+    )

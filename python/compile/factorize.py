@@ -1,0 +1,91 @@
+"""Build-time factorizing training (DESIGN.md §2 substitution for the
+paper's full factorizing model training).
+
+Jointly factorizes a group of equally-shaped layer weights into one shared
+dense W_S and per-layer fixed-NZ/column sparse W_D by alternating least
+squares with hard support projection — the same objective the paper's
+regularized training optimizes, minus the task loss (we fit synthetic
+teacher weights; accuracy-vs-compression is evaluated on a proxy task in
+test_factorize.py).
+"""
+
+import numpy as np
+
+
+def _topk_project(dense, nnz):
+    """Keep the top-|nnz| magnitude entries per column; returns (idx, val)
+    planes of shape (nnz, n) with ascending idx per column."""
+    r, n = dense.shape
+    part = np.argpartition(-np.abs(dense), nnz - 1, axis=0)[:nnz]
+    idx = np.sort(part, axis=0)
+    val = np.take_along_axis(dense, idx, axis=0)
+    return idx.astype(np.int64), val.astype(np.float32)
+
+
+def expand(idx, val, rank):
+    nnz, n = idx.shape
+    dense = np.zeros((rank, n), dtype=np.float32)
+    dense[idx, np.broadcast_to(np.arange(n), (nnz, n))] = val
+    return dense
+
+
+def factorize_joint(layers, rank, nnz_per_col, iters=15, lam=1e-4, seed=0):
+    """layers: list of (d_in, d_out) arrays sharing shape.
+
+    Returns (ws (d_in, rank), [(idx, val)], rel_errs).
+    """
+    layers = [np.asarray(w, np.float32) for w in layers]
+    d_in, d_out = layers[0].shape
+    rng = np.random.default_rng(seed)
+    ws = rng.standard_normal((d_in, rank)).astype(np.float32) / np.sqrt(rank)
+
+    def lstsq_wd(ws, w):
+        g = ws.T @ ws + lam * np.eye(rank, dtype=np.float32)
+        return np.linalg.solve(g, ws.T @ w)
+
+    wds = None
+    for _ in range(iters):
+        wds = []
+        for w in layers:
+            dense = lstsq_wd(ws, w)
+            idx, val = _topk_project(dense, nnz_per_col)
+            # refit values on the support, column by column (small systems)
+            for c in range(d_out):
+                a = ws[:, idx[:, c]]
+                g = a.T @ a + lam * np.eye(nnz_per_col, dtype=np.float32)
+                val[:, c] = np.linalg.solve(g, a.T @ w[:, c])
+            wds.append(expand(idx, val, rank))
+        num = sum(w @ wd.T for w, wd in zip(layers, wds))
+        den = sum(wd @ wd.T for wd in wds) + lam * np.eye(rank, dtype=np.float32)
+        ws = np.linalg.solve(den, num.T).T.astype(np.float32)
+
+    out, errs = [], []
+    for w in layers:
+        dense = lstsq_wd(ws, w)
+        idx, val = _topk_project(dense, nnz_per_col)
+        for c in range(d_out):
+            a = ws[:, idx[:, c]]
+            g = a.T @ a + lam * np.eye(nnz_per_col, dtype=np.float32)
+            val[:, c] = np.linalg.solve(g, a.T @ w[:, c])
+        recon = ws @ expand(idx, val, rank)
+        errs.append(float(np.linalg.norm(w - recon) / max(np.linalg.norm(w), 1e-30)))
+        out.append((idx, val))
+    return ws.astype(np.float32), out, errs
+
+
+def planted_layers(d_in, d_out, rank, nnz, n_layers, seed=0, noise=0.0):
+    """Synthetic teacher weights that ARE low-rank+sparse (plus optional
+    noise) — the structural stand-in for trained transformer weights."""
+    rng = np.random.default_rng(seed)
+    ws = rng.standard_normal((d_in, rank)).astype(np.float32) / np.sqrt(d_in)
+    layers = []
+    for _ in range(n_layers):
+        wd = np.zeros((rank, d_out), dtype=np.float32)
+        for c in range(d_out):
+            rows = rng.choice(rank, size=nnz, replace=False)
+            wd[rows, c] = rng.standard_normal(nnz) / np.sqrt(nnz)
+        w = ws @ wd
+        if noise:
+            w = w + noise * rng.standard_normal(w.shape).astype(np.float32)
+        layers.append(w.astype(np.float32))
+    return layers

@@ -1,0 +1,116 @@
+"""Layer-1 Pallas kernels for the AFU functions.
+
+The chip's AFUs evaluate softmax and GELU through exponential/GELU LUTs plus
+integer arithmetic units (Fig. 23.1.2). We mirror that: `softmax_lut` and
+`gelu_lut` quantize the nonlinearity through a small table exactly the way
+the AFU's LUT does, so the artifact numerics carry the same approximation
+the silicon would. `layernorm` uses the IAU/FAU path (exact arithmetic).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# --- LUT construction (build-time; the tables the RISC-V core would load) ---
+
+EXP_LUT_SIZE = 512
+EXP_RANGE = 16.0  # exp(x) for x in [-16, 0]
+
+GELU_LUT_SIZE = 512
+GELU_RANGE = 8.0  # gelu(x) for x in [-8, 8]
+
+
+def exp_lut_table():
+    xs = jnp.linspace(-EXP_RANGE, 0.0, EXP_LUT_SIZE)
+    return jnp.exp(xs).astype(jnp.float32)
+
+
+def gelu_lut_table():
+    xs = jnp.linspace(-GELU_RANGE, GELU_RANGE, GELU_LUT_SIZE)
+    return (0.5 * xs * (1.0 + jnp.tanh(0.7978845608 * (xs + 0.044715 * xs**3)))).astype(
+        jnp.float32
+    )
+
+
+# ------------------------------- kernels -----------------------------------
+
+
+def _softmax_kernel(x_ref, lut_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    z = x - m  # in (-inf, 0]
+    # LUT exp: clamp to the table range and index (the AFU's lookup).
+    idx = jnp.clip(
+        ((z + EXP_RANGE) * ((EXP_LUT_SIZE - 1) / EXP_RANGE) + 0.5).astype(jnp.int32),
+        0,
+        EXP_LUT_SIZE - 1,
+    )
+    e = lut_ref[idx]
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax_lut(x):
+    """Row softmax with LUT-quantized exp, matching the AFU datapath."""
+    rows, cols = x.shape
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((rows, cols), lambda i: (0, 0)),
+            pl.BlockSpec((EXP_LUT_SIZE,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, cols), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x, exp_lut_table())
+
+
+def _gelu_kernel(x_ref, lut_ref, o_ref):
+    x = x_ref[...]
+    idx = jnp.clip(
+        ((x + GELU_RANGE) * ((GELU_LUT_SIZE - 1) / (2 * GELU_RANGE)) + 0.5).astype(jnp.int32),
+        0,
+        GELU_LUT_SIZE - 1,
+    )
+    # Outside the table range GELU is ~identity (right) / ~0 (left); the AFU
+    # clamps the same way.
+    y = lut_ref[idx]
+    o_ref[...] = jnp.where(x > GELU_RANGE, x, jnp.where(x < -GELU_RANGE, 0.0, y))
+
+
+def gelu_lut(x):
+    rows, cols = x.shape
+    return pl.pallas_call(
+        _gelu_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((rows, cols), lambda i: (0, 0)),
+            pl.BlockSpec((GELU_LUT_SIZE,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, cols), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x, gelu_lut_table())
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) * jax.lax.rsqrt(var + 1e-5) * g_ref[...] + b_ref[...]
+
+
+def layernorm(x, gamma, beta):
+    rows, cols = x.shape
+    return pl.pallas_call(
+        _layernorm_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((rows, cols), lambda i: (0, 0)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, cols), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x, gamma, beta)

@@ -1,0 +1,120 @@
+"""Layer-1 Pallas kernel: the paper's fused sequential MM.
+
+Computes  Z = (X . dequant_LUT(W_S)) . W_D  in one kernel so the intermediate
+Y = X.W_S never leaves VMEM — the TPU analogue of the chip's DMM->SMM path
+through TRF buffers (DESIGN.md §3 Hardware-Adaptation):
+
+  * the 16-entry codebook gather `lut[codes]` sits directly ahead of the
+    first `dot`, mirroring the DMM cores' LUT dequantizer at the PE port;
+  * W_D arrives dense-expanded (gather-expand schedule): fixed-NZ/column
+    sparsity is a *storage* format — on an MXU the winning schedule is one
+    dense (r x n) tile, not a scalar NZ loop;
+  * the grid tiles (m, n); Y stays resident, so no relayout between the two
+    contractions — the kernel-level analogue of storing Y column-wise for
+    the SMM column product.
+
+Kernels are lowered with ``interpret=True``: CPU PJRT cannot execute Mosaic
+custom-calls; real-TPU performance is *estimated* from the BlockSpec VMEM
+footprint in DESIGN.md §8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. The chip's DMM tile is 16x16; on an MXU the natural
+# tile is 128, but artifact models are small (d<=64), so we pick the largest
+# power of two that divides the shapes, capped at 128.
+DEFAULT_BLOCK = 128
+
+
+def _pick_block(dim, cap=DEFAULT_BLOCK):
+    b = 1
+    while b * 2 <= min(dim, cap) and dim % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def _fused_kernel(x_ref, lut_ref, codes_ref, wd_ref, o_ref):
+    # x: (bm, d)  codes: (d, r) int32  lut: (16,)  wd: (r, bn)  o: (bm, bn)
+    ws = lut_ref[codes_ref[...]]                      # dequant at the port
+    y = jnp.dot(x_ref[...], ws, preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.dot(y, wd_ref[...], preferred_element_type=jnp.float32)
+
+
+def factorized_proj(x, ws_codes, lut, wd_dense, block_m=None, block_n=None):
+    """Fused (X . dequant(W_S)) . W_D.
+
+    x: (m, d) f32; ws_codes: (d, r) int32 in [0,16); lut: (16,) f32;
+    wd_dense: (r, n) f32 (6b-dequantized, scatter-expanded). Returns (m, n).
+    """
+    m, d = x.shape
+    d2, r = ws_codes.shape
+    r2, n = wd_dense.shape
+    assert d == d2 and r == r2, (x.shape, ws_codes.shape, wd_dense.shape)
+    bm = block_m or _pick_block(m)
+    bn = block_n or _pick_block(n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),      # X rows stream
+            pl.BlockSpec((16,), lambda i, j: (0,)),          # LUT resident
+            pl.BlockSpec((d, r), lambda i, j: (0, 0)),       # W_S resident
+            pl.BlockSpec((r, bn), lambda i, j: (0, j)),      # W_D cols stream
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, lut, ws_codes, wd_dense)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def tiled_matmul(a, b, block_m=None, block_n=None):
+    """Plain tiled MM (attention scores/context path — the DMM cores'
+    activation-x-activation mode)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm = block_m or _pick_block(m)
+    bn = block_n or _pick_block(n)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("rank",))
+def expand_wd(idx, val, rank):
+    """Scatter pointer-free CSC planes to dense (rank, n) — build-time only."""
+    nnz, n = idx.shape
+    dense = jnp.zeros((rank, n), dtype=val.dtype)
+    cols = jnp.broadcast_to(jnp.arange(n)[None, :], (nnz, n))
+    return dense.at[idx, cols].set(val)
+
+
+def vmem_footprint_bytes(m, d, r, n, block_m=None, block_n=None):
+    """Estimated VMEM residency of one grid step of `factorized_proj` —
+    the L1 perf metric recorded in DESIGN.md §8 (f32 elements)."""
+    bm = block_m or _pick_block(m)
+    bn = block_n or _pick_block(n)
+    x_tile = bm * d
+    ws = d * r * 2          # codes (int32 in interpret; 4b on real storage) + dequant
+    lut = 16
+    wd_tile = r * bn
+    y = bm * r
+    out = bm * bn
+    return 4 * (x_tile + ws + lut + wd_tile + y + out)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every kernel — the correctness ground truth.
+
+Each function here is the mathematically-plain version of a Pallas kernel in
+`factorized_mm.py` / `afu.py`; pytest sweeps shapes and checks allclose.
+"""
+
+import jax.numpy as jnp
+
+
+def dequant_nonuniform(codes, lut):
+    """LUT dequantization of 4-bit codes (the DMM cores' dequantizer)."""
+    return lut[codes]
+
+
+def dequant_uniform(codes, scale, offset, bits=6):
+    """Uniform dequantization with per-layer (scale, offset)."""
+    levels = (1 << bits) - 1
+    return offset + codes.astype(jnp.float32) / levels * scale
+
+
+def expand_wd(idx, val, rank):
+    """Scatter the pointer-free CSC (fixed NZ/column) to a dense r x n matrix.
+
+    idx, val: (nnz_per_col, n) — column-major NZ planes.
+    """
+    nnz, n = idx.shape
+    dense = jnp.zeros((rank, n), dtype=val.dtype)
+    cols = jnp.broadcast_to(jnp.arange(n)[None, :], (nnz, n))
+    return dense.at[idx, cols].set(val)
+
+
+def factorized_proj(x, ws_codes, lut, wd_dense):
+    """The paper's sequential MM: (X . dequant(W_S)) . W_D."""
+    ws = dequant_nonuniform(ws_codes, lut)
+    y = x @ ws
+    return y @ wd_dense
+
+
+def softmax(x, axis=-1):
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def gelu(x):
+    # tanh approximation (what the AFU's LUT is fit to).
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608 * (x + 0.044715 * x**3)))
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def attention(q, k, v, heads):
+    """Multi-head attention over (tokens, d_model) activations."""
+    t, d = q.shape
+    dh = d // heads
+    qh = q.reshape(t, heads, dh).transpose(1, 0, 2)
+    kh = k.reshape(t, heads, dh).transpose(1, 0, 2)
+    vh = v.reshape(t, heads, dh).transpose(1, 0, 2)
+    scores = jnp.einsum("htd,hsd->hts", qh, kh) / jnp.sqrt(dh).astype(q.dtype)
+    ctx = jnp.einsum("hts,hsd->htd", softmax(scores), vh)
+    return ctx.transpose(1, 0, 2).reshape(t, d)

@@ -1,0 +1,56 @@
+"""AOT artifacts: manifest integrity and the self-check vectors."""
+
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_all_batch_classes(manifest):
+    batches = sorted(a["batch"] for a in manifest["artifacts"])
+    assert batches == [1, 2, 4]
+    for a in manifest["artifacts"]:
+        assert a["batch"] * a["seq"] == a["tokens"]
+        assert a["tokens"] == manifest["model"]["max_seq"]
+
+
+def test_artifacts_exist_and_are_hlo_text(manifest):
+    for a in manifest["artifacts"]:
+        path = os.path.join(ART, a["name"])
+        assert os.path.exists(path)
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{a['name']} is not HLO text"
+
+
+def test_check_vectors_match_manifest_checksums(manifest):
+    for a in manifest["artifacts"]:
+        blob = open(os.path.join(ART, a["check_vector"]), "rb").read()
+        n_in, n_out = a["input_elems"], a["output_elems"]
+        assert len(blob) == 4 * (n_in + n_out)
+        y = np.frombuffer(blob[4 * n_in :], dtype="<f4")
+        assert hashlib.sha256(y.tobytes()).hexdigest() == a["output_sha256"]
+        assert np.isfinite(y).all()
+        assert a["kernel_vs_ref_max_err"] < 0.05
+
+
+def test_codec_fixture_shape():
+    path = os.path.join(ART, "codec_fixture.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    fx = json.load(open(path))
+    assert set(fx) == {"nonuniform", "uniform", "delta"}
+    assert len(fx["nonuniform"]["lut"]) == 16
+    assert fx["delta"]["delta_bits"] == 5

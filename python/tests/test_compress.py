@@ -1,0 +1,82 @@
+"""Codec roundtrips and the properties the paper's compression relies on."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import compress
+
+RNG = np.random.default_rng(7)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 200),
+    width=st.integers(1, 16),
+    seed=st.integers(0, 2**31),
+)
+def test_pack_unpack_roundtrip(n, width, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 1 << width, size=n)
+    data = compress.pack_bits(codes, width)
+    assert len(data) == (n * width + 7) // 8
+    assert compress.unpack_bits(data, n, width) == list(codes)
+
+
+def test_pack_rejects_overflow():
+    with pytest.raises(ValueError):
+        compress.pack_bits([16], 4)
+
+
+def test_nonuniform_lloyd_quality():
+    data = RNG.standard_normal(20000).astype(np.float32) * 0.05
+    lut = compress.fit_nonuniform(data, bits=4)
+    assert len(lut) == 16 and np.all(np.diff(lut) >= 0)
+    codes = compress.encode_nonuniform(data, lut)
+    deq = compress.dequant_nonuniform(codes, lut)
+    rel = np.linalg.norm(data - deq) / np.linalg.norm(data)
+    assert rel < 0.2, rel
+
+
+def test_uniform_roundtrip_within_half_step():
+    vals = (RNG.standard_normal(5000) * 0.3).astype(np.float32)
+    offset, scale = compress.fit_uniform(vals)
+    codes = compress.encode_uniform(vals, offset, scale)
+    assert codes.max() <= 63
+    deq = compress.dequant_uniform(codes, offset, scale)
+    assert np.abs(vals - deq).max() <= 0.5 * scale / 63 * 1.001
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(8, 256),
+    cols=st.integers(1, 30),
+    seed=st.integers(0, 2**31),
+)
+def test_delta_encoding_size(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    nnz = min(6, rows)
+    idx = np.sort(
+        np.stack([rng.choice(rows, size=nnz, replace=False) for _ in range(cols)], axis=1),
+        axis=0,
+    )
+    data, n_escapes = compress.delta_encode_indices(idx, rows)
+    abs_bits = max(int(np.ceil(np.log2(max(rows, 2)))), 1)
+    expected_bits = idx.size * 5 + n_escapes * abs_bits
+    assert len(data) == (expected_bits + 7) // 8
+
+
+def test_popularity_reorder_preserves_structure():
+    rows, cols, nnz = 64, 40, 8
+    idx = np.sort(
+        np.stack([RNG.choice(rows, size=nnz, replace=False) for _ in range(cols)], axis=1),
+        axis=0,
+    )
+    val = RNG.standard_normal((nnz, cols)).astype(np.float32)
+    perm = compress.popularity_perm(idx, rows)
+    assert sorted(perm) == list(range(rows))
+    new_idx, new_val = compress.apply_row_perm(idx, val, perm)
+    # Columns still strictly ascending, same multiset of values per column.
+    assert np.all(np.diff(new_idx, axis=0) > 0)
+    for c in range(cols):
+        assert sorted(new_val[:, c]) == pytest.approx(sorted(val[:, c]))

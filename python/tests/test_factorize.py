@@ -1,0 +1,33 @@
+"""Factorizer: recovers planted structure; error decreases with capacity."""
+
+import numpy as np
+
+from compile import factorize
+
+
+def test_recovers_planted():
+    layers = factorize.planted_layers(24, 20, rank=8, nnz=3, n_layers=3, seed=1)
+    ws, wds, errs = factorize.factorize_joint(layers, rank=8, nnz_per_col=3, iters=15, seed=2)
+    assert ws.shape == (24, 8)
+    assert len(wds) == 3
+    for idx, val in wds:
+        assert idx.shape == val.shape == (3, 20)
+        assert np.all(np.diff(idx, axis=0) > 0)  # ascending, unique
+    assert max(errs) < 0.3, errs
+
+
+def test_more_nnz_is_better():
+    layers = factorize.planted_layers(20, 16, rank=10, nnz=6, n_layers=2, seed=3, noise=0.01)
+    errs = []
+    for nnz in (2, 8):
+        _, _, e = factorize.factorize_joint(layers, rank=10, nnz_per_col=nnz, iters=10, seed=4)
+        errs.append(np.mean(e))
+    assert errs[1] < errs[0]
+
+
+def test_expand_shapes():
+    idx = np.array([[0, 1], [2, 3]])
+    val = np.array([[1.0, 2.0], [3.0, 4.0]], dtype=np.float32)
+    dense = factorize.expand(idx, val, rank=5)
+    assert dense.shape == (5, 2)
+    assert dense[0, 0] == 1.0 and dense[2, 0] == 3.0 and dense[3, 1] == 4.0

@@ -1,0 +1,92 @@
+"""Kernel-vs-ref correctness: hypothesis sweeps shapes; allclose vs ref.py."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import afu, factorized_mm as fmm, ref
+
+RNG = np.random.default_rng(42)
+
+
+def rand(*shape):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+
+
+dims = st.sampled_from([8, 16, 32, 64])
+small_dims = st.sampled_from([4, 8, 16])
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, d=dims, r=small_dims, n=dims)
+def test_factorized_proj_matches_ref(m, d, r, n):
+    x = rand(m, d)
+    codes = jnp.asarray(RNG.integers(0, 16, size=(d, r)), jnp.int32)
+    lut = jnp.sort(rand(16))
+    wd = rand(r, n)
+    got = fmm.factorized_proj(x, codes, lut, wd)
+    want = ref.factorized_proj(x, codes, lut, wd)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=dims, k=dims, n=dims)
+def test_tiled_matmul_matches_ref(m, k, n):
+    a, b = rand(m, k), rand(k, n)
+    np.testing.assert_allclose(fmm.tiled_matmul(a, b), a @ b, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(rows=st.sampled_from([4, 16, 32]), cols=st.sampled_from([8, 32, 64]))
+def test_softmax_lut_close_to_exact(rows, cols):
+    x = rand(rows, cols) * 3.0
+    got = afu.softmax_lut(x)
+    want = ref.softmax(x)
+    # LUT-quantized exp: row sums exact, values within table resolution.
+    np.testing.assert_allclose(np.sum(got, axis=-1), 1.0, atol=1e-5)
+    np.testing.assert_allclose(got, want, atol=0.02)
+
+
+@settings(max_examples=15, deadline=None)
+@given(rows=st.sampled_from([4, 16]), cols=st.sampled_from([8, 64, 128]))
+def test_gelu_lut_close_to_exact(rows, cols):
+    x = rand(rows, cols) * 4.0
+    got = afu.gelu_lut(x)
+    want = ref.gelu(x)
+    np.testing.assert_allclose(got, want, atol=0.03)
+
+
+def test_gelu_lut_tails_clamp_correctly():
+    x = jnp.asarray([[-20.0, -8.0, 0.0, 8.0, 20.0]], jnp.float32)
+    got = np.asarray(afu.gelu_lut(x))[0]
+    assert got[0] == 0.0          # deep negative tail -> 0
+    assert got[4] == 20.0         # deep positive tail -> identity
+    assert abs(got[2]) < 0.02  # table granularity around 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.sampled_from([4, 32]), cols=st.sampled_from([16, 64]))
+def test_layernorm_matches_ref(rows, cols):
+    x = rand(rows, cols)
+    g, b = rand(cols), rand(cols)
+    np.testing.assert_allclose(
+        afu.layernorm(x, g, b), ref.layernorm(x, g, b), rtol=2e-4, atol=2e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(r=st.sampled_from([8, 16]), n=st.sampled_from([8, 32]), nnz=st.sampled_from([2, 4]))
+def test_expand_wd_matches_ref(r, n, nnz):
+    idx = np.sort(
+        np.stack([RNG.choice(r, size=nnz, replace=False) for _ in range(n)], axis=1), axis=0
+    )
+    val = RNG.standard_normal((nnz, n)).astype(np.float32)
+    got = fmm.expand_wd(jnp.asarray(idx), jnp.asarray(val), rank=r)
+    want = ref.expand_wd(jnp.asarray(idx), jnp.asarray(val), r)
+    np.testing.assert_allclose(got, want)
+
+
+def test_vmem_footprint_reported():
+    bytes_ = fmm.vmem_footprint_bytes(32, 64, 16, 64)
+    assert 0 < bytes_ < 16 * 2**20, "one grid step must fit VMEM"

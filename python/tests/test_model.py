@@ -1,0 +1,48 @@
+"""L2 model: kernel forward vs pure-jnp reference on identical weights."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.model import ModelCfg, build_params, forward, forward_batched, reference_forward
+
+CFG = ModelCfg.tiny()
+PARAMS = build_params(CFG, seed=11)
+RNG = np.random.default_rng(5)
+
+
+def test_forward_matches_reference():
+    x = jnp.asarray(RNG.standard_normal((16, CFG.d_model)), jnp.float32)
+    got = np.asarray(forward(CFG, PARAMS, x))
+    want = np.asarray(reference_forward(CFG, PARAMS, x))
+    # LUT softmax/gelu vs exact: bounded approximation error.
+    assert np.abs(got - want).max() < 0.05
+
+
+def test_batched_forward_is_blockwise_independent():
+    seq = 8
+    xs = [RNG.standard_normal((seq, CFG.d_model)).astype(np.float32) for _ in range(4)]
+    x = jnp.asarray(np.concatenate(xs, axis=0))
+    batched = np.asarray(forward_batched(CFG, PARAMS, x, batch=4))
+    for i, xi in enumerate(xs):
+        solo = np.asarray(forward(CFG, PARAMS, jnp.asarray(xi)))
+        np.testing.assert_allclose(batched[i * seq : (i + 1) * seq], solo, atol=1e-5)
+
+
+def test_forward_shape_and_finite():
+    x = jnp.asarray(RNG.standard_normal((CFG.max_seq, CFG.d_model)), jnp.float32)
+    y = np.asarray(forward(CFG, PARAMS, x))
+    assert y.shape == (CFG.max_seq, CFG.d_model)
+    assert np.isfinite(y).all()
+
+
+def test_params_are_quantized():
+    for g in PARAMS["groups"].values():
+        codes = np.asarray(g["codes"])
+        assert codes.min() >= 0 and codes.max() < 16
+        assert len(np.asarray(g["lut"])) == 16
+    # W_D dense planes have exactly nnz_per_col non-zeros per column.
+    layer = PARAMS["layers"][0]
+    wd = np.asarray(layer["wq"]["wd"])
+    nnz_per_col = (wd != 0).sum(axis=0)
+    assert (nnz_per_col <= CFG.nnz_per_col).all()
+    assert nnz_per_col.max() == CFG.nnz_per_col

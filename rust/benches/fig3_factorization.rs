@@ -1,0 +1,99 @@
+//! Fig. 23.1.3 — factorizing training + compression.
+//!
+//! Regenerates the three claims:
+//!   (1) factorization reduces EMA 8.5–10.7× across the four workloads,
+//!   (2) compression (4b non-uniform W_S + 5b delta indices + 6b uniform
+//!       values) adds another 2.1–2.9×,
+//!   (3) the sequential order (X·W_S)·W_D needs 1–2.14× fewer MACs than X·W,
+//! plus the delta-encoding/reorder ablation on a real factorized group.
+
+use trex::bench_util::{banner, ratio, table};
+use trex::compress::{reorder_gain, CompressionReport, DeltaCodec};
+use trex::config::{ModelConfig, WORKLOADS};
+use trex::factorize::{factorize_joint, mac_counts, FactorizeOptions};
+use trex::util::mat::Mat;
+use trex::util::rng::Rng;
+
+fn main() {
+    banner("Fig 23.1.3 (a): EMA / parameter reductions per workload");
+    let mut rows = Vec::new();
+    for name in WORKLOADS {
+        let m = ModelConfig::preset(name).unwrap();
+        let r = CompressionReport::analytic(&m);
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.1} MB", r.baseline_bytes as f64 / 1e6),
+            ratio(r.factorization_ratio()),
+            ratio(r.compression_ratio()),
+            ratio(r.total_ratio()),
+            ratio(r.mac_ratio()),
+        ]);
+    }
+    rows.push(vec![
+        "paper".into(),
+        "-".into(),
+        "8.5-10.7x".into(),
+        "2.1-2.9x".into(),
+        "15.9-25.5x".into(),
+        "1-2.14x".into(),
+    ]);
+    table(
+        &["workload", "dense 16b", "factorize", "compress", "total", "MAC vs X·W"],
+        &rows,
+    );
+
+    banner("Fig 23.1.3 (b): computing-order MAC comparison (BERT-Large FFN-up)");
+    let m = ModelConfig::bert_large();
+    let (seq, fused, dense) = mac_counts(128, m.d_model, m.d_ff, m.rank, m.nnz_per_col);
+    table(
+        &["order", "MACs", "vs dense"],
+        &[
+            vec!["X·W (dense)".into(), format!("{dense}"), "1.00x".into()],
+            vec!["X·(W_S·W_D)".into(), format!("{fused}"), ratio(dense as f64 / fused as f64)],
+            vec!["(X·W_S)·W_D".into(), format!("{seq}"), ratio(dense as f64 / seq as f64)],
+        ],
+    );
+
+    banner("Fig 23.1.3 (c): delta-encoding ablation on a factorized group");
+    // Factorize a real group, then measure index bits under each reorder.
+    let mut rng = Rng::new(0xF16_3);
+    let (d_in, d_out, rank, nnz) = (96usize, 80usize, 32usize, 6usize);
+    let ws_true = Mat::randn(d_in, rank, &mut rng);
+    let teachers: Vec<Mat> = (0..3)
+        .map(|_| {
+            let mut wd = Mat::zeros(rank, d_out);
+            for c in 0..d_out {
+                // Community structure: columns prefer one half of the rank
+                // space — the correlation reordering exploits.
+                let half = (c % 2) * (rank / 2);
+                for r in rng.sample_distinct(rank / 2, nnz) {
+                    *wd.at_mut(half + r, c) = rng.normal_f32();
+                }
+            }
+            ws_true.matmul(&wd).unwrap()
+        })
+        .collect();
+    let f = factorize_joint(
+        &teachers,
+        FactorizeOptions { rank, nnz_per_col: nnz, iters: 10, lambda: 1e-4, seed: 5 },
+    )
+    .unwrap();
+    let mut rows = Vec::new();
+    for (l, wd) in f.wds.iter().enumerate() {
+        let gains = reorder_gain(wd, 5).unwrap();
+        let codec = DeltaCodec::new(5, rank).unwrap();
+        let _ = codec;
+        rows.push(vec![
+            format!("W_D layer {l}"),
+            format!("{:.2}", gains[0].1),
+            format!("{:.2}", gains[1].1),
+            format!("{:.2}", gains[2].1),
+            "8.00".into(),
+        ]);
+    }
+    table(
+        &["matrix", "b/idx identity", "b/idx popularity", "b/idx co-occur", "b/idx absolute"],
+        &rows,
+    );
+    println!("\npaper: rearrangement lets 5b deltas replace 8b indices; co-occurrence\nordering approaches the nominal 5.0 b/idx.");
+}

@@ -1,0 +1,115 @@
+//! Fig. 23.1.6 — the measurement & comparison table.
+//!
+//! Per workload: parameter-size reduction, EMA reduction vs the dense
+//! baseline, utilization improvement, µs/token and µJ/token at the fast
+//! corner (0.85 V / 450 MHz) and the efficient corner (0.45 V / 60 MHz) —
+//! then the prior-work comparison with the paper's EMA adders.
+//!
+//! Paper bands: params ↓15.9–25.5×, EMA ↓31–65.9×, util ×1.2–3.4,
+//! 68–567 µs/token, 0.41–3.95 µJ/token.
+
+use trex::baseline::{dense_program, prior_works};
+use trex::bench_util::{banner, ratio, table};
+use trex::compress::CompressionReport;
+use trex::config::{HwConfig, ModelConfig, WORKLOADS};
+use trex::model::build_program;
+use trex::sim::{batch_class, simulate, SimOptions};
+
+fn main() {
+    let hw = HwConfig::default();
+    banner("Fig 23.1.6 (a): per-workload measurement (simulated chip)");
+    let mut rows = Vec::new();
+    for name in WORKLOADS {
+        let m = ModelConfig::preset(name).unwrap();
+        let rep = CompressionReport::analytic(&m);
+        let seq = (m.mean_input_len as usize).clamp(1, m.max_seq);
+        let class = batch_class(seq, hw.max_seq).unwrap();
+        let b = class.batch();
+
+        let fast = SimOptions { act_bits: m.act_bits, ..SimOptions::paper(&hw) };
+        let eco = SimOptions { point: hw.min_point(), ..fast };
+        let trex_fast = simulate(&hw, &build_program(&m, seq, b), &fast);
+        let trex_eco = simulate(&hw, &build_program(&m, seq, b), &eco);
+        let dense = simulate(&hw, &dense_program(&m, seq), &fast);
+        // Features-off comparator for the utilization column.
+        let base_util = simulate(
+            &hw,
+            &build_program(&m, seq, 1),
+            &SimOptions { trf: false, ..fast },
+        );
+
+        let ema_gain =
+            dense.ema_bytes() as f64 / (trex_fast.ema_bytes() as f64 / b as f64);
+        let util_gain = trex_fast.utilization(&hw) / base_util.utilization(&hw);
+        rows.push(vec![
+            name.to_string(),
+            ratio(rep.total_ratio()),
+            ratio(ema_gain),
+            ratio(util_gain),
+            format!("{:.0}", trex_fast.us_per_token()),
+            format!("{:.2}", trex_fast.uj_per_token()),
+            format!("{:.0}", trex_eco.us_per_token()),
+            format!("{:.2}", trex_eco.uj_per_token()),
+        ]);
+    }
+    rows.push(vec![
+        "paper".into(),
+        "15.9-25.5x".into(),
+        "31-65.9x".into(),
+        "1.2-3.4x".into(),
+        "68-567".into(),
+        "0.41-3.95".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    table(
+        &[
+            "workload",
+            "param ↓",
+            "EMA ↓",
+            "util ×",
+            "µs/tok @.85V",
+            "µJ/tok @.85V",
+            "µs/tok @.45V",
+            "µJ/tok @.45V",
+        ],
+        &rows,
+    );
+
+    banner("Fig 23.1.6 (b): comparison vs prior accelerators (EMA added at 3.7 pJ/b)");
+    let m = ModelConfig::bert_large();
+    let seq = 28usize;
+    let b = batch_class(seq, hw.max_seq).unwrap().batch();
+    let trex = simulate(
+        &hw,
+        &build_program(&m, seq, b),
+        &SimOptions { act_bits: m.act_bits, ..SimOptions::paper(&hw) },
+    );
+    let trex_uj = trex.uj_per_token();
+    let mut rows = vec![vec![
+        "T-REX (this repro, BERT-Large)".to_string(),
+        "16".into(),
+        format!("{:.2}", trex_uj),
+        "incl.".into(),
+        "1.00x".into(),
+    ]];
+    for w in prior_works() {
+        rows.push(vec![
+            w.name.to_string(),
+            format!("{}", w.tech_nm),
+            format!("{:.2}", w.uj_per_token_with_ema()),
+            if w.includes_ema { "incl.".into() } else { "added".into() },
+            ratio(w.uj_per_token_with_ema() / trex_uj),
+        ]);
+    }
+    table(
+        &["accelerator", "node (nm)", "µJ/token (w/ EMA)", "EMA", "vs T-REX"],
+        &rows,
+    );
+    println!(
+        "\nshape check: with EMA included, T-REX wins against every prior work —\n\
+         by the largest factors against CIM designs that excluded DRAM traffic.\n\
+         Absolute µJ/token is power-anchored to Fig 23.1.7 (see EXPERIMENTS.md\n\
+         for the paper-internal inconsistency analysis)."
+    );
+}

@@ -1,0 +1,129 @@
+//! L3 hot-path microbenchmarks (our §Perf baseline): simulator throughput,
+//! batcher decision latency, codec encode/decode bandwidth, JSON, matmul.
+//! These are the quantities the performance pass optimizes — recorded
+//! before/after in EXPERIMENTS.md §Perf.
+
+use trex::bench_util::{bench, banner, si, table};
+use trex::compress::{DeltaCodec, NonUniformQuant, UniformQuant};
+use trex::config::{HwConfig, ModelConfig};
+use trex::coordinator::{BatcherConfig, DynamicBatcher, Request};
+use trex::factorize::CscFixed;
+use trex::model::build_program;
+use trex::sim::{simulate, SimOptions};
+use trex::util::mat::Mat;
+use trex::util::rng::Rng;
+
+fn main() {
+    let hw = HwConfig::default();
+    banner("L3 hot-path microbenchmarks");
+    let mut rows = Vec::new();
+
+    // 1. simulator: ops/s on the biggest program.
+    let m = ModelConfig::bert_large();
+    let prog = build_program(&m, 128, 1);
+    let opts = SimOptions::paper(&hw);
+    let n_ops = prog.ops.len();
+    let r = bench("simulate bert-large pass", 3, 30, || {
+        std::hint::black_box(simulate(&hw, &prog, &opts));
+    });
+    rows.push(vec![
+        r.name.clone(),
+        format!("{:.1} µs", r.mean_us()),
+        si(n_ops as f64 / (r.mean_ns / 1e9), "ops/s"),
+    ]);
+
+    // 2. program build.
+    let r = bench("build_program bert-large", 3, 30, || {
+        std::hint::black_box(build_program(&m, 128, 1));
+    });
+    rows.push(vec![r.name.clone(), format!("{:.1} µs", r.mean_us()), "-".into()]);
+
+    // 3. batcher decision latency.
+    let mut rng = Rng::new(1);
+    let reqs: Vec<Request> = (0..4096)
+        .map(|i| Request::new(i, rng.range(1, 128), Vec::new()))
+        .collect();
+    let r = bench("batcher push (4096 reqs)", 3, 50, || {
+        let mut b = DynamicBatcher::new(BatcherConfig::default());
+        for req in &reqs {
+            std::hint::black_box(b.push(req.clone()).unwrap());
+        }
+    });
+    rows.push(vec![
+        r.name.clone(),
+        format!("{:.1} µs", r.mean_us()),
+        format!("{:.0} ns/req", r.mean_ns / 4096.0),
+    ]);
+
+    // 4. codecs on a bert-large-shaped W_D slab.
+    let mut rng = Rng::new(2);
+    let rank = 640usize;
+    let cols = 1024usize;
+    let nnz = 84usize;
+    let mut idx = Vec::new();
+    let mut val = Vec::new();
+    for _ in 0..cols {
+        let mut rs = rng.sample_distinct(rank, nnz);
+        rs.sort_unstable();
+        for r in rs {
+            idx.push(r as u16);
+            val.push(rng.normal_f32());
+        }
+    }
+    let sp = CscFixed { rows: rank, cols, nnz_per_col: nnz, idx, val };
+    let codec = DeltaCodec::new(5, rank).unwrap();
+    let nz_bytes = sp.nnz() as f64;
+    let r = bench("delta encode W_D (86k nz)", 3, 30, || {
+        std::hint::black_box(codec.encode(&sp).unwrap());
+    });
+    rows.push(vec![
+        r.name.clone(),
+        format!("{:.1} µs", r.mean_us()),
+        si(nz_bytes / (r.mean_ns / 1e9), "idx/s"),
+    ]);
+    let enc = codec.encode(&sp).unwrap();
+    let r = bench("delta decode W_D", 3, 30, || {
+        std::hint::black_box(codec.decode(&enc, rank, cols, nnz).unwrap());
+    });
+    rows.push(vec![
+        r.name.clone(),
+        format!("{:.1} µs", r.mean_us()),
+        si(nz_bytes / (r.mean_ns / 1e9), "idx/s"),
+    ]);
+
+    let uq = UniformQuant::fit(&sp.val, 6).unwrap();
+    let r = bench("uniform 6b encode (86k vals)", 3, 30, || {
+        std::hint::black_box(uq.encode(&sp.val).unwrap());
+    });
+    rows.push(vec![
+        r.name.clone(),
+        format!("{:.1} µs", r.mean_us()),
+        si(nz_bytes / (r.mean_ns / 1e9), "val/s"),
+    ]);
+
+    let ws = Mat::randn(1024, 640, &mut rng);
+    let q = NonUniformQuant::fit(&ws.data[..20000], 4, 20).unwrap();
+    let r = bench("nonuniform 4b encode W_S (655k)", 2, 10, || {
+        std::hint::black_box(q.encode(&ws).unwrap());
+    });
+    rows.push(vec![
+        r.name.clone(),
+        format!("{:.0} µs", r.mean_us()),
+        si(ws.data.len() as f64 / (r.mean_ns / 1e9), "elem/s"),
+    ]);
+
+    // 5. reference matmul (functional-mode numerics).
+    let a = Mat::randn(128, 1024, &mut rng);
+    let b = Mat::randn(1024, 640, &mut rng);
+    let flops = 2.0 * 128.0 * 1024.0 * 640.0;
+    let r = bench("Mat::matmul 128x1024x640", 2, 10, || {
+        std::hint::black_box(a.matmul(&b).unwrap());
+    });
+    rows.push(vec![
+        r.name.clone(),
+        format!("{:.0} µs", r.mean_us()),
+        si(flops / (r.mean_ns / 1e9), "FLOP/s"),
+    ]);
+
+    table(&["benchmark", "mean", "throughput"], &rows);
+}

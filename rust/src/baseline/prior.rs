@@ -1,0 +1,150 @@
+//! Prior-accelerator comparison rows (Fig. 23.1.6).
+//!
+//! The paper compares against recent transformer accelerators; for works
+//! that report core-only energy/latency (excluding external memory), it adds
+//! an EMA estimate "at 3.7 pJ/b and 6.4 GB/s, based on LPDDR3 SDRAM
+//! [22,23]". We encode each comparison row with its published numbers and
+//! apply the same adjustment.
+
+use crate::util::json::Json;
+
+/// One published accelerator's reported numbers.
+#[derive(Debug, Clone)]
+pub struct PriorWork {
+    pub name: &'static str,
+    pub reference: &'static str,
+    pub tech_nm: u32,
+    /// Reported energy per token, µJ (core-only unless `includes_ema`).
+    pub uj_per_token: f64,
+    /// Reported latency per token, µs (if published).
+    pub us_per_token: Option<f64>,
+    pub includes_ema: bool,
+    /// Model weight bytes streamed per token for the workload it reports
+    /// (used for the EMA adder when `includes_ema` is false).
+    pub weight_bytes_per_token: f64,
+}
+
+/// The paper's own EMA-cost constants.
+pub const EMA_PJ_PER_BIT: f64 = 3.7;
+pub const EMA_GBPS: f64 = 6.4;
+
+impl PriorWork {
+    /// Energy per token with the paper's EMA adder applied.
+    pub fn uj_per_token_with_ema(&self) -> f64 {
+        if self.includes_ema {
+            self.uj_per_token
+        } else {
+            self.uj_per_token + self.weight_bytes_per_token * 8.0 * EMA_PJ_PER_BIT * 1e-6
+        }
+    }
+    /// Latency per token with the DRAM transfer adder (6.4 GB/s) applied.
+    pub fn us_per_token_with_ema(&self) -> Option<f64> {
+        self.us_per_token.map(|us| {
+            if self.includes_ema {
+                us
+            } else {
+                us + self.weight_bytes_per_token / EMA_GBPS * 1e-3
+            }
+        })
+    }
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name)),
+            ("reference", Json::str(self.reference)),
+            ("tech_nm", Json::num(self.tech_nm as f64)),
+            ("uj_per_token_reported", Json::num(self.uj_per_token)),
+            ("uj_per_token_with_ema", Json::num(self.uj_per_token_with_ema())),
+            ("includes_ema", Json::Bool(self.includes_ema)),
+        ])
+    }
+}
+
+/// Comparison rows. Energy numbers are the works' published per-token
+/// figures; `weight_bytes_per_token` estimates use each work's evaluated
+/// model (BERT-class encoders ≈ 100M params at their reported precision,
+/// streamed once per ~128-token pass).
+pub fn prior_works() -> Vec<PriorWork> {
+    vec![
+        PriorWork {
+            name: "Bitline-Transpose CIM",
+            reference: "[2] Tu et al., ISSCC 2022",
+            tech_nm: 28,
+            uj_per_token: 15.59,
+            us_per_token: None,
+            includes_ema: false,
+            // 8b BERT-base-class: ~110M params / 128-token pass.
+            weight_bytes_per_token: 110e6 / 128.0,
+        },
+        PriorWork {
+            name: "MulTCIM",
+            reference: "[10] Tu et al., ISSCC 2023",
+            tech_nm: 28,
+            uj_per_token: 2.24,
+            us_per_token: None,
+            includes_ema: false,
+            weight_bytes_per_token: 110e6 / 128.0,
+        },
+        PriorWork {
+            name: "C-Transformer",
+            reference: "[21] Kim et al., ISSCC 2024",
+            tech_nm: 28,
+            uj_per_token: 2.6, // best of its 2.6–18.1 range
+            us_per_token: None,
+            includes_ema: true, // implicit weight generation targets EMA
+            weight_bytes_per_token: 0.0,
+        },
+        PriorWork {
+            name: "Sparse xfmr + butterfly skip",
+            reference: "[3] Liu et al., ISSCC 2023",
+            tech_nm: 28,
+            uj_per_token: 8.2, // derived from 53.8 TOPS/W at BERT-base op count
+            us_per_token: None,
+            includes_ema: false,
+            weight_bytes_per_token: 55e6 / 128.0, // 50% pruned
+        },
+        PriorWork {
+            name: "Entropy early-exit xfmr",
+            reference: "[19] Tambe et al., ISSCC 2023",
+            tech_nm: 12,
+            uj_per_token: 6.1, // derived from 18.1 TFLOPS/W at BERT-base op count
+            us_per_token: None,
+            includes_ema: false,
+            weight_bytes_per_token: 80e6 / 128.0,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_adder_increases_core_only_numbers() {
+        for w in prior_works() {
+            if !w.includes_ema {
+                assert!(w.uj_per_token_with_ema() > w.uj_per_token, "{}", w.name);
+            } else {
+                assert_eq!(w.uj_per_token_with_ema(), w.uj_per_token);
+            }
+        }
+    }
+
+    #[test]
+    fn ema_adder_magnitude() {
+        // 110M params / 128 tokens ≈ 859 kB/token → ×8×3.7pJ ≈ 25.4 µJ/token:
+        // EMA dwarfs the core energy, which is exactly Fig. 23.1.1's point.
+        let w = &prior_works()[0];
+        let adder = w.uj_per_token_with_ema() - w.uj_per_token;
+        assert!((20.0..35.0).contains(&adder), "adder {adder:.1} µJ/token");
+        assert!(adder > w.uj_per_token, "EMA should dominate core energy");
+    }
+
+    #[test]
+    fn rows_have_unique_names() {
+        let works = prior_works();
+        let mut names: Vec<_> = works.iter().map(|w| w.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), works.len());
+    }
+}

@@ -1,0 +1,129 @@
+//! Minimal benchmark harness (criterion is not vendored in the offline
+//! environment). Provides warmup + timed iterations with mean/σ/percentiles,
+//! and a tabular reporter shared by all `benches/fig*.rs` targets.
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: stats::mean(&samples),
+        stddev_ns: stats::stddev(&samples),
+        p50_ns: stats::percentile(&samples, 50.0),
+        p99_ns: stats::percentile(&samples, 99.0),
+    }
+}
+
+/// Print a header box for a figure reproduction.
+pub fn banner(title: &str) {
+    let line = "=".repeat(title.len() + 4);
+    println!("\n{line}\n| {title} |\n{line}");
+}
+
+/// Print a table: header row + data rows, left-aligned columns.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let head: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    println!("{}", fmt_row(&head));
+    println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Format helper: "12.3x" style ratios.
+pub fn ratio(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+/// Format helper: engineering quantities.
+pub fn si(x: f64, unit: &str) -> String {
+    let (v, p) = if x.abs() >= 1e9 {
+        (x / 1e9, "G")
+    } else if x.abs() >= 1e6 {
+        (x / 1e6, "M")
+    } else if x.abs() >= 1e3 {
+        (x / 1e3, "k")
+    } else {
+        (x, "")
+    };
+    format!("{v:.2} {p}{unit}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut x = 0u64;
+        let r = bench("spin", 2, 10, || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+        std::hint::black_box(x);
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(si(1500.0, "B"), "1.50 kB");
+        assert_eq!(si(2.5e6, "B/s"), "2.50 MB/s");
+        assert_eq!(si(3.0, "J"), "3.00 J");
+    }
+
+    #[test]
+    fn table_does_not_panic_on_ragged_rows() {
+        table(&["a", "b"], &[vec!["1".into()], vec!["1".into(), "2".into(), "3".into()]]);
+    }
+}

@@ -1,0 +1,29 @@
+//! The paper's three compression codecs plus the EMA byte ledger.
+//!
+//! * [`nonuniform`] — 16b→4b **non-uniform** (Lloyd-Max) quantization of the
+//!   shared `W_S`, dequantized on-chip through a 16-entry LUT (one LUT per
+//!   W_S group; the DMM cores reconfigure the LUT per group).
+//! * [`uniform`] — 16b→6b **uniform** quantization of `W_D` values with a
+//!   per-layer scale `(M−m)` and offset `m` that symmetrizes the
+//!   distribution and uses the full code range.
+//! * [`delta`] — 8b→5b **delta encoding** of `W_D` row indices (pointer-free
+//!   CSC), with an escape code for rare large gaps.
+//! * [`reorder`] — the row-rearrangement that shrinks deltas without
+//!   changing `W_S·W_D` (apply the same permutation to `W_S` columns).
+//! * [`ledger`] — byte accounting: where every EMA byte goes, and the
+//!   compression report behind Fig. 23.1.3 / 23.1.6.
+//!
+//! All encoders are bit-exact peers of `python/compile/compress.py`; the
+//! cross-language fixtures live in `rust/tests/integration_compress.rs`.
+
+pub mod delta;
+pub mod ledger;
+pub mod nonuniform;
+pub mod reorder;
+pub mod uniform;
+
+pub use delta::{DeltaCodec, EncodedIndices};
+pub use ledger::{CompressionReport, EmaCategory, EmaLedger};
+pub use nonuniform::NonUniformQuant;
+pub use reorder::{reorder_gain, reorder_rows};
+pub use uniform::UniformQuant;

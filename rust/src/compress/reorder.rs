@@ -1,0 +1,201 @@
+//! Row rearrangement of `W_D` (= column rearrangement of `W_S`) that
+//! minimizes index deltas before delta encoding (paper Fig. 23.1.3:
+//! "we rearranged the columns of W_S and the corresponding rows of W_D").
+//!
+//! The product `W_S·W_D` is invariant under a shared permutation, so any
+//! ordering is legal; the goal is to cluster rows that co-occur in the same
+//! columns so consecutive non-zero indices have small gaps.
+//!
+//! Two heuristics, composable:
+//! 1. **Popularity sort** — rows used by many columns migrate to the front;
+//!    columns then see their indices packed near zero.
+//! 2. **Greedy co-occurrence chaining** — a nearest-neighbour walk over rows
+//!    using (#columns where both rows appear) as similarity, which places
+//!    frequently-co-selected rows adjacently.
+
+use crate::compress::delta::DeltaCodec;
+use crate::error::Result;
+use crate::factorize::sparse::CscFixed;
+
+/// Strategy for the rearrangement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReorderStrategy {
+    /// Identity (baseline for the ablation).
+    None,
+    /// Sort rows by descending usage count.
+    Popularity,
+    /// Popularity init + greedy co-occurrence chaining.
+    CoOccurrence,
+}
+
+/// Compute a permutation `perm[new] = old` of the rows of `sp` under the
+/// given strategy. Apply with [`CscFixed::permute_rows`] and
+/// [`crate::util::mat::Mat::permute_cols`] on the matching `W_S`.
+pub fn reorder_rows(sp: &CscFixed, strategy: ReorderStrategy) -> Vec<usize> {
+    match strategy {
+        ReorderStrategy::None => (0..sp.rows).collect(),
+        ReorderStrategy::Popularity => popularity_perm(sp),
+        ReorderStrategy::CoOccurrence => cooccurrence_perm(sp),
+    }
+}
+
+fn usage_counts(sp: &CscFixed) -> Vec<usize> {
+    let mut count = vec![0usize; sp.rows];
+    for &i in &sp.idx {
+        count[i as usize] += 1;
+    }
+    count
+}
+
+fn popularity_perm(sp: &CscFixed) -> Vec<usize> {
+    let count = usage_counts(sp);
+    let mut rows: Vec<usize> = (0..sp.rows).collect();
+    // Stable sort: ties keep natural order (determinism).
+    rows.sort_by_key(|&r| std::cmp::Reverse(count[r]));
+    rows
+}
+
+fn cooccurrence_perm(sp: &CscFixed) -> Vec<usize> {
+    let n = sp.rows;
+    // Dense co-occurrence for ranks ≤ 1024 (rank ≤ 256 in all presets).
+    let mut co = vec![0u32; n * n];
+    let mut col_rows: Vec<usize> = Vec::with_capacity(sp.nnz_per_col);
+    for c in 0..sp.cols {
+        col_rows.clear();
+        col_rows.extend(sp.col_entries(c).map(|(r, _)| r));
+        for i in 0..col_rows.len() {
+            for j in i + 1..col_rows.len() {
+                co[col_rows[i] * n + col_rows[j]] += 1;
+                co[col_rows[j] * n + col_rows[i]] += 1;
+            }
+        }
+    }
+    let count = usage_counts(sp);
+    let start = (0..n).max_by_key(|&r| count[r]).unwrap_or(0);
+    let mut perm = Vec::with_capacity(n);
+    let mut used = vec![false; n];
+    perm.push(start);
+    used[start] = true;
+    for _ in 1..n {
+        let last = *perm.last().unwrap();
+        // Next row: strongest co-occurrence with the chain tail; break ties
+        // with popularity, then index (determinism).
+        let mut best: Option<usize> = None;
+        for r in 0..n {
+            if used[r] {
+                continue;
+            }
+            best = match best {
+                None => Some(r),
+                Some(b) => {
+                    let key_r = (co[last * n + r], count[r]);
+                    let key_b = (co[last * n + b], count[b]);
+                    if key_r > key_b {
+                        Some(r)
+                    } else {
+                        Some(b)
+                    }
+                }
+            };
+        }
+        let r = best.unwrap();
+        perm.push(r);
+        used[r] = true;
+    }
+    perm
+}
+
+/// Measure mean bits/index under a codec for each strategy — the ablation
+/// used by `fig3_factorization`.
+pub fn reorder_gain(sp: &CscFixed, delta_bits: u32) -> Result<Vec<(ReorderStrategy, f64)>> {
+    let codec = DeltaCodec::new(delta_bits, sp.rows)?;
+    let mut out = Vec::new();
+    for s in [ReorderStrategy::None, ReorderStrategy::Popularity, ReorderStrategy::CoOccurrence] {
+        let perm = reorder_rows(sp, s);
+        let sp2 = sp.permute_rows(&perm)?;
+        let enc = codec.encode(&sp2)?;
+        out.push((s, codec.bits_per_index(&enc)));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mat::Mat;
+    use crate::util::rng::Rng;
+
+    fn clustered_sparse(rng: &mut Rng, rows: usize, cols: usize, nnz: usize) -> CscFixed {
+        // Columns draw their rows from one of 8 "communities" — realistic
+        // structure that reordering can exploit after a random scramble.
+        let communities = 8;
+        let span = rows / communities;
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        // Scramble community membership so the natural order is bad.
+        let mut scramble: Vec<usize> = (0..rows).collect();
+        rng.shuffle(&mut scramble);
+        for c in 0..cols {
+            let com = c % communities;
+            let mut rs: Vec<usize> = rng
+                .sample_distinct(span, nnz)
+                .into_iter()
+                .map(|r| scramble[com * span + r])
+                .collect();
+            rs.sort_unstable();
+            for r in rs {
+                idx.push(r as u16);
+                val.push(rng.normal_f32());
+            }
+        }
+        CscFixed { rows, cols, nnz_per_col: nnz, idx, val }
+    }
+
+    #[test]
+    fn permutations_are_valid() {
+        let mut rng = Rng::new(81);
+        let sp = clustered_sparse(&mut rng, 64, 40, 6);
+        for s in [ReorderStrategy::None, ReorderStrategy::Popularity, ReorderStrategy::CoOccurrence] {
+            let p = reorder_rows(&sp, s);
+            let mut sorted = p.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..64).collect::<Vec<_>>(), "{s:?} not a permutation");
+        }
+    }
+
+    #[test]
+    fn reorder_reduces_bits_on_clustered_data() {
+        let mut rng = Rng::new(82);
+        let sp = clustered_sparse(&mut rng, 256, 400, 8);
+        let gains = reorder_gain(&sp, 5).unwrap();
+        let none = gains[0].1;
+        let coo = gains[2].1;
+        assert!(
+            coo < none,
+            "co-occurrence ({coo:.2} b/idx) should beat identity ({none:.2} b/idx)"
+        );
+    }
+
+    #[test]
+    fn product_preserved_under_reorder() {
+        let mut rng = Rng::new(83);
+        let sp = clustered_sparse(&mut rng, 64, 24, 6);
+        let ws = Mat::randn(20, 64, &mut rng);
+        let perm = reorder_rows(&sp, ReorderStrategy::CoOccurrence);
+        let sp2 = sp.permute_rows(&perm).unwrap();
+        let ws2 = ws.permute_cols(&perm).unwrap();
+        let a = ws.matmul(&sp.to_dense()).unwrap();
+        let b = ws2.matmul(&sp2.to_dense()).unwrap();
+        assert!(a.rel_err(&b) < 1e-6);
+        sp2.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = Rng::new(84);
+        let sp = clustered_sparse(&mut rng, 64, 50, 8);
+        let a = reorder_rows(&sp, ReorderStrategy::CoOccurrence);
+        let b = reorder_rows(&sp, ReorderStrategy::CoOccurrence);
+        assert_eq!(a, b);
+    }
+}

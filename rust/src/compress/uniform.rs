@@ -1,0 +1,169 @@
+//! 16b→6b uniform quantization of `W_D` values with per-layer scale/offset.
+//!
+//! Each layer's non-zero values are normalized by a layer-specific scale
+//! `(M−m)` and offset `m` before uniform quantization — the paper's trick to
+//! center the distribution and use the full 6-bit range. The SMM cores'
+//! uniform dequantizer restores 16b values from `(code, scale, offset)`.
+
+use crate::error::{Error, Result};
+use crate::util::bitpack;
+
+/// Per-layer uniform quantizer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UniformQuant {
+    /// Offset `m` (the minimum of the value distribution).
+    pub offset: f32,
+    /// Scale `M − m`.
+    pub scale: f32,
+    pub bits: u32,
+}
+
+impl UniformQuant {
+    /// Fit to a layer's values: `m = min`, `M = max`.
+    pub fn fit(values: &[f32], bits: u32) -> Result<Self> {
+        if values.is_empty() {
+            return Err(Error::codec("UniformQuant::fit on empty values".to_string()));
+        }
+        if bits == 0 || bits > 16 {
+            return Err(Error::codec(format!("UniformQuant: bad bits {bits}")));
+        }
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in values {
+            if !v.is_finite() {
+                return Err(Error::codec("UniformQuant::fit: non-finite value".to_string()));
+            }
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let scale = if hi > lo { hi - lo } else { 1.0 };
+        Ok(UniformQuant { offset: lo, scale, bits })
+    }
+
+    fn levels(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+
+    pub fn encode_one(&self, x: f32) -> u32 {
+        let t = ((x - self.offset) / self.scale).clamp(0.0, 1.0);
+        (t * self.levels() as f32).round() as u32
+    }
+
+    pub fn decode_one(&self, code: u32) -> f32 {
+        self.offset + (code.min(self.levels()) as f32 / self.levels() as f32) * self.scale
+    }
+
+    pub fn encode(&self, values: &[f32]) -> Result<Vec<u8>> {
+        // §Perf iteration 2: hoist the reciprocal scale and level count out
+        // of the per-element path (encode_one recomputes both), and stream
+        // codes straight into the packer's accumulator.
+        let levels = self.levels() as f32;
+        let mul = levels / self.scale;
+        let mut bytes = Vec::with_capacity(values.len() * self.bits as usize / 8 + 8);
+        let (mut acc, mut nbits): (u64, u32) = (0, 0);
+        for &v in values {
+            let t = ((v - self.offset) * mul).clamp(0.0, levels);
+            acc |= (t.round() as u64) << nbits;
+            nbits += self.bits;
+            while nbits >= 8 {
+                bytes.push(acc as u8);
+                acc >>= 8;
+                nbits -= 8;
+            }
+        }
+        if nbits > 0 {
+            bytes.push(acc as u8);
+        }
+        Ok(bytes)
+    }
+
+    pub fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
+        Ok(bitpack::unpack(bytes, n, self.bits)?
+            .into_iter()
+            .map(|c| self.decode_one(c))
+            .collect())
+    }
+
+    /// Quantize-dequantize in place.
+    pub fn apply(&self, values: &mut [f32]) {
+        for v in values {
+            *v = self.decode_one(self.encode_one(*v));
+        }
+    }
+
+    pub fn bytes_for(&self, n: usize) -> usize {
+        (n * self.bits as usize).div_ceil(8)
+    }
+
+    /// Worst-case absolute quantization error: half a step.
+    pub fn max_abs_err(&self) -> f32 {
+        0.5 * self.scale / self.levels() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_within_half_step() {
+        let mut rng = Rng::new(61);
+        let vals: Vec<f32> = (0..5000).map(|_| rng.normal_f32() * 0.3 + 0.1).collect();
+        let q = UniformQuant::fit(&vals, 6).unwrap();
+        let bytes = q.encode(&vals).unwrap();
+        assert_eq!(bytes.len(), (5000 * 6 + 7) / 8);
+        let back = q.decode(&bytes, 5000).unwrap();
+        let tol = q.max_abs_err() * 1.0001;
+        for (a, b) in vals.iter().zip(&back) {
+            assert!((a - b).abs() <= tol, "{a} vs {b}, tol {tol}");
+        }
+    }
+
+    #[test]
+    fn full_range_used() {
+        // min maps to code 0, max maps to the top code — the point of the
+        // per-layer (M−m, m) normalization.
+        let vals = vec![-2.0f32, -1.0, 0.0, 3.0];
+        let q = UniformQuant::fit(&vals, 6).unwrap();
+        assert_eq!(q.encode_one(-2.0), 0);
+        assert_eq!(q.encode_one(3.0), 63);
+        assert!((q.decode_one(0) - -2.0).abs() < 1e-6);
+        assert!((q.decode_one(63) - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let q = UniformQuant { offset: 0.0, scale: 1.0, bits: 6 };
+        assert_eq!(q.encode_one(-5.0), 0);
+        assert_eq!(q.encode_one(99.0), 63);
+        // decode clamps bad codes too
+        assert!((q.decode_one(200) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_data() {
+        let q = UniformQuant::fit(&[0.7; 10], 6).unwrap();
+        assert_eq!(q.encode_one(0.7), 0);
+        assert!((q.decode_one(0) - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(UniformQuant::fit(&[], 6).is_err());
+        assert!(UniformQuant::fit(&[1.0], 0).is_err());
+        assert!(UniformQuant::fit(&[f32::NAN], 6).is_err());
+    }
+
+    #[test]
+    fn property_monotone_codes() {
+        // Larger values never get smaller codes.
+        let mut rng = Rng::new(62);
+        let vals: Vec<f32> = (0..500).map(|_| rng.normal_f32()).collect();
+        let q = UniformQuant::fit(&vals, 6).unwrap();
+        let mut sorted = vals.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let codes: Vec<u32> = sorted.iter().map(|&v| q.encode_one(v)).collect();
+        assert!(codes.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

@@ -1,0 +1,443 @@
+//! T-REX chip geometry, operating points and energy table.
+//!
+//! All geometry numbers come straight from the paper (Fig. 23.1.2):
+//! 4 DMM cores with 4×4 PEs of 4×4 MACs (outer-product, 16×16 tiles),
+//! 4 SMM cores with 8×8 MACs, 2 AFUs (64 IAUs + 16 FAUs), a global buffer,
+//! and a DMA to LPDDR3 modelled at the paper's own 3.7 pJ/b and 6.4 GB/s.
+//! The MAC is bit-serial on the 4b multiplier: a 16b/8b/4b multiply takes
+//! 16/4/1 cycles. Operating points span 0.45–0.85 V, 60–450 MHz,
+//! 7.12–152.5 mW (Fig. 23.1.7).
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Operand precision of a MAC operation. The multiplier is 4-bit; wider
+/// operands are processed bit-serially over multiple cycles (paper: 16b/8b/4b
+/// over 16/4/1 cycles — quadratic in the width ratio).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Int4,
+    Int8,
+    Int16,
+}
+
+impl Precision {
+    /// Cycles one MAC unit needs per multiply-accumulate at this precision.
+    pub fn mac_cycles(self) -> u64 {
+        match self {
+            Precision::Int4 => 1,
+            Precision::Int8 => 4,
+            Precision::Int16 => 16,
+        }
+    }
+    pub fn bits(self) -> u32 {
+        match self {
+            Precision::Int4 => 4,
+            Precision::Int8 => 8,
+            Precision::Int16 => 16,
+        }
+    }
+    pub fn from_bits(bits: u32) -> Result<Self> {
+        match bits {
+            4 => Ok(Precision::Int4),
+            8 => Ok(Precision::Int8),
+            16 => Ok(Precision::Int16),
+            b => Err(Error::config(format!("unsupported MAC precision: {b}b"))),
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Int4 => "int4",
+            Precision::Int8 => "int8",
+            Precision::Int16 => "int16",
+        }
+    }
+}
+
+/// One measured voltage/frequency/power point from Fig. 23.1.7.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperatingPoint {
+    pub vdd: f64,      // volts
+    pub freq_mhz: f64, // MHz
+    /// Peak (fully active) chip power at this point, mW — measurement anchor.
+    pub peak_mw: f64,
+}
+
+impl OperatingPoint {
+    pub fn cycle_ns(&self) -> f64 {
+        1e3 / self.freq_mhz
+    }
+    /// Peak energy per cycle, pJ.
+    pub fn peak_pj_per_cycle(&self) -> f64 {
+        // mW / MHz = nJ/cycle → ×1e3 = pJ/cycle
+        self.peak_mw / self.freq_mhz * 1e3
+    }
+}
+
+/// Per-event energy constants (pJ), derived from the operating point by
+/// [`HwConfig::energy_at`]. The split across blocks follows the typical
+/// breakdown for 16nm MAC-array accelerators; the *total* is anchored to the
+/// chip's measured power so end-to-end µJ/token is calibrated, and EMA uses
+/// the paper's own LPDDR3 constant.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyTable {
+    /// Energy per MAC-cycle (one 4b multiply step), pJ.
+    pub mac_pj: f64,
+    /// Register-file (TRF / line-buffer) access, pJ per 16b word.
+    pub rf_pj: f64,
+    /// Global-buffer SRAM access, pJ per 16b word.
+    pub gb_pj: f64,
+    /// AFU arithmetic op (IAU/FAU/LUT lookup), pJ per op.
+    pub afu_pj: f64,
+    /// Static/idle leakage per block per cycle, pJ.
+    pub idle_pj: f64,
+    /// External memory access, pJ per *bit* (paper: 3.7 pJ/b LPDDR3).
+    pub ema_pj_per_bit: f64,
+}
+
+/// Chip geometry + memory system + operating points.
+#[derive(Debug, Clone)]
+pub struct HwConfig {
+    // --- compute geometry (Fig. 23.1.2) ---
+    pub dmm_cores: usize,
+    /// PEs per DMM core along each dimension (4 ⇒ 4×4 = 16 PEs).
+    pub dmm_pe_dim: usize,
+    /// MACs per PE along each dimension (4 ⇒ 4×4 = 16 MACs; PE = 4×4 outer product).
+    pub pe_mac_dim: usize,
+    pub smm_cores: usize,
+    /// MACs per SMM core along each dimension (8 ⇒ 8×8 = 64 MACs).
+    pub smm_mac_dim: usize,
+    pub afus: usize,
+    pub afu_iaus: usize,
+    pub afu_faus: usize,
+
+    // --- memory system ---
+    /// Global buffer capacity, bytes (holds compressed W_S + one layer's W_D
+    /// + intermediates).
+    pub gb_bytes: usize,
+    /// TRF submatrix dimension (square, two-direction accessible).
+    pub trf_dim: usize,
+    /// DRAM bandwidth, GB/s (paper uses 6.4 GB/s LPDDR3 for latency adders).
+    pub dram_gbps: f64,
+    /// DRAM energy, pJ/bit (paper: 3.7).
+    pub dram_pj_per_bit: f64,
+
+    // --- limits ---
+    /// Maximum supported input length (tokens).
+    pub max_seq: usize,
+
+    // --- measured operating points, ascending vdd ---
+    pub points: Vec<OperatingPoint>,
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        HwConfig {
+            dmm_cores: 4,
+            dmm_pe_dim: 4,
+            pe_mac_dim: 4,
+            smm_cores: 4,
+            smm_mac_dim: 8,
+            afus: 2,
+            afu_iaus: 64,
+            afu_faus: 16,
+            // 4 MB global buffer: fits compressed W_S of the largest workload
+            // (BERT-Large: 1024×256×4 groups ×4b ≈ 0.5 MB) + one layer's W_D
+            // + activations for 128×1024.
+            gb_bytes: 4 << 20,
+            trf_dim: 16,
+            dram_gbps: 6.4,
+            dram_pj_per_bit: 3.7,
+            max_seq: 128,
+            points: vec![
+                OperatingPoint { vdd: 0.45, freq_mhz: 60.0, peak_mw: 7.12 },
+                OperatingPoint { vdd: 0.55, freq_mhz: 150.0, peak_mw: 24.6 },
+                OperatingPoint { vdd: 0.65, freq_mhz: 250.0, peak_mw: 55.3 },
+                OperatingPoint { vdd: 0.75, freq_mhz: 350.0, peak_mw: 98.7 },
+                OperatingPoint { vdd: 0.85, freq_mhz: 450.0, peak_mw: 152.5 },
+            ],
+        }
+    }
+}
+
+impl HwConfig {
+    /// Total MAC units in the DMM plane.
+    pub fn dmm_macs(&self) -> usize {
+        self.dmm_cores * self.dmm_pe_dim * self.dmm_pe_dim * self.pe_mac_dim * self.pe_mac_dim
+    }
+    /// MAC units per DMM core.
+    pub fn dmm_macs_per_core(&self) -> usize {
+        self.dmm_pe_dim * self.dmm_pe_dim * self.pe_mac_dim * self.pe_mac_dim
+    }
+    /// Output tile edge a DMM core produces per pass (4×4 PEs × 4×4 MACs ⇒ 16).
+    pub fn dmm_tile(&self) -> usize {
+        self.dmm_pe_dim * self.pe_mac_dim
+    }
+    /// Total MAC units in the SMM plane.
+    pub fn smm_macs(&self) -> usize {
+        self.smm_cores * self.smm_mac_dim * self.smm_mac_dim
+    }
+    pub fn smm_macs_per_core(&self) -> usize {
+        self.smm_mac_dim * self.smm_mac_dim
+    }
+    pub fn total_macs(&self) -> usize {
+        self.dmm_macs() + self.smm_macs()
+    }
+
+    /// The fastest (max-Vdd) operating point.
+    pub fn max_point(&self) -> OperatingPoint {
+        *self.points.last().expect("HwConfig.points empty")
+    }
+    /// The slowest (min-Vdd) operating point.
+    pub fn min_point(&self) -> OperatingPoint {
+        *self.points.first().expect("HwConfig.points empty")
+    }
+
+    /// Interpolate an operating point at `vdd` (clamped to the table range).
+    pub fn point_at_vdd(&self, vdd: f64) -> OperatingPoint {
+        let pts = &self.points;
+        if vdd <= pts[0].vdd {
+            return pts[0];
+        }
+        if vdd >= pts[pts.len() - 1].vdd {
+            return pts[pts.len() - 1];
+        }
+        for w in pts.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            if vdd >= a.vdd && vdd <= b.vdd {
+                let t = (vdd - a.vdd) / (b.vdd - a.vdd);
+                return OperatingPoint {
+                    vdd,
+                    freq_mhz: a.freq_mhz + t * (b.freq_mhz - a.freq_mhz),
+                    peak_mw: a.peak_mw + t * (b.peak_mw - a.peak_mw),
+                };
+            }
+        }
+        unreachable!()
+    }
+
+    /// Derive the per-event energy table at an operating point.
+    ///
+    /// Peak power is decomposed as: 62% MAC arrays, 18% on-chip SRAM/RF
+    /// traffic, 10% AFU, 10% idle/leak+clock — a standard split for dense
+    /// 16nm MAC-array accelerators; the decomposition only shifts energy
+    /// *between on-chip blocks*, the anchored total and the paper's own
+    /// EMA constant dominate every reproduced number.
+    pub fn energy_at(&self, op: OperatingPoint) -> EnergyTable {
+        let pj_cycle = op.peak_pj_per_cycle();
+        let macs = self.total_macs() as f64;
+        // At peak, every MAC busy every cycle:
+        let mac_pj = pj_cycle * 0.62 / macs;
+        // RF+GB traffic at peak ≈ 2 words per active MAC lane per cycle.
+        let rf_pj = pj_cycle * 0.12 / (macs * 2.0);
+        let gb_pj = pj_cycle * 0.06 / (macs / 8.0);
+        let afu_units = (self.afus * (self.afu_iaus + self.afu_faus)) as f64;
+        let afu_pj = pj_cycle * 0.10 / afu_units;
+        // Idle/leak spread across the ~10 major blocks.
+        let blocks = (self.dmm_cores + self.smm_cores + self.afus) as f64;
+        let idle_pj = pj_cycle * 0.10 / blocks;
+        EnergyTable {
+            mac_pj,
+            rf_pj,
+            gb_pj,
+            afu_pj,
+            idle_pj,
+            ema_pj_per_bit: self.dram_pj_per_bit,
+        }
+    }
+
+    /// DRAM transfer time for `bytes`, in nanoseconds.
+    pub fn dram_ns(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.dram_gbps // bytes / (GB/s) = ns
+    }
+    /// DRAM energy for `bytes`, in picojoules.
+    pub fn dram_pj(&self, bytes: usize) -> f64 {
+        bytes as f64 * 8.0 * self.dram_pj_per_bit
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.points.is_empty() {
+            return Err(Error::config("no operating points"));
+        }
+        if !self.points.windows(2).all(|w| w[0].vdd < w[1].vdd) {
+            return Err(Error::config("operating points must be ascending in vdd"));
+        }
+        if self.dmm_tile() == 0 || self.trf_dim == 0 {
+            return Err(Error::config("zero tile size"));
+        }
+        if self.max_seq == 0 || self.gb_bytes == 0 {
+            return Err(Error::config("zero capacity"));
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------- JSON
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dmm_cores", Json::num(self.dmm_cores as f64)),
+            ("dmm_pe_dim", Json::num(self.dmm_pe_dim as f64)),
+            ("pe_mac_dim", Json::num(self.pe_mac_dim as f64)),
+            ("smm_cores", Json::num(self.smm_cores as f64)),
+            ("smm_mac_dim", Json::num(self.smm_mac_dim as f64)),
+            ("afus", Json::num(self.afus as f64)),
+            ("afu_iaus", Json::num(self.afu_iaus as f64)),
+            ("afu_faus", Json::num(self.afu_faus as f64)),
+            ("gb_bytes", Json::num(self.gb_bytes as f64)),
+            ("trf_dim", Json::num(self.trf_dim as f64)),
+            ("dram_gbps", Json::num(self.dram_gbps)),
+            ("dram_pj_per_bit", Json::num(self.dram_pj_per_bit)),
+            ("max_seq", Json::num(self.max_seq as f64)),
+            (
+                "points",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("vdd", Json::num(p.vdd)),
+                                ("freq_mhz", Json::num(p.freq_mhz)),
+                                ("peak_mw", Json::num(p.peak_mw)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let points = j
+            .get("points")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(OperatingPoint {
+                    vdd: p.get("vdd")?.as_f64()?,
+                    freq_mhz: p.get("freq_mhz")?.as_f64()?,
+                    peak_mw: p.get("peak_mw")?.as_f64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let cfg = HwConfig {
+            dmm_cores: j.get("dmm_cores")?.as_usize()?,
+            dmm_pe_dim: j.get("dmm_pe_dim")?.as_usize()?,
+            pe_mac_dim: j.get("pe_mac_dim")?.as_usize()?,
+            smm_cores: j.get("smm_cores")?.as_usize()?,
+            smm_mac_dim: j.get("smm_mac_dim")?.as_usize()?,
+            afus: j.get("afus")?.as_usize()?,
+            afu_iaus: j.get("afu_iaus")?.as_usize()?,
+            afu_faus: j.get("afu_faus")?.as_usize()?,
+            gb_bytes: j.get("gb_bytes")?.as_usize()?,
+            trf_dim: j.get("trf_dim")?.as_usize()?,
+            dram_gbps: j.get("dram_gbps")?.as_f64()?,
+            dram_pj_per_bit: j.get("dram_pj_per_bit")?.as_f64()?,
+            max_seq: j.get("max_seq")?.as_usize()?,
+            points,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_matches_paper() {
+        let hw = HwConfig::default();
+        assert_eq!(hw.dmm_macs(), 4 * 16 * 16); // 1024 DMM MACs
+        assert_eq!(hw.smm_macs(), 4 * 64); // 256 SMM MACs
+        assert_eq!(hw.dmm_tile(), 16); // 16×16 output tile
+        hw.validate().unwrap();
+    }
+
+    #[test]
+    fn mac_cycles_bit_serial() {
+        assert_eq!(Precision::Int16.mac_cycles(), 16);
+        assert_eq!(Precision::Int8.mac_cycles(), 4);
+        assert_eq!(Precision::Int4.mac_cycles(), 1);
+    }
+
+    #[test]
+    fn operating_point_range_matches_fig7() {
+        let hw = HwConfig::default();
+        let lo = hw.min_point();
+        let hi = hw.max_point();
+        assert_eq!((lo.vdd, lo.freq_mhz, lo.peak_mw), (0.45, 60.0, 7.12));
+        assert_eq!((hi.vdd, hi.freq_mhz, hi.peak_mw), (0.85, 450.0, 152.5));
+    }
+
+    #[test]
+    fn point_interpolation_monotone() {
+        let hw = HwConfig::default();
+        let mut prev = 0.0;
+        for i in 0..=40 {
+            let vdd = 0.45 + i as f64 * 0.01;
+            let p = hw.point_at_vdd(vdd);
+            assert!(p.freq_mhz >= prev);
+            prev = p.freq_mhz;
+        }
+        // Clamp behaviour
+        assert_eq!(hw.point_at_vdd(0.1).freq_mhz, 60.0);
+        assert_eq!(hw.point_at_vdd(2.0).freq_mhz, 450.0);
+    }
+
+    #[test]
+    fn energy_table_sums_to_peak() {
+        // The decomposition must re-assemble into the measured peak power.
+        let hw = HwConfig::default();
+        for &p in &hw.points {
+            let e = hw.energy_at(p);
+            let macs = hw.total_macs() as f64;
+            let afu_units = (hw.afus * (hw.afu_iaus + hw.afu_faus)) as f64;
+            let blocks = (hw.dmm_cores + hw.smm_cores + hw.afus) as f64;
+            let total = e.mac_pj * macs
+                + e.rf_pj * macs * 2.0
+                + e.gb_pj * macs / 8.0
+                + e.afu_pj * afu_units
+                + e.idle_pj * blocks;
+            let expect = p.peak_pj_per_cycle();
+            assert!(
+                (total - expect).abs() / expect < 1e-9,
+                "vdd={} total={total} expect={expect}",
+                p.vdd
+            );
+        }
+    }
+
+    #[test]
+    fn dram_model_paper_constants() {
+        let hw = HwConfig::default();
+        // 1 byte at 6.4 GB/s = 0.15625 ns; 8 bits × 3.7 pJ/b = 29.6 pJ.
+        assert!((hw.dram_ns(1) - 0.15625).abs() < 1e-12);
+        assert!((hw.dram_pj(1) - 29.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let hw = HwConfig::default();
+        let j = hw.to_json();
+        let hw2 = HwConfig::from_json(&j).unwrap();
+        assert_eq!(hw.dmm_macs(), hw2.dmm_macs());
+        assert_eq!(hw.points, hw2.points);
+        assert_eq!(hw.gb_bytes, hw2.gb_bytes);
+        // And via text
+        let hw3 = HwConfig::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(hw3.dram_gbps, hw.dram_gbps);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut hw = HwConfig::default();
+        hw.points.clear();
+        assert!(hw.validate().is_err());
+        let mut hw = HwConfig::default();
+        hw.points.reverse();
+        assert!(hw.validate().is_err());
+        let mut hw = HwConfig::default();
+        hw.max_seq = 0;
+        assert!(hw.validate().is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Hardware and model configuration.
+//!
+//! [`HwConfig`] captures the T-REX chip geometry and its published operating
+//! points (Fig. 23.1.7); [`ModelConfig`] captures the four paper workloads
+//! (Fig. 23.1.6) plus a `tiny` preset used by tests and the end-to-end
+//! example. Both serialize to/from JSON via [`crate::util::json`].
+
+mod hw;
+mod model;
+
+pub use hw::{EnergyTable, HwConfig, OperatingPoint, Precision};
+pub use model::{ArchKind, ModelConfig, WORKLOADS};

@@ -1,0 +1,214 @@
+//! Dynamic batcher: groups requests into the chip's batch classes.
+//!
+//! Policy (mirrors the chip's dataflow admission, Fig. 23.1.4):
+//! * classify each request by length → B1 / B2 / B4;
+//! * a class queue flushes when it holds `class.batch()` requests (a full
+//!   reconfigured pass) or when its oldest request exceeds `max_wait`;
+//! * B1 flushes immediately (batch of one).
+//!
+//! The batcher is pure data structure (no threads) so it can be driven by
+//! the server loop and tested deterministically.
+
+use crate::error::Result;
+use crate::coordinator::request::Request;
+use crate::sim::{batch_class, BatchClass};
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Hardware token plane (128 on the chip; the tiny artifact model is 32).
+    pub max_seq: usize,
+    /// Max time a request may wait for batch-mates.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_seq: 128, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A formed batch ready for the engine.
+#[derive(Debug)]
+pub struct FormedBatch {
+    pub class: BatchClass,
+    pub requests: Vec<Request>,
+}
+
+/// Per-class FIFO queues with deadline flushing.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    cfg: BatcherConfig,
+    queues: [VecDeque<Request>; 3],
+}
+
+fn slot(class: BatchClass) -> usize {
+    match class {
+        BatchClass::B1 => 0,
+        BatchClass::B2 => 1,
+        BatchClass::B4 => 2,
+    }
+}
+
+impl DynamicBatcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        DynamicBatcher { cfg, queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()] }
+    }
+
+    /// Admit a request; returns a batch if one is now full.
+    pub fn push(&mut self, req: Request) -> Result<Option<FormedBatch>> {
+        let class = batch_class(req.len, self.cfg.max_seq)?;
+        let q = &mut self.queues[slot(class)];
+        q.push_back(req);
+        if q.len() >= class.batch() {
+            let requests = q.drain(..class.batch()).collect();
+            return Ok(Some(FormedBatch { class, requests }));
+        }
+        Ok(None)
+    }
+
+    /// Flush any queue whose head has waited past the deadline — emitted as
+    /// a *partial* batch (padded by the engine; the chip runs the class
+    /// configuration regardless, idle slots stay idle).
+    pub fn poll_deadline(&mut self, now: Instant) -> Vec<FormedBatch> {
+        let mut out = Vec::new();
+        for class in BatchClass::ALL {
+            let q = &mut self.queues[slot(class)];
+            if let Some(head) = q.front() {
+                if now.duration_since(head.arrival) >= self.cfg.max_wait {
+                    let take = q.len().min(class.batch());
+                    let requests: Vec<Request> = q.drain(..take).collect();
+                    out.push(FormedBatch { class, requests });
+                }
+            }
+        }
+        out
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn drain(&mut self) -> Vec<FormedBatch> {
+        let mut out = Vec::new();
+        for class in BatchClass::ALL {
+            let q = &mut self.queues[slot(class)];
+            while !q.is_empty() {
+                let take = q.len().min(class.batch());
+                out.push(FormedBatch { class, requests: q.drain(..take).collect() });
+            }
+        }
+        out
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Earliest deadline across queues (for the server's poll timeout).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .iter()
+            .filter_map(|q| q.front().map(|r| r.arrival + self.cfg.max_wait))
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, len: usize) -> Request {
+        Request::new(id, len, vec![0.0; len * 4])
+    }
+
+    fn cfg() -> BatcherConfig {
+        BatcherConfig { max_seq: 128, max_wait: Duration::from_millis(5) }
+    }
+
+    #[test]
+    fn b1_flushes_immediately() {
+        let mut b = DynamicBatcher::new(cfg());
+        let out = b.push(req(1, 100)).unwrap().expect("B1 should flush at once");
+        assert_eq!(out.class, BatchClass::B1);
+        assert_eq!(out.requests.len(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn b4_waits_for_four() {
+        let mut b = DynamicBatcher::new(cfg());
+        for i in 0..3 {
+            assert!(b.push(req(i, 20)).unwrap().is_none());
+        }
+        assert_eq!(b.pending(), 3);
+        let out = b.push(req(3, 20)).unwrap().expect("4th request completes the batch");
+        assert_eq!(out.class, BatchClass::B4);
+        assert_eq!(out.requests.len(), 4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn classes_do_not_mix() {
+        let mut b = DynamicBatcher::new(cfg());
+        assert!(b.push(req(1, 20)).unwrap().is_none()); // B4
+        assert!(b.push(req(2, 50)).unwrap().is_none()); // B2
+        assert!(b.push(req(3, 20)).unwrap().is_none()); // B4
+        let out = b.push(req(4, 50)).unwrap().expect("two B2s form a batch");
+        assert_eq!(out.class, BatchClass::B2);
+        assert_eq!(out.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 4]);
+        assert_eq!(b.pending(), 2); // the two B4s still queued
+    }
+
+    #[test]
+    fn deadline_flushes_partial() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_seq: 128,
+            max_wait: Duration::from_millis(0),
+        });
+        assert!(b.push(req(1, 20)).unwrap().is_none());
+        let flushed = b.poll_deadline(Instant::now() + Duration::from_millis(1));
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].requests.len(), 1); // partial B4
+        assert_eq!(flushed[0].class, BatchClass::B4);
+    }
+
+    #[test]
+    fn rejects_oversized() {
+        let mut b = DynamicBatcher::new(cfg());
+        assert!(b.push(req(1, 500)).is_err());
+        assert!(b.push(req(1, 0)).is_err());
+    }
+
+    #[test]
+    fn drain_empties_all() {
+        let mut b = DynamicBatcher::new(cfg());
+        b.push(req(1, 20)).unwrap();
+        b.push(req(2, 50)).unwrap();
+        b.push(req(3, 90)).unwrap(); // B1 flushes immediately
+        let batches = b.drain();
+        assert_eq!(batches.iter().map(|f| f.requests.len()).sum::<usize>(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn property_all_requests_exit_exactly_once() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        let mut b = DynamicBatcher::new(cfg());
+        let mut seen = std::collections::BTreeSet::new();
+        let n = 300;
+        for id in 0..n {
+            let len = rng.range(1, 128);
+            if let Some(f) = b.push(req(id, len)).unwrap() {
+                for r in f.requests {
+                    assert!(seen.insert(r.id), "duplicate {}", r.id);
+                }
+            }
+        }
+        for f in b.drain() {
+            for r in f.requests {
+                assert!(seen.insert(r.id), "duplicate {}", r.id);
+            }
+        }
+        assert_eq!(seen.len(), n as usize);
+    }
+}

@@ -1,0 +1,149 @@
+//! Engine: executes formed batches — numerics via PJRT, performance via the
+//! cycle-level simulator.
+//!
+//! The engine pads each request to its class's per-input slot, concatenates
+//! the batch on the token axis (the chip's reconfigured 128-token plane),
+//! runs the class's compiled executable, and splits the output back per
+//! request. Per-batch chip latency/energy/EMA come from [`crate::sim`] on
+//! the *served model's* config (the artifact model for numerics can be the
+//! tiny proxy while performance is reported for the paper workload — both
+//! are recorded on the response).
+
+use crate::config::{HwConfig, ModelConfig};
+use crate::coordinator::batcher::FormedBatch;
+use crate::coordinator::request::Response;
+use crate::error::{Error, Result};
+use crate::model::build_program;
+use crate::runtime::ArtifactSet;
+use crate::sim::{simulate, BatchClass, SimOptions};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Engine configuration.
+pub struct EngineConfig {
+    pub hw: HwConfig,
+    /// Model whose *performance* is simulated per batch.
+    pub perf_model: ModelConfig,
+    /// Run the artifact self-test at startup.
+    pub self_test: bool,
+}
+
+/// Executes batches. Owns the compiled artifacts and a simulation cache
+/// (per (class, padded-seq) — programs are deterministic).
+pub struct Engine {
+    artifacts: ArtifactSet,
+    cfg: EngineConfig,
+    sim_cache: HashMap<(BatchClass, usize), CachedPass>,
+}
+
+#[derive(Clone, Copy)]
+struct CachedPass {
+    chip_us: f64,
+    chip_uj: f64,
+    ema_bytes: u64,
+    utilization: f64,
+}
+
+impl Engine {
+    pub fn new(artifacts: ArtifactSet, cfg: EngineConfig) -> Result<Self> {
+        if cfg.self_test {
+            artifacts.self_test()?;
+        }
+        Ok(Engine { artifacts, cfg, sim_cache: HashMap::new() })
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.artifacts.model_name
+    }
+    pub fn d_model(&self) -> usize {
+        self.artifacts.d_model
+    }
+    pub fn max_seq(&self) -> usize {
+        self.artifacts.max_seq
+    }
+
+    /// Simulate (with caching) the chip pass for a batch class at `seq`.
+    fn perf(&mut self, class: BatchClass, seq: usize) -> CachedPass {
+        let key = (class, seq);
+        if let Some(c) = self.sim_cache.get(&key) {
+            return *c;
+        }
+        let prog = build_program(&self.cfg.perf_model, seq, class.batch());
+        let stats = simulate(
+            &self.cfg.hw,
+            &prog,
+            &SimOptions { act_bits: self.cfg.perf_model.act_bits, ..SimOptions::paper(&self.cfg.hw) },
+        );
+        let pass = CachedPass {
+            chip_us: stats.seconds() * 1e6,
+            chip_uj: stats.energy.total_uj(),
+            ema_bytes: stats.ema_bytes(),
+            utilization: stats.utilization(&self.cfg.hw),
+        };
+        self.sim_cache.insert(key, pass);
+        pass
+    }
+
+    /// Execute one formed batch end-to-end.
+    pub fn execute(&mut self, batch: FormedBatch) -> Result<Vec<Response>> {
+        let entry = self.artifacts.get(batch.class)?;
+        let d = entry.d_model;
+        let slot = entry.seq; // per-input token slot of this class
+        let tokens = entry.tokens;
+        let n_req = batch.requests.len();
+        if n_req == 0 || n_req > entry.batch {
+            return Err(Error::serve(format!(
+                "batch of {n_req} requests for class {}",
+                batch.class.name()
+            )));
+        }
+        // Assemble the token plane: each request padded to its slot;
+        // missing batch-mates (deadline flush) stay zero.
+        let mut plane = vec![0.0f32; tokens * d];
+        for (i, r) in batch.requests.iter().enumerate() {
+            if r.len > slot {
+                return Err(Error::serve(format!(
+                    "request {} len {} exceeds class slot {slot}",
+                    r.id, r.len
+                )));
+            }
+            if r.payload.len() != r.len * d {
+                return Err(Error::serve(format!(
+                    "request {} payload {} != len {} × d_model {d}",
+                    r.id,
+                    r.payload.len(),
+                    r.len
+                )));
+            }
+            plane[i * slot * d..(i * slot + r.len) * d].copy_from_slice(&r.payload);
+        }
+
+        let t0 = Instant::now();
+        let (seq_for_perf, class) = (slot, batch.class);
+        let out = entry.exe.run_f32(&plane, tokens, d)?;
+        let host_us = t0.elapsed().as_nanos() as f64 / 1e3;
+
+        let perf = self.perf(class, seq_for_perf);
+        let per_req_uj = perf.chip_uj / n_req as f64;
+        let per_req_ema = perf.ema_bytes / n_req as u64;
+
+        let now = Instant::now();
+        let mut responses = Vec::with_capacity(n_req);
+        for (i, r) in batch.requests.iter().enumerate() {
+            let start = i * slot * d;
+            responses.push(Response {
+                id: r.id,
+                output: out[start..start + r.len * d].to_vec(),
+                host_latency_us: host_us,
+                queue_us: now.duration_since(r.arrival).as_nanos() as f64 / 1e3
+                    - host_us,
+                chip_us: perf.chip_us,
+                chip_uj: per_req_uj,
+                ema_bytes: per_req_ema,
+                class,
+                utilization: perf.utilization,
+            });
+        }
+        Ok(responses)
+    }
+}

@@ -1,0 +1,135 @@
+//! Serving metrics: lock-protected running aggregates + final report.
+
+use crate::sim::BatchClass;
+use crate::util::json::Json;
+use crate::util::stats::Running;
+use std::sync::Mutex;
+
+#[derive(Debug, Default)]
+struct Inner {
+    completed: u64,
+    batches: u64,
+    tokens: u64,
+    host_latency_us: Running,
+    queue_us: Running,
+    chip_us: Running,
+    chip_uj: Running,
+    utilization: Running,
+    ema_bytes: u64,
+    per_class: [u64; 3],
+    /// Raw host latencies for percentile reporting.
+    latencies: Vec<f64>,
+}
+
+/// Thread-safe metrics sink shared by engine workers.
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    inner: Mutex<Inner>,
+}
+
+impl ServerMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, class: BatchClass, n_requests: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        let idx = match class {
+            BatchClass::B1 => 0,
+            BatchClass::B2 => 1,
+            BatchClass::B4 => 2,
+        };
+        m.per_class[idx] += n_requests as u64;
+    }
+
+    pub fn record_response(&self, r: &crate::coordinator::request::Response, len: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.completed += 1;
+        m.tokens += len as u64;
+        m.host_latency_us.push(r.host_latency_us);
+        m.queue_us.push(r.queue_us.max(0.0));
+        m.chip_us.push(r.chip_us);
+        m.chip_uj.push(r.chip_uj);
+        m.utilization.push(r.utilization);
+        m.ema_bytes += r.ema_bytes;
+        m.latencies.push(r.host_latency_us + r.queue_us.max(0.0));
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.inner.lock().unwrap().completed
+    }
+
+    /// Snapshot as JSON (also the report printed by examples).
+    pub fn report(&self, wall_seconds: f64) -> Json {
+        let m = self.inner.lock().unwrap();
+        let thr = if wall_seconds > 0.0 { m.completed as f64 / wall_seconds } else { 0.0 };
+        let tok_thr = if wall_seconds > 0.0 { m.tokens as f64 / wall_seconds } else { 0.0 };
+        Json::obj(vec![
+            ("completed", Json::num(m.completed as f64)),
+            ("batches", Json::num(m.batches as f64)),
+            ("tokens", Json::num(m.tokens as f64)),
+            ("throughput_rps", Json::num(thr)),
+            ("throughput_tok_s", Json::num(tok_thr)),
+            ("host_latency_us_mean", Json::num(m.host_latency_us.mean())),
+            (
+                "e2e_latency_us_p50",
+                Json::num(crate::util::stats::percentile(&m.latencies, 50.0)),
+            ),
+            (
+                "e2e_latency_us_p99",
+                Json::num(crate::util::stats::percentile(&m.latencies, 99.0)),
+            ),
+            ("queue_us_mean", Json::num(m.queue_us.mean())),
+            ("chip_us_per_pass_mean", Json::num(m.chip_us.mean())),
+            ("chip_uj_per_request_mean", Json::num(m.chip_uj.mean())),
+            ("utilization_mean", Json::num(m.utilization.mean())),
+            ("ema_bytes_total", Json::num(m.ema_bytes as f64)),
+            (
+                "requests_per_class",
+                Json::obj(vec![
+                    ("b1", Json::num(m.per_class[0] as f64)),
+                    ("b2", Json::num(m.per_class[1] as f64)),
+                    ("b4", Json::num(m.per_class[2] as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Response;
+
+    #[test]
+    fn aggregates() {
+        let m = ServerMetrics::new();
+        m.record_batch(BatchClass::B4, 4);
+        for i in 0..4 {
+            m.record_response(
+                &Response {
+                    id: i,
+                    output: vec![],
+                    host_latency_us: 100.0,
+                    queue_us: 50.0,
+                    chip_us: 10.0,
+                    chip_uj: 1.0,
+                    ema_bytes: 1000,
+                    class: BatchClass::B4,
+                    utilization: 0.5,
+                },
+                8,
+            );
+        }
+        assert_eq!(m.completed(), 4);
+        let j = m.report(2.0);
+        assert_eq!(j.get("throughput_rps").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.get("tokens").unwrap().as_f64().unwrap(), 32.0);
+        assert_eq!(j.get("ema_bytes_total").unwrap().as_f64().unwrap(), 4000.0);
+        assert_eq!(
+            j.get("requests_per_class").unwrap().get("b4").unwrap().as_f64().unwrap(),
+            4.0
+        );
+    }
+}

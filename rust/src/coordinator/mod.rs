@@ -1,0 +1,22 @@
+//! Serving coordinator: the production-shaped L3 plane.
+//!
+//! A [`server::Server`] owns one engine thread per model. Requests enter
+//! through a channel, the [`batcher::DynamicBatcher`] groups them into the
+//! paper's batch classes (Fig. 23.1.4), and the [`engine::Engine`] executes
+//! each batch: numerics through the PJRT artifacts, latency/energy/EMA
+//! through the cycle-level simulator. `std::thread` + mpsc channels (tokio
+//! is not vendored offline — DESIGN.md §2).
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod server;
+pub mod trace;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use engine::{Engine, EngineConfig};
+pub use metrics::ServerMetrics;
+pub use request::{Request, RequestId, Response};
+pub use server::{Server, ServerHandle};
+pub use trace::TraceGenerator;

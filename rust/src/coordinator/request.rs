@@ -1,0 +1,65 @@
+//! Request/response types of the serving plane.
+
+use crate::sim::BatchClass;
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// One inference request: a token-embedding matrix of `len` rows.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    /// Input length in tokens (≤ hardware max).
+    pub len: usize,
+    /// Row-major `(len, d_model)` activations.
+    pub payload: Vec<f32>,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, len: usize, payload: Vec<f32>) -> Self {
+        Request { id, len, payload, arrival: Instant::now() }
+    }
+    pub fn d_model(&self) -> usize {
+        if self.len == 0 {
+            0
+        } else {
+            self.payload.len() / self.len
+        }
+    }
+}
+
+/// Completed inference.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    /// `(len, d_model)` output rows (padding stripped).
+    pub output: Vec<f32>,
+    /// Wall-clock service latency (host side).
+    pub host_latency_us: f64,
+    /// Queueing delay before the batch formed.
+    pub queue_us: f64,
+    /// Modeled chip latency for the batch this request rode in.
+    pub chip_us: f64,
+    /// Modeled chip energy share for this request, µJ.
+    pub chip_uj: f64,
+    /// Modeled chip EMA share for this request, bytes.
+    pub ema_bytes: u64,
+    /// Batch class the request was served in.
+    pub class: BatchClass,
+    /// Modeled MAC-plane utilization of the pass.
+    pub utilization: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn d_model_derivation() {
+        let r = Request::new(1, 4, vec![0.0; 4 * 16]);
+        assert_eq!(r.d_model(), 16);
+        let z = Request::new(2, 0, vec![]);
+        assert_eq!(z.d_model(), 0);
+    }
+}

@@ -1,0 +1,139 @@
+//! Threaded serving loop: ingest → dynamic batch → engine → respond.
+//!
+//! One engine thread owns the PJRT executables and the batcher; clients
+//! submit through an mpsc channel and receive responses on a per-server
+//! response channel. (std threads — tokio is not vendored offline.)
+
+use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher};
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::ServerMetrics;
+use crate::coordinator::request::{Request, Response};
+use crate::error::{Error, Result};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+enum Msg {
+    Req(Request),
+    Shutdown,
+}
+
+/// Handle a client uses to talk to a running server.
+pub struct ServerHandle {
+    tx: Sender<Msg>,
+    pub responses: Receiver<Response>,
+    pub metrics: Arc<ServerMetrics>,
+    join: Option<JoinHandle<Result<()>>>,
+    started: Instant,
+}
+
+impl ServerHandle {
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.tx
+            .send(Msg::Req(req))
+            .map_err(|_| Error::serve("server is down".to_string()))
+    }
+
+    /// Stop the engine loop (drains pending batches first) and join.
+    pub fn shutdown(mut self) -> Result<ServerReport> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            j.join().map_err(|_| Error::serve("engine thread panicked".to_string()))??;
+        }
+        let wall = self.started.elapsed().as_secs_f64();
+        Ok(ServerReport { wall_seconds: wall, metrics: Arc::clone(&self.metrics) })
+    }
+
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
+    }
+}
+
+/// Final report after shutdown.
+pub struct ServerReport {
+    pub wall_seconds: f64,
+    pub metrics: Arc<ServerMetrics>,
+}
+
+impl ServerReport {
+    pub fn json(&self) -> crate::util::json::Json {
+        self.metrics.report(self.wall_seconds)
+    }
+}
+
+/// The server: spawns the engine thread.
+pub struct Server;
+
+impl Server {
+    /// Start serving. PJRT executables are not `Send`, so the engine is
+    /// *constructed inside* the worker thread from the given factory
+    /// (typically: create the PJRT client, load artifacts, build `Engine`).
+    /// `batcher_cfg.max_seq` must match the artifact model's token plane.
+    pub fn start<F>(make_engine: F, batcher_cfg: BatcherConfig) -> ServerHandle
+    where
+        F: FnOnce() -> Result<Engine> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Msg>();
+        let (resp_tx, resp_rx) = channel::<Response>();
+        let metrics = Arc::new(ServerMetrics::new());
+        let m2 = Arc::clone(&metrics);
+        let join = std::thread::Builder::new()
+            .name("trex-engine".to_string())
+            .spawn(move || {
+                let engine = make_engine()?;
+                engine_loop(engine, batcher_cfg, rx, resp_tx, m2)
+            })
+            .expect("spawn engine thread");
+        ServerHandle { tx, responses: resp_rx, metrics, join: Some(join), started: Instant::now() }
+    }
+}
+
+fn engine_loop(
+    mut engine: Engine,
+    batcher_cfg: BatcherConfig,
+    rx: Receiver<Msg>,
+    resp_tx: Sender<Response>,
+    metrics: Arc<ServerMetrics>,
+) -> Result<()> {
+    let mut batcher = DynamicBatcher::new(batcher_cfg);
+    let run_batch = |engine: &mut Engine,
+                         batch: crate::coordinator::batcher::FormedBatch|
+     -> Result<()> {
+        let lens: Vec<usize> = batch.requests.iter().map(|r| r.len).collect();
+        metrics.record_batch(batch.class, batch.requests.len());
+        let responses = engine.execute(batch)?;
+        for (resp, len) in responses.into_iter().zip(lens) {
+            metrics.record_response(&resp, len);
+            // A dropped receiver is a client gone — not an engine error.
+            let _ = resp_tx.send(resp);
+        }
+        Ok(())
+    };
+
+    loop {
+        // Wait for work, but wake at the batcher's earliest deadline.
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Req(req)) => {
+                if let Some(batch) = batcher.push(req)? {
+                    run_batch(&mut engine, batch)?;
+                }
+            }
+            Ok(Msg::Shutdown) => break,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        for batch in batcher.poll_deadline(Instant::now()) {
+            run_batch(&mut engine, batch)?;
+        }
+    }
+    // Drain everything left.
+    for batch in batcher.drain() {
+        run_batch(&mut engine, batch)?;
+    }
+    Ok(())
+}

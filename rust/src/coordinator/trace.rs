@@ -1,0 +1,81 @@
+//! Workload trace generation: request streams with the length distributions
+//! that motivate dynamic batching (BERT-style NLU inputs are short; ViT is
+//! always full-length).
+
+use crate::config::ModelConfig;
+use crate::coordinator::request::Request;
+use crate::util::rng::Rng;
+
+/// Deterministic, seeded request generator for a workload.
+pub struct TraceGenerator {
+    rng: Rng,
+    mean_len: f64,
+    max_len: usize,
+    d_model: usize,
+    next_id: u64,
+    /// Fixed-length workloads (ViT) always emit `max_len`.
+    fixed: bool,
+}
+
+impl TraceGenerator {
+    pub fn for_model(m: &ModelConfig, artifact_max_seq: usize, d_model: usize, seed: u64) -> Self {
+        let max_len = m.max_seq.min(artifact_max_seq);
+        let fixed = m.mean_input_len >= m.max_seq as f64;
+        // Scale the workload's mean length into the artifact's token plane.
+        let mean_len = m.mean_input_len / m.max_seq as f64 * max_len as f64;
+        TraceGenerator { rng: Rng::new(seed), mean_len, max_len, d_model, next_id: 0, fixed }
+    }
+
+    /// Uniform-random payload request with workload-distributed length.
+    pub fn next(&mut self) -> Request {
+        let len = if self.fixed {
+            self.max_len
+        } else {
+            self.rng.seq_len(self.mean_len, self.max_len)
+        };
+        let payload: Vec<f32> = (0..len * self.d_model)
+            .map(|_| self.rng.normal_f32() * 0.5)
+            .collect();
+        let id = self.next_id;
+        self.next_id += 1;
+        Request::new(id, len, payload)
+    }
+
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lengths_in_range_and_short_biased_for_bert() {
+        let m = ModelConfig::bert_large();
+        let mut g = TraceGenerator::for_model(&m, 32, 64, 7);
+        let reqs = g.take(500);
+        assert!(reqs.iter().all(|r| (1..=32).contains(&r.len)));
+        let mean = reqs.iter().map(|r| r.len as f64).sum::<f64>() / 500.0;
+        // bert mean_input_len 28/128 scaled to 32-plane ⇒ ~7.
+        assert!((3.0..12.0).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn vit_is_fixed_full_length() {
+        let m = ModelConfig::vit_base();
+        let mut g = TraceGenerator::for_model(&m, 32, 64, 7);
+        assert!(g.take(50).iter().all(|r| r.len == 32));
+    }
+
+    #[test]
+    fn ids_unique_and_payload_sized() {
+        let m = ModelConfig::s2t_small();
+        let mut g = TraceGenerator::for_model(&m, 32, 64, 9);
+        let reqs = g.take(100);
+        let mut ids: Vec<_> = reqs.iter().map(|r| r.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 100);
+        assert!(reqs.iter().all(|r| r.payload.len() == r.len * 64));
+    }
+}

@@ -1,0 +1,55 @@
+//! Crate-wide error type.
+
+/// Unified error type for the T-REX stack.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// JSON syntax or type mismatch while reading a config / manifest.
+    #[error("json error: {0}")]
+    Json(String),
+    /// Configuration value out of the range the hardware supports.
+    #[error("config error: {0}")]
+    Config(String),
+    /// Codec violation (bit-width overflow, bad stream, invariant break).
+    #[error("codec error: {0}")]
+    Codec(String),
+    /// Shape mismatch in matrix / model plumbing.
+    #[error("shape error: {0}")]
+    Shape(String),
+    /// Simulator programming error (bad op, resource oversubscription).
+    #[error("sim error: {0}")]
+    Sim(String),
+    /// Serving-plane error (queue closed, engine dead, bad request).
+    #[error("serve error: {0}")]
+    Serve(String),
+    /// PJRT / artifact-loading error.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    pub fn json(m: impl Into<String>) -> Self {
+        Error::Json(m.into())
+    }
+    pub fn config(m: impl Into<String>) -> Self {
+        Error::Config(m.into())
+    }
+    pub fn codec(m: impl Into<String>) -> Self {
+        Error::Codec(m.into())
+    }
+    pub fn shape(m: impl Into<String>) -> Self {
+        Error::Shape(m.into())
+    }
+    pub fn sim(m: impl Into<String>) -> Self {
+        Error::Sim(m.into())
+    }
+    pub fn serve(m: impl Into<String>) -> Self {
+        Error::Serve(m.into())
+    }
+    pub fn runtime(m: impl Into<String>) -> Self {
+        Error::Runtime(m.into())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

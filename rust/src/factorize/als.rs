@@ -1,0 +1,190 @@
+//! Alternating-least-squares factorizer with fixed-NZ-per-column sparsity.
+//!
+//! Solves  min_{W_S, {W_D^l}}  Σ_l ‖W^l − W_S·W_D^l‖²_F  subject to every
+//! column of every `W_D^l` having exactly `nnz_per_col` non-zeros — the
+//! offline equivalent of the paper's regularized factorizing training
+//! (which the paper runs as full model training; see DESIGN.md §2 for the
+//! substitution argument). The shared `W_S` is fit **jointly across layers**,
+//! which is the property that makes "load W_S once" possible.
+
+use crate::error::Result;
+use crate::factorize::linalg::{gram_t, lstsq, solve_mat};
+use crate::factorize::sparse::CscFixed;
+use crate::util::mat::Mat;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct FactorizeOptions {
+    pub rank: usize,
+    pub nnz_per_col: usize,
+    pub iters: usize,
+    /// Tikhonov damping for the normal equations.
+    pub lambda: f32,
+    pub seed: u64,
+}
+
+impl Default for FactorizeOptions {
+    fn default() -> Self {
+        FactorizeOptions { rank: 16, nnz_per_col: 4, iters: 12, lambda: 1e-4, seed: 0 }
+    }
+}
+
+/// Result of a joint factorization.
+#[derive(Debug, Clone)]
+pub struct Factorized {
+    pub ws: Mat,
+    pub wds: Vec<CscFixed>,
+    /// Per-layer relative reconstruction error after the final iteration.
+    pub rel_err: Vec<f64>,
+}
+
+/// Jointly factorize `layers` of equally-shaped matrices into one shared
+/// `W_S` plus per-layer sparse `W_D`s.
+pub fn factorize_joint(layers: &[Mat], opts: FactorizeOptions) -> Result<Factorized> {
+    assert!(!layers.is_empty());
+    let d_in = layers[0].rows;
+    let d_out = layers[0].cols;
+    for w in layers {
+        assert_eq!((w.rows, w.cols), (d_in, d_out), "layers must share shape");
+    }
+    let r = opts.rank;
+    let mut rng = Rng::new(opts.seed ^ 0x5EED_FAC7);
+    let mut ws = Mat::randn(d_in, r, &mut rng);
+    let mut wds: Vec<Mat> = Vec::new();
+
+    for it in 0..opts.iters {
+        // --- W_D step: per layer, dense least squares then hard projection
+        // onto the fixed-support set, then refit values on the support.
+        wds.clear();
+        for w in layers {
+            let dense = lstsq(&ws, w, opts.lambda)?; // r × d_out
+            let sp = CscFixed::from_dense_topk(&dense, opts.nnz_per_col)?;
+            let refit = refit_on_support(&ws, w, &sp, opts.lambda)?;
+            wds.push(refit.to_dense());
+        }
+        // --- W_S step (joint): W_S = (Σ W^l (W_D^l)ᵀ) (Σ W_D^l (W_D^l)ᵀ + λI)⁻¹
+        let mut num = Mat::zeros(d_in, r);
+        let mut den = Mat::zeros(r, r);
+        for (w, wd) in layers.iter().zip(&wds) {
+            num = num.add(&w.matmul(&wd.transpose())?)?;
+            den = den.add(&gram_t(wd, 0.0))?;
+        }
+        for i in 0..r {
+            *den.at_mut(i, i) += opts.lambda;
+        }
+        // Solve den · Wsᵀ = numᵀ  ⇒ Ws = (den⁻¹ numᵀ)ᵀ
+        let wst = solve_mat(&den, &num.transpose())?;
+        ws = wst.transpose();
+        let _ = it;
+    }
+
+    // Final projection + error report.
+    let mut out_wds = Vec::new();
+    let mut rel_err = Vec::new();
+    for w in layers {
+        let dense = lstsq(&ws, w, opts.lambda)?;
+        let sp = CscFixed::from_dense_topk(&dense, opts.nnz_per_col)?;
+        let sp = refit_on_support(&ws, w, &sp, opts.lambda)?;
+        let recon = ws.matmul(&sp.to_dense())?;
+        rel_err.push(w.rel_err(&recon));
+        out_wds.push(sp);
+    }
+    Ok(Factorized { ws, wds: out_wds, rel_err })
+}
+
+/// Given a support pattern, refit the non-zero values by least squares per
+/// column: restrict `W_S` to the support columns and solve the small system.
+fn refit_on_support(ws: &Mat, w: &Mat, sp: &CscFixed, lambda: f32) -> Result<CscFixed> {
+    let mut out = sp.clone();
+    let k = sp.nnz_per_col;
+    for c in 0..sp.cols {
+        let support: Vec<usize> = sp.col_entries(c).map(|(r, _)| r).collect();
+        // A = ws[:, support] (d_in × k), b = w[:, c]
+        let mut a = Mat::zeros(ws.rows, k);
+        for (j, &s) in support.iter().enumerate() {
+            for i in 0..ws.rows {
+                *a.at_mut(i, j) = ws.at(i, s);
+            }
+        }
+        let mut b = Mat::zeros(w.rows, 1);
+        for i in 0..w.rows {
+            *b.at_mut(i, 0) = w.at(i, c);
+        }
+        let x = lstsq(&a, &b, lambda)?;
+        let s0 = c * k;
+        for j in 0..k {
+            out.val[s0 + j] = x.at(j, 0);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build synthetic layers that *are* low-rank+sparse so ALS can recover
+    /// them: W^l = Ws_true · Wd_true^l.
+    fn planted(rng: &mut Rng, d_in: usize, d_out: usize, r: usize, nnz: usize, layers: usize) -> Vec<Mat> {
+        let ws = Mat::randn(d_in, r, rng);
+        (0..layers)
+            .map(|_| {
+                let mut wd = Mat::zeros(r, d_out);
+                for c in 0..d_out {
+                    for row in rng.sample_distinct(r, nnz) {
+                        *wd.at_mut(row, c) = rng.normal_f32();
+                    }
+                }
+                ws.matmul(&wd).unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recovers_planted_factorization() {
+        let mut rng = Rng::new(41);
+        let layers = planted(&mut rng, 24, 20, 8, 3, 3);
+        let f = factorize_joint(
+            &layers,
+            FactorizeOptions { rank: 8, nnz_per_col: 3, iters: 20, lambda: 1e-5, seed: 1 },
+        )
+        .unwrap();
+        for (l, e) in f.rel_err.iter().enumerate() {
+            assert!(*e < 0.25, "layer {l} rel_err {e}");
+        }
+        for wd in &f.wds {
+            wd.check_invariants().unwrap();
+            assert_eq!(wd.nnz_per_col, 3);
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_budget() {
+        // More NZ per column ⇒ better reconstruction (monotone in capacity).
+        let mut rng = Rng::new(42);
+        let layers = planted(&mut rng, 20, 16, 10, 6, 2);
+        let mut errs = Vec::new();
+        for nnz in [2usize, 4, 8] {
+            let f = factorize_joint(
+                &layers,
+                FactorizeOptions { rank: 10, nnz_per_col: nnz, iters: 10, lambda: 1e-5, seed: 2 },
+            )
+            .unwrap();
+            errs.push(f.rel_err.iter().sum::<f64>() / f.rel_err.len() as f64);
+        }
+        assert!(errs[0] > errs[2], "errs {errs:?}");
+    }
+
+    #[test]
+    fn shared_ws_is_single_matrix() {
+        let mut rng = Rng::new(43);
+        let layers = planted(&mut rng, 16, 12, 6, 2, 4);
+        let f = factorize_joint(
+            &layers,
+            FactorizeOptions { rank: 6, nnz_per_col: 2, iters: 8, lambda: 1e-4, seed: 3 },
+        )
+        .unwrap();
+        assert_eq!(f.wds.len(), 4);
+        assert_eq!((f.ws.rows, f.ws.cols), (16, 6));
+    }
+}

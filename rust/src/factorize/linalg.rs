@@ -1,0 +1,181 @@
+//! Small dense linear-algebra kernels for the ALS factorizer: Gaussian
+//! elimination with partial pivoting and least-squares via normal equations.
+//! Sizes here are `rank × rank` (≤ 256), so cubic algorithms are fine.
+
+use crate::error::{Error, Result};
+use crate::util::mat::Mat;
+
+/// Solve `A x = b` for square `A` (destructive copy), partial pivoting.
+pub fn solve(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+    let n = a.rows;
+    if a.cols != n || b.len() != n {
+        return Err(Error::shape("solve: dimension mismatch".to_string()));
+    }
+    // Work in f64 for stability.
+    let mut m = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            m[i * n + j] = a.at(i, j) as f64;
+        }
+    }
+    let mut x = b.to_vec();
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        let mut best = m[col * n + col].abs();
+        for r in col + 1..n {
+            let v = m[r * n + col].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-12 {
+            return Err(Error::shape(format!("solve: singular at column {col}")));
+        }
+        if piv != col {
+            for j in 0..n {
+                m.swap(col * n + j, piv * n + j);
+            }
+            x.swap(col, piv);
+        }
+        let d = m[col * n + col];
+        for r in col + 1..n {
+            let f = m[r * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..n {
+                m[r * n + j] -= f * m[col * n + j];
+            }
+            x[r] -= f * x[col];
+        }
+    }
+    // back substitution
+    for col in (0..n).rev() {
+        let mut v = x[col];
+        for j in col + 1..n {
+            v -= m[col * n + j] * x[j];
+        }
+        x[col] = v / m[col * n + col];
+    }
+    Ok(x)
+}
+
+/// Solve `A X = B` column-wise for square `A`, `B` given as `Mat`.
+pub fn solve_mat(a: &Mat, b: &Mat) -> Result<Mat> {
+    if a.rows != b.rows {
+        return Err(Error::shape("solve_mat: dimension mismatch".to_string()));
+    }
+    let mut out = Mat::zeros(a.rows, b.cols);
+    for c in 0..b.cols {
+        let col: Vec<f64> = (0..b.rows).map(|r| b.at(r, c) as f64).collect();
+        let x = solve(a, &col)?;
+        for r in 0..a.rows {
+            *out.at_mut(r, c) = x[r] as f32;
+        }
+    }
+    Ok(out)
+}
+
+/// `A·Aᵀ` (Gram matrix over rows), with Tikhonov damping `λI`.
+pub fn gram_t(a: &Mat, lambda: f32) -> Mat {
+    let mut g = Mat::zeros(a.rows, a.rows);
+    for i in 0..a.rows {
+        for j in i..a.rows {
+            let mut s = 0.0f64;
+            for k in 0..a.cols {
+                s += a.at(i, k) as f64 * a.at(j, k) as f64;
+            }
+            *g.at_mut(i, j) = s as f32;
+            *g.at_mut(j, i) = s as f32;
+        }
+        *g.at_mut(i, i) += lambda;
+    }
+    g
+}
+
+/// `AᵀA` (Gram over columns) with damping.
+pub fn gram(a: &Mat, lambda: f32) -> Mat {
+    let mut g = Mat::zeros(a.cols, a.cols);
+    for i in 0..a.cols {
+        for j in i..a.cols {
+            let mut s = 0.0f64;
+            for k in 0..a.rows {
+                s += a.at(k, i) as f64 * a.at(k, j) as f64;
+            }
+            *g.at_mut(i, j) = s as f32;
+            *g.at_mut(j, i) = s as f32;
+        }
+        *g.at_mut(i, i) += lambda;
+    }
+    g
+}
+
+/// Least squares `min_X ‖A X − B‖` via normal equations `(AᵀA)X = AᵀB`.
+pub fn lstsq(a: &Mat, b: &Mat, lambda: f32) -> Result<Mat> {
+    let ata = gram(a, lambda);
+    let atb = a.transpose().matmul(b)?;
+    solve_mat(&ata, &atb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solve_identity() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let x = solve(&a, &[3.0, 4.0]).unwrap();
+        assert_eq!(x, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn solve_random_consistency() {
+        let mut rng = Rng::new(31);
+        for _ in 0..20 {
+            let n = rng.range(2, 12);
+            let a = Mat::randn(n, n, &mut rng);
+            let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            // b = A x
+            let b: Vec<f64> = (0..n)
+                .map(|i| (0..n).map(|j| a.at(i, j) as f64 * xs[j]).sum())
+                .collect();
+            let got = solve(&a, &b).unwrap();
+            for (g, e) in got.iter().zip(&xs) {
+                assert!((g - e).abs() < 1e-3, "got {g} expect {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_rejects_singular() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]).unwrap();
+        assert!(solve(&a, &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn lstsq_exact_when_consistent() {
+        let mut rng = Rng::new(32);
+        let a = Mat::randn(20, 6, &mut rng);
+        let x_true = Mat::randn(6, 3, &mut rng);
+        let b = a.matmul(&x_true).unwrap();
+        let x = lstsq(&a, &b, 0.0).unwrap();
+        assert!(x.rel_err(&x_true) < 1e-3, "err {}", x.rel_err(&x_true));
+    }
+
+    #[test]
+    fn gram_symmetry() {
+        let mut rng = Rng::new(33);
+        let a = Mat::randn(7, 5, &mut rng);
+        let g = gram(&a, 0.1);
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_eq!(g.at(i, j), g.at(j, i));
+            }
+        }
+        let gt = gram_t(&a, 0.0);
+        assert_eq!(gt.rows, 7);
+    }
+}

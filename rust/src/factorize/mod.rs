@@ -1,0 +1,85 @@
+//! Factorized weight representation `W = W_S · W_D` (paper Fig. 23.1.3).
+//!
+//! `W_S` is dense and shared across layers; each layer's `W_D` is sparse with
+//! a **fixed number of non-zeros per column** (the training regularizer
+//! enforces this; here the invariant is structural). The main operation is
+//! the *sequential* matmul `(X·W_S)·W_D` — chosen over `X·(W_S·W_D)` because
+//! the rank `r` is much smaller than the output dim, cutting MACs 1–2.14×
+//! versus the unfactorized `X·W`.
+//!
+//! [`als`] provides a Rust-side alternating-least-squares factorizer (used by
+//! tests and `examples/train_factorized.rs`); the production factorizer that
+//! feeds the AOT artifacts lives in `python/compile/factorize.py`.
+
+pub mod als;
+pub mod linalg;
+pub mod sparse;
+
+pub use als::{factorize_joint, FactorizeOptions};
+pub use sparse::CscFixed;
+
+use crate::error::Result;
+use crate::util::mat::Mat;
+
+/// One factorized weight: shared dense `W_S` (by reference — it belongs to
+/// the group) and this layer's sparse `W_D`.
+#[derive(Debug, Clone)]
+pub struct FactorizedWeight {
+    /// Index of the shared group this weight uses.
+    pub group: usize,
+    pub wd: CscFixed,
+}
+
+/// A group of layers sharing one `W_S`.
+#[derive(Debug, Clone)]
+pub struct SharedWs {
+    pub name: String,
+    pub ws: Mat, // d_in × r
+}
+
+/// MAC counts of the three computing orders for an `m×k` input against a
+/// `k×n` weight factorized at rank `r` with `nnz` non-zeros per column.
+/// Returns `(seq_macs, fused_macs, dense_macs)` for `(X·W_S)·W_D`,
+/// `X·(W_S·W_D)` and `X·W` respectively — the paper's Fig. 23.1.3 argument.
+pub fn mac_counts(m: usize, k: usize, n: usize, r: usize, nnz: usize) -> (usize, usize, usize) {
+    let seq = m * k * r + m * nnz * n; // X·Ws (dense) then Y·Wd (NZ only)
+    let fused = k * r * n + m * k * n; // materialize Ws·Wd, then dense MM
+    let dense = m * k * n;
+    (seq, fused, dense)
+}
+
+/// Verify the factorization reconstructs `w` to within `tol` relative error.
+pub fn verify(w: &Mat, ws: &Mat, wd: &CscFixed, tol: f64) -> Result<f64> {
+    let recon = ws.matmul(&wd.to_dense())?;
+    let err = w.rel_err(&recon);
+    if err > tol {
+        return Err(crate::error::Error::shape(format!(
+            "factorization rel_err {err:.4} > tol {tol}"
+        )));
+    }
+    Ok(err)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_counts_favor_sequential() {
+        // BERT-Large FFN-up: X 128×1024, W 1024×4096, r=256, nnz=24.
+        let (seq, fused, dense) = mac_counts(128, 1024, 4096, 256, 24);
+        assert!(seq < dense, "seq {seq} dense {dense}");
+        assert!(seq < fused);
+        let ratio = dense as f64 / seq as f64;
+        // Paper: 1–2.14× fewer MACs than X·W across models.
+        assert!(ratio > 1.0 && ratio < 16.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn mac_count_formula() {
+        let (seq, fused, dense) = mac_counts(2, 3, 5, 4, 1);
+        assert_eq!(dense, 2 * 3 * 5);
+        assert_eq!(seq, 2 * 3 * 4 + 2 * 1 * 5);
+        assert_eq!(fused, 3 * 4 * 5 + 2 * 3 * 5);
+    }
+}

@@ -1,0 +1,266 @@
+//! Pointer-free fixed-NZ-per-column sparse format (paper Fig. 23.1.3).
+//!
+//! Because the training regularizer fixes the number of non-zeros in every
+//! column of `W_D`, the column-pointer array of standard CSC is redundant:
+//! column `c`'s entries live at `[c·nnz, (c+1)·nnz)`. Only row indices and
+//! values are stored — the "compressed format similar to CSC that does not
+//! require storing the column pointer".
+
+use crate::error::{Error, Result};
+use crate::util::mat::Mat;
+
+/// Fixed-NZ-per-column sparse matrix, column-major storage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CscFixed {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz_per_col: usize,
+    /// Row indices, `cols × nnz_per_col`, ascending within each column.
+    pub idx: Vec<u16>,
+    /// Values, parallel to `idx`.
+    pub val: Vec<f32>,
+}
+
+impl CscFixed {
+    /// Build from dense by keeping the top-`nnz` magnitude entries per column.
+    pub fn from_dense_topk(w: &Mat, nnz_per_col: usize) -> Result<Self> {
+        if nnz_per_col == 0 || nnz_per_col > w.rows {
+            return Err(Error::shape(format!(
+                "nnz_per_col {} not in 1..={}",
+                nnz_per_col, w.rows
+            )));
+        }
+        if w.rows > u16::MAX as usize + 1 {
+            return Err(Error::shape("CscFixed: rows exceed u16 index range".to_string()));
+        }
+        let mut idx = Vec::with_capacity(w.cols * nnz_per_col);
+        let mut val = Vec::with_capacity(w.cols * nnz_per_col);
+        let mut order: Vec<usize> = Vec::with_capacity(w.rows);
+        for c in 0..w.cols {
+            order.clear();
+            order.extend(0..w.rows);
+            order.sort_by(|&a, &b| {
+                w.at(b, c)
+                    .abs()
+                    .partial_cmp(&w.at(a, c).abs())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            let mut keep: Vec<usize> = order[..nnz_per_col].to_vec();
+            keep.sort_unstable();
+            for &r in &keep {
+                idx.push(r as u16);
+                val.push(w.at(r, c));
+            }
+        }
+        Ok(CscFixed { rows: w.rows, cols: w.cols, nnz_per_col, idx, val })
+    }
+
+    /// Entries of column `c` as `(row, value)` pairs.
+    pub fn col_entries(&self, c: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let s = c * self.nnz_per_col;
+        self.idx[s..s + self.nnz_per_col]
+            .iter()
+            .zip(&self.val[s..s + self.nnz_per_col])
+            .map(|(&i, &v)| (i as usize, v))
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.cols * self.nnz_per_col
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for c in 0..self.cols {
+            for (r, v) in self.col_entries(c) {
+                *m.at_mut(r, c) = v;
+            }
+        }
+        m
+    }
+
+    /// `Y · self` where `Y` is `m × rows` dense — the SMM column-product:
+    /// for each output column, gather the `nnz` referenced columns of `Y`
+    /// and accumulate. This is exactly the chip's relative-addressed load.
+    pub fn left_mul(&self, y: &Mat) -> Result<Mat> {
+        if y.cols != self.rows {
+            return Err(Error::shape(format!(
+                "left_mul: {}x{} · sparse {}x{}",
+                y.rows, y.cols, self.rows, self.cols
+            )));
+        }
+        let mut out = Mat::zeros(y.rows, self.cols);
+        for c in 0..self.cols {
+            for (k, v) in self.col_entries(c) {
+                for r in 0..y.rows {
+                    *out.at_mut(r, c) += y.at(r, k) * v;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Apply a row permutation (`new_row = perm_inv[old_row]` given
+    /// `perm[new] = old`), keeping columns sorted. Used by the delta-encoding
+    /// rearrangement: permuting W_D's rows together with W_S's columns leaves
+    /// the product unchanged.
+    pub fn permute_rows(&self, perm: &[usize]) -> Result<CscFixed> {
+        if perm.len() != self.rows {
+            return Err(Error::shape("permute_rows: bad perm length".to_string()));
+        }
+        // perm[new] = old ⇒ need old→new map.
+        let mut old_to_new = vec![usize::MAX; self.rows];
+        for (new, &old) in perm.iter().enumerate() {
+            if old >= self.rows || old_to_new[old] != usize::MAX {
+                return Err(Error::shape("permute_rows: not a permutation".to_string()));
+            }
+            old_to_new[old] = new;
+        }
+        let mut out = self.clone();
+        let mut scratch: Vec<(u16, f32)> = Vec::with_capacity(self.nnz_per_col);
+        for c in 0..self.cols {
+            let s = c * self.nnz_per_col;
+            scratch.clear();
+            for j in s..s + self.nnz_per_col {
+                scratch.push((old_to_new[self.idx[j] as usize] as u16, self.val[j]));
+            }
+            scratch.sort_unstable_by_key(|&(i, _)| i);
+            for (j, &(i, v)) in scratch.iter().enumerate() {
+                out.idx[s + j] = i;
+                out.val[s + j] = v;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Structural invariant check: fixed arity, ascending unique indices in
+    /// range. Used by property tests and the artifact loader.
+    pub fn check_invariants(&self) -> Result<()> {
+        if self.idx.len() != self.nnz() || self.val.len() != self.nnz() {
+            return Err(Error::shape("CscFixed: storage length mismatch".to_string()));
+        }
+        for c in 0..self.cols {
+            let s = c * self.nnz_per_col;
+            let col = &self.idx[s..s + self.nnz_per_col];
+            for w in col.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(Error::shape(format!(
+                        "CscFixed: col {c} indices not strictly ascending"
+                    )));
+                }
+            }
+            if let Some(&last) = col.last() {
+                if last as usize >= self.rows {
+                    return Err(Error::shape(format!("CscFixed: col {c} index out of range")));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_sparse(rng: &mut Rng, rows: usize, cols: usize, nnz: usize) -> CscFixed {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for _ in 0..cols {
+            let mut rs = rng.sample_distinct(rows, nnz);
+            rs.sort_unstable();
+            for r in rs {
+                idx.push(r as u16);
+                val.push(rng.normal_f32());
+            }
+        }
+        CscFixed { rows, cols, nnz_per_col: nnz, idx, val }
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let w = Mat::from_vec(4, 2, vec![0.1, 5.0, 3.0, -0.2, -4.0, 0.3, 0.05, 1.0]).unwrap();
+        // col 0: [0.1, 3.0, -4.0, 0.05] → top2 = rows 1(3.0), 2(-4.0)
+        let s = CscFixed::from_dense_topk(&w, 2).unwrap();
+        s.check_invariants().unwrap();
+        let c0: Vec<_> = s.col_entries(0).collect();
+        assert_eq!(c0, vec![(1, 3.0), (2, -4.0)]);
+        let c1: Vec<_> = s.col_entries(1).collect();
+        assert_eq!(c1, vec![(0, 5.0), (3, 1.0)]);
+    }
+
+    #[test]
+    fn left_mul_matches_dense() {
+        let mut rng = Rng::new(21);
+        for _ in 0..20 {
+            let (m, r, n, nnz) = (
+                rng.range(1, 8),
+                rng.range(4, 24),
+                rng.range(1, 16),
+                0, // placeholder
+            );
+            let nnz = rng.range(1, r.min(8));
+            let _ = nnz;
+            let sp = random_sparse(&mut rng, r, n, nnz);
+            sp.check_invariants().unwrap();
+            let y = Mat::randn(m, r, &mut rng);
+            let fast = sp.left_mul(&y).unwrap();
+            let slow = y.matmul(&sp.to_dense()).unwrap();
+            assert!(fast.rel_err(&slow) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn permute_rows_preserves_product() {
+        let mut rng = Rng::new(22);
+        let r = 16;
+        let sp = random_sparse(&mut rng, r, 12, 5);
+        let ws = Mat::randn(10, r, &mut rng);
+        let mut perm: Vec<usize> = (0..r).collect();
+        rng.shuffle(&mut perm);
+        // perm[new]=old for Wd rows ⇔ ws columns reordered as ws[:, perm]
+        let sp_p = sp.permute_rows(&perm).unwrap();
+        sp_p.check_invariants().unwrap();
+        let ws_p = ws.permute_cols(&perm).unwrap();
+        let a = ws.matmul(&sp.to_dense()).unwrap();
+        let b = ws_p.matmul(&sp_p.to_dense()).unwrap();
+        assert!(a.rel_err(&b) < 1e-6);
+    }
+
+    #[test]
+    fn invariant_violations_detected() {
+        let mut s = CscFixed {
+            rows: 4,
+            cols: 1,
+            nnz_per_col: 2,
+            idx: vec![2, 1],
+            val: vec![1.0, 2.0],
+        };
+        assert!(s.check_invariants().is_err()); // descending
+        s.idx = vec![1, 1];
+        assert!(s.check_invariants().is_err()); // duplicate
+        s.idx = vec![1, 9];
+        assert!(s.check_invariants().is_err()); // out of range
+        s.idx = vec![1, 3];
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn density_and_nnz() {
+        let mut rng = Rng::new(23);
+        let s = random_sparse(&mut rng, 64, 100, 8);
+        assert_eq!(s.nnz(), 800);
+        assert!((s.density() - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_arity() {
+        let w = Mat::zeros(4, 4);
+        assert!(CscFixed::from_dense_topk(&w, 0).is_err());
+        assert!(CscFixed::from_dense_topk(&w, 5).is_err());
+    }
+}

@@ -1,0 +1,40 @@
+//! # T-REX — Transformer accelerator with Reduced External memory access
+//!
+//! Full-system reproduction of the ISSCC 2025 paper 23.1 (Moon et al.):
+//! a transformer inference accelerator whose contributions are external-
+//! memory-access (EMA) reduction — via factorized weights `W = W_S · W_D`,
+//! aggressive compression, and dynamic batching — and hardware-utilization
+//! enhancement — via dynamic batching and two-direction-accessible register
+//! files (TRFs).
+//!
+//! The crate is organised in three planes:
+//!
+//! * **Algorithms** — [`factorize`], [`compress`], [`model`]: the factorized
+//!   weight representation, the paper's three codecs (4b non-uniform LUT
+//!   quantization, 5b delta-encoded indices with row rearrangement, 6b
+//!   uniform quantization), and the layer-graph builder that turns a model
+//!   config into the op stream the chip executes.
+//! * **Architecture** — [`sim`], [`baseline`]: a cycle-level model of the
+//!   T-REX microarchitecture (DMM/SMM cores, AFUs, TRF buffers, global
+//!   buffer, LPDDR3 DMA) with energy and utilization accounting, plus the
+//!   dense baseline accelerator used for the paper's comparisons.
+//! * **System** — [`coordinator`], [`runtime`]: a production-shaped serving
+//!   stack: dynamic batcher, engine, multi-threaded server, and a PJRT
+//!   runtime that executes the AOT-compiled JAX/Pallas numerics.
+//!
+//! See `DESIGN.md` for the paper→module map and `EXPERIMENTS.md` for the
+//! reproduced tables/figures.
+
+pub mod baseline;
+pub mod bench_util;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod factorize;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,141 @@
+//! `trex` — CLI for the T-REX serving stack and simulator.
+//!
+//! Subcommands (hand-rolled parsing; clap is not vendored offline):
+//!   trex sim   --model <preset> [--seq N] [--batch N] [--vdd V] [--no-trf]
+//!   trex serve --requests N [--artifacts DIR] [--perf-model <preset>]
+//!   trex report --model <preset>         # compression report (Fig 23.1.3)
+//!   trex selftest [--artifacts DIR]      # PJRT vs jax check vectors
+//!   trex workloads                       # list presets
+
+use std::time::Duration;
+use trex::config::{HwConfig, ModelConfig, WORKLOADS};
+use trex::coordinator::{BatcherConfig, Engine, EngineConfig, Server, TraceGenerator};
+use trex::model::build_program;
+use trex::runtime::{artifacts, ArtifactSet, PjrtRuntime};
+use trex::sim::{batch_class, simulate, SimOptions};
+
+fn arg_value(args: &[String], key: &str) -> Option<String> {
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "sim" => cmd_sim(&args[1..]),
+        "serve" => cmd_serve(&args[1..]),
+        "report" => cmd_report(&args[1..]),
+        "selftest" => cmd_selftest(&args[1..]),
+        "workloads" => {
+            for w in WORKLOADS {
+                let m = ModelConfig::preset(w)?;
+                println!(
+                    "{w:12} {} enc={} dec={} d={} ff={} r={} nz/col={}",
+                    m.arch.name(),
+                    m.enc_layers,
+                    m.dec_layers,
+                    m.d_model,
+                    m.d_ff,
+                    m.rank,
+                    m.nnz_per_col
+                );
+            }
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "usage: trex <sim|serve|report|selftest|workloads> [options]\n\
+                 \n  sim      --model <preset> [--seq N] [--batch 1|2|4] [--vdd V] [--no-trf] [--no-prefetch]\
+                 \n  serve    --requests N [--artifacts DIR] [--perf-model <preset>]\
+                 \n  report   --model <preset>\
+                 \n  selftest [--artifacts DIR]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
+    let hw = HwConfig::default();
+    let name = arg_value(args, "--model").unwrap_or_else(|| "bert-large".to_string());
+    let m = ModelConfig::preset(&name)?;
+    let seq: usize = arg_value(args, "--seq")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(m.max_seq.min(m.mean_input_len as usize));
+    let batch: usize = arg_value(args, "--batch")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or_else(|| batch_class(seq, hw.max_seq).map(|c| c.batch()).unwrap_or(1));
+    let mut opts = SimOptions { act_bits: m.act_bits, ..SimOptions::paper(&hw) };
+    if let Some(v) = arg_value(args, "--vdd") {
+        opts.point = hw.point_at_vdd(v.parse()?);
+    }
+    if args.iter().any(|a| a == "--no-trf") {
+        opts.trf = false;
+    }
+    if args.iter().any(|a| a == "--no-prefetch") {
+        opts.prefetch = false;
+    }
+    let prog = build_program(&m, seq, batch);
+    let stats = simulate(&hw, &prog, &opts);
+    println!("{}", stats.to_json(&hw).to_string_pretty());
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    let n: usize = arg_value(args, "--requests").map(|s| s.parse()).transpose()?.unwrap_or(100);
+    let dir = arg_value(args, "--artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(artifacts::default_dir);
+    let perf_name = arg_value(args, "--perf-model").unwrap_or_else(|| "bert-large".to_string());
+    let perf_model = ModelConfig::preset(&perf_name)?;
+
+    let manifest = trex::util::json::Json::from_file(dir.join("manifest.json"))
+        .map_err(|e| anyhow::anyhow!("{e} — run `make artifacts`"))?;
+    let d_model = manifest.get("model")?.get("d_model")?.as_usize()?;
+    let max_seq = manifest.get("model")?.get("max_seq")?.as_usize()?;
+
+    let hw = HwConfig::default();
+    let dir2 = dir.clone();
+    let pm = perf_model.clone();
+    let handle = Server::start(
+        move || {
+            let rt = PjrtRuntime::cpu()?;
+            let set = ArtifactSet::load(&rt, &dir2)?;
+            Engine::new(set, EngineConfig { hw, perf_model: pm, self_test: true })
+        },
+        BatcherConfig { max_seq, max_wait: Duration::from_millis(2) },
+    );
+    let mut gen = TraceGenerator::for_model(&perf_model, max_seq, d_model, 1);
+    for _ in 0..n {
+        handle.submit(gen.next())?;
+    }
+    let mut got = 0;
+    while got < n {
+        handle.responses.recv_timeout(Duration::from_secs(30))?;
+        got += 1;
+    }
+    let report = handle.shutdown()?;
+    println!("{}", report.json().to_string_pretty());
+    Ok(())
+}
+
+fn cmd_report(args: &[String]) -> anyhow::Result<()> {
+    let name = arg_value(args, "--model").unwrap_or_else(|| "bert-large".to_string());
+    let m = ModelConfig::preset(&name)?;
+    let r = trex::compress::CompressionReport::analytic(&m);
+    println!("{}", r.to_json().to_string_pretty());
+    Ok(())
+}
+
+fn cmd_selftest(args: &[String]) -> anyhow::Result<()> {
+    let dir = arg_value(args, "--artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(artifacts::default_dir);
+    let rt = PjrtRuntime::cpu()?;
+    let set = ArtifactSet::load(&rt, &dir)?;
+    set.self_test()?;
+    println!("self-test OK: {} artifacts verified against jax check vectors", set.entries.len());
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! The op IR: shape-carrying instructions the top controller issues.
+
+/// What kind of hardware block executes the op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// DMA: stream one layer's compressed W_D from DRAM.
+    LoadWd { bytes_val: u64, bytes_idx: u64, bytes_meta: u64 },
+    /// DMA: stream a dense 16b weight matrix (unfactorized baseline only).
+    LoadDenseWeights { bytes: u64 },
+    /// DMA: input activations in.
+    LoadInput { bytes: u64 },
+    /// DMA: output activations out.
+    StoreOutput { bytes: u64 },
+    /// Dense MM on the DMM cores: `count` independent `m×k · k×n` products.
+    /// `w_bits` is the stored bit-width of the stationary operand (4 for the
+    /// LUT-coded W_S, act_bits for activation·activation attention MMs).
+    Dmm { count: usize, m: usize, k: usize, n: usize, w_bits: u32 },
+    /// Sparse MM on the SMM cores: `m×r` · fixed-NZ `r×n` (values at 6b,
+    /// processed by the bit-serial MAC in 8b lanes).
+    Smm { m: usize, r: usize, n: usize, nnz_per_col: usize, w_bits: u32 },
+    /// AFU element-wise / reduction ops over an `rows×cols` activation.
+    Softmax { rows: usize, cols: usize },
+    LayerNorm { rows: usize, cols: usize },
+    Gelu { rows: usize, cols: usize },
+    Residual { rows: usize, cols: usize },
+}
+
+/// One scheduled op.
+#[derive(Debug, Clone)]
+pub struct Op {
+    /// Global layer index (usize::MAX for model-level DMA).
+    pub layer: usize,
+    /// Human-readable site name ("wq", "ffn_up", "attn_scores", …).
+    pub name: &'static str,
+    pub kind: OpKind,
+}
+
+impl Op {
+    pub fn load_wd(layer: usize, name: &'static str, bytes_val: u64, bytes_idx: u64, bytes_meta: u64) -> Op {
+        Op { layer, name, kind: OpKind::LoadWd { bytes_val, bytes_idx, bytes_meta } }
+    }
+    pub fn load_input(bytes: u64) -> Op {
+        Op { layer: usize::MAX, name: "load_input", kind: OpKind::LoadInput { bytes } }
+    }
+    pub fn store_output(bytes: u64) -> Op {
+        Op { layer: usize::MAX, name: "store_output", kind: OpKind::StoreOutput { bytes } }
+    }
+    pub fn load_dense_weights(layer: usize, name: &'static str, bytes: u64) -> Op {
+        let _ = name;
+        Op { layer, name: "load_dense_weights", kind: OpKind::LoadDenseWeights { bytes } }
+    }
+    /// Dense-baseline DMM: 16b weights (no factorization, no LUT codes).
+    pub fn dmm_dense16(layer: usize, name: &'static str, m: usize, k: usize, n: usize) -> Op {
+        Op { layer, name, kind: OpKind::Dmm { count: 1, m, k, n, w_bits: 16 } }
+    }
+    /// Projection DMM: weights are 4b LUT codes.
+    pub fn dmm(layer: usize, name: &'static str, m: usize, k: usize, n: usize) -> Op {
+        Op { layer, name, kind: OpKind::Dmm { count: 1, m, k, n, w_bits: 4 } }
+    }
+    /// Attention DMM: both operands are activations (8b).
+    pub fn dmm_batched(layer: usize, name: &'static str, count: usize, m: usize, k: usize, n: usize) -> Op {
+        Op { layer, name, kind: OpKind::Dmm { count, m, k, n, w_bits: 8 } }
+    }
+    /// SMM: 6b uniform-quantized values ride the 8b bit-serial lane.
+    pub fn smm(layer: usize, name: &'static str, m: usize, r: usize, n: usize, nnz_per_col: usize) -> Op {
+        Op { layer, name, kind: OpKind::Smm { m, r, n, nnz_per_col, w_bits: 8 } }
+    }
+    pub fn softmax(layer: usize, rows: usize, cols: usize) -> Op {
+        Op { layer, name: "softmax", kind: OpKind::Softmax { rows, cols } }
+    }
+    pub fn layernorm(layer: usize, rows: usize, cols: usize) -> Op {
+        Op { layer, name: "layernorm", kind: OpKind::LayerNorm { rows, cols } }
+    }
+    pub fn gelu(layer: usize, rows: usize, cols: usize) -> Op {
+        Op { layer, name: "gelu", kind: OpKind::Gelu { rows, cols } }
+    }
+    pub fn residual(layer: usize, rows: usize, cols: usize) -> Op {
+        Op { layer, name: "residual", kind: OpKind::Residual { rows, cols } }
+    }
+
+    /// MAC count of the op (0 for DMA/AFU ops).
+    pub fn macs(&self) -> u64 {
+        match self.kind {
+            OpKind::Dmm { count, m, k, n, .. } => (count * m * k * n) as u64,
+            OpKind::Smm { m, n, nnz_per_col, .. } => (m * n * nnz_per_col) as u64,
+            _ => 0,
+        }
+    }
+
+    /// AFU element-op count (rough IAU/FAU op count per element):
+    /// softmax ≈ 4 ops/elem (exp LUT, sum, div, scale), layernorm ≈ 4,
+    /// gelu ≈ 2 (LUT + mul), residual ≈ 1.
+    pub fn afu_elems(&self) -> u64 {
+        match self.kind {
+            OpKind::Softmax { rows, cols } => (rows * cols * 4) as u64,
+            OpKind::LayerNorm { rows, cols } => (rows * cols * 4) as u64,
+            OpKind::Gelu { rows, cols } => (rows * cols * 2) as u64,
+            OpKind::Residual { rows, cols } => (rows * cols) as u64,
+            _ => 0,
+        }
+    }
+
+    /// DMA bytes moved (0 for compute ops).
+    pub fn dma_bytes(&self) -> u64 {
+        match self.kind {
+            OpKind::LoadWd { bytes_val, bytes_idx, bytes_meta } => bytes_val + bytes_idx + bytes_meta,
+            OpKind::LoadDenseWeights { bytes }
+            | OpKind::LoadInput { bytes }
+            | OpKind::StoreOutput { bytes } => bytes,
+            _ => 0,
+        }
+    }
+
+    pub fn is_compute(&self) -> bool {
+        matches!(self.kind, OpKind::Dmm { .. } | OpKind::Smm { .. })
+    }
+    pub fn is_afu(&self) -> bool {
+        matches!(
+            self.kind,
+            OpKind::Softmax { .. } | OpKind::LayerNorm { .. } | OpKind::Gelu { .. } | OpKind::Residual { .. }
+        )
+    }
+    pub fn is_dma(&self) -> bool {
+        matches!(
+            self.kind,
+            OpKind::LoadWd { .. }
+                | OpKind::LoadDenseWeights { .. }
+                | OpKind::LoadInput { .. }
+                | OpKind::StoreOutput { .. }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_counts() {
+        assert_eq!(Op::dmm(0, "x", 4, 8, 16).macs(), 512);
+        assert_eq!(Op::dmm_batched(0, "x", 3, 4, 8, 16).macs(), 1536);
+        assert_eq!(Op::smm(0, "x", 4, 32, 16, 5).macs(), 320); // m·n·nnz
+        assert_eq!(Op::softmax(0, 4, 4).macs(), 0);
+    }
+
+    #[test]
+    fn categories_partition() {
+        let ops = [
+            Op::load_wd(0, "w", 1, 1, 1),
+            Op::dmm(0, "x", 1, 1, 1),
+            Op::smm(0, "x", 1, 1, 1, 1),
+            Op::softmax(0, 1, 1),
+            Op::load_input(1),
+        ];
+        for o in &ops {
+            let cats = [o.is_compute(), o.is_afu(), o.is_dma()];
+            assert_eq!(cats.iter().filter(|&&c| c).count(), 1, "{o:?}");
+        }
+    }
+
+    #[test]
+    fn dma_bytes_sum_components() {
+        assert_eq!(Op::load_wd(0, "w", 10, 5, 4).dma_bytes(), 19);
+        assert_eq!(Op::load_input(7).dma_bytes(), 7);
+        assert_eq!(Op::dmm(0, "x", 2, 2, 2).dma_bytes(), 0);
+    }
+}

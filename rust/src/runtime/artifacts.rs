@@ -1,0 +1,135 @@
+//! Artifact manifest loader + self-test against the AOT check vectors.
+
+use crate::error::{Error, Result};
+use crate::runtime::client::{Executable, PjrtRuntime};
+use crate::sim::BatchClass;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact (one dynamic-batch class) from the manifest.
+pub struct ArtifactEntry {
+    pub name: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub tokens: usize,
+    pub d_model: usize,
+    pub check_vector: PathBuf,
+    pub input_elems: usize,
+    pub output_elems: usize,
+    pub exe: Executable,
+}
+
+impl ArtifactEntry {
+    pub fn class(&self) -> Result<BatchClass> {
+        match self.batch {
+            1 => Ok(BatchClass::B1),
+            2 => Ok(BatchClass::B2),
+            4 => Ok(BatchClass::B4),
+            b => Err(Error::runtime(format!("artifact batch {b} is not a batch class"))),
+        }
+    }
+}
+
+/// All compiled artifacts for a model, keyed by batch class.
+pub struct ArtifactSet {
+    pub model_name: String,
+    pub d_model: usize,
+    pub max_seq: usize,
+    pub entries: BTreeMap<BatchClass, ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactSet {
+    /// Load `dir/manifest.json` and compile every artifact.
+    pub fn load(rt: &PjrtRuntime, dir: &Path) -> Result<Self> {
+        let manifest = Json::from_file(dir.join("manifest.json"))
+            .map_err(|e| Error::runtime(format!("manifest: {e} (run `make artifacts`)")))?;
+        let model = manifest.get("model")?;
+        let model_name = model.get("name")?.as_str()?.to_string();
+        let d_model = model.get("d_model")?.as_usize()?;
+        let max_seq = model.get("max_seq")?.as_usize()?;
+        let mut entries = BTreeMap::new();
+        for a in manifest.get("artifacts")?.as_arr()? {
+            let name = a.get("name")?.as_str()?.to_string();
+            let exe = rt.compile_hlo_file(&dir.join(&name))?;
+            let entry = ArtifactEntry {
+                name,
+                batch: a.get("batch")?.as_usize()?,
+                seq: a.get("seq")?.as_usize()?,
+                tokens: a.get("tokens")?.as_usize()?,
+                d_model: a.get("d_model")?.as_usize()?,
+                check_vector: dir.join(a.get("check_vector")?.as_str()?),
+                input_elems: a.get("input_elems")?.as_usize()?,
+                output_elems: a.get("output_elems")?.as_usize()?,
+                exe,
+            };
+            entries.insert(entry.class()?, entry);
+        }
+        if entries.is_empty() {
+            return Err(Error::runtime("manifest has no artifacts".to_string()));
+        }
+        Ok(ArtifactSet { model_name, d_model, max_seq, entries, dir: dir.to_path_buf() })
+    }
+
+    pub fn get(&self, class: BatchClass) -> Result<&ArtifactEntry> {
+        self.entries
+            .get(&class)
+            .ok_or_else(|| Error::runtime(format!("no artifact for class {}", class.name())))
+    }
+
+    /// Execute every artifact on its AOT check vector and compare against
+    /// the jax-computed output — proves PJRT-side numerics match the
+    /// compile-side numerics bit-for-bit-ish (f32 tolerance).
+    pub fn self_test(&self) -> Result<()> {
+        for (class, e) in &self.entries {
+            let blob = std::fs::read(&e.check_vector)?;
+            let need = 4 * (e.input_elems + e.output_elems);
+            if blob.len() != need {
+                return Err(Error::runtime(format!(
+                    "{}: check vector {} bytes, expected {need}",
+                    e.name,
+                    blob.len()
+                )));
+            }
+            let read_f32 = |bytes: &[u8]| -> Vec<f32> {
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect()
+            };
+            let x = read_f32(&blob[..4 * e.input_elems]);
+            let want = read_f32(&blob[4 * e.input_elems..]);
+            let got = e.exe.run_f32(&x, e.tokens, e.d_model)?;
+            if got.len() != want.len() {
+                return Err(Error::runtime(format!(
+                    "{}: output len {} vs expected {}",
+                    e.name,
+                    got.len(),
+                    want.len()
+                )));
+            }
+            let max_err = got
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            if max_err > 1e-4 {
+                return Err(Error::runtime(format!(
+                    "{}: self-test max err {max_err} (class {})",
+                    e.name,
+                    class.name()
+                )));
+            }
+            log::info!("self-test {}: max err {max_err:.2e}", e.name);
+        }
+        Ok(())
+    }
+}
+
+/// Default artifacts directory: `$TREX_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("TREX_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,72 @@
+//! Thin typed wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 emits serialized protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and `python/compile/aot.py`).
+
+use crate::error::{Error, Result};
+
+/// A PJRT client (CPU). One per process; executables borrow it.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::runtime(format!("PjRtClient::cpu: {e}")))?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text file and compile it.
+    pub fn compile_hlo_file(&self, path: &std::path::Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::runtime("non-utf8 path".to_string()))?,
+        )
+        .map_err(|e| Error::runtime(format!("HLO parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::runtime(format!("compile {}: {e}", path.display())))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled executable taking one f32 tensor and returning one f32 tensor
+/// (the model artifacts' calling convention: activations in → out).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute on a `(rows, cols)` f32 input; returns the flat f32 output.
+    pub fn run_f32(&self, input: &[f32], rows: usize, cols: usize) -> Result<Vec<f32>> {
+        if input.len() != rows * cols {
+            return Err(Error::shape(format!(
+                "run_f32: input len {} != {rows}x{cols}",
+                input.len()
+            )));
+        }
+        let lit = xla::Literal::vec1(input)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| Error::runtime(format!("reshape: {e}")))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| Error::runtime(format!("execute: {e}")))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("to_literal: {e}")))?;
+        // aot.py lowers with return_tuple=True ⇒ unwrap the 1-tuple.
+        let out = out
+            .to_tuple1()
+            .map_err(|e| Error::runtime(format!("to_tuple1: {e}")))?;
+        out.to_vec::<f32>()
+            .map_err(|e| Error::runtime(format!("to_vec: {e}")))
+    }
+}

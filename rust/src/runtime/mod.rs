@@ -1,0 +1,8 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
+//! the Rust hot path. Python never runs at serve time.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactEntry, ArtifactSet};
+pub use client::{Executable, PjrtRuntime};

@@ -1,0 +1,92 @@
+//! Dynamic-batching classes (paper Fig. 23.1.4).
+//!
+//! T-REX sizes its dataflow for a 128-token plane. Inputs of length
+//! (64, 128] run alone; (32, 64] run two-up; ≤32 run four-up — the cores and
+//! AFU blocks are re-partitioned by "specifying which submatrices the
+//! DMM/SMM cores use", at <0.1% area cost because blocks communicate through
+//! memory. Parameters are then shared across the whole batch (EMA ↓) and
+//! otherwise-idle blocks get work (utilization ↑, up to 3.31×).
+
+use crate::error::{Error, Result};
+
+/// The three dataflow configurations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BatchClass {
+    /// One input, length in (64, 128].
+    B1,
+    /// Two inputs, each ≤ 64.
+    B2,
+    /// Four inputs, each ≤ 32.
+    B4,
+}
+
+impl BatchClass {
+    pub fn batch(self) -> usize {
+        match self {
+            BatchClass::B1 => 1,
+            BatchClass::B2 => 2,
+            BatchClass::B4 => 4,
+        }
+    }
+    /// Maximum per-input length admitted to this class.
+    pub fn max_len(self, hw_max_seq: usize) -> usize {
+        hw_max_seq / self.batch()
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            BatchClass::B1 => "b1",
+            BatchClass::B2 => "b2",
+            BatchClass::B4 => "b4",
+        }
+    }
+    pub const ALL: [BatchClass; 3] = [BatchClass::B1, BatchClass::B2, BatchClass::B4];
+}
+
+/// Classify an input length into its batch class (paper thresholds for
+/// `hw_max_seq` = 128: ≤32 → B4, ≤64 → B2, ≤128 → B1).
+pub fn batch_class(len: usize, hw_max_seq: usize) -> Result<BatchClass> {
+    if len == 0 {
+        return Err(Error::sim("batch_class: zero-length input".to_string()));
+    }
+    if len > hw_max_seq {
+        return Err(Error::sim(format!(
+            "batch_class: length {len} exceeds hardware max {hw_max_seq}"
+        )));
+    }
+    Ok(if len * 4 <= hw_max_seq {
+        BatchClass::B4
+    } else if len * 2 <= hw_max_seq {
+        BatchClass::B2
+    } else {
+        BatchClass::B1
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_thresholds() {
+        assert_eq!(batch_class(128, 128).unwrap(), BatchClass::B1);
+        assert_eq!(batch_class(65, 128).unwrap(), BatchClass::B1);
+        assert_eq!(batch_class(64, 128).unwrap(), BatchClass::B2);
+        assert_eq!(batch_class(33, 128).unwrap(), BatchClass::B2);
+        assert_eq!(batch_class(32, 128).unwrap(), BatchClass::B4);
+        assert_eq!(batch_class(1, 128).unwrap(), BatchClass::B4);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(batch_class(0, 128).is_err());
+        assert!(batch_class(129, 128).is_err());
+    }
+
+    #[test]
+    fn class_capacity_covers_plane() {
+        // batch × max_len always equals the 128-token plane.
+        for c in BatchClass::ALL {
+            assert_eq!(c.batch() * c.max_len(128), 128);
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! Cycle models for the three compute planes.
+//!
+//! **DMM core** (Fig. 23.1.2/23.1.5): 4×4 PEs of 4×4 MACs produce one 16×16
+//! output tile. Per reduction step `k`, the core consumes one column of X
+//! and one row of W_S and performs a full 16×16 outer product — all 256 MACs
+//! busy for `mac_cycles(a_bits, w_bits)` cycles (the MAC is bit-serial on a
+//! 4b multiplier: 16b/8b/4b over 16/4/1 cycles; mixed precisions multiply).
+//!
+//! **Token-plane partitioning** (Fig. 23.1.4): the dataflow statically
+//! slices the 128-token plane across the four DMM (and SMM) cores. An input
+//! occupying only one 32-token slice leaves the other cores idle — that is
+//! the utilization the paper's dynamic batching recovers (up to 3.31×).
+//! Callers pass `active` = number of cores holding work for this op.
+//!
+//! **TRF model** (Fig. 23.1.5): with two-direction register files,
+//! wrong-direction tile accesses are hidden behind compute by the
+//! double-buffered TRFs. With conventional single-direction SRAM buffers,
+//! cross-direction access runs at the 4-words/cycle bank granularity: each
+//! 16-deep reduction chunk stalls `t/4` cycles re-assembling the X subtile
+//! column-wise, and each finished tile stalls `t²/8` cycles storing C-C —
+//! the "significant number of SRAM accesses" the paper eliminates.
+//!
+//! **SMM core**: 8×8 = 64 MACs. For each output column, each stored NZ
+//! `(row, value)` multiplies value against a 64-row slice of the input
+//! column `Y[:, row]` — `ceil(m/64)` passes of `mac_cycles` each. Without
+//! TRF, the column gather of `Y` costs one extra access cycle per pass.
+
+use crate::config::HwConfig;
+
+/// Cycles one bit-serial MAC needs for an `a_bits × w_bits` multiply.
+/// The 4b multiplier processes 4-bit nibbles of both operands:
+/// 16b×16b = 16 cycles, 8b×8b = 4, 4b×4b = 1, 8b×4b = 2 (paper Fig. 23.1.2).
+pub fn mac_cycles(a_bits: u32, w_bits: u32) -> u64 {
+    (a_bits.div_ceil(4) * w_bits.div_ceil(4)) as u64
+}
+
+/// Timing result for one op on one plane.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoreTiming {
+    /// Wall-clock cycles the plane is occupied.
+    pub elapsed: u64,
+    /// Useful MAC-cycles (busy accounting for utilization): true (unpadded)
+    /// MACs × per-MAC cycles.
+    pub busy_mac_cycles: u64,
+    /// Cycles lost to single-direction buffer re-access (0 when TRF on).
+    pub stall_cycles: u64,
+}
+
+impl CoreTiming {
+    pub const ZERO: CoreTiming = CoreTiming { elapsed: 0, busy_mac_cycles: 0, stall_cycles: 0 };
+}
+
+/// DMM plane: `count` independent `m×k·k×n` dense MMs on `active` cores.
+pub fn dmm_cycles(
+    hw: &HwConfig,
+    active: usize,
+    count: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a_bits: u32,
+    w_bits: u32,
+    trf: bool,
+) -> CoreTiming {
+    if count == 0 || m == 0 || k == 0 || n == 0 {
+        return CoreTiming::ZERO;
+    }
+    let active = active.clamp(1, hw.dmm_cores);
+    let t = hw.dmm_tile(); // 16
+    let cyc = mac_cycles(a_bits, w_bits);
+    let tiles = count as u64 * (m.div_ceil(t) * n.div_ceil(t)) as u64;
+    let k_chunks = k.div_ceil(t) as u64;
+    // Per tile: k_chunks reduction chunks of t steps each.
+    let compute_per_tile = k_chunks * t as u64 * cyc;
+    // Without TRF: cross-direction re-access of the X subtile per chunk
+    // (t/4 cycles at bank granularity) + element-serial C-C store per tile.
+    let stall_per_tile = if trf { 0 } else { k_chunks * (t as u64 / 4) + (t * t) as u64 / 8 };
+    let per_tile = compute_per_tile + stall_per_tile;
+    // Tiles round-robin across the *active* cores.
+    let rounds = tiles.div_ceil(active as u64);
+    let elapsed = rounds * per_tile;
+    // Useful MACs exclude tile padding.
+    let busy = count as u64 * (m * k * n) as u64 * cyc;
+    CoreTiming { elapsed, busy_mac_cycles: busy, stall_cycles: rounds * stall_per_tile }
+}
+
+/// SMM plane: `m×r` input against fixed-NZ `r×n` on `active` cores.
+pub fn smm_cycles(
+    hw: &HwConfig,
+    active: usize,
+    m: usize,
+    n: usize,
+    nnz_per_col: usize,
+    a_bits: u32,
+    w_bits: u32,
+    trf: bool,
+) -> CoreTiming {
+    if m == 0 || n == 0 || nnz_per_col == 0 {
+        return CoreTiming::ZERO;
+    }
+    let active = active.clamp(1, hw.smm_cores);
+    let lanes = hw.smm_macs_per_core(); // 64
+    let cyc = mac_cycles(a_bits, w_bits);
+    let passes = m.div_ceil(lanes) as u64; // 64-row slices of Y
+    let gather_stall = if trf { 0 } else { 1u64 }; // extra access per pass
+    let per_col = nnz_per_col as u64 * passes * (cyc + gather_stall);
+    // Columns round-robin across active SMM cores.
+    let cols_per_core = n.div_ceil(active) as u64;
+    let elapsed = cols_per_core * per_col;
+    let busy = (m * n * nnz_per_col) as u64 * cyc;
+    let stall = cols_per_core * nnz_per_col as u64 * passes * gather_stall;
+    CoreTiming { elapsed, busy_mac_cycles: busy, stall_cycles: stall }
+}
+
+/// AFU plane: `elems` element-operations over `active` AFUs of `iaus` lanes.
+pub fn afu_cycles(hw: &HwConfig, active: usize, elems: u64) -> CoreTiming {
+    let active = active.clamp(1, hw.afus);
+    let lanes = (active * hw.afu_iaus) as u64;
+    let elapsed = elems.div_ceil(lanes);
+    CoreTiming { elapsed, busy_mac_cycles: elems, stall_cycles: 0 }
+}
+
+/// Number of cores holding work when the 128-token plane is statically
+/// sliced `total_cores`-ways and `batch` inputs of `seq` tokens are placed
+/// at offsets `i·(max_seq/batch)` (Fig. 23.1.4 dataflow configurations).
+pub fn active_cores(total_cores: usize, max_seq: usize, seq: usize, batch: usize) -> usize {
+    if total_cores == 0 || max_seq == 0 {
+        return 1;
+    }
+    let slice = max_seq.div_ceil(total_cores); // 32 tokens per core slice
+    let stride = max_seq / batch.max(1); // input placement stride
+    let mut used = vec![false; total_cores];
+    for b in 0..batch.max(1) {
+        let start = b * stride;
+        let end = (start + seq.min(stride)).min(max_seq);
+        let first = start / slice;
+        let last = (end.saturating_sub(1)) / slice;
+        for s in first..=last.min(total_cores - 1) {
+            used[s] = true;
+        }
+    }
+    used.iter().filter(|&&u| u).count().max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_cycles_match_paper() {
+        assert_eq!(mac_cycles(16, 16), 16);
+        assert_eq!(mac_cycles(8, 8), 4);
+        assert_eq!(mac_cycles(4, 4), 1);
+        assert_eq!(mac_cycles(8, 4), 2);
+        assert_eq!(mac_cycles(6, 8), 4); // 6b rides the 8b lane
+    }
+
+    #[test]
+    fn dmm_single_tile_exact() {
+        let hw = HwConfig::default();
+        // One 16×16 tile, k=16, int8×int4: 16 steps × 2 cycles = 32 cycles.
+        let t = dmm_cycles(&hw, 4, 1, 16, 16, 16, 8, 4, true);
+        assert_eq!(t.elapsed, 32);
+        assert_eq!(t.busy_mac_cycles, 16 * 16 * 16 * 2);
+        assert_eq!(t.stall_cycles, 0);
+    }
+
+    #[test]
+    fn dmm_distributes_over_active_cores() {
+        let hw = HwConfig::default();
+        // 4 tiles on 4 cores = 1 round; on 1 core = 4 rounds.
+        let all = dmm_cycles(&hw, 4, 1, 16, 16, 64, 8, 4, true);
+        let one = dmm_cycles(&hw, 1, 1, 16, 16, 64, 8, 4, true);
+        assert_eq!(all.elapsed * 4, one.elapsed);
+        assert_eq!(all.busy_mac_cycles, one.busy_mac_cycles);
+    }
+
+    #[test]
+    fn trf_stall_fraction_in_paper_band() {
+        // Paper Fig. 23.1.5: TRFs improve utilization 12–20%. The stall
+        // share without TRF must sit in that neighborhood for the
+        // bread-and-butter projection shape (int8 acts × int4 codes).
+        let hw = HwConfig::default();
+        let with = dmm_cycles(&hw, 4, 1, 128, 256, 128, 8, 4, true);
+        let without = dmm_cycles(&hw, 4, 1, 128, 256, 128, 8, 4, false);
+        assert_eq!(with.stall_cycles, 0);
+        assert_eq!(without.elapsed - with.elapsed, without.stall_cycles);
+        let gain = without.elapsed as f64 / with.elapsed as f64;
+        assert!((1.08..1.30).contains(&gain), "TRF speedup {gain:.3}");
+    }
+
+    #[test]
+    fn dmm_padding_wastes_but_busy_counts_true_macs() {
+        let hw = HwConfig::default();
+        // m=8 (half a tile): elapsed same as m=16, busy half.
+        let half = dmm_cycles(&hw, 4, 1, 8, 16, 16, 8, 4, true);
+        let full = dmm_cycles(&hw, 4, 1, 16, 16, 16, 8, 4, true);
+        assert_eq!(half.elapsed, full.elapsed);
+        assert_eq!(half.busy_mac_cycles * 2, full.busy_mac_cycles);
+    }
+
+    #[test]
+    fn smm_scales_with_nnz_not_rank() {
+        let hw = HwConfig::default();
+        let a = smm_cycles(&hw, 4, 64, 128, 8, 8, 8, true);
+        let b = smm_cycles(&hw, 4, 64, 128, 16, 8, 8, true);
+        assert_eq!(a.elapsed * 2, b.elapsed); // nnz doubles, cycles double
+        // Busy: m×n×nnz×cyc
+        assert_eq!(a.busy_mac_cycles, (64 * 128 * 8 * 4) as u64);
+    }
+
+    #[test]
+    fn smm_gather_stall_without_trf() {
+        let hw = HwConfig::default();
+        let with = smm_cycles(&hw, 4, 128, 256, 16, 8, 8, true);
+        let without = smm_cycles(&hw, 4, 128, 256, 16, 8, 8, false);
+        assert!(without.elapsed > with.elapsed);
+        let frac = (without.elapsed - with.elapsed) as f64 / with.elapsed as f64;
+        assert!((0.1..0.4).contains(&frac), "smm stall frac {frac}");
+    }
+
+    #[test]
+    fn afu_throughput() {
+        let hw = HwConfig::default();
+        // 2 AFUs × 64 IAUs = 128 elem-ops/cycle.
+        assert_eq!(afu_cycles(&hw, 2, 128).elapsed, 1);
+        assert_eq!(afu_cycles(&hw, 2, 129).elapsed, 2);
+        assert_eq!(afu_cycles(&hw, 2, 0).elapsed, 0);
+        // One active AFU: half throughput.
+        assert_eq!(afu_cycles(&hw, 1, 128).elapsed, 2);
+    }
+
+    #[test]
+    fn active_cores_partitioning_matches_fig4() {
+        // 4 cores, 128-token plane, 32-token slices.
+        // Full-length input touches all cores.
+        assert_eq!(active_cores(4, 128, 128, 1), 4);
+        assert_eq!(active_cores(4, 128, 100, 1), 4);
+        // 28-token input alone: one slice.
+        assert_eq!(active_cores(4, 128, 28, 1), 1);
+        // Two 60-token inputs at offsets 0, 64: all four slices.
+        assert_eq!(active_cores(4, 128, 60, 2), 4);
+        // Four 28-token inputs at offsets 0,32,64,96: all four slices.
+        assert_eq!(active_cores(4, 128, 28, 4), 4);
+        // 40-token input alone: slices 0 and 1.
+        assert_eq!(active_cores(4, 128, 40, 1), 2);
+        // Degenerate configs.
+        assert_eq!(active_cores(0, 128, 10, 1), 1);
+        assert_eq!(active_cores(2, 128, 128, 1), 2);
+    }
+
+    #[test]
+    fn zero_shapes_are_zero() {
+        let hw = HwConfig::default();
+        assert_eq!(dmm_cycles(&hw, 4, 0, 1, 1, 1, 8, 4, true), CoreTiming::ZERO);
+        assert_eq!(smm_cycles(&hw, 4, 1, 0, 1, 8, 8, true), CoreTiming::ZERO);
+    }
+}

@@ -1,0 +1,168 @@
+//! Activity-based energy accounting, anchored to the measured operating
+//! points (Fig. 23.1.7) and the paper's LPDDR3 EMA constant (3.7 pJ/b).
+
+use crate::config::{EnergyTable, HwConfig, OperatingPoint};
+use crate::util::json::Json;
+
+/// Energy by destination, picojoules.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub mac_pj: f64,
+    pub rf_pj: f64,
+    pub gb_pj: f64,
+    pub afu_pj: f64,
+    pub idle_pj: f64,
+    pub ema_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.mac_pj + self.rf_pj + self.gb_pj + self.afu_pj + self.idle_pj + self.ema_pj
+    }
+    pub fn total_uj(&self) -> f64 {
+        self.total_pj() * 1e-6
+    }
+    pub fn on_chip_pj(&self) -> f64 {
+        self.total_pj() - self.ema_pj
+    }
+    /// EMA share of total energy — the Fig. 23.1.1 statistic.
+    pub fn ema_share(&self) -> f64 {
+        if self.total_pj() == 0.0 {
+            0.0
+        } else {
+            self.ema_pj / self.total_pj()
+        }
+    }
+    pub fn add(&mut self, other: &EnergyBreakdown) {
+        self.mac_pj += other.mac_pj;
+        self.rf_pj += other.rf_pj;
+        self.gb_pj += other.gb_pj;
+        self.afu_pj += other.afu_pj;
+        self.idle_pj += other.idle_pj;
+        self.ema_pj += other.ema_pj;
+    }
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mac_pj", Json::num(self.mac_pj)),
+            ("rf_pj", Json::num(self.rf_pj)),
+            ("gb_pj", Json::num(self.gb_pj)),
+            ("afu_pj", Json::num(self.afu_pj)),
+            ("idle_pj", Json::num(self.idle_pj)),
+            ("ema_pj", Json::num(self.ema_pj)),
+            ("total_uj", Json::num(self.total_uj())),
+            ("ema_share", Json::num(self.ema_share())),
+        ])
+    }
+}
+
+/// Accumulates activity events into an [`EnergyBreakdown`].
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    pub table: EnergyTable,
+    pub point: OperatingPoint,
+    blocks: f64,
+    pub breakdown: EnergyBreakdown,
+}
+
+impl EnergyModel {
+    pub fn new(hw: &HwConfig, point: OperatingPoint) -> Self {
+        EnergyModel {
+            table: hw.energy_at(point),
+            point,
+            blocks: (hw.dmm_cores + hw.smm_cores + hw.afus) as f64,
+            breakdown: EnergyBreakdown::default(),
+        }
+    }
+
+    /// `busy_mac_cycles` MAC-cycle events on a MAC plane (+ the operand RF
+    /// traffic that feeds them: ~2 word reads per MAC-cycle).
+    pub fn mac_activity(&mut self, busy_mac_cycles: u64) {
+        self.breakdown.mac_pj += busy_mac_cycles as f64 * self.table.mac_pj;
+        self.breakdown.rf_pj += busy_mac_cycles as f64 * 2.0 * self.table.rf_pj;
+    }
+
+    /// Global-buffer word accesses (tile loads/stores, spills).
+    pub fn gb_activity(&mut self, words: u64) {
+        self.breakdown.gb_pj += words as f64 * self.table.gb_pj;
+    }
+
+    /// AFU element-operations.
+    pub fn afu_activity(&mut self, elems: u64) {
+        self.breakdown.afu_pj += elems as f64 * self.table.afu_pj;
+    }
+
+    /// Static/idle burn for the whole chip over `cycles`.
+    pub fn idle(&mut self, cycles: u64) {
+        self.breakdown.idle_pj += cycles as f64 * self.blocks * self.table.idle_pj;
+    }
+
+    /// External memory traffic.
+    pub fn ema(&mut self, bytes: u64) {
+        self.breakdown.ema_pj += bytes as f64 * 8.0 * self.table.ema_pj_per_bit;
+    }
+
+    /// Average power over `cycles` at this operating point, milliwatts.
+    pub fn avg_power_mw(&self, cycles: u64) -> f64 {
+        if cycles == 0 {
+            return 0.0;
+        }
+        let seconds = cycles as f64 / (self.point.freq_mhz * 1e6);
+        self.breakdown.total_pj() * 1e-12 / seconds * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fully_active_chip_hits_peak_power() {
+        // If every MAC, AFU lane and the GB port are busy every cycle, the
+        // modeled power must equal the measured peak — the calibration anchor.
+        let hw = HwConfig::default();
+        for &p in &hw.points {
+            let mut em = EnergyModel::new(&hw, p);
+            let cycles = 1_000_000u64;
+            em.mac_activity(cycles * hw.total_macs() as u64);
+            em.gb_activity(cycles * hw.total_macs() as u64 / 8);
+            em.afu_activity(cycles * (hw.afus * (hw.afu_iaus + hw.afu_faus)) as u64);
+            em.idle(cycles);
+            let mw = em.avg_power_mw(cycles);
+            assert!(
+                (mw - p.peak_mw).abs() / p.peak_mw < 0.01,
+                "vdd={}: modeled {mw:.2} mW vs measured {} mW",
+                p.vdd,
+                p.peak_mw
+            );
+        }
+    }
+
+    #[test]
+    fn ema_constant_matches_paper() {
+        let hw = HwConfig::default();
+        let mut em = EnergyModel::new(&hw, hw.max_point());
+        em.ema(1_000_000); // 1 MB
+        // 1 MB × 8 × 3.7 pJ/b = 29.6 µJ
+        assert!((em.breakdown.ema_pj * 1e-6 - 29.6).abs() < 1e-9);
+        assert!(em.breakdown.ema_share() > 0.99);
+    }
+
+    #[test]
+    fn breakdown_addition() {
+        let mut a = EnergyBreakdown { mac_pj: 1.0, ema_pj: 2.0, ..Default::default() };
+        let b = EnergyBreakdown { mac_pj: 3.0, afu_pj: 1.0, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.mac_pj, 4.0);
+        assert_eq!(a.total_pj(), 7.0);
+        assert_eq!(a.on_chip_pj(), 5.0);
+    }
+
+    #[test]
+    fn power_scales_with_voltage() {
+        let hw = HwConfig::default();
+        let lo = EnergyModel::new(&hw, hw.min_point());
+        let hi = EnergyModel::new(&hw, hw.max_point());
+        // Per-event energy rises with vdd (peak_pj_per_cycle grows).
+        assert!(hi.table.mac_pj > lo.table.mac_pj);
+    }
+}

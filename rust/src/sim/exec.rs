@@ -1,0 +1,420 @@
+//! Program executor: walks an op stream, advances the cycle clock, and
+//! tallies utilization, EMA and energy.
+//!
+//! Scheduling model:
+//! * Compute ops (DMM/SMM/AFU) execute in program order on their plane —
+//!   the chip's blocks communicate through GB memory, so a projection's SMM
+//!   consumes the DMM's full output (conservative; intra-projection tile
+//!   pipelining is ignored and absorbed by calibration).
+//! * The DMA **prefetches** the next layer's W_D while the current layer
+//!   computes (the GB holds compressed W_S + one layer's W_D + a prefetch
+//!   buffer), so weight streaming only stalls compute when a layer's compute
+//!   is shorter than its weight-load time — exactly the regime where dynamic
+//!   batching recovers utilization.
+
+use crate::compress::{EmaCategory, EmaLedger};
+use crate::config::{HwConfig, ModelConfig, OperatingPoint};
+use crate::model::{OpKind, Program};
+use crate::sim::cores::{active_cores, afu_cycles, dmm_cycles, smm_cycles};
+use crate::sim::energy::{EnergyBreakdown, EnergyModel};
+use crate::util::json::Json;
+
+/// Simulation options.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    /// Operating point (voltage/frequency) to run at.
+    pub point: OperatingPoint,
+    /// Two-direction register files enabled (paper hardware). Disable for
+    /// the Fig. 23.1.5 ablation.
+    pub trf: bool,
+    /// DMA prefetch of next layer's W_D (double-buffered GB). Disable for
+    /// ablation.
+    pub prefetch: bool,
+    /// Activation bit-width (8 for all presets).
+    pub act_bits: u32,
+}
+
+impl SimOptions {
+    pub fn paper(hw: &HwConfig) -> Self {
+        SimOptions { point: hw.max_point(), trf: true, prefetch: true, act_bits: 8 }
+    }
+}
+
+/// Results of simulating one program.
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    /// Total elapsed cycles.
+    pub cycles: u64,
+    /// Busy MAC-cycles per plane (useful work only).
+    pub dmm_busy: u64,
+    pub smm_busy: u64,
+    pub afu_busy: u64,
+    /// Cycles compute stalled waiting on weight DMA.
+    pub dma_stall_cycles: u64,
+    /// Cycles lost to single-direction buffers (0 with TRF).
+    pub trf_stall_cycles: u64,
+    pub ema: EmaLedger,
+    pub energy: EnergyBreakdown,
+    /// Tokens processed (batch × seq).
+    pub tokens: u64,
+    /// Inputs (sequences) processed.
+    pub inputs: u64,
+    pub point: OperatingPoint,
+}
+
+impl RunStats {
+    /// MAC-plane utilization: busy MAC-cycles over available MAC-cycles.
+    pub fn utilization(&self, hw: &HwConfig) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        let avail = self.cycles as f64 * hw.total_macs() as f64;
+        (self.dmm_busy + self.smm_busy) as f64 / avail
+    }
+    pub fn seconds(&self) -> f64 {
+        self.cycles as f64 / (self.point.freq_mhz * 1e6)
+    }
+    pub fn us_per_token(&self) -> f64 {
+        self.seconds() * 1e6 / self.tokens.max(1) as f64
+    }
+    pub fn uj_per_token(&self) -> f64 {
+        self.energy.total_uj() / self.tokens.max(1) as f64
+    }
+    pub fn avg_power_mw(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.energy.total_pj() * 1e-12 / self.seconds() * 1e3
+    }
+    pub fn ema_bytes(&self) -> u64 {
+        self.ema.total()
+    }
+    pub fn to_json(&self, hw: &HwConfig) -> Json {
+        Json::obj(vec![
+            ("cycles", Json::num(self.cycles as f64)),
+            ("utilization", Json::num(self.utilization(hw))),
+            ("us_per_token", Json::num(self.us_per_token())),
+            ("uj_per_token", Json::num(self.uj_per_token())),
+            ("avg_power_mw", Json::num(self.avg_power_mw())),
+            ("ema_bytes", Json::num(self.ema_bytes() as f64)),
+            ("dma_stall_cycles", Json::num(self.dma_stall_cycles as f64)),
+            ("trf_stall_cycles", Json::num(self.trf_stall_cycles as f64)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("energy", self.energy.to_json()),
+            ("ema", self.ema.to_json()),
+        ])
+    }
+}
+
+/// One-time model boot: preload compressed `W_S` (and LUTs) into the GB.
+/// Returns the EMA bytes moved — charged to `WsLoad` by callers that want
+/// boot included (the paper amortizes it: "W_S is loaded only once").
+pub fn boot_ema_bytes(m: &ModelConfig) -> u64 {
+    let mut bytes = 0u64;
+    for g in m.shared_groups() {
+        bytes += (g.d_in * g.rank) as u64 / 2 + 32; // 4b codes + 16×16b LUT
+    }
+    bytes
+}
+
+/// Simulate one program at the given options.
+pub fn simulate(hw: &HwConfig, prog: &Program, opts: &SimOptions) -> RunStats {
+    let mut em = EnergyModel::new(hw, opts.point);
+    let mut ema = EmaLedger::new();
+    let cycle_ns = opts.point.cycle_ns();
+    let dma_cycles_per_byte = hw.dram_ns(1) / cycle_ns;
+
+    // Time frontiers, in cycles.
+    let mut compute_t: f64 = 0.0; // compute chain frontier
+    let mut dma_t: f64 = 0.0; // DMA engine frontier
+    let mut wd_ready: f64 = 0.0; // when the W_D for the *next* Smm is in GB
+    let mut dmm_busy = 0u64;
+    let mut smm_busy = 0u64;
+    let mut afu_busy = 0u64;
+    let mut dma_stall = 0.0f64;
+    let mut trf_stall = 0u64;
+    let mut dense_pending = false;
+    // A projection's DMM and SMM pipeline tile-by-tile through the TRFs:
+    // the pair's elapsed time is max(dmm, smm), not the sum. The DMM side
+    // is held here until its consuming SMM is scheduled.
+    let mut pipelined_dmm: f64 = 0.0;
+    let a = opts.act_bits;
+    // Static token-plane partitioning (Fig. 23.1.4): how many cores / AFUs
+    // hold work for this (seq, batch) placement. Each batched input runs on
+    // its own slice of cores, so per-op timing is computed for ONE input on
+    // `active/batch` cores and inputs proceed in parallel; busy-work scales
+    // by `batch`.
+    let batch = prog.batch.max(1);
+    let dmm_active = active_cores(hw.dmm_cores, hw.max_seq, prog.seq, prog.batch) / batch;
+    let smm_active = active_cores(hw.smm_cores, hw.max_seq, prog.seq, prog.batch) / batch;
+    let afu_active = active_cores(hw.afus, hw.max_seq, prog.seq, prog.batch);
+    let (dmm_active, smm_active) = (dmm_active.max(1), smm_active.max(1));
+
+    for op in &prog.ops {
+        match op.kind {
+            OpKind::LoadWd { bytes_val, bytes_idx, bytes_meta } => {
+                ema.add(EmaCategory::WdValues, bytes_val);
+                ema.add(EmaCategory::WdIndices, bytes_idx);
+                ema.add(EmaCategory::Metadata, bytes_meta);
+                let bytes = bytes_val + bytes_idx + bytes_meta;
+                em.ema(bytes);
+                let dur = bytes as f64 * dma_cycles_per_byte;
+                if opts.prefetch {
+                    // DMA runs ahead of compute (double-buffered GB slot).
+                    dma_t = dma_t.max(0.0) + dur;
+                } else {
+                    // Serial: compute waits for the whole load.
+                    dma_t = compute_t.max(dma_t) + dur;
+                }
+                wd_ready = dma_t;
+                // Writing W_D into the GB.
+                em.gb_activity(bytes / 2);
+            }
+            OpKind::LoadDenseWeights { bytes } => {
+                // Baseline: dense weights stream like W_D but uncompressed;
+                // the following DMM (not SMM) waits on them.
+                ema.add(EmaCategory::DenseWeights, bytes);
+                em.ema(bytes);
+                let dur = bytes as f64 * dma_cycles_per_byte;
+                if opts.prefetch {
+                    dma_t = dma_t.max(0.0) + dur;
+                } else {
+                    dma_t = compute_t.max(dma_t) + dur;
+                }
+                wd_ready = dma_t;
+                dense_pending = true;
+                em.gb_activity(bytes / 2);
+            }
+            OpKind::LoadInput { bytes } => {
+                ema.add(EmaCategory::ActivationIn, bytes);
+                em.ema(bytes);
+                let dur = bytes as f64 * dma_cycles_per_byte;
+                compute_t = compute_t.max(dma_t) + dur;
+                em.gb_activity(bytes / 2);
+            }
+            OpKind::StoreOutput { bytes } => {
+                ema.add(EmaCategory::ActivationOut, bytes);
+                em.ema(bytes);
+                let dur = bytes as f64 * dma_cycles_per_byte;
+                compute_t += dur;
+                em.gb_activity(bytes / 2);
+            }
+            OpKind::Dmm { count, m, k, n, w_bits } => {
+                // Per-input shapes: the op carries the whole token plane;
+                // each input's share runs on its own core slice.
+                let (count_i, m_i) = if count >= batch {
+                    (count / batch, m)
+                } else {
+                    (count, m / batch)
+                };
+                let t = dmm_cycles(hw, dmm_active, count_i, m_i, k, n, a, w_bits, opts.trf);
+                if dense_pending {
+                    // Baseline DMM consumes the streamed dense weights.
+                    let start = compute_t.max(wd_ready);
+                    dma_stall += (start - compute_t).max(0.0);
+                    compute_t = start;
+                    dense_pending = false;
+                }
+                if w_bits == 4 {
+                    // Projection X·W_S: pipelines into the following SMM.
+                    pipelined_dmm = t.elapsed as f64;
+                } else {
+                    compute_t += t.elapsed as f64;
+                }
+                let busy = t.busy_mac_cycles * batch as u64;
+                dmm_busy += busy;
+                trf_stall += t.stall_cycles * batch as u64;
+                em.mac_activity(busy);
+                // Tile traffic through the GB: read X + W, write Y (words).
+                em.gb_activity((count * (m * k + k * n + m * n)) as u64 / 4);
+            }
+            OpKind::Smm { m, r: _, n, nnz_per_col, w_bits } => {
+                let m_i = m / batch;
+                let t = smm_cycles(hw, smm_active, m_i.max(1), n, nnz_per_col, a, w_bits, opts.trf);
+                // SMM waits for its W_D (prefetched or not).
+                let start = compute_t.max(wd_ready);
+                dma_stall += (start - compute_t).max(0.0);
+                // Tile-pipelined with its producing DMM through the TRFs:
+                // the projection pair costs max(dmm, smm) (+1 tile skew,
+                // absorbed in the max).
+                let elapsed = (t.elapsed as f64).max(pipelined_dmm);
+                pipelined_dmm = 0.0;
+                compute_t = start + elapsed;
+                let busy = t.busy_mac_cycles * batch as u64;
+                smm_busy += busy;
+                trf_stall += t.stall_cycles * batch as u64;
+                em.mac_activity(busy);
+                em.gb_activity((m * n + n * nnz_per_col * 2) as u64 / 4);
+            }
+            OpKind::Softmax { .. } | OpKind::LayerNorm { .. } | OpKind::Gelu { .. } | OpKind::Residual { .. } => {
+                let elems = op.afu_elems();
+                let t = afu_cycles(hw, afu_active, elems);
+                compute_t += t.elapsed as f64;
+                afu_busy += elems;
+                em.afu_activity(elems);
+            }
+        }
+    }
+
+    let cycles = compute_t.max(dma_t).ceil() as u64;
+    em.idle(cycles);
+
+    RunStats {
+        cycles,
+        dmm_busy,
+        smm_busy,
+        afu_busy,
+        dma_stall_cycles: dma_stall.round() as u64,
+        trf_stall_cycles: trf_stall,
+        ema,
+        energy: em.breakdown,
+        tokens: (prog.batch * prog.seq) as u64,
+        inputs: prog.batch as u64,
+        point: opts.point,
+    }
+}
+
+/// Convenience: simulate a workload end-to-end for one batch-class pass and
+/// return per-token stats at the chip's fastest point.
+pub fn simulate_workload(hw: &HwConfig, m: &ModelConfig, seq: usize, batch: usize) -> RunStats {
+    let prog = crate::model::build_program(m, seq, batch);
+    simulate(hw, &prog, &SimOptions { act_bits: m.act_bits, ..SimOptions::paper(hw) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::model::build_program;
+
+    fn hw() -> HwConfig {
+        HwConfig::default()
+    }
+
+    #[test]
+    fn tiny_model_runs() {
+        let hw = hw();
+        let m = ModelConfig::tiny();
+        let s = simulate_workload(&hw, &m, 16, 1);
+        assert!(s.cycles > 0);
+        assert!(s.utilization(&hw) > 0.0 && s.utilization(&hw) <= 1.0);
+        assert!(s.us_per_token() > 0.0);
+        assert!(s.ema_bytes() > 0);
+    }
+
+    #[test]
+    fn batching_improves_utilization() {
+        // The Fig. 23.1.4 effect: 4×32-token inputs vs 1×32-token input.
+        let hw = hw();
+        let m = ModelConfig::bert_large();
+        let b1 = simulate_workload(&hw, &m, 32, 1);
+        let b4 = simulate_workload(&hw, &m, 32, 4);
+        let gain = b4.utilization(&hw) / b1.utilization(&hw);
+        assert!(gain > 1.2, "utilization gain {gain:.2} (b1={:.3}, b4={:.3})",
+            b1.utilization(&hw), b4.utilization(&hw));
+        // And per-input EMA drops (weights amortized).
+        let ema1 = b1.ema_bytes() as f64 / b1.inputs as f64;
+        let ema4 = b4.ema_bytes() as f64 / b4.inputs as f64;
+        assert!(ema4 < ema1 / 2.0, "per-input EMA {ema4} vs {ema1}");
+    }
+
+    #[test]
+    fn trf_improves_utilization_in_paper_band() {
+        // Fig. 23.1.5: TRFs buy 12–20% utilization.
+        let hw = hw();
+        let m = ModelConfig::vit_base();
+        let prog = build_program(&m, 128, 1);
+        let on = simulate(&hw, &prog, &SimOptions::paper(&hw));
+        let off = simulate(&hw, &prog, &SimOptions { trf: false, ..SimOptions::paper(&hw) });
+        let gain = on.utilization(&hw) / off.utilization(&hw);
+        assert!(
+            (1.05..1.45).contains(&gain),
+            "TRF utilization gain {gain:.3} outside plausible band"
+        );
+        assert_eq!(on.trf_stall_cycles, 0);
+        assert!(off.trf_stall_cycles > 0);
+    }
+
+    #[test]
+    fn prefetch_hides_weight_loads() {
+        let hw = hw();
+        let m = ModelConfig::bert_large();
+        let prog = build_program(&m, 128, 1);
+        let pf = simulate(&hw, &prog, &SimOptions::paper(&hw));
+        let serial = simulate(&hw, &prog, &SimOptions { prefetch: false, ..SimOptions::paper(&hw) });
+        assert!(pf.cycles <= serial.cycles);
+        assert!(serial.dma_stall_cycles >= pf.dma_stall_cycles);
+    }
+
+    #[test]
+    fn latency_in_paper_neighborhood() {
+        // Paper: 68–567 µs/token across workloads at speed. Our mechanistic
+        // model should land within ~3× of that band (DESIGN.md §2).
+        let hw = hw();
+        for name in crate::config::WORKLOADS {
+            let m = ModelConfig::preset(name).unwrap();
+            let s = simulate_workload(&hw, &m, m.max_seq, 1);
+            let us = s.us_per_token();
+            assert!(
+                (20.0..2000.0).contains(&us),
+                "{name}: {us:.0} µs/token wildly off the paper's 68–567 band"
+            );
+        }
+    }
+
+    #[test]
+    fn energy_is_positive_and_ema_counted() {
+        let hw = hw();
+        let m = ModelConfig::s2t_small();
+        let s = simulate_workload(&hw, &m, 64, 2);
+        assert!(s.energy.total_uj() > 0.0);
+        assert!(s.energy.ema_pj > 0.0);
+        assert!(s.energy.ema_share() < 1.0);
+        assert!(s.avg_power_mw() > 0.0);
+        // Power can't exceed peak (sanity of activity model).
+        assert!(
+            s.avg_power_mw() <= s.point.peak_mw * 1.05,
+            "avg {} > peak {}",
+            s.avg_power_mw(),
+            s.point.peak_mw
+        );
+    }
+
+    #[test]
+    fn boot_ema_is_small_vs_per_pass() {
+        let m = ModelConfig::bert_large();
+        let boot = boot_ema_bytes(&m);
+        let prog = build_program(&m, 128, 1);
+        // W_S (loaded once) is far smaller than one pass of W_D streaming —
+        // that's why "load W_S once" wins.
+        assert!(boot < prog.weight_ema_bytes(), "boot {boot} vs pass {}", prog.weight_ema_bytes());
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let hw = hw();
+        let m = ModelConfig::tiny();
+        let s = simulate_workload(&hw, &m, 8, 1);
+        let j = s.to_json(&hw);
+        assert!(j.get("utilization").is_ok());
+        assert!(j.get("energy").unwrap().get("ema_share").is_ok());
+    }
+
+    #[test]
+    fn slower_point_is_slower_but_cheaper_per_event() {
+        let hw = hw();
+        let m = ModelConfig::vit_base();
+        let prog = build_program(&m, 128, 1);
+        let fast = simulate(&hw, &prog, &SimOptions::paper(&hw));
+        let slow = simulate(
+            &hw,
+            &prog,
+            &SimOptions { point: hw.min_point(), ..SimOptions::paper(&hw) },
+        );
+        assert!(slow.seconds() > fast.seconds());
+        // On-chip energy at 0.45 V is below 0.85 V energy (quadratic-ish).
+        assert!(slow.energy.on_chip_pj() < fast.energy.on_chip_pj());
+        // EMA energy identical (same bytes, same pJ/b).
+        assert!((slow.energy.ema_pj - fast.energy.ema_pj).abs() < 1.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Global-buffer occupancy model.
+//!
+//! The paper's GB "stores compressed W_S, compressed W_D for one layer, and
+//! intermediate data" (Fig. 23.1.2). This module budgets those residents for
+//! a (model, seq, batch) configuration: the engine checks it at admission
+//! and the executor's prefetch depth (one W_D slot ahead) is only legal when
+//! the double-buffer slot fits. Overflowing configurations spill
+//! activations to DRAM — charged per layer as EMA.
+
+use crate::config::{HwConfig, ModelConfig};
+use crate::util::json::Json;
+
+/// Byte budget of every GB resident for one dataflow configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GbBudget {
+    /// Compressed W_S for all shared groups (+ LUTs), resident after boot.
+    pub ws_bytes: u64,
+    /// One layer's compressed W_D — the largest layer (the slot must fit it).
+    pub wd_slot_bytes: u64,
+    /// Second W_D slot for DMA prefetch (double buffering).
+    pub prefetch_slot_bytes: u64,
+    /// Activation working set: two ping-pong planes of the widest
+    /// intermediate (`batch·seq × max(d_model, d_ff)`).
+    pub activation_bytes: u64,
+    /// GB capacity.
+    pub capacity: u64,
+}
+
+impl GbBudget {
+    /// Compute the budget for a configuration.
+    pub fn for_config(hw: &HwConfig, m: &ModelConfig, seq: usize, batch: usize) -> GbBudget {
+        let ws_bytes: u64 = m
+            .shared_groups()
+            .iter()
+            .map(|g| (g.d_in * g.rank) as u64 / 2 + 32)
+            .sum();
+        // Largest per-layer W_D: the group set a single layer draws from.
+        // Encoder layer: attn (4×d) + ffn up (d_ff) + ffn down (d) columns;
+        // decoder adds cross-attention.
+        let enc_cols = (4 * m.d_model + m.d_ff + m.d_model) as u64;
+        let dec_cols = (8 * m.d_model + m.d_ff + m.d_model) as u64;
+        let cols = if m.dec_layers > 0 { enc_cols.max(dec_cols) } else { enc_cols };
+        let nz = cols * m.nnz_per_col as u64;
+        let wd_slot_bytes = (nz * 6).div_ceil(8) + (nz * 5).div_ceil(8) + 4;
+        let rows = (batch * seq) as u64;
+        let widest = m.d_model.max(m.d_ff) as u64;
+        let activation_bytes = 2 * rows * widest * m.act_bits as u64 / 8;
+        GbBudget {
+            ws_bytes,
+            wd_slot_bytes,
+            prefetch_slot_bytes: wd_slot_bytes,
+            activation_bytes,
+            capacity: hw.gb_bytes as u64,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.ws_bytes + self.wd_slot_bytes + self.prefetch_slot_bytes + self.activation_bytes
+    }
+
+    /// Fits with double-buffered prefetch.
+    pub fn fits_with_prefetch(&self) -> bool {
+        self.total() <= self.capacity
+    }
+
+    /// Fits at least in single-buffer mode (no DMA prefetch).
+    pub fn fits_single(&self) -> bool {
+        self.total() - self.prefetch_slot_bytes <= self.capacity
+    }
+
+    /// Activation bytes that must spill per layer when over capacity
+    /// (single-buffer mode assumed first; 0 when everything fits).
+    pub fn spill_bytes_per_layer(&self) -> u64 {
+        let need = self.ws_bytes + self.wd_slot_bytes + self.activation_bytes;
+        need.saturating_sub(self.capacity)
+    }
+
+    pub fn occupancy(&self) -> f64 {
+        self.total() as f64 / self.capacity as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ws_bytes", Json::num(self.ws_bytes as f64)),
+            ("wd_slot_bytes", Json::num(self.wd_slot_bytes as f64)),
+            ("prefetch_slot_bytes", Json::num(self.prefetch_slot_bytes as f64)),
+            ("activation_bytes", Json::num(self.activation_bytes as f64)),
+            ("capacity", Json::num(self.capacity as f64)),
+            ("occupancy", Json::num(self.occupancy())),
+            ("fits_with_prefetch", Json::Bool(self.fits_with_prefetch())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WORKLOADS;
+
+    #[test]
+    fn all_workloads_fit_at_least_single_buffered() {
+        // The paper sizes the GB to hold W_S + one layer's W_D +
+        // intermediates; every preset must at least run without spills in
+        // single-buffer mode.
+        let hw = HwConfig::default();
+        for name in WORKLOADS {
+            let m = ModelConfig::preset(name).unwrap();
+            let b = GbBudget::for_config(&hw, &m, m.max_seq, 1);
+            assert!(
+                b.fits_single(),
+                "{name}: GB overflow even single-buffered: {} > {} ({:?})",
+                b.total() - b.prefetch_slot_bytes,
+                b.capacity,
+                b
+            );
+        }
+    }
+
+    #[test]
+    fn small_models_fit_with_prefetch() {
+        let hw = HwConfig::default();
+        for name in ["tiny", "s2t-small", "nmt-rdrop"] {
+            let m = ModelConfig::preset(name).unwrap();
+            let b = GbBudget::for_config(&hw, &m, m.max_seq, 1);
+            assert!(b.fits_with_prefetch(), "{name}: {:?}", b);
+        }
+    }
+
+    #[test]
+    fn ws_matches_boot_ema() {
+        let m = ModelConfig::bert_large();
+        let hw = HwConfig::default();
+        let b = GbBudget::for_config(&hw, &m, 128, 1);
+        assert_eq!(b.ws_bytes, crate::sim::boot_ema_bytes(&m));
+    }
+
+    #[test]
+    fn batching_grows_activations_only() {
+        let hw = HwConfig::default();
+        let m = ModelConfig::bert_large();
+        let b1 = GbBudget::for_config(&hw, &m, 32, 1);
+        let b4 = GbBudget::for_config(&hw, &m, 32, 4);
+        assert_eq!(b1.ws_bytes, b4.ws_bytes);
+        assert_eq!(b1.wd_slot_bytes, b4.wd_slot_bytes);
+        assert_eq!(b4.activation_bytes, 4 * b1.activation_bytes);
+    }
+
+    #[test]
+    fn spill_is_zero_when_fitting() {
+        let hw = HwConfig::default();
+        let m = ModelConfig::tiny();
+        let b = GbBudget::for_config(&hw, &m, 32, 1);
+        assert_eq!(b.spill_bytes_per_layer(), 0);
+        assert!(b.occupancy() < 0.1);
+    }
+}

@@ -1,0 +1,26 @@
+//! Cycle-level performance/energy model of the T-REX chip.
+//!
+//! The simulator maps the op stream from [`crate::model`] onto the block
+//! geometry of [`crate::config::HwConfig`]: tiled outer-product DMM cores,
+//! NZ-serial SMM cores, AFUs, the TRF-vs-SRAM buffer model, and a DMA with
+//! the paper's LPDDR3 constants. Outputs are cycles, per-plane utilization,
+//! an EMA ledger and an energy breakdown — the quantities behind every
+//! figure of the paper's evaluation.
+//!
+//! Fidelity stance (DESIGN.md §2): cycle counts follow the published
+//! microarchitecture (16×16 DMM tiles over 4×4 PEs of 4×4 bit-serial MACs,
+//! 16b/8b/4b multiplies over 16/4/1 cycles, 8×8-MAC SMM cores, 64-IAU AFUs);
+//! energy is activity-based, anchored to the measured 7.12–152.5 mW
+//! operating points; EMA bytes are exact per the codecs.
+
+pub mod batching;
+pub mod cores;
+pub mod energy;
+pub mod exec;
+pub mod gb;
+
+pub use batching::{batch_class, BatchClass};
+pub use cores::{afu_cycles, dmm_cycles, mac_cycles, smm_cycles, CoreTiming};
+pub use energy::EnergyBreakdown;
+pub use exec::{boot_ema_bytes, simulate, simulate_workload, RunStats, SimOptions};
+pub use gb::GbBudget;

@@ -1,0 +1,204 @@
+//! Bit-level packing for the sub-byte streams the chip stores in DRAM:
+//! 4-bit non-uniform codes (W_S), 5-bit delta-encoded indices and 6-bit
+//! uniform codes (W_D). LSB-first within each byte, matching
+//! `python/compile/compress.py` bit-for-bit (cross-language tests in
+//! `rust/tests/integration_compress.rs`).
+
+use crate::error::{Error, Result};
+
+/// Append-only bit stream writer, LSB-first.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Number of valid bits in the last byte (0 ⇒ byte-aligned).
+    bit: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `width` bits of `value` (width 1..=32).
+    pub fn put(&mut self, value: u32, width: u32) -> Result<()> {
+        if width == 0 || width > 32 {
+            return Err(Error::codec(format!("BitWriter: bad width {width}")));
+        }
+        if width < 32 && value >> width != 0 {
+            return Err(Error::codec(format!(
+                "BitWriter: value {value} does not fit in {width} bits"
+            )));
+        }
+        let mut remaining = width;
+        let mut v = value as u64;
+        while remaining > 0 {
+            if self.bit == 0 {
+                self.buf.push(0);
+            }
+            let space = 8 - self.bit;
+            let take = remaining.min(space);
+            let last = self.buf.last_mut().unwrap();
+            *last |= ((v & ((1u64 << take) - 1)) as u8) << self.bit;
+            v >>= take;
+            self.bit = (self.bit + take) % 8;
+            remaining -= take;
+        }
+        Ok(())
+    }
+
+    /// Total bits written so far.
+    pub fn bit_len(&self) -> usize {
+        if self.bit == 0 {
+            self.buf.len() * 8
+        } else {
+            (self.buf.len() - 1) * 8 + self.bit as usize
+        }
+    }
+
+    /// Finish, returning the byte buffer (final partial byte zero-padded).
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bit stream reader, LSB-first (inverse of [`BitWriter`]).
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    /// Read `width` bits (1..=32).
+    pub fn get(&mut self, width: u32) -> Result<u32> {
+        if width == 0 || width > 32 {
+            return Err(Error::codec(format!("BitReader: bad width {width}")));
+        }
+        if self.pos + width as usize > self.buf.len() * 8 {
+            return Err(Error::codec("BitReader: out of bits".to_string()));
+        }
+        let mut out: u64 = 0;
+        let mut got = 0u32;
+        while got < width {
+            let byte = self.buf[self.pos / 8] as u64;
+            let off = (self.pos % 8) as u32;
+            let avail = 8 - off;
+            let take = (width - got).min(avail);
+            let bits = (byte >> off) & ((1u64 << take) - 1);
+            out |= bits << got;
+            got += take;
+            self.pos += take as usize;
+        }
+        Ok(out as u32)
+    }
+
+    pub fn bits_left(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+}
+
+/// Pack a slice of codes with uniform `width` into bytes.
+pub fn pack(codes: &[u32], width: u32) -> Result<Vec<u8>> {
+    let mut w = BitWriter::new();
+    for &c in codes {
+        w.put(c, width)?;
+    }
+    Ok(w.finish())
+}
+
+/// Unpack `n` codes of uniform `width` from bytes.
+pub fn unpack(bytes: &[u8], n: usize, width: u32) -> Result<Vec<u32>> {
+    let mut r = BitReader::new(bytes);
+    (0..n).map(|_| r.get(width)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_unpack_4b() {
+        let codes = vec![0, 1, 15, 7, 8, 3];
+        let bytes = pack(&codes, 4).unwrap();
+        assert_eq!(bytes.len(), 3); // 6 codes * 4b = 24b
+        assert_eq!(unpack(&bytes, 6, 4).unwrap(), codes);
+    }
+
+    #[test]
+    fn pack_unpack_5b_6b_unaligned() {
+        let codes5 = vec![31, 0, 17, 5, 22, 1, 30];
+        let b5 = pack(&codes5, 5).unwrap();
+        assert_eq!(b5.len(), 5); // 35 bits → 5 bytes
+        assert_eq!(unpack(&b5, 7, 5).unwrap(), codes5);
+
+        let codes6 = vec![63, 0, 42, 13];
+        let b6 = pack(&codes6, 6).unwrap();
+        assert_eq!(b6.len(), 3); // 24 bits
+        assert_eq!(unpack(&b6, 4, 6).unwrap(), codes6);
+    }
+
+    #[test]
+    fn width_overflow_rejected() {
+        let mut w = BitWriter::new();
+        assert!(w.put(16, 4).is_err());
+        assert!(w.put(1, 0).is_err());
+        assert!(w.put(1, 33).is_err());
+        w.put(15, 4).unwrap();
+    }
+
+    #[test]
+    fn reader_exhaustion() {
+        let bytes = pack(&[1, 2, 3], 4).unwrap(); // 12 bits in 2 bytes
+        let mut r = BitReader::new(&bytes);
+        r.get(12).unwrap();
+        r.get(4).unwrap(); // padding bits still readable
+        assert!(r.get(1).is_err());
+    }
+
+    #[test]
+    fn property_roundtrip_mixed_widths() {
+        // Generative: random width sequence, random values — write then read
+        // back the identical sequence.
+        let mut rng = Rng::new(77);
+        for _ in 0..200 {
+            let n = rng.range(1, 100);
+            let items: Vec<(u32, u32)> = (0..n)
+                .map(|_| {
+                    let w = rng.range(1, 32) as u32;
+                    let v = if w == 32 {
+                        rng.next_u64() as u32
+                    } else {
+                        (rng.next_u64() as u32) & ((1u32 << w) - 1)
+                    };
+                    (v, w)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, width) in &items {
+                w.put(v, width).unwrap();
+            }
+            let total: u32 = items.iter().map(|&(_, w)| w).sum();
+            assert_eq!(w.bit_len(), total as usize);
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for &(v, width) in &items {
+                assert_eq!(r.get(width).unwrap(), v);
+            }
+        }
+    }
+
+    #[test]
+    fn bit_len_tracks() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.put(1, 3).unwrap();
+        assert_eq!(w.bit_len(), 3);
+        w.put(1, 8).unwrap();
+        assert_eq!(w.bit_len(), 11);
+    }
+}

@@ -1,0 +1,273 @@
+//! Dense row-major f32 matrix with the tiled operations the chip performs.
+//!
+//! This is the *reference numerics* backing for the Rust-side tests and the
+//! simulator's functional mode — the production numerics run through the
+//! PJRT-compiled JAX/Pallas artifacts in [`crate::runtime`].
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::shape(format!(
+                "Mat::from_vec: {}x{} needs {} elements, got {}",
+                rows,
+                cols,
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    /// Gaussian random matrix scaled like a typical init (`σ = 1/√cols`).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let scale = 1.0 / (cols as f32).sqrt();
+        let data = (0..rows * cols).map(|_| rng.normal_f32() * scale).collect();
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *t.at_mut(c, r) = self.at(r, c);
+            }
+        }
+        t
+    }
+
+    /// `self · other` — blocked i-k-j loop (cache-friendly; the Rust-side
+    /// reference, not the serving hot path).
+    pub fn matmul(&self, other: &Mat) -> Result<Mat> {
+        if self.cols != other.rows {
+            return Err(Error::shape(format!(
+                "matmul: {}x{} · {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut out = Mat::zeros(self.rows, other.cols);
+        let n = other.cols;
+        for i in 0..self.rows {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[k * n..(k + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn add(&self, other: &Mat) -> Result<Mat> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::shape("add: shape mismatch".to_string()));
+        }
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Ok(Mat { rows: self.rows, cols: self.cols, data })
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Relative reconstruction error `‖self − other‖_F / ‖self‖_F`.
+    pub fn rel_err(&self, other: &Mat) -> f64 {
+        let mut diff = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            let d = (*a - *b) as f64;
+            diff += d * d;
+        }
+        diff.sqrt() / self.fro().max(1e-30)
+    }
+
+    /// Max absolute element difference.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Extract the `tr`-th, `tc`-th tile of size `t×t` (zero-padded at edges).
+    /// This is the granule the DMM cores operate on (t = 16 on the chip).
+    pub fn tile(&self, tr: usize, tc: usize, t: usize) -> Mat {
+        let mut out = Mat::zeros(t, t);
+        for r in 0..t {
+            for c in 0..t {
+                let (gr, gc) = (tr * t + r, tc * t + c);
+                if gr < self.rows && gc < self.cols {
+                    *out.at_mut(r, c) = self.at(gr, gc);
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of `t×t` tiles covering this matrix, (tile_rows, tile_cols).
+    pub fn tiles(&self, t: usize) -> (usize, usize) {
+        (self.rows.div_ceil(t), self.cols.div_ceil(t))
+    }
+
+    /// Apply a column permutation: `out[:, j] = self[:, perm[j]]`.
+    pub fn permute_cols(&self, perm: &[usize]) -> Result<Mat> {
+        if perm.len() != self.cols {
+            return Err(Error::shape("permute_cols: bad perm length".to_string()));
+        }
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for (j, &p) in perm.iter().enumerate() {
+                *out.at_mut(r, j) = self.at(r, p);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Apply a row permutation: `out[i, :] = self[perm[i], :]`.
+    pub fn permute_rows(&self, perm: &[usize]) -> Result<Mat> {
+        if perm.len() != self.rows {
+            return Err(Error::shape("permute_rows: bad perm length".to_string()));
+        }
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for (i, &p) in perm.iter().enumerate() {
+            out.data[i * self.cols..(i + 1) * self.cols]
+                .copy_from_slice(&self.data[p * self.cols..(p + 1) * self.cols]);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_shape_error() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(9);
+        let a = Mat::randn(7, 13, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matmul_associativity_factorized_order() {
+        // (X·Ws)·Wd == X·(Ws·Wd) — the paper's computing-order equivalence.
+        let mut rng = Rng::new(10);
+        let x = Mat::randn(8, 32, &mut rng);
+        let ws = Mat::randn(32, 12, &mut rng);
+        let wd = Mat::randn(12, 24, &mut rng);
+        let a = x.matmul(&ws).unwrap().matmul(&wd).unwrap();
+        let b = x.matmul(&ws.matmul(&wd).unwrap()).unwrap();
+        assert!(a.rel_err(&b) < 1e-5, "rel err {}", a.rel_err(&b));
+    }
+
+    #[test]
+    fn tiles_cover_matrix() {
+        let m = Mat::zeros(33, 47);
+        assert_eq!(m.tiles(16), (3, 3));
+        let m = Mat::zeros(32, 48);
+        assert_eq!(m.tiles(16), (2, 3));
+    }
+
+    #[test]
+    fn tile_extraction_zero_pad() {
+        let mut rng = Rng::new(11);
+        let a = Mat::randn(20, 20, &mut rng);
+        let t = a.tile(1, 1, 16); // covers rows 16..32 → only 16..20 valid
+        assert_eq!(t.at(0, 0), a.at(16, 16));
+        assert_eq!(t.at(5, 5), 0.0); // padded region
+    }
+
+    #[test]
+    fn permutation_inverse() {
+        let mut rng = Rng::new(12);
+        let a = Mat::randn(6, 10, &mut rng);
+        let mut perm: Vec<usize> = (0..10).collect();
+        rng.shuffle(&mut perm);
+        let mut inv = vec![0usize; 10];
+        for (i, &p) in perm.iter().enumerate() {
+            inv[p] = i;
+        }
+        let b = a.permute_cols(&perm).unwrap().permute_cols(&inv).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn permute_preserves_product() {
+        // Permuting columns of Ws and rows of Wd by the same perm leaves
+        // Ws·Wd unchanged — the invariant behind the paper's delta-encoding
+        // rearrangement.
+        let mut rng = Rng::new(13);
+        let ws = Mat::randn(16, 12, &mut rng);
+        let wd = Mat::randn(12, 20, &mut rng);
+        let mut perm: Vec<usize> = (0..12).collect();
+        rng.shuffle(&mut perm);
+        let ws_p = ws.permute_cols(&perm).unwrap();
+        let wd_p = wd.permute_rows(&perm).unwrap();
+        let w1 = ws.matmul(&wd).unwrap();
+        let w2 = ws_p.matmul(&wd_p).unwrap();
+        assert!(w1.rel_err(&w2) < 1e-6);
+    }
+}

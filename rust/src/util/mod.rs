@@ -1,0 +1,16 @@
+//! Dependency-free utilities: JSON, RNG, statistics, matrices, bit-packing.
+//!
+//! The offline build environment vendors neither `serde` nor `rand` nor
+//! `criterion`, so the small pieces of each that T-REX needs are implemented
+//! here (and exercised by their own unit + property tests).
+
+pub mod bitpack;
+pub mod json;
+pub mod mat;
+pub mod rng;
+pub mod stats;
+
+pub use bitpack::{BitReader, BitWriter};
+pub use json::Json;
+pub use mat::Mat;
+pub use rng::Rng;

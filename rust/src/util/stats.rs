@@ -1,0 +1,153 @@
+//! Summary statistics used by the bench harness and the metrics plane.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (0 for n < 2).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile by linear interpolation on the sorted data, `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Geometric mean (for speedup aggregation across workloads).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Running-summary accumulator used in the serving metrics hot path —
+/// O(1) per observation, no allocation.
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    pub n: u64,
+    pub sum: f64,
+    pub sum2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, sum: 0.0, sum2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.sum2 += x * x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+    pub fn stddev(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        ((self.sum2 / self.n as f64 - m * m).max(0.0) * self.n as f64 / (self.n - 1) as f64).sqrt()
+    }
+    pub fn merge(&mut self, other: &Running) {
+        self.n += other.n;
+        self.sum += other.sum;
+        self.sum2 += other.sum2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert!((mean(&xs) - 3.0).abs() < 1e-12);
+        assert!((stddev(&xs) - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+        assert_eq!(min(&xs), 1.0);
+        assert_eq!(max(&xs), 5.0);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(stddev(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_of_speedups() {
+        let xs = [2.0, 8.0];
+        assert!((geomean(&xs) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn running_matches_batch() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(42);
+        let xs: Vec<f64> = (0..1000).map(|_| r.normal() * 3.0 + 7.0).collect();
+        let mut run = Running::new();
+        for &x in &xs {
+            run.push(x);
+        }
+        assert!((run.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((run.stddev() - stddev(&xs)).abs() < 1e-6);
+        assert_eq!(run.min, min(&xs));
+        assert_eq!(run.max, max(&xs));
+
+        // merge property: split halves and merge == whole
+        let (a, b) = xs.split_at(400);
+        let mut ra = Running::new();
+        let mut rb = Running::new();
+        a.iter().for_each(|&x| ra.push(x));
+        b.iter().for_each(|&x| rb.push(x));
+        ra.merge(&rb);
+        assert!((ra.mean() - run.mean()).abs() < 1e-9);
+        assert_eq!(ra.n, run.n);
+    }
+}

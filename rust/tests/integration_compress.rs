@@ -1,0 +1,90 @@
+//! Cross-language codec contract: python (`compile/compress.py`) encodes,
+//! Rust decodes — byte streams must be identical in both directions.
+//! The fixture is produced by `make artifacts` (aot.py); tests skip politely
+//! when artifacts haven't been built.
+
+use trex::compress::{DeltaCodec, EncodedIndices, NonUniformQuant, UniformQuant};
+use trex::factorize::CscFixed;
+use trex::util::json::Json;
+use trex::util::mat::Mat;
+
+fn fixture() -> Option<Json> {
+    let path = std::path::Path::new("../artifacts/codec_fixture.json");
+    if !path.exists() {
+        eprintln!("skipping: run `make artifacts` to build the codec fixture");
+        return None;
+    }
+    Some(Json::from_file(path).expect("fixture parses"))
+}
+
+fn hex_decode(s: &str) -> Vec<u8> {
+    (0..s.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap())
+        .collect()
+}
+
+#[test]
+fn nonuniform_python_encoding_matches_rust() {
+    let Some(fx) = fixture() else { return };
+    let nu = fx.get("nonuniform").unwrap();
+    let lut: Vec<f32> = nu.get("lut").unwrap().as_arr().unwrap().iter()
+        .map(|v| v.as_f64().unwrap() as f32).collect();
+    let rows = nu.get("rows").unwrap().as_usize().unwrap();
+    let cols = nu.get("cols").unwrap().as_usize().unwrap();
+    let values: Vec<f32> = nu.get("values").unwrap().as_arr().unwrap().iter()
+        .map(|v| v.as_f64().unwrap() as f32).collect();
+    let expected = hex_decode(nu.get("encoded_hex").unwrap().as_str().unwrap());
+
+    let q = NonUniformQuant { lut, bits: 4 };
+    let w = Mat::from_vec(rows, cols, values).unwrap();
+    // Rust encode == python encode, byte for byte.
+    let got = q.encode(&w).unwrap();
+    assert_eq!(got, expected, "rust-encoded bytes differ from python");
+    // And rust decode of the python bytes == quantize-dequantize.
+    let dec = q.decode(&expected, rows, cols).unwrap();
+    assert_eq!(dec, q.apply(&w));
+}
+
+#[test]
+fn uniform_python_encoding_matches_rust() {
+    let Some(fx) = fixture() else { return };
+    let u = fx.get("uniform").unwrap();
+    let offset = u.get("offset").unwrap().as_f64().unwrap() as f32;
+    let scale = u.get("scale").unwrap().as_f64().unwrap() as f32;
+    let values: Vec<f32> = u.get("values").unwrap().as_arr().unwrap().iter()
+        .map(|v| v.as_f64().unwrap() as f32).collect();
+    let expected = hex_decode(u.get("encoded_hex").unwrap().as_str().unwrap());
+
+    let q = UniformQuant { offset, scale, bits: 6 };
+    let got = q.encode(&values).unwrap();
+    assert_eq!(got, expected, "rust-encoded bytes differ from python");
+    let dec = q.decode(&expected, values.len()).unwrap();
+    for (orig, d) in values.iter().zip(&dec) {
+        assert!((orig - d).abs() <= q.max_abs_err() * 1.001);
+    }
+}
+
+#[test]
+fn delta_python_encoding_matches_rust() {
+    let Some(fx) = fixture() else { return };
+    let d = fx.get("delta").unwrap();
+    let rows = d.get("rows").unwrap().as_usize().unwrap();
+    let cols = d.get("cols").unwrap().as_usize().unwrap();
+    let nnz = d.get("nnz_per_col").unwrap().as_usize().unwrap();
+    let idx: Vec<u16> = d.get("indices").unwrap().as_arr().unwrap().iter()
+        .map(|v| v.as_usize().unwrap() as u16).collect();
+    let expected = hex_decode(d.get("encoded_hex").unwrap().as_str().unwrap());
+    let n_escapes = d.get("n_escapes").unwrap().as_usize().unwrap();
+
+    let sp = CscFixed { rows, cols, nnz_per_col: nnz, idx: idx.clone(), val: vec![0.0; idx.len()] };
+    sp.check_invariants().unwrap();
+    let codec = DeltaCodec::new(5, rows).unwrap();
+    let enc = codec.encode(&sp).unwrap();
+    assert_eq!(enc.bytes, expected, "rust-encoded bytes differ from python");
+    assert_eq!(enc.n_escapes, n_escapes);
+    // Decode the python bytes back to the exact index plane.
+    let enc2 = EncodedIndices { bytes: expected, n_indices: idx.len(), n_escapes, codec };
+    let back = codec.decode(&enc2, rows, cols, nnz).unwrap();
+    assert_eq!(back, idx);
+}

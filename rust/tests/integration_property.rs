@@ -1,0 +1,159 @@
+//! Generative property tests across module boundaries (proptest is not
+//! vendored; a seeded SplitMix64 harness drives the same style of sweep).
+//! Focus: invariants that only hold when several modules agree.
+
+use trex::compress::{DeltaCodec, NonUniformQuant, UniformQuant};
+use trex::config::{HwConfig, ModelConfig};
+use trex::factorize::{factorize_joint, CscFixed, FactorizeOptions};
+use trex::model::build_program;
+use trex::sim::{batch_class, simulate, GbBudget, SimOptions};
+use trex::util::mat::Mat;
+use trex::util::rng::Rng;
+
+fn random_sparse(rng: &mut Rng, rows: usize, cols: usize, nnz: usize) -> CscFixed {
+    let mut idx = Vec::new();
+    let mut val = Vec::new();
+    for _ in 0..cols {
+        let mut rs = rng.sample_distinct(rows, nnz);
+        rs.sort_unstable();
+        for r in rs {
+            idx.push(r as u16);
+            val.push(rng.normal_f32());
+        }
+    }
+    CscFixed { rows, cols, nnz_per_col: nnz, idx, val }
+}
+
+#[test]
+fn full_compression_pipeline_bounded_error() {
+    // factorize → quantize W_S (4b) → quantize W_D values (6b) → delta-code
+    // indices → decode everything → reconstruct. End-to-end error must stay
+    // bounded by the sum of the quantizers' worst cases.
+    let mut rng = Rng::new(0xA11);
+    for trial in 0..5 {
+        let (d_in, d_out, rank, nnz) = (
+            rng.range(24, 48),
+            rng.range(16, 40),
+            rng.range(8, 16),
+            rng.range(2, 6),
+        );
+        let ws_true = Mat::randn(d_in, rank, &mut rng);
+        let teachers: Vec<Mat> = (0..2)
+            .map(|_| {
+                let sp = random_sparse(&mut rng, rank, d_out, nnz);
+                ws_true.matmul(&sp.to_dense()).unwrap()
+            })
+            .collect();
+        let f = factorize_joint(
+            &teachers,
+            FactorizeOptions { rank, nnz_per_col: nnz, iters: 10, lambda: 1e-4, seed: trial },
+        )
+        .unwrap();
+
+        let q = NonUniformQuant::fit(&f.ws.data, 4, 20).unwrap();
+        let ws_q = q.decode(&q.encode(&f.ws).unwrap(), d_in, rank).unwrap();
+
+        for (wd, teacher) in f.wds.iter().zip(&teachers) {
+            let uq = UniformQuant::fit(&wd.val, 6).unwrap();
+            let val_q = uq.decode(&uq.encode(&wd.val).unwrap(), wd.val.len()).unwrap();
+            let codec = DeltaCodec::new(5, rank).unwrap();
+            let enc = codec.encode(wd).unwrap();
+            let idx = codec.decode(&enc, rank, d_out, nnz).unwrap();
+            assert_eq!(idx, wd.idx, "index plane must roundtrip losslessly");
+            let wd_q = CscFixed { val: val_q, ..wd.clone() };
+            let recon = ws_q.matmul(&wd_q.to_dense()).unwrap();
+            // Reconstruction vs the teacher: ALS fit error + both
+            // quantizers' noise, loosely bounded.
+            let err = teacher.rel_err(&recon);
+            let fit_only = teacher.rel_err(&f.ws.matmul(&wd.to_dense()).unwrap());
+            assert!(err < fit_only + 0.35, "trial {trial}: pipeline {err} vs fit {fit_only}");
+        }
+    }
+}
+
+#[test]
+fn utilization_monotone_in_batch() {
+    // For any short length, utilization never decreases with the batch size
+    // admitted by the class system.
+    let hw = HwConfig::default();
+    let m = ModelConfig::nmt_rdrop();
+    let mut rng = Rng::new(42);
+    let opts = SimOptions::paper(&hw);
+    for _ in 0..10 {
+        let seq = rng.range(1, 32);
+        let u1 = simulate(&hw, &build_program(&m, seq, 1), &opts).utilization(&hw);
+        let u2 = simulate(&hw, &build_program(&m, seq, 2), &opts).utilization(&hw);
+        let u4 = simulate(&hw, &build_program(&m, seq, 4), &opts).utilization(&hw);
+        assert!(u2 >= u1 * 0.99, "seq {seq}: u2 {u2} < u1 {u1}");
+        assert!(u4 >= u2 * 0.99, "seq {seq}: u4 {u4} < u2 {u2}");
+    }
+}
+
+#[test]
+fn ema_strictly_increases_with_layers() {
+    // Adding layers can only add weight traffic.
+    let hw = HwConfig::default();
+    let opts = SimOptions::paper(&hw);
+    let mut m = ModelConfig::tiny();
+    let mut prev = 0;
+    for layers in [1usize, 2, 4, 8] {
+        m.enc_layers = layers;
+        let s = simulate(&hw, &build_program(&m, 16, 1), &opts);
+        assert!(s.ema_bytes() > prev);
+        prev = s.ema_bytes();
+    }
+}
+
+#[test]
+fn latency_monotone_in_voltage() {
+    let hw = HwConfig::default();
+    let m = ModelConfig::s2t_small();
+    let prog = build_program(&m, 64, 2);
+    let mut prev = f64::INFINITY;
+    let mut vdd = 0.45;
+    while vdd <= 0.86 {
+        let s = simulate(
+            &hw,
+            &prog,
+            &SimOptions { point: hw.point_at_vdd(vdd), ..SimOptions::paper(&hw) },
+        );
+        assert!(s.seconds() <= prev * 1.0001, "latency not monotone at {vdd}");
+        prev = s.seconds();
+        vdd += 0.02;
+    }
+}
+
+#[test]
+fn gb_budget_consistent_with_class_system() {
+    // Any admissible (len → class) configuration must fit the GB at least
+    // single-buffered for every workload.
+    let hw = HwConfig::default();
+    let mut rng = Rng::new(7);
+    for name in trex::config::WORKLOADS {
+        let m = ModelConfig::preset(name).unwrap();
+        for _ in 0..20 {
+            let len = rng.range(1, m.max_seq);
+            let class = batch_class(len, hw.max_seq).unwrap();
+            let b = GbBudget::for_config(&hw, &m, class.max_len(hw.max_seq), class.batch());
+            assert!(b.fits_single(), "{name} len {len}: {:?}", b);
+        }
+    }
+}
+
+#[test]
+fn trf_never_hurts() {
+    let hw = HwConfig::default();
+    let mut rng = Rng::new(9);
+    for _ in 0..10 {
+        let m = ModelConfig::preset(
+            trex::config::WORKLOADS[rng.below(4)],
+        )
+        .unwrap();
+        let batch = [1usize, 2, 4][rng.below(3)];
+        let seq = rng.range(1, hw.max_seq / batch);
+        let prog = build_program(&m, seq, batch);
+        let on = simulate(&hw, &prog, &SimOptions::paper(&hw));
+        let off = simulate(&hw, &prog, &SimOptions { trf: false, ..SimOptions::paper(&hw) });
+        assert!(on.cycles <= off.cycles, "{}: trf slower at seq {seq}", m.name);
+    }
+}

@@ -1,0 +1,131 @@
+//! Runtime + coordinator integration over the real AOT artifacts.
+//! Skips politely if `make artifacts` hasn't been run (the manifest is the
+//! stamp). PJRT executables are created inside each test's thread.
+
+use std::path::PathBuf;
+use std::time::Duration;
+use trex::config::{HwConfig, ModelConfig};
+use trex::coordinator::{
+    BatcherConfig, Engine, EngineConfig, Request, Server, TraceGenerator,
+};
+use trex::runtime::{ArtifactSet, PjrtRuntime};
+
+fn art_dir() -> Option<PathBuf> {
+    let p = PathBuf::from("../artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn artifacts_load_and_self_test() {
+    let Some(dir) = art_dir() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let set = ArtifactSet::load(&rt, &dir).unwrap();
+    assert_eq!(set.model_name, "tiny");
+    assert_eq!(set.entries.len(), 3);
+    set.self_test().unwrap();
+}
+
+#[test]
+fn executable_rejects_bad_shapes() {
+    let Some(dir) = art_dir() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let set = ArtifactSet::load(&rt, &dir).unwrap();
+    let e = set.entries.values().next().unwrap();
+    assert!(e.exe.run_f32(&[0.0; 7], 1, 7).is_err() || e.tokens * e.d_model == 7);
+}
+
+#[test]
+fn engine_executes_batches_and_strips_padding() {
+    let Some(dir) = art_dir() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let set = ArtifactSet::load(&rt, &dir).unwrap();
+    let d = set.d_model;
+    let mut engine = Engine::new(
+        set,
+        EngineConfig {
+            hw: HwConfig::default(),
+            perf_model: ModelConfig::tiny(),
+            self_test: false,
+        },
+    )
+    .unwrap();
+
+    // Four 5-token requests → class B4 (slot 8 on the 32-token tiny plane).
+    let reqs: Vec<Request> = (0..4)
+        .map(|i| Request::new(i, 5, vec![0.1 * (i as f32 + 1.0); 5 * d]))
+        .collect();
+    let mut batcher = trex::coordinator::DynamicBatcher::new(BatcherConfig {
+        max_seq: 32,
+        max_wait: Duration::from_millis(1),
+    });
+    let mut formed = None;
+    for r in reqs {
+        if let Some(b) = batcher.push(r).unwrap() {
+            formed = Some(b);
+        }
+    }
+    let batch = formed.expect("4 B4 requests form a batch");
+    let responses = engine.execute(batch).unwrap();
+    assert_eq!(responses.len(), 4);
+    for r in &responses {
+        assert_eq!(r.output.len(), 5 * d, "padding must be stripped");
+        assert!(r.output.iter().all(|v| v.is_finite()));
+        assert!(r.chip_us > 0.0 && r.chip_uj > 0.0 && r.ema_bytes > 0);
+    }
+    // Distinct inputs ⇒ distinct outputs.
+    assert_ne!(responses[0].output, responses[1].output);
+}
+
+#[test]
+fn server_end_to_end_trace() {
+    let Some(dir) = art_dir() else { return };
+    let hw = HwConfig::default();
+    let perf = ModelConfig::bert_large();
+    let handle = Server::start(
+        move || {
+            let rt = PjrtRuntime::cpu()?;
+            let set = ArtifactSet::load(&rt, &dir)?;
+            Engine::new(set, EngineConfig { hw, perf_model: perf, self_test: false })
+        },
+        BatcherConfig { max_seq: 32, max_wait: Duration::from_millis(1) },
+    );
+    let mut gen = TraceGenerator::for_model(&ModelConfig::bert_large(), 32, 64, 3);
+    let n = 24;
+    for _ in 0..n {
+        handle.submit(gen.next()).unwrap();
+    }
+    let mut got = 0;
+    while got < n {
+        let r = handle.responses.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert!(r.output.iter().all(|v| v.is_finite()));
+        got += 1;
+    }
+    let report = handle.shutdown().unwrap();
+    let j = report.json();
+    assert_eq!(j.get("completed").unwrap().as_f64().unwrap(), n as f64);
+    assert!(j.get("utilization_mean").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn engine_rejects_oversized_request() {
+    let Some(dir) = art_dir() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let set = ArtifactSet::load(&rt, &dir).unwrap();
+    let d = set.d_model;
+    let mut engine = Engine::new(
+        set,
+        EngineConfig { hw: HwConfig::default(), perf_model: ModelConfig::tiny(), self_test: false },
+    )
+    .unwrap();
+    // A 20-token request shoved into a B4 batch (slot 8) must error.
+    let batch = trex::coordinator::batcher::FormedBatch {
+        class: trex::sim::BatchClass::B4,
+        requests: vec![Request::new(0, 20, vec![0.0; 20 * d])],
+    };
+    assert!(engine.execute(batch).is_err());
+}

@@ -1,0 +1,135 @@
+//! Cross-module integration: model programs × simulator × ledger coherence,
+//! plus failure injection on configs and generative sweeps.
+
+use trex::baseline::dense_program;
+use trex::compress::CompressionReport;
+use trex::config::{HwConfig, ModelConfig, WORKLOADS};
+use trex::model::build_program;
+use trex::sim::{batch_class, simulate, simulate_workload, SimOptions};
+use trex::util::rng::Rng;
+
+#[test]
+fn all_workloads_all_classes_simulate() {
+    let hw = HwConfig::default();
+    for name in WORKLOADS {
+        let m = ModelConfig::preset(name).unwrap();
+        for (seq, batch) in [(128, 1), (64, 2), (32, 4), (100, 1), (17, 4)] {
+            let prog = build_program(&m, seq, batch);
+            let s = simulate(&hw, &prog, &SimOptions::paper(&hw));
+            assert!(s.cycles > 0, "{name} {seq}x{batch}");
+            let u = s.utilization(&hw);
+            assert!(u > 0.0 && u <= 1.0, "{name} {seq}x{batch}: util {u}");
+            assert!(s.avg_power_mw() <= s.point.peak_mw * 1.05, "{name}: power");
+        }
+    }
+}
+
+#[test]
+fn generative_sweep_invariants() {
+    // Random (seq, batch, vdd, trf, prefetch) points: physical invariants
+    // must hold everywhere.
+    let hw = HwConfig::default();
+    let m = ModelConfig::s2t_small();
+    let mut rng = Rng::new(2024);
+    for _ in 0..40 {
+        let batch = [1, 2, 4][rng.below(3)];
+        let seq = rng.range(1, hw.max_seq / batch);
+        let opts = SimOptions {
+            point: hw.point_at_vdd(rng.f64_range(0.4, 0.9)),
+            trf: rng.below(2) == 0,
+            prefetch: rng.below(2) == 0,
+            act_bits: 8,
+        };
+        let prog = build_program(&m, seq, batch);
+        let s = simulate(&hw, &prog, &opts);
+        assert!(s.cycles > 0);
+        assert!(s.utilization(&hw) <= 1.0);
+        assert!(s.energy.total_pj() > 0.0);
+        assert!(s.energy.ema_share() >= 0.0 && s.energy.ema_share() <= 1.0);
+        // Energy must be at least the EMA floor (bytes are precision-exact).
+        let ema_pj = s.ema_bytes() as f64 * 8.0 * hw.dram_pj_per_bit;
+        assert!((s.energy.ema_pj - ema_pj).abs() < 1.0);
+    }
+}
+
+#[test]
+fn program_weight_bytes_equal_simulated_ledger() {
+    // The program builder's byte accounting and the executor's ledger must
+    // agree exactly — no EMA bytes invented or dropped.
+    let hw = HwConfig::default();
+    for name in ["tiny", "nmt-rdrop"] {
+        let m = ModelConfig::preset(name).unwrap();
+        let prog = build_program(&m, m.max_seq.min(64), 2);
+        let s = simulate(&hw, &prog, &SimOptions::paper(&hw));
+        let from_prog: u64 = prog.ops.iter().map(|o| o.dma_bytes()).sum();
+        assert_eq!(s.ema_bytes(), from_prog, "{name}");
+    }
+}
+
+#[test]
+fn fig6_shape_trex_beats_dense_on_every_workload() {
+    let hw = HwConfig::default();
+    let opts = SimOptions::paper(&hw);
+    for name in WORKLOADS {
+        let m = ModelConfig::preset(name).unwrap();
+        let seq = (m.mean_input_len as usize).clamp(1, m.max_seq);
+        let batch = batch_class(seq, hw.max_seq).unwrap().batch();
+        let trex = simulate(&hw, &build_program(&m, seq, batch), &opts);
+        let dense = simulate(&hw, &dense_program(&m, seq), &opts);
+        // Per-input EMA reduction (the paper's 31–65.9×) > 10× everywhere.
+        let ema_gain = dense.ema_bytes() as f64
+            / (trex.ema_bytes() as f64 / trex.inputs as f64);
+        assert!(ema_gain > 10.0, "{name}: EMA gain {ema_gain:.1}");
+        // And faster per input.
+        let t_trex = trex.seconds() / trex.inputs as f64;
+        assert!(t_trex < dense.seconds(), "{name}: latency");
+    }
+}
+
+#[test]
+fn static_report_tracks_dynamic_ledger() {
+    // CompressionReport (analytic bytes) vs what the simulator streams.
+    let m = ModelConfig::vit_base();
+    let hw = HwConfig::default();
+    let rep = CompressionReport::analytic(&m);
+    let s = simulate_workload(&hw, &m, m.max_seq, 1);
+    let dynamic_wd = s.ema.get(trex::compress::EmaCategory::WdValues)
+        + s.ema.get(trex::compress::EmaCategory::WdIndices)
+        + s.ema.get(trex::compress::EmaCategory::Metadata);
+    let statically = rep.compressed_bytes - rep.ws_compressed_bytes;
+    let rel = (dynamic_wd as f64 - statically as f64).abs() / statically as f64;
+    assert!(rel < 0.02, "dynamic {dynamic_wd} vs static {statically}");
+}
+
+#[test]
+fn config_failure_injection() {
+    // Corrupt JSON configs must produce typed errors, not panics.
+    use trex::util::json::Json;
+    let hw = HwConfig::default();
+    let mut j = hw.to_json();
+    // Remove a required field.
+    if let Json::Obj(m) = &mut j {
+        m.remove("dram_gbps");
+    }
+    assert!(HwConfig::from_json(&j).is_err());
+    // Model with broken invariants.
+    let m = ModelConfig::tiny();
+    let mut mj = m.to_json();
+    if let Json::Obj(o) = &mut mj {
+        o.insert("rank".into(), Json::Num(0.0));
+    }
+    let parsed = ModelConfig::from_json(&mj).unwrap();
+    assert!(parsed.validate(128).is_err());
+    // Garbage text.
+    assert!(Json::parse("{not json").is_err());
+}
+
+#[test]
+fn batch_class_boundaries_match_hw() {
+    let hw = HwConfig::default();
+    assert_eq!(batch_class(65, hw.max_seq).unwrap().batch(), 1);
+    assert_eq!(batch_class(64, hw.max_seq).unwrap().batch(), 2);
+    assert_eq!(batch_class(33, hw.max_seq).unwrap().batch(), 2);
+    assert_eq!(batch_class(32, hw.max_seq).unwrap().batch(), 4);
+    assert!(batch_class(129, hw.max_seq).is_err());
+}
