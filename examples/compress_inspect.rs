@@ -13,7 +13,7 @@ use trex::factorize::{factorize_joint, FactorizeOptions};
 use trex::util::mat::Mat;
 use trex::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut rng = Rng::new(0xC0DEC);
     // A small "layer group": 4 layers of 96×64 teacher weights that are
     // genuinely low-rank + sparse (the structure factorizing training finds).

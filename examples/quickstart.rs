@@ -1,8 +1,10 @@
-//! Quickstart: load the AOT artifacts, run one inference through the full
-//! stack (PJRT numerics + cycle-level performance model), print the result.
+//! Quickstart: load the artifacts (AOT PJRT when available, deterministic
+//! reference backend otherwise), run one inference through the full stack
+//! (numerics + cycle-level performance model), print the result.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart            # reference backend
+//! make artifacts && cargo run --release --features pjrt --example quickstart
 //! ```
 
 use trex::config::{HwConfig, ModelConfig};
@@ -10,14 +12,20 @@ use trex::model::build_program;
 use trex::runtime::{artifacts, ArtifactSet, PjrtRuntime};
 use trex::sim::{batch_class, simulate, SimOptions};
 
-fn main() -> anyhow::Result<()> {
-    // --- numerics: PJRT executes the jax/pallas-compiled artifact ---------
-    let rt = PjrtRuntime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
-    let set = ArtifactSet::load(&rt, &artifacts::default_dir())?;
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // --- numerics: PJRT artifact when present, reference backend otherwise
+    let dir = artifacts::default_dir();
+    let set = if dir.join("manifest.json").exists() && cfg!(feature = "pjrt") {
+        let rt = PjrtRuntime::cpu()?;
+        println!("PJRT platform: {}", rt.platform());
+        ArtifactSet::load(&rt, &dir)?
+    } else {
+        println!("no AOT artifacts (or built without `pjrt`) — reference backend");
+        ArtifactSet::reference_tiny()?
+    };
     println!("loaded model '{}' ({} batch classes)", set.model_name, set.entries.len());
     set.self_test()?;
-    println!("artifact self-test OK (PJRT outputs match jax check vectors)");
+    println!("artifact self-test OK");
 
     // One 12-token request → batch class B4 slot on the 32-token tiny plane.
     let len = 12usize;

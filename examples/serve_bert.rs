@@ -1,51 +1,111 @@
 //! End-to-end serving driver (the EXPERIMENTS.md §E2E run).
 //!
-//! Starts the full T-REX serving stack — PJRT-compiled artifacts, dynamic
-//! batcher, engine thread — and replays a BERT-like request trace (short,
-//! variable-length NLU inputs), then reports latency, throughput,
-//! utilization, EMA and energy. Numerics run on the tiny artifact model;
-//! chip performance is simulated for the BERT-Large workload the trace
-//! represents (both are reported per response).
+//! Starts the full T-REX serving pool — runtime-backed numerics, dynamic
+//! batcher, N engine workers over a shared simulation cache — and replays a
+//! BERT-like request trace (short, variable-length NLU inputs), then
+//! reports latency, throughput, utilization, EMA and energy. Numerics run
+//! on the tiny artifact model when `make artifacts` has been run (and the
+//! crate was built with `--features pjrt`), else on the deterministic
+//! reference backend; chip performance is simulated for the BERT-Large
+//! workload the trace represents (both are reported per response).
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example serve_bert -- [n_requests]
+//! cargo run --release --example serve_bert -- [n_requests] [n_workers]
 //! ```
 
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
 use std::time::Duration;
 use trex::config::{HwConfig, ModelConfig};
-use trex::coordinator::{BatcherConfig, Engine, EngineConfig, Server, TraceGenerator};
+use trex::coordinator::{
+    default_workers, BatcherConfig, Engine, EngineConfig, PoolConfig, Server, TraceGenerator,
+};
 use trex::runtime::{artifacts, ArtifactSet, PjrtRuntime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n_requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let workers: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(default_workers);
     let art_dir = artifacts::default_dir();
 
-    // Peek at the manifest geometry for the trace generator (the engine
-    // itself loads the artifacts inside its worker thread — PJRT executables
-    // are not Send).
-    let manifest = trex::util::json::Json::from_file(art_dir.join("manifest.json"))
-        .map_err(|e| anyhow::anyhow!("{e} — run `make artifacts` first"))?;
-    let d_model = manifest.get("model")?.get("d_model")?.as_usize()?;
-    let max_seq = manifest.get("model")?.get("max_seq")?.as_usize()?;
+    // Peek at the manifest geometry for the trace generator (each worker
+    // loads the artifacts inside its own thread — PJRT executables are not
+    // Send). Without artifacts, fall back to the reference backend.
+    let manifest = trex::util::json::Json::from_file(art_dir.join("manifest.json")).ok();
+    let use_pjrt = manifest.is_some() && cfg!(feature = "pjrt");
+    let (d_model, max_seq) = match &manifest {
+        Some(m) => (
+            m.get("model")?.get("d_model")?.as_usize()?,
+            m.get("model")?.get("max_seq")?.as_usize()?,
+        ),
+        None => (artifacts::TINY_D_MODEL, artifacts::TINY_MAX_SEQ),
+    };
 
     let perf_model = ModelConfig::bert_large();
     let hw = HwConfig::default();
     let art_dir2 = art_dir.clone();
-    let handle = Server::start(
-        move || {
-            let rt = PjrtRuntime::cpu()?;
-            let set = ArtifactSet::load(&rt, &art_dir2)?;
-            Engine::new(set, EngineConfig { hw, perf_model, self_test: true })
+    let pm = perf_model.clone();
+    let handle = Server::start_pool(
+        move |ctx| {
+            let set = if use_pjrt {
+                let rt = PjrtRuntime::cpu()?;
+                ArtifactSet::load(&rt, &art_dir2)?
+            } else {
+                ArtifactSet::reference(artifacts::TINY_MODEL, d_model, max_seq)?
+            };
+            Engine::with_cache(
+                set,
+                EngineConfig {
+                    hw: hw.clone(),
+                    perf_model: pm.clone(),
+                    self_test: ctx.worker == 0,
+                },
+                Arc::clone(&ctx.sim_cache),
+            )
         },
-        BatcherConfig { max_seq, max_wait: Duration::from_millis(2) },
+        PoolConfig {
+            workers,
+            batcher: BatcherConfig { max_seq, max_wait: Duration::from_millis(2) },
+            ..PoolConfig::default()
+        },
     );
 
     // BERT-style trace: short inputs (mean scaled onto the artifact plane).
     let mut gen = TraceGenerator::for_model(&ModelConfig::bert_large(), max_seq, d_model, 0xBE27);
-    println!("replaying {n_requests} BERT-like requests through the coordinator…");
+    println!(
+        "replaying {n_requests} BERT-like requests through {workers} pool workers \
+         ({} backend)…",
+        if use_pjrt { "PJRT" } else { "reference" }
+    );
     let mut submitted = 0usize;
+    let mut got = 0usize;
+    let mut checksum = 0.0f64;
+    let mut absorb = |resp: &trex::coordinator::Response| {
+        checksum += resp.output.iter().map(|v| *v as f64).sum::<f64>();
+    };
     for _ in 0..n_requests {
-        handle.submit(gen.next())?;
+        let mut req = gen.next();
+        // Backpressure-aware submit: drain a response and retry on reject.
+        // A disconnected response channel means every worker died — bail
+        // instead of spinning on a dead pool.
+        loop {
+            match handle.try_submit(req) {
+                Ok(()) => break,
+                Err((r, e)) => {
+                    req = r;
+                    match handle.responses.recv_timeout(Duration::from_millis(50)) {
+                        Ok(resp) => {
+                            absorb(&resp);
+                            got += 1;
+                        }
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => return Err(e.into()),
+                    }
+                }
+            }
+        }
         submitted += 1;
         // Light pacing: a burst every 16 requests lets deadline flushing
         // and partial batches occur (realistic arrivals).
@@ -54,12 +114,10 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    // Collect all responses.
-    let mut got = 0usize;
-    let mut checksum = 0.0f64;
+    // Collect the remaining responses.
     while got < n_requests {
         let resp = handle.responses.recv_timeout(Duration::from_secs(30))?;
-        checksum += resp.output.iter().map(|v| *v as f64).sum::<f64>();
+        absorb(&resp);
         got += 1;
     }
     let report = handle.shutdown()?;
@@ -71,11 +129,15 @@ fn main() -> anyhow::Result<()> {
     let util = j.get("utilization_mean")?.as_f64()?;
     let chip_uj = j.get("chip_uj_per_request_mean")?.as_f64()?;
     let p50 = j.get("e2e_latency_us_p50")?.as_f64()?;
-    let p99 = j.get("e2e_latency_us_p99")?.as_f64()?;
+    let p95 = j.get("e2e_latency_us_p95")?.as_f64()?;
     let rps = j.get("throughput_rps")?.as_f64()?;
+    let cache = report.cache;
     println!(
-        "summary: {rps:.0} req/s | e2e p50 {p50:.0} µs, p99 {p99:.0} µs | \
-         modeled chip: {util:.1} util, {chip_uj:.1} µJ/request (BERT-Large plane)"
+        "summary: {rps:.0} req/s over {workers} workers | e2e p50 {p50:.0} µs, p95 {p95:.0} µs | \
+         modeled chip: {util:.1} util, {chip_uj:.1} µJ/request (BERT-Large plane) | \
+         sim cache {}/{} hits",
+        cache.hits,
+        cache.hits + cache.misses
     );
     Ok(())
 }

@@ -11,7 +11,7 @@ use trex::factorize::{factorize_joint, mac_counts, FactorizeOptions};
 use trex::util::mat::Mat;
 use trex::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut rng = Rng::new(0x7EA);
     let (d_in, d_out, rank, true_nnz, layers) = (64usize, 48usize, 16usize, 5usize, 6usize);
 
@@ -27,7 +27,8 @@ fn main() -> anyhow::Result<()> {
                 }
             }
             let clean = ws_true.matmul(&wd).unwrap();
-            let noise = Mat::randn(d_in, d_out, &mut rng).scale(0.05 * clean.fro() as f32 / (d_in as f32).sqrt());
+            let noise = Mat::randn(d_in, d_out, &mut rng)
+                .scale(0.05 * clean.fro() as f32 / (d_in as f32).sqrt());
             clean.add(&noise).unwrap()
         })
         .collect();

@@ -1,0 +1,61 @@
+"""Minimal stand-in for `hypothesis` when it isn't installed.
+
+CI installs the real thing; offline environments (the tier-1 gate container
+has no package index) fall back to this shim, which runs each property test
+over a small deterministic sample of the strategy space instead of skipping
+the test entirely. Only the surface these tests use is implemented:
+`given(**kwargs)`, `settings(...)`, `strategies.integers`,
+`strategies.sampled_from`.
+"""
+
+import inspect
+import random
+
+_FALLBACK_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, sampler):
+        self._sampler = sampler
+
+    def sample(self, rng):
+        return self._sampler(rng)
+
+
+class st:  # noqa: N801 — mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(choices):
+        seq = list(choices)
+        return _Strategy(lambda rng: rng.choice(seq))
+
+
+def settings(*_args, **_kwargs):
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    """Run the test over deterministic pseudo-random draws per strategy."""
+
+    def deco(fn):
+        def wrapper():
+            rng = random.Random(0x7E0)
+            names = sorted(strategies)
+            for _ in range(_FALLBACK_EXAMPLES):
+                drawn = {n: strategies[n].sample(rng) for n in names}
+                fn(**drawn)
+
+        # Present a zero-argument signature so pytest doesn't read the
+        # strategy parameters as fixtures (what real hypothesis does too).
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco

@@ -3,7 +3,10 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline: deterministic fallback sampler
+    from _hypothesis_compat import given, settings, st
 
 from compile.kernels import afu, factorized_mm as fmm, ref
 

@@ -1,24 +1,48 @@
-//! Fig. 23.1.4 — dynamic batching across input lengths.
+//! Fig. 23.1.4 — dynamic batching across input lengths, plus the host-side
+//! serving-pool scaling that batching feeds.
 //!
-//! Sweeps input length over the three dataflow classes and reports, for
-//! batch-1 vs the class's full batch: utilization, per-input EMA, and
+//! Part 1 sweeps input length over the three dataflow classes and reports,
+//! for batch-1 vs the class's full batch: utilization, per-input EMA, and
 //! per-input latency. The paper's headline: utilization up to 3.31× and
 //! EMA down via parameter reuse, most pronounced for short inputs
 //! (BERT-Large-style NLU traffic).
+//!
+//! Part 2 drives the same mixed B1/B2/B4 offered load through the
+//! coordinator's worker pool at 1 vs 4 workers (deterministic reference
+//! backend, no artifacts needed) and reports host-side throughput scaling —
+//! and verifies the per-request numerics are identical regardless of worker
+//! count or batch composition.
+//!
+//! `--test` (CI smoke): one quick iteration of both parts.
 
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 use trex::bench_util::{banner, ratio, table};
 use trex::config::{HwConfig, ModelConfig};
+use trex::coordinator::{
+    BatcherConfig, Engine, EngineConfig, PoolConfig, Request, Server, TraceGenerator,
+};
 use trex::model::build_program;
+use trex::runtime::ArtifactSet;
 use trex::sim::{batch_class, simulate, SimOptions};
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    chip_batching_sweep(smoke);
+    pool_scaling(smoke);
+}
+
+fn chip_batching_sweep(smoke: bool) {
     let hw = HwConfig::default();
     let m = ModelConfig::bert_large();
     let opts = SimOptions { act_bits: m.act_bits, ..SimOptions::paper(&hw) };
 
     banner("Fig 23.1.4: batching vs input length (BERT-Large)");
+    let seqs: &[usize] =
+        if smoke { &[128, 32] } else { &[128, 96, 64, 48, 32, 24, 16, 8] };
     let mut rows = Vec::new();
-    for seq in [128usize, 96, 64, 48, 32, 24, 16, 8] {
+    for &seq in seqs {
         let class = batch_class(seq, hw.max_seq).unwrap();
         let b = class.batch();
         let solo = simulate(&hw, &build_program(&m, seq, 1), &opts);
@@ -58,6 +82,9 @@ fn main() {
          see EXPERIMENTS.md.)"
     );
 
+    if smoke {
+        return;
+    }
     banner("mean-length traffic per workload (trace-weighted)");
     let mut rows = Vec::new();
     for name in trex::config::WORKLOADS {
@@ -74,4 +101,86 @@ fn main() {
         ]);
     }
     table(&["workload", "mean len", "class", "util gain"], &rows);
+}
+
+/// Per-request output checksums keyed by id — the numerics identity check.
+type Checksums = BTreeMap<u64, f64>;
+
+/// Run `requests` through a pool of `workers`; returns (wall seconds,
+/// responses/s, per-request checksums).
+fn run_pool(workers: usize, requests: Vec<Request>, max_seq: usize) -> (f64, f64, Checksums) {
+    let n = requests.len();
+    let hw = HwConfig::default();
+    let pm = ModelConfig::bert_large();
+    let handle = Server::start_pool(
+        move |ctx| {
+            let set = ArtifactSet::reference("pool-bench", 128, max_seq)?;
+            Engine::with_cache(
+                set,
+                EngineConfig { hw: hw.clone(), perf_model: pm.clone(), self_test: false },
+                Arc::clone(&ctx.sim_cache),
+            )
+        },
+        PoolConfig {
+            workers,
+            queue_depth: 0,    // offered load: measure capacity, don't shed
+            max_inflight: 0,
+            batcher: BatcherConfig { max_seq, max_wait: Duration::from_micros(200) },
+            ..PoolConfig::default()
+        },
+    );
+    let t0 = Instant::now();
+    for req in requests {
+        handle.submit(req).expect("unbounded pool rejects nothing");
+    }
+    let mut sums = Checksums::new();
+    for _ in 0..n {
+        let resp = handle
+            .responses
+            .recv_timeout(Duration::from_secs(60))
+            .expect("pool must answer every request");
+        let sum = resp.output.iter().map(|v| *v as f64).sum::<f64>();
+        sums.insert(resp.id, sum);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let report = handle.shutdown().expect("clean shutdown");
+    assert_eq!(report.metrics.completed(), n as u64, "pool must serve all requests");
+    (wall, n as f64 / wall, sums)
+}
+
+fn pool_scaling(smoke: bool) {
+    banner("host-side serving pool: mixed B1/B2/B4 offered load");
+    let max_seq = 32;
+    let n = if smoke { 64 } else { 2000 };
+    // Identical offered load for every pool size (same ids, same payloads).
+    let trace: Vec<Request> = TraceGenerator::mixed(max_seq, 128, 0xF16_4).take(n);
+
+    let worker_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    let mut rows = Vec::new();
+    let mut base_rps = 0.0;
+    let mut base_sums: Option<Checksums> = None;
+    for &w in worker_counts {
+        let (wall, rps, sums) = run_pool(w, trace.clone(), max_seq);
+        if let Some(base) = &base_sums {
+            assert_eq!(
+                base, &sums,
+                "per-request numerics must be identical at any worker count"
+            );
+        } else {
+            base_rps = rps;
+            base_sums = Some(sums);
+        }
+        rows.push(vec![
+            format!("{w}"),
+            format!("{:.1} ms", wall * 1e3),
+            format!("{rps:.0}"),
+            ratio(rps / base_rps),
+        ]);
+    }
+    table(&["workers", "wall", "req/s", "speedup"], &rows);
+    println!(
+        "\n{n} mixed-length requests, identical trace per pool size; per-request\n\
+         outputs verified bit-identical across worker counts (row-wise reference\n\
+         numerics are independent of batch composition and worker assignment)."
+    );
 }

@@ -44,11 +44,7 @@ pub struct DynamicBatcher {
 }
 
 fn slot(class: BatchClass) -> usize {
-    match class {
-        BatchClass::B1 => 0,
-        BatchClass::B2 => 1,
-        BatchClass::B4 => 2,
-    }
+    class.index()
 }
 
 impl DynamicBatcher {

@@ -1,5 +1,5 @@
-//! Engine: executes formed batches — numerics via PJRT, performance via the
-//! cycle-level simulator.
+//! Engine: executes formed batches — numerics via the runtime backend,
+//! performance via the cycle-level simulator.
 //!
 //! The engine pads each request to its class's per-input slot, concatenates
 //! the batch on the token axis (the chip's reconfigured 128-token plane),
@@ -8,15 +8,20 @@
 //! the *served model's* config (the artifact model for numerics can be the
 //! tiny proxy while performance is reported for the paper workload — both
 //! are recorded on the response).
+//!
+//! In the worker pool each worker owns its own `Engine` (executables are
+//! not `Send`), but all engines share one [`SimCache`] so every
+//! `(class, seq)` pass is simulated exactly once process-wide.
 
 use crate::config::{HwConfig, ModelConfig};
 use crate::coordinator::batcher::FormedBatch;
 use crate::coordinator::request::Response;
+use crate::coordinator::sim_cache::{CachedPass, SimCache};
 use crate::error::{Error, Result};
 use crate::model::build_program;
 use crate::runtime::ArtifactSet;
 use crate::sim::{simulate, BatchClass, SimOptions};
-use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Engine configuration.
@@ -28,28 +33,31 @@ pub struct EngineConfig {
     pub self_test: bool,
 }
 
-/// Executes batches. Owns the compiled artifacts and a simulation cache
-/// (per (class, padded-seq) — programs are deterministic).
+/// Executes batches. Owns the compiled artifacts; the simulation cache is
+/// shared (per (class, padded-seq) — programs are deterministic).
 pub struct Engine {
     artifacts: ArtifactSet,
     cfg: EngineConfig,
-    sim_cache: HashMap<(BatchClass, usize), CachedPass>,
-}
-
-#[derive(Clone, Copy)]
-struct CachedPass {
-    chip_us: f64,
-    chip_uj: f64,
-    ema_bytes: u64,
-    utilization: f64,
+    sim_cache: Arc<SimCache>,
 }
 
 impl Engine {
+    /// Engine with a private simulation cache (single-engine setups).
     pub fn new(artifacts: ArtifactSet, cfg: EngineConfig) -> Result<Self> {
+        Self::with_cache(artifacts, cfg, Arc::new(SimCache::new()))
+    }
+
+    /// Engine over a shared simulation cache (the pool path — every worker
+    /// passes the pool's cache so passes are simulated once process-wide).
+    pub fn with_cache(
+        artifacts: ArtifactSet,
+        cfg: EngineConfig,
+        sim_cache: Arc<SimCache>,
+    ) -> Result<Self> {
         if cfg.self_test {
             artifacts.self_test()?;
         }
-        Ok(Engine { artifacts, cfg, sim_cache: HashMap::new() })
+        Ok(Engine { artifacts, cfg, sim_cache })
     }
 
     pub fn model_name(&self) -> &str {
@@ -61,31 +69,41 @@ impl Engine {
     pub fn max_seq(&self) -> usize {
         self.artifacts.max_seq
     }
+    pub fn sim_cache(&self) -> &Arc<SimCache> {
+        &self.sim_cache
+    }
 
-    /// Simulate (with caching) the chip pass for a batch class at `seq`.
-    fn perf(&mut self, class: BatchClass, seq: usize) -> CachedPass {
-        let key = (class, seq);
-        if let Some(c) = self.sim_cache.get(&key) {
-            return *c;
-        }
-        let prog = build_program(&self.cfg.perf_model, seq, class.batch());
-        let stats = simulate(
-            &self.cfg.hw,
-            &prog,
-            &SimOptions { act_bits: self.cfg.perf_model.act_bits, ..SimOptions::paper(&self.cfg.hw) },
-        );
-        let pass = CachedPass {
-            chip_us: stats.seconds() * 1e6,
-            chip_uj: stats.energy.total_uj(),
-            ema_bytes: stats.ema_bytes(),
-            utilization: stats.utilization(&self.cfg.hw),
-        };
-        self.sim_cache.insert(key, pass);
-        pass
+    /// Simulate (with shared caching) the chip pass for a batch class at `seq`.
+    fn perf(&self, class: BatchClass, seq: usize) -> CachedPass {
+        self.sim_cache.get_or_simulate(class, seq, || {
+            let prog = build_program(&self.cfg.perf_model, seq, class.batch());
+            let stats = simulate(
+                &self.cfg.hw,
+                &prog,
+                &SimOptions {
+                    act_bits: self.cfg.perf_model.act_bits,
+                    ..SimOptions::paper(&self.cfg.hw)
+                },
+            );
+            CachedPass {
+                chip_us: stats.seconds() * 1e6,
+                chip_uj: stats.energy.total_uj(),
+                ema_bytes: stats.ema_bytes(),
+                utilization: stats.utilization(&self.cfg.hw),
+            }
+        })
     }
 
     /// Execute one formed batch end-to-end.
+    ///
+    /// Timing is split explicitly at `t0`, the instant this engine began
+    /// serving the batch: `queue_us` is arrival → `t0` (pure waiting:
+    /// batcher residency + work-queue residency), `host_latency_us` is
+    /// `t0` → response built (plane assembly + executable run + split).
+    /// A request that arrived while another batch was executing therefore
+    /// accrues that wait in `queue_us` and can never go negative.
     pub fn execute(&mut self, batch: FormedBatch) -> Result<Vec<Response>> {
+        let t0 = Instant::now();
         let entry = self.artifacts.get(batch.class)?;
         let d = entry.d_model;
         let slot = entry.seq; // per-input token slot of this class
@@ -118,16 +136,13 @@ impl Engine {
             plane[i * slot * d..(i * slot + r.len) * d].copy_from_slice(&r.payload);
         }
 
-        let t0 = Instant::now();
         let (seq_for_perf, class) = (slot, batch.class);
         let out = entry.exe.run_f32(&plane, tokens, d)?;
-        let host_us = t0.elapsed().as_nanos() as f64 / 1e3;
-
         let perf = self.perf(class, seq_for_perf);
         let per_req_uj = perf.chip_uj / n_req as f64;
         let per_req_ema = perf.ema_bytes / n_req as u64;
+        let host_us = t0.elapsed().as_nanos() as f64 / 1e3;
 
-        let now = Instant::now();
         let mut responses = Vec::with_capacity(n_req);
         for (i, r) in batch.requests.iter().enumerate() {
             let start = i * slot * d;
@@ -135,13 +150,13 @@ impl Engine {
                 id: r.id,
                 output: out[start..start + r.len * d].to_vec(),
                 host_latency_us: host_us,
-                queue_us: now.duration_since(r.arrival).as_nanos() as f64 / 1e3
-                    - host_us,
+                queue_us: t0.saturating_duration_since(r.arrival).as_nanos() as f64 / 1e3,
                 chip_us: perf.chip_us,
                 chip_uj: per_req_uj,
                 ema_bytes: per_req_ema,
                 class,
                 utilization: perf.utilization,
+                worker: 0,
             });
         }
         Ok(responses)

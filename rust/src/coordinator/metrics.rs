@@ -1,4 +1,9 @@
 //! Serving metrics: lock-protected running aggregates + final report.
+//!
+//! The pool keeps one `ServerMetrics` per worker plus one pooled sink every
+//! worker also records into, so per-worker and pooled views stay consistent
+//! without a merge pass at shutdown. Percentiles (p50/p95/p99) come from the
+//! raw end-to-end latency samples each sink retains.
 
 use crate::sim::BatchClass;
 use crate::util::json::Json;
@@ -10,6 +15,10 @@ struct Inner {
     completed: u64,
     batches: u64,
     tokens: u64,
+    /// Requests refused at admission (backpressure / malformed length).
+    rejected: u64,
+    /// Batches dropped because the engine's execute failed.
+    execute_errors: u64,
     host_latency_us: Running,
     queue_us: Running,
     chip_us: Running,
@@ -17,7 +26,7 @@ struct Inner {
     utilization: Running,
     ema_bytes: u64,
     per_class: [u64; 3],
-    /// Raw host latencies for percentile reporting.
+    /// Raw end-to-end latencies for percentile reporting.
     latencies: Vec<f64>,
 }
 
@@ -35,12 +44,7 @@ impl ServerMetrics {
     pub fn record_batch(&self, class: BatchClass, n_requests: usize) {
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
-        let idx = match class {
-            BatchClass::B1 => 0,
-            BatchClass::B2 => 1,
-            BatchClass::B4 => 2,
-        };
-        m.per_class[idx] += n_requests as u64;
+        m.per_class[class.index()] += n_requests as u64;
     }
 
     pub fn record_response(&self, r: &crate::coordinator::request::Response, len: usize) {
@@ -48,16 +52,34 @@ impl ServerMetrics {
         m.completed += 1;
         m.tokens += len as u64;
         m.host_latency_us.push(r.host_latency_us);
-        m.queue_us.push(r.queue_us.max(0.0));
+        m.queue_us.push(r.queue_us);
         m.chip_us.push(r.chip_us);
         m.chip_uj.push(r.chip_uj);
         m.utilization.push(r.utilization);
         m.ema_bytes += r.ema_bytes;
-        m.latencies.push(r.host_latency_us + r.queue_us.max(0.0));
+        m.latencies.push(r.host_latency_us + r.queue_us);
+    }
+
+    /// A request refused at admission (backpressure or bad length).
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// A batch the engine failed to execute (its requests are shed).
+    pub fn record_execute_error(&self) {
+        self.inner.lock().unwrap().execute_errors += 1;
     }
 
     pub fn completed(&self) -> u64 {
         self.inner.lock().unwrap().completed
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.inner.lock().unwrap().rejected
+    }
+
+    pub fn execute_errors(&self) -> u64 {
+        self.inner.lock().unwrap().execute_errors
     }
 
     /// Snapshot as JSON (also the report printed by examples).
@@ -65,21 +87,19 @@ impl ServerMetrics {
         let m = self.inner.lock().unwrap();
         let thr = if wall_seconds > 0.0 { m.completed as f64 / wall_seconds } else { 0.0 };
         let tok_thr = if wall_seconds > 0.0 { m.tokens as f64 / wall_seconds } else { 0.0 };
+        let pct = |p: f64| Json::num(crate::util::stats::percentile(&m.latencies, p));
         Json::obj(vec![
             ("completed", Json::num(m.completed as f64)),
             ("batches", Json::num(m.batches as f64)),
             ("tokens", Json::num(m.tokens as f64)),
+            ("rejected", Json::num(m.rejected as f64)),
+            ("execute_errors", Json::num(m.execute_errors as f64)),
             ("throughput_rps", Json::num(thr)),
             ("throughput_tok_s", Json::num(tok_thr)),
             ("host_latency_us_mean", Json::num(m.host_latency_us.mean())),
-            (
-                "e2e_latency_us_p50",
-                Json::num(crate::util::stats::percentile(&m.latencies, 50.0)),
-            ),
-            (
-                "e2e_latency_us_p99",
-                Json::num(crate::util::stats::percentile(&m.latencies, 99.0)),
-            ),
+            ("e2e_latency_us_p50", pct(50.0)),
+            ("e2e_latency_us_p95", pct(95.0)),
+            ("e2e_latency_us_p99", pct(99.0)),
             ("queue_us_mean", Json::num(m.queue_us.mean())),
             ("chip_us_per_pass_mean", Json::num(m.chip_us.mean())),
             ("chip_uj_per_request_mean", Json::num(m.chip_uj.mean())),
@@ -118,15 +138,21 @@ mod tests {
                     ema_bytes: 1000,
                     class: BatchClass::B4,
                     utilization: 0.5,
+                    worker: 0,
                 },
                 8,
             );
         }
+        m.record_rejected();
         assert_eq!(m.completed(), 4);
+        assert_eq!(m.rejected(), 1);
         let j = m.report(2.0);
         assert_eq!(j.get("throughput_rps").unwrap().as_f64().unwrap(), 2.0);
         assert_eq!(j.get("tokens").unwrap().as_f64().unwrap(), 32.0);
+        assert_eq!(j.get("rejected").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(j.get("ema_bytes_total").unwrap().as_f64().unwrap(), 4000.0);
+        assert_eq!(j.get("e2e_latency_us_p50").unwrap().as_f64().unwrap(), 150.0);
+        assert_eq!(j.get("e2e_latency_us_p95").unwrap().as_f64().unwrap(), 150.0);
         assert_eq!(
             j.get("requests_per_class").unwrap().get("b4").unwrap().as_f64().unwrap(),
             4.0

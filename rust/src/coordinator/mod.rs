@@ -1,22 +1,29 @@
 //! Serving coordinator: the production-shaped L3 plane.
 //!
-//! A [`server::Server`] owns one engine thread per model. Requests enter
-//! through a channel, the [`batcher::DynamicBatcher`] groups them into the
-//! paper's batch classes (Fig. 23.1.4), and the [`engine::Engine`] executes
-//! each batch: numerics through the PJRT artifacts, latency/energy/EMA
-//! through the cycle-level simulator. `std::thread` + mpsc channels (tokio
-//! is not vendored offline — DESIGN.md §2).
+//! A [`server::Server`] runs a multi-worker pool: one admission/ingest
+//! thread feeds the [`batcher::DynamicBatcher`], which groups requests into
+//! the paper's batch classes (Fig. 23.1.4); formed batches land on a shared
+//! class-affinity work queue, and N [`engine::Engine`] workers execute them
+//! — numerics through the runtime backend, latency/energy/EMA through the
+//! cycle-level simulator via a process-wide shared [`sim_cache::SimCache`].
+//! Admission applies bounded-queue backpressure (reject/shed when
+//! saturated). `std::thread` + mpsc channels (tokio is not vendored offline
+//! — DESIGN.md §2).
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod request;
 pub mod server;
+pub mod sim_cache;
 pub mod trace;
 
-pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use batcher::{BatcherConfig, DynamicBatcher, FormedBatch};
 pub use engine::{Engine, EngineConfig};
 pub use metrics::ServerMetrics;
 pub use request::{Request, RequestId, Response};
-pub use server::{Server, ServerHandle};
+pub use server::{
+    default_workers, PoolConfig, Server, ServerHandle, ServerReport, Submitter, WorkerCtx,
+};
+pub use sim_cache::{CacheStats, CachedPass, SimCache};
 pub use trace::TraceGenerator;

@@ -35,9 +35,12 @@ pub struct Response {
     pub id: RequestId,
     /// `(len, d_model)` output rows (padding stripped).
     pub output: Vec<f32>,
-    /// Wall-clock service latency (host side).
+    /// Wall-clock execute time (host side): plane assembly + executable run
+    /// + output split, measured from the instant a worker picked the batch.
     pub host_latency_us: f64,
-    /// Queueing delay before the batch formed.
+    /// Pure waiting time: arrival → execution start (batcher residency plus
+    /// work-queue residency). Non-negative by construction; end-to-end
+    /// latency is `queue_us + host_latency_us`.
     pub queue_us: f64,
     /// Modeled chip latency for the batch this request rode in.
     pub chip_us: f64,
@@ -49,6 +52,8 @@ pub struct Response {
     pub class: BatchClass,
     /// Modeled MAC-plane utilization of the pass.
     pub utilization: f64,
+    /// Pool worker that executed the batch (0 in single-engine setups).
+    pub worker: usize,
 }
 
 #[cfg(test)]

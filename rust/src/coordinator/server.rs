@@ -1,16 +1,35 @@
-//! Threaded serving loop: ingest → dynamic batch → engine → respond.
+//! Multi-worker serving pool: ingest → dynamic batch → shared work queue →
+//! N engine workers → respond.
 //!
-//! One engine thread owns the PJRT executables and the batcher; clients
-//! submit through an mpsc channel and receive responses on a per-server
-//! response channel. (std threads — tokio is not vendored offline.)
+//! One **admission/ingest thread** owns the [`DynamicBatcher`]: clients
+//! submit through an mpsc channel, the ingest thread classifies and groups
+//! requests, and every formed batch lands on a shared bounded work queue.
+//! **N engine workers** (configurable; defaults to an
+//! `available_parallelism` heuristic) each construct their own [`Engine`]
+//! (executables are not `Send`) and pull batches with **class-affinity
+//! scheduling**: a worker that just ran a class prefers the next batch of
+//! the same class — its reconfigured plane and parameters are warm, the
+//! paper's B4 reuse argument — bounded by an aging window so FIFO order and
+//! deadlines are never starved. All engines share one [`SimCache`] so every
+//! `(class, seq)` chip pass is simulated exactly once process-wide.
+//!
+//! **Backpressure**: admission rejects (`Error::Serve`) once the in-flight
+//! request count or the work-queue depth crosses the configured bound, so
+//! saturated traffic sheds at the door instead of growing queues without
+//! limit. (std threads + mpsc — tokio is not vendored offline, DESIGN.md §2.)
 
-use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher};
+use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher, FormedBatch};
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::request::{Request, Response};
+use crate::coordinator::sim_cache::{CacheStats, SimCache};
 use crate::error::{Error, Result};
+use crate::sim::{batch_class, BatchClass};
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -19,30 +38,324 @@ enum Msg {
     Shutdown,
 }
 
-/// Handle a client uses to talk to a running server.
-pub struct ServerHandle {
+/// A worker may jump the global FIFO for a warm same-class batch only if
+/// that batch is within this many admissions of the oldest waiting batch.
+const AFFINITY_WINDOW: u64 = 8;
+
+/// Heuristic worker count: one per available core, capped — engine work is
+/// compute-bound, extra workers past the core count only add contention.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).clamp(1, 16)
+}
+
+/// Pool sizing and admission policy.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Engine workers to spawn.
+    pub workers: usize,
+    /// Max formed batches waiting in the shared work queue before admission
+    /// rejects (0 = unbounded).
+    pub queue_depth: usize,
+    /// Max requests admitted but not yet responded before admission rejects
+    /// (0 = unbounded).
+    pub max_inflight: usize,
+    /// Warm-worker class-affinity scheduling (see module docs).
+    pub affinity: bool,
+    pub batcher: BatcherConfig,
+}
+
+impl PoolConfig {
+    pub fn with_workers(workers: usize, batcher: BatcherConfig) -> Self {
+        PoolConfig { workers: workers.max(1), batcher, ..PoolConfig::default() }
+    }
+
+    /// Single-worker pool (the pre-pool server shape: one engine thread,
+    /// no admission bounds — the legacy `Server::start` contract where
+    /// `submit` only fails when the server is down).
+    pub fn single(batcher: BatcherConfig) -> Self {
+        PoolConfig { workers: 1, queue_depth: 0, max_inflight: 0, batcher, ..PoolConfig::default() }
+    }
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            workers: default_workers(),
+            queue_depth: 256,
+            max_inflight: 4096,
+            affinity: true,
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+/// Everything a worker's engine factory gets handed: its index and the
+/// pool-wide simulation cache (pass it to [`Engine::with_cache`]).
+pub struct WorkerCtx {
+    pub worker: usize,
+    pub sim_cache: Arc<SimCache>,
+}
+
+// ---------------------------------------------------------------- work queue
+
+#[derive(Default)]
+struct QueueState {
+    /// Per-class FIFO of `(admission seq, batch)`.
+    queues: [VecDeque<(u64, FormedBatch)>; 3],
+    next_seq: u64,
+    len: usize,
+    closed: bool,
+}
+
+/// Shared batch queue: per-class subqueues under one lock so workers can
+/// apply class affinity while preserving bounded-age FIFO fairness.
+struct WorkQueue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+    /// Lock-free length mirror for the admission path.
+    len_hint: AtomicUsize,
+    affinity: bool,
+}
+
+impl WorkQueue {
+    fn new(affinity: bool) -> Self {
+        WorkQueue {
+            state: Mutex::new(QueueState::default()),
+            ready: Condvar::new(),
+            len_hint: AtomicUsize::new(0),
+            affinity,
+        }
+    }
+
+    fn push(&self, batch: FormedBatch) {
+        let mut s = self.state.lock().unwrap();
+        let seq = s.next_seq;
+        s.next_seq += 1;
+        s.queues[batch.class.index()].push_back((seq, batch));
+        s.len += 1;
+        self.len_hint.store(s.len, Ordering::Relaxed);
+        self.ready.notify_one();
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    fn len(&self) -> usize {
+        self.len_hint.load(Ordering::Relaxed)
+    }
+
+    /// Block for the next batch; `None` once the queue is closed and empty.
+    /// `warm` is the class the calling worker last executed.
+    fn pop(&self, warm: Option<BatchClass>) -> Option<FormedBatch> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.len > 0 {
+                let batch = self.choose(&mut s, warm);
+                self.len_hint.store(s.len, Ordering::Relaxed);
+                return Some(batch);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.ready.wait(s).unwrap();
+        }
+    }
+
+    fn choose(&self, s: &mut QueueState, warm: Option<BatchClass>) -> FormedBatch {
+        let oldest_idx = (0..3)
+            .filter(|&i| !s.queues[i].is_empty())
+            .min_by_key(|&i| s.queues[i].front().map(|(seq, _)| *seq).unwrap_or(u64::MAX))
+            .expect("choose called on non-empty queue");
+        let oldest_seq = s.queues[oldest_idx].front().expect("non-empty").0;
+        let take = match warm {
+            Some(class) if self.affinity => {
+                let wi = class.index();
+                match s.queues[wi].front() {
+                    // Warm jump allowed only within the aging window.
+                    Some(&(seq, _)) if seq <= oldest_seq + AFFINITY_WINDOW => wi,
+                    _ => oldest_idx,
+                }
+            }
+            _ => oldest_idx,
+        };
+        let (_, batch) = s.queues[take].pop_front().expect("selected queue non-empty");
+        s.len -= 1;
+        batch
+    }
+}
+
+// -------------------------------------------------------------------- handle
+
+/// Cloneable submit-side handle: each client thread takes its own clone
+/// (via [`ServerHandle::submitter`]) and admits requests independently —
+/// the admission counters and limits are shared across all clones.
+#[derive(Clone)]
+pub struct Submitter {
     tx: Sender<Msg>,
+    metrics: Arc<ServerMetrics>,
+    queue: Arc<WorkQueue>,
+    inflight: Arc<AtomicUsize>,
+    /// Send gate: submits hold the read side across the closed-check +
+    /// send, shutdown takes the write side to flip it — so no send can be
+    /// in flight when the pool closes, and a submit that returned `Ok` is
+    /// always drained by the ingest thread.
+    closed: Arc<RwLock<bool>>,
+    queue_depth: usize,
+    max_inflight: usize,
+    max_seq: usize,
+}
+
+impl Submitter {
+    /// Admit a request. Rejects with `Error::Serve` when the request is
+    /// unservable (bad length) or the pool is saturated (in-flight or
+    /// queue-depth bound hit) — the backpressure contract: callers retry,
+    /// shed, or slow down.
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.try_submit(req).map_err(|(_, e)| e)
+    }
+
+    /// Like [`Self::submit`], but hands the request back on rejection so a
+    /// backpressure-aware client can drain responses and retry.
+    pub fn try_submit(&self, req: Request) -> std::result::Result<(), (Request, Error)> {
+        // Validate at the door: an unservable length must fail the caller,
+        // not vanish in the ingest thread with no response ever coming.
+        if let Err(e) = batch_class(req.len, self.max_seq) {
+            self.metrics.record_rejected();
+            return Err((req, e));
+        }
+        // Hold the gate's read side for the rest of admission: shutdown
+        // can't flip `closed` (write side) until this send has completed.
+        let gate = self.closed.read().unwrap();
+        if *gate {
+            return Err((req, Error::serve("server is shutting down".to_string())));
+        }
+        let inflight = self.inflight.fetch_add(1, Ordering::AcqRel);
+        if self.max_inflight > 0 && inflight >= self.max_inflight {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            self.metrics.record_rejected();
+            return Err((
+                req,
+                Error::serve(format!(
+                    "overloaded: {inflight} requests in flight (max {})",
+                    self.max_inflight
+                )),
+            ));
+        }
+        if self.queue_depth > 0 && self.queue.len() >= self.queue_depth {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            self.metrics.record_rejected();
+            return Err((
+                req,
+                Error::serve(format!(
+                    "overloaded: {} batches queued (depth {})",
+                    self.queue.len(),
+                    self.queue_depth
+                )),
+            ));
+        }
+        if let Err(send_err) = self.tx.send(Msg::Req(req)) {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            let Msg::Req(req) = send_err.0 else { unreachable!("we sent a request") };
+            return Err((req, Error::serve("server is down".to_string())));
+        }
+        Ok(())
+    }
+
+    /// Requests admitted and not yet responded.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    /// Formed batches waiting for a worker.
+    pub fn pending_batches(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+/// Handle a client uses to talk to a running server pool.
+pub struct ServerHandle {
+    sub: Submitter,
     pub responses: Receiver<Response>,
+    /// Pooled metrics (every worker records into this sink too).
     pub metrics: Arc<ServerMetrics>,
-    join: Option<JoinHandle<Result<()>>>,
+    worker_metrics: Vec<Arc<ServerMetrics>>,
+    sim_cache: Arc<SimCache>,
+    ingest: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<Result<()>>>,
     started: Instant,
 }
 
 impl ServerHandle {
-    pub fn submit(&self, req: Request) -> Result<()> {
-        self.tx
-            .send(Msg::Req(req))
-            .map_err(|_| Error::serve("server is down".to_string()))
+    /// A cloneable submit-side handle for concurrent client threads.
+    pub fn submitter(&self) -> Submitter {
+        self.sub.clone()
     }
 
-    /// Stop the engine loop (drains pending batches first) and join.
+    /// See [`Submitter::submit`].
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.sub.submit(req)
+    }
+
+    /// See [`Submitter::try_submit`].
+    pub fn try_submit(&self, req: Request) -> std::result::Result<(), (Request, Error)> {
+        self.sub.try_submit(req)
+    }
+
+    /// Requests admitted and not yet responded.
+    pub fn inflight(&self) -> usize {
+        self.sub.inflight()
+    }
+
+    /// Formed batches waiting for a worker.
+    pub fn pending_batches(&self) -> usize {
+        self.sub.pending_batches()
+    }
+
+    /// Live view of the shared simulation cache.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.sim_cache.stats()
+    }
+
+    /// Stop the pool: the ingest thread drains the batcher into the work
+    /// queue and closes it, every worker drains the queue dry, then all
+    /// threads join. In-flight batches are never dropped.
     pub fn shutdown(mut self) -> Result<ServerReport> {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(j) = self.join.take() {
-            j.join().map_err(|_| Error::serve("engine thread panicked".to_string()))??;
+        // Refuse new admissions first: taking the gate's write side waits
+        // out any in-flight submit, so every request whose submit returned
+        // Ok is already in the channel when Shutdown is enqueued behind it
+        // — the ingest drain serves them all.
+        *self.sub.closed.write().unwrap() = true;
+        let _ = self.sub.tx.send(Msg::Shutdown);
+        if let Some(j) = self.ingest.take() {
+            j.join().map_err(|_| Error::serve("ingest thread panicked".to_string()))?;
         }
-        let wall = self.started.elapsed().as_secs_f64();
-        Ok(ServerReport { wall_seconds: wall, metrics: Arc::clone(&self.metrics) })
+        let mut first_err: Option<Error> = None;
+        for w in self.workers.drain(..) {
+            match w.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(Error::serve("worker thread panicked".to_string()));
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok(ServerReport {
+            wall_seconds: self.started.elapsed().as_secs_f64(),
+            metrics: Arc::clone(&self.metrics),
+            workers: self.worker_metrics.clone(),
+            cache: self.sim_cache.stats(),
+        })
     }
 
     pub fn uptime(&self) -> Duration {
@@ -50,67 +363,155 @@ impl ServerHandle {
     }
 }
 
-/// Final report after shutdown.
+/// Final report after shutdown: pooled metrics, per-worker metrics, and
+/// shared-cache counters.
 pub struct ServerReport {
     pub wall_seconds: f64,
+    /// Pooled (all-worker) metrics.
     pub metrics: Arc<ServerMetrics>,
+    /// Per-worker metrics, indexed by worker id.
+    pub workers: Vec<Arc<ServerMetrics>>,
+    pub cache: CacheStats,
 }
 
 impl ServerReport {
-    pub fn json(&self) -> crate::util::json::Json {
-        self.metrics.report(self.wall_seconds)
+    pub fn json(&self) -> Json {
+        let mut j = self.metrics.report(self.wall_seconds);
+        if let Json::Obj(m) = &mut j {
+            m.insert(
+                "sim_cache".to_string(),
+                Json::obj(vec![
+                    ("hits", Json::num(self.cache.hits as f64)),
+                    ("misses", Json::num(self.cache.misses as f64)),
+                    ("entries", Json::num(self.cache.entries as f64)),
+                    ("hit_rate", Json::num(self.cache.hit_rate())),
+                ]),
+            );
+            m.insert(
+                "workers".to_string(),
+                Json::Arr(
+                    self.workers
+                        .iter()
+                        .map(|w| w.report(self.wall_seconds))
+                        .collect(),
+                ),
+            );
+        }
+        j
     }
 }
 
-/// The server: spawns the engine thread.
+// -------------------------------------------------------------------- server
+
+/// The server: spawns the ingest thread and the engine worker pool.
 pub struct Server;
 
 impl Server {
-    /// Start serving. PJRT executables are not `Send`, so the engine is
-    /// *constructed inside* the worker thread from the given factory
-    /// (typically: create the PJRT client, load artifacts, build `Engine`).
+    /// Start a single-worker pool (the original server shape). Executables
+    /// are not `Send`, so each worker *constructs its engine inside its own
+    /// thread* from the given factory (typically: create the runtime, load
+    /// or synthesize artifacts, build `Engine` with the ctx's shared cache).
     /// `batcher_cfg.max_seq` must match the artifact model's token plane.
     pub fn start<F>(make_engine: F, batcher_cfg: BatcherConfig) -> ServerHandle
     where
-        F: FnOnce() -> Result<Engine> + Send + 'static,
+        F: Fn(&WorkerCtx) -> Result<Engine> + Send + Sync + 'static,
+    {
+        Self::start_pool(make_engine, PoolConfig::single(batcher_cfg))
+    }
+
+    /// Start a pool of `cfg.workers` engine workers behind one ingest
+    /// thread. The factory runs once per worker, inside that worker's
+    /// thread.
+    pub fn start_pool<F>(make_engine: F, cfg: PoolConfig) -> ServerHandle
+    where
+        F: Fn(&WorkerCtx) -> Result<Engine> + Send + Sync + 'static,
     {
         let (tx, rx) = channel::<Msg>();
         let (resp_tx, resp_rx) = channel::<Response>();
-        let metrics = Arc::new(ServerMetrics::new());
-        let m2 = Arc::clone(&metrics);
-        let join = std::thread::Builder::new()
-            .name("trex-engine".to_string())
+        let pooled = Arc::new(ServerMetrics::new());
+        let sim_cache = Arc::new(SimCache::new());
+        let queue = Arc::new(WorkQueue::new(cfg.affinity));
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let factory = Arc::new(make_engine);
+
+        let n_workers = cfg.workers.max(1);
+        let mut worker_metrics = Vec::with_capacity(n_workers);
+        let mut workers = Vec::with_capacity(n_workers);
+        for worker in 0..n_workers {
+            let own = Arc::new(ServerMetrics::new());
+            worker_metrics.push(Arc::clone(&own));
+            let ctx = WorkerCtx { worker, sim_cache: Arc::clone(&sim_cache) };
+            let factory = Arc::clone(&factory);
+            let queue = Arc::clone(&queue);
+            let pooled = Arc::clone(&pooled);
+            let inflight = Arc::clone(&inflight);
+            let resp_tx = resp_tx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("trex-worker-{worker}"))
+                    .spawn(move || {
+                        worker_loop(&ctx, factory.as_ref(), queue, resp_tx, pooled, own, inflight)
+                    })
+                    .expect("spawn engine worker"),
+            );
+        }
+        drop(resp_tx);
+
+        let ingest_metrics = Arc::clone(&pooled);
+        let ingest_queue = Arc::clone(&queue);
+        let ingest_inflight = Arc::clone(&inflight);
+        let batcher_cfg = cfg.batcher;
+        let ingest = std::thread::Builder::new()
+            .name("trex-ingest".to_string())
             .spawn(move || {
-                let engine = make_engine()?;
-                engine_loop(engine, batcher_cfg, rx, resp_tx, m2)
+                ingest_loop(batcher_cfg, rx, ingest_queue, ingest_metrics, ingest_inflight)
             })
-            .expect("spawn engine thread");
-        ServerHandle { tx, responses: resp_rx, metrics, join: Some(join), started: Instant::now() }
+            .expect("spawn ingest thread");
+
+        ServerHandle {
+            sub: Submitter {
+                tx,
+                metrics: Arc::clone(&pooled),
+                queue,
+                inflight,
+                closed: Arc::new(RwLock::new(false)),
+                queue_depth: cfg.queue_depth,
+                max_inflight: cfg.max_inflight,
+                max_seq: cfg.batcher.max_seq,
+            },
+            responses: resp_rx,
+            metrics: pooled,
+            worker_metrics,
+            sim_cache,
+            ingest: Some(ingest),
+            workers,
+            started: Instant::now(),
+        }
     }
 }
 
-fn engine_loop(
-    mut engine: Engine,
+/// Admission thread: classify + batch requests, feed the work queue, flush
+/// deadlines. On shutdown it drains the batcher (partial batches included)
+/// into the queue and closes it, so workers finish everything admitted.
+fn ingest_loop(
     batcher_cfg: BatcherConfig,
     rx: Receiver<Msg>,
-    resp_tx: Sender<Response>,
+    queue: Arc<WorkQueue>,
     metrics: Arc<ServerMetrics>,
-) -> Result<()> {
+    inflight: Arc<AtomicUsize>,
+) {
     let mut batcher = DynamicBatcher::new(batcher_cfg);
-    let run_batch = |engine: &mut Engine,
-                         batch: crate::coordinator::batcher::FormedBatch|
-     -> Result<()> {
-        let lens: Vec<usize> = batch.requests.iter().map(|r| r.len).collect();
-        metrics.record_batch(batch.class, batch.requests.len());
-        let responses = engine.execute(batch)?;
-        for (resp, len) in responses.into_iter().zip(lens) {
-            metrics.record_response(&resp, len);
-            // A dropped receiver is a client gone — not an engine error.
-            let _ = resp_tx.send(resp);
+    // Admit one request into the batcher, forwarding any formed batch.
+    // Unservable lengths are normally rejected at submit; this is the
+    // defense-in-depth path (shed, never poison the pool).
+    let admit = |batcher: &mut DynamicBatcher, req: Request| match batcher.push(req) {
+        Ok(Some(batch)) => queue.push(batch),
+        Ok(None) => {}
+        Err(_) => {
+            metrics.record_rejected();
+            inflight.fetch_sub(1, Ordering::AcqRel);
         }
-        Ok(())
     };
-
     loop {
         // Wait for work, but wake at the batcher's earliest deadline.
         let timeout = batcher
@@ -118,22 +519,74 @@ fn engine_loop(
             .map(|d| d.saturating_duration_since(Instant::now()))
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
-            Ok(Msg::Req(req)) => {
-                if let Some(batch) = batcher.push(req)? {
-                    run_batch(&mut engine, batch)?;
+            Ok(Msg::Req(req)) => admit(&mut batcher, req),
+            Ok(Msg::Shutdown) => {
+                // Drain requests that were already sent when shutdown was
+                // signalled — a submit that returned Ok is never dropped.
+                while let Ok(msg) = rx.try_recv() {
+                    if let Msg::Req(req) = msg {
+                        admit(&mut batcher, req);
+                    }
                 }
+                break;
             }
-            Ok(Msg::Shutdown) => break,
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => break,
         }
         for batch in batcher.poll_deadline(Instant::now()) {
-            run_batch(&mut engine, batch)?;
+            queue.push(batch);
         }
     }
-    // Drain everything left.
     for batch in batcher.drain() {
-        run_batch(&mut engine, batch)?;
+        queue.push(batch);
     }
-    Ok(())
+    queue.close();
+}
+
+/// Engine worker: build the engine, then pull batches (warm-class first)
+/// until the queue closes. Execute failures shed the batch and are counted,
+/// not fatal — one bad batch must not take the pool down.
+fn worker_loop(
+    ctx: &WorkerCtx,
+    make_engine: &(dyn Fn(&WorkerCtx) -> Result<Engine> + Send + Sync),
+    queue: Arc<WorkQueue>,
+    resp_tx: Sender<Response>,
+    pooled: Arc<ServerMetrics>,
+    own: Arc<ServerMetrics>,
+    inflight: Arc<AtomicUsize>,
+) -> Result<()> {
+    let mut engine = make_engine(ctx)?;
+    let mut warm: Option<BatchClass> = None;
+    let mut first_err: Option<Error> = None;
+    while let Some(batch) = queue.pop(warm) {
+        warm = Some(batch.class);
+        let n = batch.requests.len();
+        let lens: Vec<usize> = batch.requests.iter().map(|r| r.len).collect();
+        pooled.record_batch(batch.class, n);
+        own.record_batch(batch.class, n);
+        match engine.execute(batch) {
+            Ok(responses) => {
+                for (mut resp, len) in responses.into_iter().zip(lens) {
+                    resp.worker = ctx.worker;
+                    pooled.record_response(&resp, len);
+                    own.record_response(&resp, len);
+                    inflight.fetch_sub(1, Ordering::AcqRel);
+                    // A dropped receiver is a client gone — not a pool error.
+                    let _ = resp_tx.send(resp);
+                }
+            }
+            Err(e) => {
+                pooled.record_execute_error();
+                own.record_execute_error();
+                inflight.fetch_sub(n, Ordering::AcqRel);
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
 }

@@ -1,0 +1,158 @@
+//! Process-wide simulation cache shared by all pool workers.
+//!
+//! Chip passes are deterministic per `(BatchClass, padded-seq)`, so the
+//! cycle-level simulation only ever needs to run once per key no matter how
+//! many engine workers serve traffic. The cache computes misses *under the
+//! write lock*, which guarantees exactly-once simulation even when several
+//! workers race on a cold key — the simulation is microseconds-cheap next
+//! to a duplicated run, and cold keys are rare (≤ 3 classes × slot widths).
+
+use crate::sim::BatchClass;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// One simulated chip pass (the per-batch quantities the engine attaches to
+/// every response it serves from that pass).
+#[derive(Debug, Clone, Copy)]
+pub struct CachedPass {
+    pub chip_us: f64,
+    pub chip_uj: f64,
+    pub ema_bytes: u64,
+    pub utilization: f64,
+}
+
+/// Hit/miss counters snapshot.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Thread-safe `(BatchClass, seq) → CachedPass` map with exactly-once
+/// compute semantics and hit/miss accounting.
+#[derive(Debug, Default)]
+pub struct SimCache {
+    map: RwLock<HashMap<(BatchClass, usize), CachedPass>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SimCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Return the cached pass for `(class, seq)`, simulating it with
+    /// `simulate` exactly once across all threads if absent.
+    pub fn get_or_simulate(
+        &self,
+        class: BatchClass,
+        seq: usize,
+        simulate: impl FnOnce() -> CachedPass,
+    ) -> CachedPass {
+        let key = (class, seq);
+        if let Some(pass) = self.map.read().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *pass;
+        }
+        let mut map = self.map.write().unwrap();
+        // Re-check: another worker may have filled the key while we waited
+        // for the write lock.
+        if let Some(pass) = map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *pass;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let pass = simulate();
+        map.insert(key, pass);
+        pass
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.map.read().unwrap().len(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn pass(v: f64) -> CachedPass {
+        CachedPass { chip_us: v, chip_uj: v, ema_bytes: v as u64, utilization: v }
+    }
+
+    #[test]
+    fn computes_once_per_key() {
+        let cache = SimCache::new();
+        let mut computed = 0;
+        for _ in 0..5 {
+            cache.get_or_simulate(BatchClass::B4, 8, || {
+                computed += 1;
+                pass(1.0)
+            });
+        }
+        assert_eq!(computed, 1);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (4, 1, 1));
+        assert!((s.hit_rate() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distinct_keys_are_distinct_entries() {
+        let cache = SimCache::new();
+        cache.get_or_simulate(BatchClass::B4, 8, || pass(1.0));
+        cache.get_or_simulate(BatchClass::B2, 8, || pass(2.0));
+        cache.get_or_simulate(BatchClass::B4, 16, || pass(3.0));
+        assert_eq!(cache.len(), 3);
+        let got = cache.get_or_simulate(BatchClass::B2, 8, || unreachable!());
+        assert_eq!(got.chip_us, 2.0);
+    }
+
+    #[test]
+    fn concurrent_cold_key_simulates_exactly_once() {
+        let cache = Arc::new(SimCache::new());
+        let calls = Arc::new(AtomicU64::new(0));
+        let mut threads = Vec::new();
+        for _ in 0..8 {
+            let cache = Arc::clone(&cache);
+            let calls = Arc::clone(&calls);
+            threads.push(std::thread::spawn(move || {
+                cache.get_or_simulate(BatchClass::B1, 32, || {
+                    calls.fetch_add(1, Ordering::SeqCst);
+                    pass(7.0)
+                })
+            }));
+        }
+        for t in threads {
+            assert_eq!(t.join().unwrap().chip_us, 7.0);
+        }
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        assert_eq!(cache.stats().misses, 1);
+    }
+}

@@ -15,6 +15,9 @@ pub struct TraceGenerator {
     next_id: u64,
     /// Fixed-length workloads (ViT) always emit `max_len`.
     fixed: bool,
+    /// Sample lengths uniformly over each batch class in turn (equal
+    /// B1/B2/B4 traffic) instead of the workload distribution.
+    class_mix: bool,
 }
 
 impl TraceGenerator {
@@ -23,12 +26,29 @@ impl TraceGenerator {
         let fixed = m.mean_input_len >= m.max_seq as f64;
         // Scale the workload's mean length into the artifact's token plane.
         let mean_len = m.mean_input_len / m.max_seq as f64 * max_len as f64;
-        TraceGenerator { rng: Rng::new(seed), mean_len, max_len, d_model, next_id: 0, fixed }
+        TraceGenerator {
+            rng: Rng::new(seed),
+            mean_len,
+            max_len,
+            d_model,
+            next_id: 0,
+            fixed,
+            class_mix: false,
+        }
     }
 
     /// Uniform-random payload request with workload-distributed length.
     pub fn next(&mut self) -> Request {
-        let len = if self.fixed {
+        let len = if self.class_mix {
+            // Pick a class uniformly, then a length uniform within it:
+            // B4 ∈ [1, max/4], B2 ∈ (max/4, max/2], B1 ∈ (max/2, max].
+            let quarter = (self.max_len / 4).max(1);
+            match self.rng.below(3) {
+                0 => self.rng.range(1, quarter),
+                1 => self.rng.range(quarter + 1, (self.max_len / 2).max(quarter + 1)),
+                _ => self.rng.range(self.max_len / 2 + 1, self.max_len),
+            }
+        } else if self.fixed {
             self.max_len
         } else {
             self.rng.seq_len(self.mean_len, self.max_len)
@@ -43,6 +63,20 @@ impl TraceGenerator {
 
     pub fn take(&mut self, n: usize) -> Vec<Request> {
         (0..n).map(|_| self.next()).collect()
+    }
+
+    /// Generator that offers the three batch classes in equal proportion —
+    /// the mixed B1/B2/B4 load the pool benches and tests drive.
+    pub fn mixed(max_seq: usize, d_model: usize, seed: u64) -> Self {
+        TraceGenerator {
+            rng: Rng::new(seed),
+            mean_len: 0.0,
+            max_len: max_seq,
+            d_model,
+            next_id: 0,
+            fixed: false,
+            class_mix: true,
+        }
     }
 }
 
@@ -66,6 +100,25 @@ mod tests {
         let m = ModelConfig::vit_base();
         let mut g = TraceGenerator::for_model(&m, 32, 64, 7);
         assert!(g.take(50).iter().all(|r| r.len == 32));
+    }
+
+    #[test]
+    fn mixed_trace_covers_all_classes() {
+        use crate::sim::{batch_class, BatchClass};
+        let mut g = TraceGenerator::mixed(32, 64, 11);
+        let reqs = g.take(300);
+        let mut per_class = [0usize; 3];
+        for r in &reqs {
+            assert!((1..=32).contains(&r.len));
+            assert_eq!(r.payload.len(), r.len * 64);
+            match batch_class(r.len, 32).unwrap() {
+                BatchClass::B1 => per_class[0] += 1,
+                BatchClass::B2 => per_class[1] += 1,
+                BatchClass::B4 => per_class[2] += 1,
+            }
+        }
+        // Equal-probability mix: each class sees a healthy share of 300.
+        assert!(per_class.iter().all(|&n| n > 50), "per_class {per_class:?}");
     }
 
     #[test]

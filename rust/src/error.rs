@@ -1,31 +1,55 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled Display/Error impls — the crate
+//! builds with zero external dependencies so the tier-1 gate runs offline).
 
 /// Unified error type for the T-REX stack.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// JSON syntax or type mismatch while reading a config / manifest.
-    #[error("json error: {0}")]
     Json(String),
     /// Configuration value out of the range the hardware supports.
-    #[error("config error: {0}")]
     Config(String),
     /// Codec violation (bit-width overflow, bad stream, invariant break).
-    #[error("codec error: {0}")]
     Codec(String),
     /// Shape mismatch in matrix / model plumbing.
-    #[error("shape error: {0}")]
     Shape(String),
     /// Simulator programming error (bad op, resource oversubscription).
-    #[error("sim error: {0}")]
     Sim(String),
-    /// Serving-plane error (queue closed, engine dead, bad request).
-    #[error("serve error: {0}")]
+    /// Serving-plane error (queue closed, engine dead, bad request,
+    /// admission rejected under backpressure).
     Serve(String),
     /// PJRT / artifact-loading error.
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Codec(m) => write!(f, "codec error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Sim(m) => write!(f, "sim error: {m}"),
+            Error::Serve(m) => write!(f, "serve error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {

@@ -2,23 +2,30 @@
 //!
 //! Subcommands (hand-rolled parsing; clap is not vendored offline):
 //!   trex sim   --model <preset> [--seq N] [--batch N] [--vdd V] [--no-trf]
-//!   trex serve --requests N [--artifacts DIR] [--perf-model <preset>]
+//!   trex serve --requests N [--workers N] [--queue-depth N] [--max-inflight N]
+//!              [--no-affinity] [--artifacts DIR] [--perf-model <preset>]
 //!   trex report --model <preset>         # compression report (Fig 23.1.3)
 //!   trex selftest [--artifacts DIR]      # PJRT vs jax check vectors
 //!   trex workloads                       # list presets
 
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
 use std::time::Duration;
 use trex::config::{HwConfig, ModelConfig, WORKLOADS};
-use trex::coordinator::{BatcherConfig, Engine, EngineConfig, Server, TraceGenerator};
+use trex::coordinator::{
+    default_workers, BatcherConfig, Engine, EngineConfig, PoolConfig, Server, TraceGenerator,
+};
 use trex::model::build_program;
 use trex::runtime::{artifacts, ArtifactSet, PjrtRuntime};
 use trex::sim::{batch_class, simulate, SimOptions};
+
+type CliResult = Result<(), Box<dyn std::error::Error>>;
 
 fn arg_value(args: &[String], key: &str) -> Option<String> {
     args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> CliResult {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
@@ -46,7 +53,8 @@ fn main() -> anyhow::Result<()> {
             eprintln!(
                 "usage: trex <sim|serve|report|selftest|workloads> [options]\n\
                  \n  sim      --model <preset> [--seq N] [--batch 1|2|4] [--vdd V] [--no-trf] [--no-prefetch]\
-                 \n  serve    --requests N [--artifacts DIR] [--perf-model <preset>]\
+                 \n  serve    --requests N [--workers N] [--queue-depth N] [--max-inflight N]\
+                 \n           [--no-affinity] [--artifacts DIR] [--perf-model <preset>]\
                  \n  report   --model <preset>\
                  \n  selftest [--artifacts DIR]"
             );
@@ -55,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
-fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
+fn cmd_sim(args: &[String]) -> CliResult {
     let hw = HwConfig::default();
     let name = arg_value(args, "--model").unwrap_or_else(|| "bert-large".to_string());
     let m = ModelConfig::preset(&name)?;
@@ -83,35 +91,91 @@ fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+fn cmd_serve(args: &[String]) -> CliResult {
     let n: usize = arg_value(args, "--requests").map(|s| s.parse()).transpose()?.unwrap_or(100);
+    let workers: usize = arg_value(args, "--workers")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or_else(default_workers);
+    let queue_depth: usize =
+        arg_value(args, "--queue-depth").map(|s| s.parse()).transpose()?.unwrap_or(256);
+    let max_inflight: usize =
+        arg_value(args, "--max-inflight").map(|s| s.parse()).transpose()?.unwrap_or(4096);
+    let affinity = !args.iter().any(|a| a == "--no-affinity");
     let dir = arg_value(args, "--artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(artifacts::default_dir);
     let perf_name = arg_value(args, "--perf-model").unwrap_or_else(|| "bert-large".to_string());
     let perf_model = ModelConfig::preset(&perf_name)?;
 
-    let manifest = trex::util::json::Json::from_file(dir.join("manifest.json"))
-        .map_err(|e| anyhow::anyhow!("{e} — run `make artifacts`"))?;
-    let d_model = manifest.get("model")?.get("d_model")?.as_usize()?;
-    let max_seq = manifest.get("model")?.get("max_seq")?.as_usize()?;
+    // Geometry from the AOT manifest when it exists (PJRT numerics), else
+    // the dependency-free deterministic reference backend on the tiny plane.
+    let manifest = trex::util::json::Json::from_file(dir.join("manifest.json")).ok();
+    let use_pjrt = manifest.is_some() && cfg!(feature = "pjrt");
+    let (d_model, max_seq) = match &manifest {
+        Some(m) => (
+            m.get("model")?.get("d_model")?.as_usize()?,
+            m.get("model")?.get("max_seq")?.as_usize()?,
+        ),
+        None => (artifacts::TINY_D_MODEL, artifacts::TINY_MAX_SEQ),
+    };
+    println!(
+        "serving with {workers} workers over the {} backend (plane {max_seq}×{d_model})",
+        if use_pjrt { "PJRT" } else { "reference" }
+    );
 
     let hw = HwConfig::default();
     let dir2 = dir.clone();
     let pm = perf_model.clone();
-    let handle = Server::start(
-        move || {
-            let rt = PjrtRuntime::cpu()?;
-            let set = ArtifactSet::load(&rt, &dir2)?;
-            Engine::new(set, EngineConfig { hw, perf_model: pm, self_test: true })
+    let pool = PoolConfig {
+        workers,
+        queue_depth,
+        max_inflight,
+        affinity,
+        batcher: BatcherConfig { max_seq, max_wait: Duration::from_millis(2) },
+    };
+    let handle = Server::start_pool(
+        move |ctx| {
+            let set = if use_pjrt {
+                let rt = PjrtRuntime::cpu()?;
+                ArtifactSet::load(&rt, &dir2)?
+            } else {
+                ArtifactSet::reference(artifacts::TINY_MODEL, d_model, max_seq)?
+            };
+            Engine::with_cache(
+                set,
+                EngineConfig {
+                    hw: hw.clone(),
+                    perf_model: pm.clone(),
+                    self_test: ctx.worker == 0,
+                },
+                Arc::clone(&ctx.sim_cache),
+            )
         },
-        BatcherConfig { max_seq, max_wait: Duration::from_millis(2) },
+        pool,
     );
+
     let mut gen = TraceGenerator::for_model(&perf_model, max_seq, d_model, 1);
+    let mut got = 0usize;
     for _ in 0..n {
-        handle.submit(gen.next())?;
+        let mut req = gen.next();
+        // Backpressure-aware client: on rejection, drain a response, retry.
+        // A disconnected response channel means every worker died — bail
+        // instead of spinning on a dead pool.
+        loop {
+            match handle.try_submit(req) {
+                Ok(()) => break,
+                Err((r, e)) => {
+                    req = r;
+                    match handle.responses.recv_timeout(Duration::from_millis(50)) {
+                        Ok(_) => got += 1,
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => return Err(e.into()),
+                    }
+                }
+            }
+        }
     }
-    let mut got = 0;
     while got < n {
         handle.responses.recv_timeout(Duration::from_secs(30))?;
         got += 1;
@@ -121,7 +185,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_report(args: &[String]) -> anyhow::Result<()> {
+fn cmd_report(args: &[String]) -> CliResult {
     let name = arg_value(args, "--model").unwrap_or_else(|| "bert-large".to_string());
     let m = ModelConfig::preset(&name)?;
     let r = trex::compress::CompressionReport::analytic(&m);
@@ -129,10 +193,20 @@ fn cmd_report(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_selftest(args: &[String]) -> anyhow::Result<()> {
+fn cmd_selftest(args: &[String]) -> CliResult {
     let dir = arg_value(args, "--artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(artifacts::default_dir);
+    if !dir.join("manifest.json").exists() {
+        let set = ArtifactSet::reference_tiny()?;
+        set.self_test()?;
+        println!(
+            "no artifacts at {} — reference backend self-test OK ({} classes)",
+            dir.display(),
+            set.entries.len()
+        );
+        return Ok(());
+    }
     let rt = PjrtRuntime::cpu()?;
     let set = ArtifactSet::load(&rt, &dir)?;
     set.self_test()?;

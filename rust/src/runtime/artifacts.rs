@@ -1,4 +1,13 @@
 //! Artifact manifest loader + self-test against the AOT check vectors.
+//!
+//! Two ways to build an [`ArtifactSet`]:
+//!
+//! * [`ArtifactSet::load`] — compile the AOT HLO artifacts from a
+//!   `manifest.json` directory (requires the `pjrt` feature and
+//!   `make artifacts`).
+//! * [`ArtifactSet::reference`] — synthesize the three batch-class entries
+//!   over the deterministic reference executable. Zero dependencies, no
+//!   artifacts on disk; this is what CI and the pool benches/tests use.
 
 use crate::error::{Error, Result};
 use crate::runtime::client::{Executable, PjrtRuntime};
@@ -14,6 +23,7 @@ pub struct ArtifactEntry {
     pub seq: usize,
     pub tokens: usize,
     pub d_model: usize,
+    /// Empty for reference entries (no AOT check vector on disk).
     pub check_vector: PathBuf,
     pub input_elems: usize,
     pub output_elems: usize,
@@ -30,6 +40,13 @@ impl ArtifactEntry {
         }
     }
 }
+
+/// Geometry of the default reference/AOT proxy model (`aot.py`'s `tiny`):
+/// one 32-token plane, 64-wide embeddings. Single source of truth for every
+/// binary that falls back to the reference backend.
+pub const TINY_MODEL: &str = "tiny";
+pub const TINY_D_MODEL: usize = 64;
+pub const TINY_MAX_SEQ: usize = 32;
 
 /// All compiled artifacts for a model, keyed by batch class.
 pub struct ArtifactSet {
@@ -72,6 +89,46 @@ impl ArtifactSet {
         Ok(ArtifactSet { model_name, d_model, max_seq, entries, dir: dir.to_path_buf() })
     }
 
+    /// Reference set on the default tiny-plane geometry.
+    pub fn reference_tiny() -> Result<Self> {
+        Self::reference(TINY_MODEL, TINY_D_MODEL, TINY_MAX_SEQ)
+    }
+
+    /// Build the three batch-class entries over the deterministic reference
+    /// executable — one `max_seq`-token plane split into 1/2/4 slots, the
+    /// same geometry `aot.py` emits for the AOT artifacts.
+    pub fn reference(model_name: &str, d_model: usize, max_seq: usize) -> Result<Self> {
+        if d_model == 0 || max_seq % 4 != 0 {
+            return Err(Error::runtime(format!(
+                "reference artifacts need d_model > 0 and max_seq divisible by 4, \
+                 got d_model={d_model} max_seq={max_seq}"
+            )));
+        }
+        let mut entries = BTreeMap::new();
+        for class in BatchClass::ALL {
+            let batch = class.batch();
+            let entry = ArtifactEntry {
+                name: format!("{model_name}_ref_b{batch}"),
+                batch,
+                seq: max_seq / batch,
+                tokens: max_seq,
+                d_model,
+                check_vector: PathBuf::new(),
+                input_elems: max_seq * d_model,
+                output_elems: max_seq * d_model,
+                exe: Executable::reference(model_name, d_model),
+            };
+            entries.insert(class, entry);
+        }
+        Ok(ArtifactSet {
+            model_name: model_name.to_string(),
+            d_model,
+            max_seq,
+            entries,
+            dir: PathBuf::new(),
+        })
+    }
+
     pub fn get(&self, class: BatchClass) -> Result<&ArtifactEntry> {
         self.entries
             .get(&class)
@@ -80,9 +137,22 @@ impl ArtifactSet {
 
     /// Execute every artifact on its AOT check vector and compare against
     /// the jax-computed output — proves PJRT-side numerics match the
-    /// compile-side numerics bit-for-bit-ish (f32 tolerance).
+    /// compile-side numerics bit-for-bit-ish (f32 tolerance). Reference
+    /// entries (no check vector) get a shape + padding-invariant check.
     pub fn self_test(&self) -> Result<()> {
         for (class, e) in &self.entries {
+            if e.check_vector.as_os_str().is_empty() {
+                let zeros = vec![0.0f32; e.input_elems];
+                let out = e.exe.run_f32(&zeros, e.tokens, e.d_model)?;
+                if out.len() != e.output_elems || out.iter().any(|v| *v != 0.0) {
+                    return Err(Error::runtime(format!(
+                        "{}: reference self-test failed (class {})",
+                        e.name,
+                        class.name()
+                    )));
+                }
+                continue;
+            }
             let blob = std::fs::read(&e.check_vector)?;
             let need = 4 * (e.input_elems + e.output_elems);
             if blob.len() != need {
@@ -121,7 +191,6 @@ impl ArtifactSet {
                     class.name()
                 )));
             }
-            log::info!("self-test {}: max err {max_err:.2e}", e.name);
         }
         Ok(())
     }
@@ -132,4 +201,26 @@ pub fn default_dir() -> PathBuf {
     std::env::var_os("TREX_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_set_has_all_classes_and_passes_self_test() {
+        let set = ArtifactSet::reference("tiny", 64, 32).unwrap();
+        assert_eq!(set.entries.len(), 3);
+        let b4 = set.get(BatchClass::B4).unwrap();
+        assert_eq!((b4.batch, b4.seq, b4.tokens), (4, 8, 32));
+        let b1 = set.get(BatchClass::B1).unwrap();
+        assert_eq!((b1.batch, b1.seq, b1.tokens), (1, 32, 32));
+        set.self_test().unwrap();
+    }
+
+    #[test]
+    fn reference_set_rejects_bad_geometry() {
+        assert!(ArtifactSet::reference("tiny", 0, 32).is_err());
+        assert!(ArtifactSet::reference("tiny", 64, 30).is_err());
+    }
 }

@@ -1,28 +1,56 @@
-//! Thin typed wrapper over the `xla` crate's PJRT CPU client.
+//! Execution backends for the serving plane.
 //!
-//! Interchange is HLO **text**: jax ≥ 0.5 emits serialized protos with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md and `python/compile/aot.py`).
+//! Two backends sit behind one [`Executable`] type:
+//!
+//! * **PJRT** (feature `pjrt`): a thin typed wrapper over the `xla` crate's
+//!   PJRT CPU client. Interchange is HLO **text**: jax ≥ 0.5 emits
+//!   serialized protos with 64-bit instruction ids that xla_extension 0.5.1
+//!   rejects; the text parser reassigns ids (see `python/compile/aot.py`).
+//! * **Reference** (always available, zero dependencies): a deterministic
+//!   row-wise projection + GELU. Each token row is transformed
+//!   independently, so a request's numerics are identical regardless of
+//!   batch composition, slot position, or which pool worker served it —
+//!   exactly the invariant the multi-worker coordinator tests rely on.
 
 use crate::error::{Error, Result};
+use crate::util::rng::Rng;
 
 /// A PJRT client (CPU). One per process; executables borrow it.
 pub struct PjrtRuntime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
 }
 
 impl PjrtRuntime {
+    #[cfg(feature = "pjrt")]
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu()
             .map_err(|e| Error::runtime(format!("PjRtClient::cpu: {e}")))?;
         Ok(PjrtRuntime { client })
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn cpu() -> Result<Self> {
+        Err(Error::runtime(
+            "trex was built without the `pjrt` feature; use ArtifactSet::reference \
+             or rebuild with --features pjrt (requires the xla crate, see README.md)"
+                .to_string(),
+        ))
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "pjrt")]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            "none".to_string()
+        }
     }
 
     /// Load an HLO-text file and compile it.
+    #[cfg(feature = "pjrt")]
     pub fn compile_hlo_file(&self, path: &std::path::Path) -> Result<Executable> {
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().ok_or_else(|| Error::runtime("non-utf8 path".to_string()))?,
@@ -33,17 +61,36 @@ impl PjrtRuntime {
             .client
             .compile(&comp)
             .map_err(|e| Error::runtime(format!("compile {}: {e}", path.display())))?;
-        Ok(Executable { exe })
+        Ok(Executable { inner: Inner::Pjrt(exe) })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn compile_hlo_file(&self, path: &std::path::Path) -> Result<Executable> {
+        Err(Error::runtime(format!(
+            "cannot compile {}: built without the `pjrt` feature",
+            path.display()
+        )))
     }
 }
 
 /// A compiled executable taking one f32 tensor and returning one f32 tensor
 /// (the model artifacts' calling convention: activations in → out).
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
+    inner: Inner,
+}
+
+enum Inner {
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtLoadedExecutable),
+    Reference(RefModel),
 }
 
 impl Executable {
+    /// Deterministic reference executable for a `d_model`-wide plane.
+    pub fn reference(model_name: &str, d_model: usize) -> Executable {
+        Executable { inner: Inner::Reference(RefModel::new(model_name, d_model)) }
+    }
+
     /// Execute on a `(rows, cols)` f32 input; returns the flat f32 output.
     pub fn run_f32(&self, input: &[f32], rows: usize, cols: usize) -> Result<Vec<f32>> {
         if input.len() != rows * cols {
@@ -52,21 +99,121 @@ impl Executable {
                 input.len()
             )));
         }
-        let lit = xla::Literal::vec1(input)
-            .reshape(&[rows as i64, cols as i64])
-            .map_err(|e| Error::runtime(format!("reshape: {e}")))?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&[lit])
-            .map_err(|e| Error::runtime(format!("execute: {e}")))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::runtime(format!("to_literal: {e}")))?;
-        // aot.py lowers with return_tuple=True ⇒ unwrap the 1-tuple.
-        let out = out
-            .to_tuple1()
-            .map_err(|e| Error::runtime(format!("to_tuple1: {e}")))?;
-        out.to_vec::<f32>()
-            .map_err(|e| Error::runtime(format!("to_vec: {e}")))
+        match &self.inner {
+            #[cfg(feature = "pjrt")]
+            Inner::Pjrt(exe) => {
+                let lit = xla::Literal::vec1(input)
+                    .reshape(&[rows as i64, cols as i64])
+                    .map_err(|e| Error::runtime(format!("reshape: {e}")))?;
+                let result = exe
+                    .execute::<xla::Literal>(&[lit])
+                    .map_err(|e| Error::runtime(format!("execute: {e}")))?;
+                let out = result[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| Error::runtime(format!("to_literal: {e}")))?;
+                // aot.py lowers with return_tuple=True ⇒ unwrap the 1-tuple.
+                let out = out
+                    .to_tuple1()
+                    .map_err(|e| Error::runtime(format!("to_tuple1: {e}")))?;
+                out.to_vec::<f32>()
+                    .map_err(|e| Error::runtime(format!("to_vec: {e}")))
+            }
+            Inner::Reference(m) => m.run(input, rows, cols),
+        }
+    }
+}
+
+/// Pure-Rust fallback numerics: `y = gelu(x · W)` applied row-by-row with a
+/// seeded `d×d` projection. No bias term, so zero padding rows map to zero.
+struct RefModel {
+    d: usize,
+    w: Vec<f32>,
+}
+
+impl RefModel {
+    fn new(model_name: &str, d: usize) -> Self {
+        // Seed from the model name so distinct models get distinct weights
+        // while every process computes the same matrix.
+        let mut seed = 0x7_5EED ^ d as u64;
+        for b in model_name.bytes() {
+            seed = seed.wrapping_mul(0x100000001b3).wrapping_add(b as u64);
+        }
+        let mut rng = Rng::new(seed);
+        let scale = 1.0 / (d as f32).sqrt();
+        let w = (0..d * d).map(|_| rng.normal_f32() * scale).collect();
+        RefModel { d, w }
+    }
+
+    fn run(&self, input: &[f32], rows: usize, cols: usize) -> Result<Vec<f32>> {
+        if cols != self.d {
+            return Err(Error::shape(format!(
+                "reference model is d={} but input has {cols} columns",
+                self.d
+            )));
+        }
+        let d = self.d;
+        let mut out = vec![0.0f32; rows * d];
+        for r in 0..rows {
+            let x = &input[r * d..(r + 1) * d];
+            let y = &mut out[r * d..(r + 1) * d];
+            for (k, &xv) in x.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &self.w[k * d..(k + 1) * d];
+                for (yv, &wv) in y.iter_mut().zip(wrow) {
+                    *yv += xv * wv;
+                }
+            }
+            for yv in y.iter_mut() {
+                *yv = gelu(*yv);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// tanh-approximation GELU (matches the AFU's activation family).
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (0.797_884_6 * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_is_deterministic_and_rowwise() {
+        let d = 16;
+        let exe = Executable::reference("tiny", d);
+        let mut rng = Rng::new(7);
+        let row: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+
+        // Same row alone vs embedded in a larger plane with other rows: the
+        // per-row output must be bit-identical (batching independence).
+        let solo = exe.run_f32(&row, 1, d).unwrap();
+        let mut plane = vec![0.0f32; 4 * d];
+        plane[2 * d..3 * d].copy_from_slice(&row);
+        plane[..d].iter_mut().for_each(|v| *v = 1.5);
+        let out = exe.run_f32(&plane, 4, d).unwrap();
+        assert_eq!(&out[2 * d..3 * d], &solo[..]);
+
+        // Zero rows map to zero (padding stays padding).
+        assert!(out[d..2 * d].iter().all(|&v| v == 0.0));
+
+        // A second compile of the same model gives identical numerics.
+        let exe2 = Executable::reference("tiny", d);
+        assert_eq!(exe2.run_f32(&row, 1, d).unwrap(), solo);
+
+        // A different model name gives different weights.
+        let other = Executable::reference("other", d);
+        assert_ne!(other.run_f32(&row, 1, d).unwrap(), solo);
+    }
+
+    #[test]
+    fn reference_rejects_bad_shapes() {
+        let exe = Executable::reference("tiny", 8);
+        assert!(exe.run_f32(&[0.0; 7], 1, 7).is_err());
+        assert!(exe.run_f32(&[0.0; 8], 1, 4).is_err());
     }
 }

@@ -39,6 +39,14 @@ impl BatchClass {
             BatchClass::B4 => "b4",
         }
     }
+    /// Dense index (B1 → 0, B2 → 1, B4 → 2) for per-class arrays.
+    pub fn index(self) -> usize {
+        match self {
+            BatchClass::B1 => 0,
+            BatchClass::B2 => 1,
+            BatchClass::B4 => 2,
+        }
+    }
     pub const ALL: [BatchClass; 3] = [BatchClass::B1, BatchClass::B2, BatchClass::B4];
 }
 

@@ -1,0 +1,195 @@
+//! Worker-pool integration over the deterministic reference backend —
+//! runs everywhere (no AOT artifacts, no PJRT): concurrency, deadline
+//! flushing, backpressure, drain-on-shutdown, and shared-sim-cache
+//! semantics.
+
+use std::sync::Arc;
+use std::time::Duration;
+use trex::config::{HwConfig, ModelConfig};
+use trex::coordinator::{
+    BatcherConfig, Engine, EngineConfig, PoolConfig, Request, Server, ServerHandle,
+    TraceGenerator,
+};
+use trex::runtime::ArtifactSet;
+
+const MAX_SEQ: usize = 32;
+const D: usize = 64;
+
+fn start(pool: PoolConfig) -> ServerHandle {
+    let hw = HwConfig::default();
+    let pm = ModelConfig::tiny();
+    Server::start_pool(
+        move |ctx| {
+            let set = ArtifactSet::reference("tiny", D, MAX_SEQ)?;
+            Engine::with_cache(
+                set,
+                EngineConfig { hw: hw.clone(), perf_model: pm.clone(), self_test: false },
+                Arc::clone(&ctx.sim_cache),
+            )
+        },
+        pool,
+    )
+}
+
+fn pool(workers: usize, max_wait: Duration) -> PoolConfig {
+    PoolConfig {
+        workers,
+        batcher: BatcherConfig { max_seq: MAX_SEQ, max_wait },
+        ..PoolConfig::default()
+    }
+}
+
+#[test]
+fn pool_serves_mixed_load_and_merges_metrics() {
+    let n = 120;
+    let handle = start(pool(4, Duration::from_millis(1)));
+    let mut gen = TraceGenerator::mixed(MAX_SEQ, D, 0xA11);
+    for _ in 0..n {
+        handle.submit(gen.next()).unwrap();
+    }
+    let mut got = 0;
+    while got < n {
+        let r = handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(r.output.iter().all(|v| v.is_finite()));
+        assert!(r.queue_us >= 0.0, "queue time clamps at zero");
+        assert!(r.worker < 4);
+        got += 1;
+    }
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.metrics.completed(), n);
+    // Per-worker metrics partition the pooled view exactly.
+    assert_eq!(report.workers.len(), 4);
+    let sum: u64 = report.workers.iter().map(|w| w.completed()).sum();
+    assert_eq!(sum, n);
+    let j = report.json();
+    assert_eq!(j.get("completed").unwrap().as_f64().unwrap(), n as f64);
+    assert!(j.get("e2e_latency_us_p95").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(j.get("workers").unwrap().as_arr().unwrap().len(), 4);
+}
+
+#[test]
+fn deadline_flush_under_concurrent_submit() {
+    // Three B4-class requests from three threads: never a full batch of 4,
+    // so only the deadline can flush them — while submits keep arriving.
+    let handle = start(pool(2, Duration::from_millis(5)));
+    let mut threads = Vec::new();
+    for i in 0..3u64 {
+        let sub = handle.submitter();
+        threads.push(std::thread::spawn(move || {
+            sub.submit(Request::new(i, 4, vec![0.25; 4 * D])).unwrap();
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    for _ in 0..3 {
+        let r = handle.responses.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(r.output.len(), 4 * D);
+    }
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.metrics.completed(), 3);
+}
+
+#[test]
+fn backpressure_rejects_when_saturated() {
+    // max_inflight = 3 and a batcher that can hold requests for 10 s: the
+    // first three admissions sit in the batcher (B4 needs four mates), so
+    // the fourth submit must be rejected — deterministically.
+    let cfg = PoolConfig {
+        workers: 2,
+        max_inflight: 3,
+        batcher: BatcherConfig { max_seq: MAX_SEQ, max_wait: Duration::from_secs(10) },
+        ..PoolConfig::default()
+    };
+    let handle = start(cfg);
+    for i in 0..3u64 {
+        handle.submit(Request::new(i, 4, vec![0.1; 4 * D])).unwrap();
+    }
+    // Give the ingest thread time to drain the channel into the batcher —
+    // the requests are admitted (inflight) either way.
+    std::thread::sleep(Duration::from_millis(50));
+    assert_eq!(handle.inflight(), 3);
+    let err = handle.submit(Request::new(9, 4, vec![0.1; 4 * D])).unwrap_err();
+    assert!(err.to_string().contains("overloaded"), "got: {err}");
+
+    // try_submit hands the request back for retry.
+    let (req, _) = handle.try_submit(Request::new(10, 4, vec![0.1; 4 * D])).unwrap_err();
+    assert_eq!(req.id, 10);
+
+    // Unservable lengths fail the caller synchronously too — they must
+    // never vanish inside the ingest thread with no response coming.
+    assert!(handle.submit(Request::new(11, 0, vec![])).is_err());
+    assert!(handle.submit(Request::new(12, MAX_SEQ + 1, vec![0.0; (MAX_SEQ + 1) * D])).is_err());
+    assert_eq!(handle.inflight(), 3, "rejected requests are not admitted");
+
+    // Rejections are counted; admitted requests still complete on shutdown.
+    assert_eq!(handle.metrics.rejected(), 4);
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.metrics.completed(), 3);
+}
+
+#[test]
+fn shutdown_drains_all_inflight_batches_across_workers() {
+    // Park requests of every class in the batcher (long deadline, partial
+    // batches) and shut down immediately: the drain must flush them through
+    // the worker pool — nothing admitted is ever dropped.
+    let handle = start(pool(3, Duration::from_secs(10)));
+    let mut id = 0u64;
+    let mut expected = 0u64;
+    for len in [4usize, 20, 30, 10, 4] {
+        // 4→B4, 20→B2, 30→B1, 10→B2, 4→B4: B1 flushes at once, the rest
+        // (two B4, plus one leftover B2 after the pair forms) sit pending.
+        handle.submit(Request::new(id, len, vec![0.5; len * D])).unwrap();
+        id += 1;
+        expected += 1;
+    }
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.metrics.completed(), expected);
+    assert_eq!(report.metrics.rejected(), 0);
+}
+
+#[test]
+fn sim_cache_simulates_each_class_slot_exactly_once() {
+    // 40 same-length requests → 10 full B4 batches (each formed on its 4th
+    // push — the long deadline keeps partial flushes out), all hitting one
+    // (class, slot) key. The shared cache must simulate once and serve 9
+    // hits, no matter how the 4 workers interleave.
+    let n = 40u64;
+    let handle = start(pool(4, Duration::from_secs(60)));
+    for i in 0..n {
+        handle.submit(Request::new(i, 6, vec![0.3; 6 * D])).unwrap();
+    }
+    let mut got = 0;
+    while got < n {
+        handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+        got += 1;
+    }
+    let stats = handle.cache_stats();
+    assert_eq!(stats.entries, 1, "one (class, slot) key");
+    assert_eq!(stats.misses, 1, "simulated exactly once across the pool");
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.cache.hits + report.cache.misses, 10, "one lookup per batch");
+    assert_eq!(report.cache.misses, 1);
+}
+
+#[test]
+fn identical_numerics_any_worker_count() {
+    // The same trace through 1-worker and 4-worker pools must produce
+    // byte-identical per-request outputs (row-wise reference numerics are
+    // independent of batching and worker assignment).
+    let trace: Vec<Request> = TraceGenerator::mixed(MAX_SEQ, D, 0xBEEF).take(60);
+    let run = |workers: usize| -> std::collections::BTreeMap<u64, Vec<f32>> {
+        let handle = start(pool(workers, Duration::from_millis(1)));
+        for r in trace.clone() {
+            handle.submit(r).unwrap();
+        }
+        let mut out = std::collections::BTreeMap::new();
+        for _ in 0..trace.len() {
+            let resp = handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+            out.insert(resp.id, resp.output);
+        }
+        handle.shutdown().unwrap();
+        out
+    };
+    assert_eq!(run(1), run(4));
+}

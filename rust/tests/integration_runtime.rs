@@ -1,6 +1,9 @@
 //! Runtime + coordinator integration over the real AOT artifacts.
 //! Skips politely if `make artifacts` hasn't been run (the manifest is the
-//! stamp). PJRT executables are created inside each test's thread.
+//! stamp) or the crate was built without the `pjrt` feature. PJRT
+//! executables are created inside each test's thread.
+//! (Pool behavior over the always-available reference backend is covered in
+//! `integration_pool.rs`.)
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -11,6 +14,10 @@ use trex::coordinator::{
 use trex::runtime::{ArtifactSet, PjrtRuntime};
 
 fn art_dir() -> Option<PathBuf> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
     let p = PathBuf::from("../artifacts");
     if p.join("manifest.json").exists() {
         Some(p)
@@ -76,6 +83,7 @@ fn engine_executes_batches_and_strips_padding() {
         assert_eq!(r.output.len(), 5 * d, "padding must be stripped");
         assert!(r.output.iter().all(|v| v.is_finite()));
         assert!(r.chip_us > 0.0 && r.chip_uj > 0.0 && r.ema_bytes > 0);
+        assert!(r.queue_us >= 0.0, "queue time is clamped at zero");
     }
     // Distinct inputs ⇒ distinct outputs.
     assert_ne!(responses[0].output, responses[1].output);
@@ -87,10 +95,17 @@ fn server_end_to_end_trace() {
     let hw = HwConfig::default();
     let perf = ModelConfig::bert_large();
     let handle = Server::start(
-        move || {
+        move |_ctx| {
             let rt = PjrtRuntime::cpu()?;
             let set = ArtifactSet::load(&rt, &dir)?;
-            Engine::new(set, EngineConfig { hw, perf_model: perf, self_test: false })
+            Engine::new(
+                set,
+                EngineConfig {
+                    hw: hw.clone(),
+                    perf_model: perf.clone(),
+                    self_test: false,
+                },
+            )
         },
         BatcherConfig { max_seq: 32, max_wait: Duration::from_millis(1) },
     );
