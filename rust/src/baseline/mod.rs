@@ -69,7 +69,7 @@ pub fn dense_program(m: &ModelConfig, seq: usize) -> Program {
         layer_ops(&mut ops, m.enc_layers + l, true);
     }
     ops.push(Op::store_output(act_bytes(rows * m.d_model)));
-    Program { model: format!("{}-dense", m.name), batch: 1, seq, ops }
+    Program::from_ops(format!("{}-dense", m.name), 1, seq, ops)
 }
 
 #[cfg(test)]

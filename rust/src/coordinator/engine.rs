@@ -1,28 +1,41 @@
-//! Engine: executes formed batches — numerics via the runtime backend,
-//! performance via the cycle-level simulator.
+//! Engine: executes formed batches and decode steps — numerics via the
+//! runtime backend, performance via the cycle-level simulator.
 //!
-//! The engine pads each request to its class's per-input slot, concatenates
-//! the batch on the token axis (the chip's reconfigured 128-token plane),
-//! runs the class's compiled executable, and splits the output back per
-//! request. Per-batch chip latency/energy/EMA come from [`crate::sim`] on
-//! the *served model's* config (the artifact model for numerics can be the
-//! tiny proxy while performance is reported for the paper workload — both
-//! are recorded on the response).
+//! **Prefill** ([`Engine::execute`]): the engine pads each request to its
+//! class's per-input slot, concatenates the batch on the token axis (the
+//! chip's reconfigured 128-token plane), runs the class's compiled
+//! executable, and splits the output back per request. Requests with
+//! `generate > 0` don't complete here: they come back as [`DecodeState`]s
+//! that the pool re-enqueues for token-level continuous batching. Their
+//! decode budget is clamped to the GB's KV-residency cap for the class
+//! ([`GbBudget::max_decode_len`]) — capped, never rejected.
+//!
+//! **Decode** ([`Engine::execute_decode`]): one autoregressive step for a
+//! group of up to [`MAX_DECODE_GROUP`] streams, which may sit at *different*
+//! KV depths (the group is whatever the queue held between steps). Each
+//! stream emits one [`TokenEvent`]; exhausted streams fold into their final
+//! [`Response`]. The step is simulated once per `(group size, max KV depth)`
+//! through the shared [`SimCache`] and its weight-streaming EMA is split
+//! across the group — the decode-side amortization the paper's batching
+//! argument predicts.
 //!
 //! In the worker pool each worker owns its own `Engine` (executables are
-//! not `Send`), but all engines share one [`SimCache`] so every
-//! `(class, seq)` pass is simulated exactly once process-wide.
+//! not `Send`), but all engines share one [`SimCache`] so every pass is
+//! simulated exactly once process-wide.
 
 use crate::config::{HwConfig, ModelConfig};
 use crate::coordinator::batcher::FormedBatch;
-use crate::coordinator::request::Response;
-use crate::coordinator::sim_cache::{CachedPass, SimCache};
+use crate::coordinator::request::{RequestId, Response, TokenEvent};
+use crate::coordinator::sim_cache::{CachedPass, PassKey, SimCache};
 use crate::error::{Error, Result};
-use crate::model::build_program;
+use crate::model::{build_decode_step, build_program};
 use crate::runtime::ArtifactSet;
-use crate::sim::{simulate, BatchClass, SimOptions};
+use crate::sim::{simulate, BatchClass, GbBudget, SimOptions};
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Most streams one decode step batches (the chip's four-up plane slicing).
+pub const MAX_DECODE_GROUP: usize = 4;
 
 /// Engine configuration.
 pub struct EngineConfig {
@@ -33,12 +46,86 @@ pub struct EngineConfig {
     pub self_test: bool,
 }
 
+/// A generate request's in-flight decode stream between steps. Created by
+/// [`Engine::execute`] after prefill, advanced one token per
+/// [`Engine::execute_decode`], folded into a final [`Response`] when
+/// `remaining` hits zero.
+#[derive(Debug)]
+pub struct DecodeState {
+    pub id: RequestId,
+    /// Class the request prefilled in (metrics attribution + cap basis).
+    pub class: BatchClass,
+    pub prefill_len: usize,
+    /// Current KV depth: prefill length + tokens generated so far.
+    pub past_len: usize,
+    /// Tokens still to generate (> 0; already clamped to the residency cap).
+    pub remaining: usize,
+    pub generated: usize,
+    pub arrival: Instant,
+    /// Current token embedding (`d_model` wide) — next step's input row.
+    last: Vec<f32>,
+    /// Prefill output, held for the final response.
+    output: Vec<f32>,
+    queue_us: f64,
+    utilization: f64,
+    chip_us: f64,
+    chip_uj: f64,
+    ema_bytes: u64,
+}
+
+impl DecodeState {
+    fn into_response(self) -> Response {
+        // The decode phase's wall time (between-steps queue residency plus
+        // per-step host time) counts toward end-to-end latency: the host
+        // side is "everything since arrival that wasn't prefill queueing",
+        // so the documented `queue_us + host_latency_us` e2e invariant
+        // holds for generate requests too. (The difference is non-negative:
+        // Instant is monotonic and queue_us was measured at prefill start.)
+        let e2e_us = self.arrival.elapsed().as_nanos() as f64 / 1e3;
+        let host_latency_us = e2e_us - self.queue_us;
+        Response {
+            id: self.id,
+            output: self.output,
+            host_latency_us,
+            queue_us: self.queue_us,
+            chip_us: self.chip_us,
+            chip_uj: self.chip_uj,
+            ema_bytes: self.ema_bytes,
+            class: self.class,
+            utilization: self.utilization,
+            prefill_len: self.prefill_len,
+            tokens_generated: self.generated,
+            worker: 0,
+        }
+    }
+}
+
+/// What one prefill batch produced: finished responses plus streams that
+/// continue into the decode loop.
+#[derive(Default)]
+pub struct ExecOutcome {
+    pub responses: Vec<Response>,
+    pub decoding: Vec<DecodeState>,
+}
+
+/// What one decode step produced: one token per participating stream,
+/// streams still decoding, and final responses for exhausted streams.
+#[derive(Default)]
+pub struct DecodeOutcome {
+    pub tokens: Vec<TokenEvent>,
+    pub active: Vec<DecodeState>,
+    pub responses: Vec<Response>,
+}
+
 /// Executes batches. Owns the compiled artifacts; the simulation cache is
-/// shared (per (class, padded-seq) — programs are deterministic).
+/// shared (keyed by [`PassKey`] — programs are deterministic).
 pub struct Engine {
     artifacts: ArtifactSet,
     cfg: EngineConfig,
     sim_cache: Arc<SimCache>,
+    /// Per-class decode-length caps (indexed by `BatchClass::index()`),
+    /// derived from the GB's KV residency at the class's batch width.
+    decode_caps: [usize; 3],
 }
 
 impl Engine {
@@ -57,7 +144,12 @@ impl Engine {
         if cfg.self_test {
             artifacts.self_test()?;
         }
-        Ok(Engine { artifacts, cfg, sim_cache })
+        let mut decode_caps = [0usize; 3];
+        for class in BatchClass::ALL {
+            decode_caps[class.index()] =
+                GbBudget::max_decode_len(&cfg.hw, &cfg.perf_model, class.batch());
+        }
+        Ok(Engine { artifacts, cfg, sim_cache, decode_caps })
     }
 
     pub fn model_name(&self) -> &str {
@@ -73,18 +165,33 @@ impl Engine {
         &self.sim_cache
     }
 
+    /// Admission cap on total KV depth (prefill + generated) for a class:
+    /// the longest prefix the GB keeps resident at the class's batch width.
+    pub fn decode_cap(&self, class: BatchClass) -> usize {
+        self.decode_caps[class.index()]
+    }
+
+    fn sim_options(&self, gb: GbBudget) -> SimOptions {
+        // Double-buffered W_D prefetch is only legal when its second slot
+        // fits the GB alongside the other residents (gb.rs); past that point
+        // the chip streams single-buffered — which is exactly the regime
+        // `max_decode_len`'s single-buffer cap extends into, so simulate the
+        // DMA stalls it actually pays there.
+        SimOptions {
+            act_bits: self.cfg.perf_model.act_bits,
+            prefetch: gb.fits_with_prefetch(),
+            gb: Some(gb),
+            ..SimOptions::paper(&self.cfg.hw)
+        }
+    }
+
     /// Simulate (with shared caching) the chip pass for a batch class at `seq`.
     fn perf(&self, class: BatchClass, seq: usize) -> CachedPass {
-        self.sim_cache.get_or_simulate(class, seq, || {
-            let prog = build_program(&self.cfg.perf_model, seq, class.batch());
-            let stats = simulate(
-                &self.cfg.hw,
-                &prog,
-                &SimOptions {
-                    act_bits: self.cfg.perf_model.act_bits,
-                    ..SimOptions::paper(&self.cfg.hw)
-                },
-            );
+        self.sim_cache.get_or_simulate(PassKey::prefill(class, seq), || {
+            let m = &self.cfg.perf_model;
+            let prog = build_program(m, seq, class.batch());
+            let gb = GbBudget::for_config(&self.cfg.hw, m, seq, class.batch());
+            let stats = simulate(&self.cfg.hw, &prog, &self.sim_options(gb));
             CachedPass {
                 chip_us: stats.seconds() * 1e6,
                 chip_uj: stats.energy.total_uj(),
@@ -94,7 +201,24 @@ impl Engine {
         })
     }
 
-    /// Execute one formed batch end-to-end.
+    /// Simulate (with shared caching) one decode step of a `group`-stream
+    /// batch at KV depth `past_len`.
+    fn decode_perf(&self, group: usize, past_len: usize) -> CachedPass {
+        self.sim_cache.get_or_simulate(PassKey::decode(group, past_len), || {
+            let m = &self.cfg.perf_model;
+            let prog = build_decode_step(m, past_len, group);
+            let gb = GbBudget::for_decode(&self.cfg.hw, m, past_len, group);
+            let stats = simulate(&self.cfg.hw, &prog, &self.sim_options(gb));
+            CachedPass {
+                chip_us: stats.seconds() * 1e6,
+                chip_uj: stats.energy.total_uj(),
+                ema_bytes: stats.ema_bytes(),
+                utilization: stats.utilization(&self.cfg.hw),
+            }
+        })
+    }
+
+    /// Execute one formed prefill batch end-to-end.
     ///
     /// Timing is split explicitly at `t0`, the instant this engine began
     /// serving the batch: `queue_us` is arrival → `t0` (pure waiting:
@@ -102,7 +226,7 @@ impl Engine {
     /// `t0` → response built (plane assembly + executable run + split).
     /// A request that arrived while another batch was executing therefore
     /// accrues that wait in `queue_us` and can never go negative.
-    pub fn execute(&mut self, batch: FormedBatch) -> Result<Vec<Response>> {
+    pub fn execute(&mut self, batch: FormedBatch) -> Result<ExecOutcome> {
         let t0 = Instant::now();
         let entry = self.artifacts.get(batch.class)?;
         let d = entry.d_model;
@@ -142,23 +266,125 @@ impl Engine {
         let per_req_uj = perf.chip_uj / n_req as f64;
         let per_req_ema = perf.ema_bytes / n_req as u64;
         let host_us = t0.elapsed().as_nanos() as f64 / 1e3;
+        let cap = self.decode_cap(class);
 
-        let mut responses = Vec::with_capacity(n_req);
+        let mut outcome = ExecOutcome::default();
         for (i, r) in batch.requests.iter().enumerate() {
             let start = i * slot * d;
-            responses.push(Response {
-                id: r.id,
-                output: out[start..start + r.len * d].to_vec(),
-                host_latency_us: host_us,
-                queue_us: t0.saturating_duration_since(r.arrival).as_nanos() as f64 / 1e3,
-                chip_us: perf.chip_us,
-                chip_uj: per_req_uj,
-                ema_bytes: per_req_ema,
-                class,
-                utilization: perf.utilization,
-                worker: 0,
-            });
+            let output = out[start..start + r.len * d].to_vec();
+            let queue_us = t0.saturating_duration_since(r.arrival).as_nanos() as f64 / 1e3;
+            // Clamp the decode budget so prefill + generated never outgrows
+            // the resident KV prefix — capped, not rejected.
+            let generate = r.generate.min(cap.saturating_sub(r.len));
+            if generate > 0 {
+                // The stream's next input is its last prefill output row.
+                let last = output[(r.len - 1) * d..r.len * d].to_vec();
+                outcome.decoding.push(DecodeState {
+                    id: r.id,
+                    class,
+                    prefill_len: r.len,
+                    past_len: r.len,
+                    remaining: generate,
+                    generated: 0,
+                    arrival: r.arrival,
+                    last,
+                    output,
+                    queue_us,
+                    utilization: perf.utilization,
+                    chip_us: perf.chip_us,
+                    chip_uj: per_req_uj,
+                    ema_bytes: per_req_ema,
+                });
+            } else {
+                outcome.responses.push(Response {
+                    id: r.id,
+                    output,
+                    host_latency_us: host_us,
+                    queue_us,
+                    chip_us: perf.chip_us,
+                    chip_uj: per_req_uj,
+                    ema_bytes: per_req_ema,
+                    class,
+                    utilization: perf.utilization,
+                    prefill_len: r.len,
+                    tokens_generated: 0,
+                    worker: 0,
+                });
+            }
         }
-        Ok(responses)
+        Ok(outcome)
+    }
+
+    /// Execute ONE decode step for a group of streams. Group membership is
+    /// whatever the pool's queue held — streams join and leave between
+    /// steps, and their KV depths may differ (the chip pads to the deepest;
+    /// the simulation is keyed by that max).
+    ///
+    /// Numerics run one `d_model` row per stream through the backend — the
+    /// reference backend accepts any row count; fixed-shape AOT artifacts
+    /// would need dedicated decode executables (ROADMAP).
+    pub fn execute_decode(&mut self, group: Vec<DecodeState>) -> Result<DecodeOutcome> {
+        let n = group.len();
+        if n == 0 {
+            return Ok(DecodeOutcome::default());
+        }
+        if n > MAX_DECODE_GROUP {
+            return Err(Error::serve(format!("decode group of {n} exceeds {MAX_DECODE_GROUP}")));
+        }
+        let d = self.artifacts.d_model;
+        let mut plane = Vec::with_capacity(n * d);
+        for s in &group {
+            if s.last.len() != d {
+                return Err(Error::serve(format!(
+                    "stream {}: token row {} != d_model {d}",
+                    s.id,
+                    s.last.len()
+                )));
+            }
+            plane.extend_from_slice(&s.last);
+        }
+        let group_past_lens: Vec<usize> = group.iter().map(|s| s.past_len).collect();
+        let max_past = *group_past_lens.iter().max().expect("non-empty group");
+        // Any class entry works: the decode plane is row-wise and `n` rows.
+        let out = self.artifacts.get(BatchClass::B4)?.exe.run_f32(&plane, n, d)?;
+        let perf = self.decode_perf(n, max_past);
+        // Two conventions, both deliberate: energy/EMA are *shares* (the
+        // step's cost split across the group, like prefill's per-request
+        // split), while `us_per_token` is the paper's µs/token (step wall
+        // time over n tokens) and `Response.chip_us` accumulates the FULL
+        // step latency — every rider experiences the whole step's wall time.
+        let per_us = perf.chip_us / n as f64;
+        let per_uj = perf.chip_uj / n as f64;
+        let per_ema = perf.ema_bytes / n as u64;
+
+        let mut outcome = DecodeOutcome::default();
+        for (i, mut s) in group.into_iter().enumerate() {
+            let step_past = s.past_len;
+            let index = s.generated;
+            s.last = out[i * d..(i + 1) * d].to_vec();
+            s.past_len += 1;
+            s.generated += 1;
+            s.remaining -= 1;
+            s.chip_us += perf.chip_us;
+            s.chip_uj += per_uj;
+            s.ema_bytes += per_ema;
+            outcome.tokens.push(TokenEvent {
+                id: s.id,
+                index,
+                past_len: step_past,
+                us_per_token: per_us,
+                chip_uj: per_uj,
+                ema_bytes: per_ema,
+                group_past_lens: group_past_lens.clone(),
+                worker: 0,
+                emitted: Instant::now(),
+            });
+            if s.remaining == 0 {
+                outcome.responses.push(s.into_response());
+            } else {
+                outcome.active.push(s);
+            }
+        }
+        Ok(outcome)
     }
 }

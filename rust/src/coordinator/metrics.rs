@@ -15,6 +15,10 @@ struct Inner {
     completed: u64,
     batches: u64,
     tokens: u64,
+    /// Decode steps executed (token-level batches).
+    decode_steps: u64,
+    /// Tokens generated autoregressively across all streams.
+    tokens_decoded: u64,
     /// Requests refused at admission (backpressure / malformed length).
     rejected: u64,
     /// Batches dropped because the engine's execute failed.
@@ -28,6 +32,8 @@ struct Inner {
     per_class: [u64; 3],
     /// Raw end-to-end latencies for percentile reporting.
     latencies: Vec<f64>,
+    /// Raw modeled per-token decode latencies (one sample per token).
+    us_per_token: Vec<f64>,
 }
 
 /// Thread-safe metrics sink shared by engine workers.
@@ -60,6 +66,23 @@ impl ServerMetrics {
         m.latencies.push(r.host_latency_us + r.queue_us);
     }
 
+    /// One generated token (streamed mid-request by a decode step).
+    ///
+    /// Deliberately does NOT add `ev.ema_bytes` (or energy) into the running
+    /// totals: the stream's final [`Response`] accumulates every step's
+    /// share, and `record_response` counts that once — adding it here too
+    /// would double-count decode EMA.
+    pub fn record_token(&self, ev: &crate::coordinator::request::TokenEvent) {
+        let mut m = self.inner.lock().unwrap();
+        m.tokens_decoded += 1;
+        m.us_per_token.push(ev.us_per_token);
+    }
+
+    /// One decode step executed (any group size).
+    pub fn record_decode_step(&self) {
+        self.inner.lock().unwrap().decode_steps += 1;
+    }
+
     /// A request refused at admission (backpressure or bad length).
     pub fn record_rejected(&self) {
         self.inner.lock().unwrap().rejected += 1;
@@ -74,6 +97,10 @@ impl ServerMetrics {
         self.inner.lock().unwrap().completed
     }
 
+    pub fn tokens_decoded(&self) -> u64 {
+        self.inner.lock().unwrap().tokens_decoded
+    }
+
     pub fn rejected(&self) -> u64 {
         self.inner.lock().unwrap().rejected
     }
@@ -86,12 +113,18 @@ impl ServerMetrics {
     pub fn report(&self, wall_seconds: f64) -> Json {
         let m = self.inner.lock().unwrap();
         let thr = if wall_seconds > 0.0 { m.completed as f64 / wall_seconds } else { 0.0 };
-        let tok_thr = if wall_seconds > 0.0 { m.tokens as f64 / wall_seconds } else { 0.0 };
+        // Token throughput covers everything that crossed the server:
+        // prefill tokens AND autoregressively decoded ones.
+        let all_tokens = (m.tokens + m.tokens_decoded) as f64;
+        let tok_thr = if wall_seconds > 0.0 { all_tokens / wall_seconds } else { 0.0 };
         let pct = |p: f64| Json::num(crate::util::stats::percentile(&m.latencies, p));
+        let tok_pct = |p: f64| Json::num(crate::util::stats::percentile(&m.us_per_token, p));
         Json::obj(vec![
             ("completed", Json::num(m.completed as f64)),
             ("batches", Json::num(m.batches as f64)),
             ("tokens", Json::num(m.tokens as f64)),
+            ("decode_steps", Json::num(m.decode_steps as f64)),
+            ("tokens_decoded", Json::num(m.tokens_decoded as f64)),
             ("rejected", Json::num(m.rejected as f64)),
             ("execute_errors", Json::num(m.execute_errors as f64)),
             ("throughput_rps", Json::num(thr)),
@@ -100,8 +133,12 @@ impl ServerMetrics {
             ("e2e_latency_us_p50", pct(50.0)),
             ("e2e_latency_us_p95", pct(95.0)),
             ("e2e_latency_us_p99", pct(99.0)),
+            ("us_per_token_p50", tok_pct(50.0)),
+            ("us_per_token_p95", tok_pct(95.0)),
             ("queue_us_mean", Json::num(m.queue_us.mean())),
-            ("chip_us_per_pass_mean", Json::num(m.chip_us.mean())),
+            // Per *request*: for generate requests this is prefill + every
+            // decode step the request joined, not a single pass.
+            ("chip_us_per_request_mean", Json::num(m.chip_us.mean())),
             ("chip_uj_per_request_mean", Json::num(m.chip_uj.mean())),
             ("utilization_mean", Json::num(m.utilization.mean())),
             ("ema_bytes_total", Json::num(m.ema_bytes as f64)),
@@ -122,26 +159,29 @@ mod tests {
     use super::*;
     use crate::coordinator::request::Response;
 
+    fn resp(id: u64) -> Response {
+        Response {
+            id,
+            output: vec![],
+            host_latency_us: 100.0,
+            queue_us: 50.0,
+            chip_us: 10.0,
+            chip_uj: 1.0,
+            ema_bytes: 1000,
+            class: BatchClass::B4,
+            utilization: 0.5,
+            prefill_len: 8,
+            tokens_generated: 0,
+            worker: 0,
+        }
+    }
+
     #[test]
     fn aggregates() {
         let m = ServerMetrics::new();
         m.record_batch(BatchClass::B4, 4);
         for i in 0..4 {
-            m.record_response(
-                &Response {
-                    id: i,
-                    output: vec![],
-                    host_latency_us: 100.0,
-                    queue_us: 50.0,
-                    chip_us: 10.0,
-                    chip_uj: 1.0,
-                    ema_bytes: 1000,
-                    class: BatchClass::B4,
-                    utilization: 0.5,
-                    worker: 0,
-                },
-                8,
-            );
+            m.record_response(&resp(i), 8);
         }
         m.record_rejected();
         assert_eq!(m.completed(), 4);
@@ -153,9 +193,71 @@ mod tests {
         assert_eq!(j.get("ema_bytes_total").unwrap().as_f64().unwrap(), 4000.0);
         assert_eq!(j.get("e2e_latency_us_p50").unwrap().as_f64().unwrap(), 150.0);
         assert_eq!(j.get("e2e_latency_us_p95").unwrap().as_f64().unwrap(), 150.0);
+        // No decode traffic: token percentiles report zero, not NaN.
+        assert_eq!(j.get("tokens_decoded").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(j.get("us_per_token_p50").unwrap().as_f64().unwrap(), 0.0);
         assert_eq!(
             j.get("requests_per_class").unwrap().get("b4").unwrap().as_f64().unwrap(),
             4.0
         );
+    }
+
+    #[test]
+    fn token_events_feed_us_per_token_percentiles() {
+        use crate::coordinator::request::TokenEvent;
+        use std::time::Instant;
+        let m = ServerMetrics::new();
+        for (i, us) in [100.0, 200.0, 300.0, 400.0, 500.0].iter().enumerate() {
+            m.record_decode_step();
+            m.record_token(&TokenEvent {
+                id: 7,
+                index: i,
+                past_len: 8 + i,
+                us_per_token: *us,
+                chip_uj: 0.5,
+                ema_bytes: 10,
+                group_past_lens: vec![8 + i],
+                worker: 0,
+                emitted: Instant::now(),
+            });
+        }
+        assert_eq!(m.tokens_decoded(), 5);
+        let j = m.report(1.0);
+        assert_eq!(j.get("decode_steps").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(j.get("tokens_decoded").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(j.get("us_per_token_p50").unwrap().as_f64().unwrap(), 300.0);
+        assert!((j.get("us_per_token_p95").unwrap().as_f64().unwrap() - 480.0).abs() < 1e-9);
+        // Token events do NOT touch the EMA total — the final response
+        // carries the accumulated decode shares and is counted exactly once
+        // (no double counting).
+        assert_eq!(j.get("ema_bytes_total").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn decode_ema_counted_exactly_once_across_token_and_response() {
+        use crate::coordinator::request::TokenEvent;
+        use std::time::Instant;
+        let m = ServerMetrics::new();
+        // A generate request: prefill share 1000 + 3 decode steps × 10.
+        for i in 0..3 {
+            m.record_token(&TokenEvent {
+                id: 1,
+                index: i,
+                past_len: 8 + i,
+                us_per_token: 50.0,
+                chip_uj: 0.1,
+                ema_bytes: 10,
+                group_past_lens: vec![8 + i],
+                worker: 0,
+                emitted: Instant::now(),
+            });
+        }
+        let mut r = resp(1);
+        r.ema_bytes = 1000 + 3 * 10; // final response accumulates the shares
+        r.tokens_generated = 3;
+        m.record_response(&r, 8);
+        let j = m.report(1.0);
+        assert_eq!(j.get("ema_bytes_total").unwrap().as_f64().unwrap(), 1030.0);
+        assert_eq!(j.get("tokens_decoded").unwrap().as_f64().unwrap(), 3.0);
     }
 }

@@ -6,7 +6,11 @@
 //! class-affinity work queue, and N [`engine::Engine`] workers execute them
 //! — numerics through the runtime backend, latency/energy/EMA through the
 //! cycle-level simulator via a process-wide shared [`sim_cache::SimCache`].
-//! Admission applies bounded-queue backpressure (reject/shed when
+//! Generate requests continue past prefill as [`engine::DecodeState`]
+//! streams with token-level continuous batching: they re-enter the queue
+//! after every decode step, regrouping with whatever streams are waiting
+//! (mixed KV depths welcome), and stream [`request::TokenEvent`]s back while
+//! in flight. Admission applies bounded-queue backpressure (reject/shed when
 //! saturated). `std::thread` + mpsc channels (tokio is not vendored offline
 //! — DESIGN.md §2).
 
@@ -19,11 +23,13 @@ pub mod sim_cache;
 pub mod trace;
 
 pub use batcher::{BatcherConfig, DynamicBatcher, FormedBatch};
-pub use engine::{Engine, EngineConfig};
+pub use engine::{
+    DecodeOutcome, DecodeState, Engine, EngineConfig, ExecOutcome, MAX_DECODE_GROUP,
+};
 pub use metrics::ServerMetrics;
-pub use request::{Request, RequestId, Response};
+pub use request::{Request, RequestId, Response, TokenEvent};
 pub use server::{
     default_workers, PoolConfig, Server, ServerHandle, ServerReport, Submitter, WorkerCtx,
 };
-pub use sim_cache::{CacheStats, CachedPass, SimCache};
+pub use sim_cache::{CacheStats, CachedPass, PassKey, SimCache};
 pub use trace::TraceGenerator;

@@ -5,7 +5,8 @@ use std::time::Instant;
 
 pub type RequestId = u64;
 
-/// One inference request: a token-embedding matrix of `len` rows.
+/// One inference request: a token-embedding matrix of `len` rows, plus an
+/// optional autoregressive decode budget.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: RequestId,
@@ -13,13 +14,25 @@ pub struct Request {
     pub len: usize,
     /// Row-major `(len, d_model)` activations.
     pub payload: Vec<f32>,
+    /// Tokens to generate autoregressively after the prefill pass
+    /// (0 = encode-only request). The engine clamps this to the GB's KV
+    /// residency cap for the request's class — see
+    /// [`crate::sim::GbBudget::max_decode_len`].
+    pub generate: usize,
     pub arrival: Instant,
 }
 
 impl Request {
     pub fn new(id: RequestId, len: usize, payload: Vec<f32>) -> Self {
-        Request { id, len, payload, arrival: Instant::now() }
+        Request { id, len, payload, generate: 0, arrival: Instant::now() }
     }
+
+    /// Ask for `n` decode tokens after prefill (builder-style).
+    pub fn with_generate(mut self, n: usize) -> Self {
+        self.generate = n;
+        self
+    }
+
     pub fn d_model(&self) -> usize {
         if self.len == 0 {
             0
@@ -29,30 +42,71 @@ impl Request {
     }
 }
 
+/// One decoded token, streamed back while its request is still in flight.
+#[derive(Debug, Clone)]
+pub struct TokenEvent {
+    pub id: RequestId,
+    /// 0-based index of this generated token within its request.
+    pub index: usize,
+    /// KV depth the producing step attended over (prefill len + index).
+    pub past_len: usize,
+    /// Modeled chip µs/token of the producing step: the step's wall time
+    /// divided across the group's tokens (one per stream) — the paper's
+    /// µs/token convention, same amortization as the energy/EMA shares.
+    /// A solo stream pays the full step; a 4-up group a quarter each.
+    pub us_per_token: f64,
+    /// This stream's share of the step's modeled energy, µJ.
+    pub chip_uj: f64,
+    /// This stream's share of the step's EMA bytes (weight streaming split
+    /// across the group — the amortization decode batching buys).
+    pub ema_bytes: u64,
+    /// KV depths of every stream that shared this step — continuous
+    /// batching is observable here: mixed values = mixed-progress streams.
+    pub group_past_lens: Vec<usize>,
+    /// Pool worker that executed the step.
+    pub worker: usize,
+    pub emitted: Instant,
+}
+
 /// Completed inference.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: RequestId,
-    /// `(len, d_model)` output rows (padding stripped).
+    /// `(len, d_model)` output rows (padding stripped). For generate
+    /// requests this is the prefill output; per-token results stream as
+    /// [`TokenEvent`]s while decoding.
     pub output: Vec<f32>,
     /// Wall-clock execute time (host side): plane assembly + executable run
     /// + output split, measured from the instant a worker picked the batch.
+    /// For generate requests this additionally covers the whole decode phase
+    /// (between-steps queue residency + per-step host time), so
+    /// `queue_us + host_latency_us` stays the true end-to-end latency.
     pub host_latency_us: f64,
     /// Pure waiting time: arrival → execution start (batcher residency plus
     /// work-queue residency). Non-negative by construction; end-to-end
     /// latency is `queue_us + host_latency_us`.
     pub queue_us: f64,
-    /// Modeled chip latency for the batch this request rode in.
+    /// Modeled chip wall latency this request *experienced*: the full
+    /// prefill pass it rode in, plus — for generate requests — the full
+    /// wall time of every decode step it joined (a rider occupies the whole
+    /// step regardless of group size; energy/EMA below are shares instead).
     pub chip_us: f64,
     /// Modeled chip energy share for this request, µJ.
     pub chip_uj: f64,
     /// Modeled chip EMA share for this request, bytes.
     pub ema_bytes: u64,
-    /// Batch class the request was served in.
+    /// Batch class the request was prefilled in.
     pub class: BatchClass,
-    /// Modeled MAC-plane utilization of the pass.
+    /// Modeled MAC-plane utilization of the prefill pass.
     pub utilization: f64,
-    /// Pool worker that executed the batch (0 in single-engine setups).
+    /// Input (prefill) length in tokens.
+    pub prefill_len: usize,
+    /// Decode tokens actually generated (≤ requested: the GB residency cap
+    /// clamps, see [`Request::generate`]).
+    pub tokens_generated: usize,
+    /// Pool worker that completed the request: the prefill worker for
+    /// encode-only requests, the final decode step's worker for generate
+    /// requests (0 in single-engine setups).
     pub worker: usize,
 }
 
@@ -66,5 +120,14 @@ mod tests {
         assert_eq!(r.d_model(), 16);
         let z = Request::new(2, 0, vec![]);
         assert_eq!(z.d_model(), 0);
+    }
+
+    #[test]
+    fn generate_defaults_zero_and_builds() {
+        let r = Request::new(1, 4, vec![0.0; 4 * 16]);
+        assert_eq!(r.generate, 0);
+        let g = r.with_generate(12);
+        assert_eq!(g.generate, 12);
+        assert_eq!(g.len, 4);
     }
 }

@@ -11,17 +11,31 @@
 //! the same class — its reconfigured plane and parameters are warm, the
 //! paper's B4 reuse argument — bounded by an aging window so FIFO order and
 //! deadlines are never starved. All engines share one [`SimCache`] so every
-//! `(class, seq)` chip pass is simulated exactly once process-wide.
+//! pass is simulated exactly once process-wide.
+//!
+//! **Token-level continuous batching**: a generate request's prefill turns
+//! it into a [`DecodeState`] that re-enters the shared queue after *every*
+//! decode step. Workers pull decode groups of up to [`MAX_DECODE_GROUP`]
+//! streams — whatever is waiting, at whatever KV depths, bounded by the
+//! narrowest member's class width so the per-class KV-residency cap each
+//! stream was admitted under keeps holding — so streams join and leave
+//! batches between steps and freshly-prefilled requests merge into
+//! in-flight generations. Per-token results stream on a dedicated channel
+//! ([`ServerHandle::tokens`]) while the final response still arrives on
+//! `responses`. A worker with both kinds of work alternates prefill/decode
+//! so neither side starves.
 //!
 //! **Backpressure**: admission rejects (`Error::Serve`) once the in-flight
 //! request count or the work-queue depth crosses the configured bound, so
 //! saturated traffic sheds at the door instead of growing queues without
-//! limit. (std threads + mpsc — tokio is not vendored offline, DESIGN.md §2.)
+//! limit. Generate requests hold their in-flight slot until the final
+//! response. (std threads + mpsc — tokio is not vendored offline,
+//! DESIGN.md §2.)
 
 use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher, FormedBatch};
-use crate::coordinator::engine::Engine;
+use crate::coordinator::engine::{DecodeState, Engine, MAX_DECODE_GROUP};
 use crate::coordinator::metrics::ServerMetrics;
-use crate::coordinator::request::{Request, Response};
+use crate::coordinator::request::{Request, Response, TokenEvent};
 use crate::coordinator::sim_cache::{CacheStats, SimCache};
 use crate::error::{Error, Result};
 use crate::sim::{batch_class, BatchClass};
@@ -36,6 +50,14 @@ use std::time::{Duration, Instant};
 enum Msg {
     Req(Request),
     Shutdown,
+}
+
+/// One unit of worker work.
+enum WorkItem {
+    /// A formed prefill batch from the ingest thread.
+    Prefill(FormedBatch),
+    /// A group of decode streams regrouped from the between-steps pool.
+    Decode(Vec<DecodeState>),
 }
 
 /// A worker may jump the global FIFO for a warm same-class batch only if
@@ -102,17 +124,21 @@ pub struct WorkerCtx {
 struct QueueState {
     /// Per-class FIFO of `(admission seq, batch)`.
     queues: [VecDeque<(u64, FormedBatch)>; 3],
+    /// Decode streams waiting between steps — regrouped on every pop, so
+    /// batch membership is continuous, not fixed at prefill time.
+    decode: VecDeque<DecodeState>,
     next_seq: u64,
     len: usize,
     closed: bool,
 }
 
-/// Shared batch queue: per-class subqueues under one lock so workers can
-/// apply class affinity while preserving bounded-age FIFO fairness.
+/// Shared work queue: per-class prefill subqueues + the decode pool under
+/// one lock so workers can apply class affinity while preserving
+/// bounded-age FIFO fairness.
 struct WorkQueue {
     state: Mutex<QueueState>,
     ready: Condvar,
-    /// Lock-free length mirror for the admission path.
+    /// Lock-free length mirror for the admission path (prefill batches).
     len_hint: AtomicUsize,
     affinity: bool,
 }
@@ -137,6 +163,19 @@ impl WorkQueue {
         self.ready.notify_one();
     }
 
+    /// Return decode streams to the between-steps pool. Called after every
+    /// step (and after prefill for streams entering decode) — the next pop
+    /// regroups whatever is waiting.
+    fn push_decode(&self, states: Vec<DecodeState>) {
+        if states.is_empty() {
+            return;
+        }
+        let mut s = self.state.lock().unwrap();
+        s.decode.extend(states);
+        // One push can seed more than one group — wake everyone waiting.
+        self.ready.notify_all();
+    }
+
     fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.ready.notify_all();
@@ -146,15 +185,42 @@ impl WorkQueue {
         self.len_hint.load(Ordering::Relaxed)
     }
 
-    /// Block for the next batch; `None` once the queue is closed and empty.
-    /// `warm` is the class the calling worker last executed.
-    fn pop(&self, warm: Option<BatchClass>) -> Option<FormedBatch> {
+    /// Block for the next work item; `None` once the queue is closed and
+    /// drained. `warm` is the class the calling worker last executed;
+    /// `prefer_prefill` breaks ties when both kinds of work wait (workers
+    /// alternate so decode streams keep flowing *and* new requests keep
+    /// prefilled streams joining them). Decode streams held by an executing
+    /// worker are invisible here — that worker re-pushes and re-pops them,
+    /// so a closed, momentarily-empty queue never strands work.
+    fn pop(&self, warm: Option<BatchClass>, prefer_prefill: bool) -> Option<WorkItem> {
         let mut s = self.state.lock().unwrap();
         loop {
-            if s.len > 0 {
+            let has_decode = !s.decode.is_empty();
+            let has_prefill = s.len > 0;
+            if has_decode && !(prefer_prefill && has_prefill) {
+                // Group from the FIFO front, never wider than the narrowest
+                // member's class width: each stream's decode budget was
+                // cap-clamped against KV residency at its *class's* batch
+                // width (Engine::decode_cap), so grouping it wider would
+                // overflow the GB the clamp promised to respect. B4 streams
+                // batch four-up, B2 pairs, B1 decodes solo.
+                let mut limit = MAX_DECODE_GROUP;
+                let mut take = 0;
+                while take < s.decode.len() && take < limit {
+                    let width = s.decode[take].class.batch().min(MAX_DECODE_GROUP);
+                    if take + 1 > width {
+                        break;
+                    }
+                    limit = limit.min(width);
+                    take += 1;
+                }
+                let group: Vec<DecodeState> = s.decode.drain(..take).collect();
+                return Some(WorkItem::Decode(group));
+            }
+            if has_prefill {
                 let batch = self.choose(&mut s, warm);
                 self.len_hint.store(s.len, Ordering::Relaxed);
-                return Some(batch);
+                return Some(WorkItem::Prefill(batch));
             }
             if s.closed {
                 return None;
@@ -278,6 +344,10 @@ impl Submitter {
 pub struct ServerHandle {
     sub: Submitter,
     pub responses: Receiver<Response>,
+    /// Per-token decode stream: one [`TokenEvent`] per generated token,
+    /// emitted while its request is still in flight. Encode-only traffic
+    /// never sends here; dropping the receiver is harmless.
+    pub tokens: Receiver<TokenEvent>,
     /// Pooled metrics (every worker records into this sink too).
     pub metrics: Arc<ServerMetrics>,
     worker_metrics: Vec<Arc<ServerMetrics>>,
@@ -428,6 +498,7 @@ impl Server {
     {
         let (tx, rx) = channel::<Msg>();
         let (resp_tx, resp_rx) = channel::<Response>();
+        let (tok_tx, tok_rx) = channel::<TokenEvent>();
         let pooled = Arc::new(ServerMetrics::new());
         let sim_cache = Arc::new(SimCache::new());
         let queue = Arc::new(WorkQueue::new(cfg.affinity));
@@ -446,16 +517,27 @@ impl Server {
             let pooled = Arc::clone(&pooled);
             let inflight = Arc::clone(&inflight);
             let resp_tx = resp_tx.clone();
+            let tok_tx = tok_tx.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("trex-worker-{worker}"))
                     .spawn(move || {
-                        worker_loop(&ctx, factory.as_ref(), queue, resp_tx, pooled, own, inflight)
+                        worker_loop(
+                            &ctx,
+                            factory.as_ref(),
+                            queue,
+                            resp_tx,
+                            tok_tx,
+                            pooled,
+                            own,
+                            inflight,
+                        )
                     })
                     .expect("spawn engine worker"),
             );
         }
         drop(resp_tx);
+        drop(tok_tx);
 
         let ingest_metrics = Arc::clone(&pooled);
         let ingest_queue = Arc::clone(&queue);
@@ -480,6 +562,7 @@ impl Server {
                 max_seq: cfg.batcher.max_seq,
             },
             responses: resp_rx,
+            tokens: tok_rx,
             metrics: pooled,
             worker_metrics,
             sim_cache,
@@ -543,14 +626,17 @@ fn ingest_loop(
     queue.close();
 }
 
-/// Engine worker: build the engine, then pull batches (warm-class first)
-/// until the queue closes. Execute failures shed the batch and are counted,
-/// not fatal — one bad batch must not take the pool down.
+/// Engine worker: build the engine, then pull work (warm-class first,
+/// alternating prefill/decode when both wait) until the queue closes and
+/// drains. Execute failures shed the batch/group and are counted, not fatal
+/// — one bad batch must not take the pool down.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     ctx: &WorkerCtx,
     make_engine: &(dyn Fn(&WorkerCtx) -> Result<Engine> + Send + Sync),
     queue: Arc<WorkQueue>,
     resp_tx: Sender<Response>,
+    tok_tx: Sender<TokenEvent>,
     pooled: Arc<ServerMetrics>,
     own: Arc<ServerMetrics>,
     inflight: Arc<AtomicUsize>,
@@ -558,29 +644,66 @@ fn worker_loop(
     let mut engine = make_engine(ctx)?;
     let mut warm: Option<BatchClass> = None;
     let mut first_err: Option<Error> = None;
-    while let Some(batch) = queue.pop(warm) {
-        warm = Some(batch.class);
-        let n = batch.requests.len();
-        let lens: Vec<usize> = batch.requests.iter().map(|r| r.len).collect();
-        pooled.record_batch(batch.class, n);
-        own.record_batch(batch.class, n);
-        match engine.execute(batch) {
-            Ok(responses) => {
-                for (mut resp, len) in responses.into_iter().zip(lens) {
-                    resp.worker = ctx.worker;
-                    pooled.record_response(&resp, len);
-                    own.record_response(&resp, len);
-                    inflight.fetch_sub(1, Ordering::AcqRel);
-                    // A dropped receiver is a client gone — not a pool error.
-                    let _ = resp_tx.send(resp);
+    let mut last_was_decode = false;
+    // Final responses all leave through here: record, release the in-flight
+    // slot, send. A dropped receiver is a client gone — not a pool error.
+    let finish = |mut resp: Response| {
+        resp.worker = ctx.worker;
+        pooled.record_response(&resp, resp.prefill_len);
+        own.record_response(&resp, resp.prefill_len);
+        inflight.fetch_sub(1, Ordering::AcqRel);
+        let _ = resp_tx.send(resp);
+    };
+    while let Some(item) = queue.pop(warm, last_was_decode) {
+        match item {
+            WorkItem::Prefill(batch) => {
+                last_was_decode = false;
+                warm = Some(batch.class);
+                let n = batch.requests.len();
+                pooled.record_batch(batch.class, n);
+                own.record_batch(batch.class, n);
+                match engine.execute(batch) {
+                    Ok(outcome) => {
+                        outcome.responses.into_iter().for_each(&finish);
+                        // Streams entering decode keep their in-flight slot
+                        // until their final response.
+                        queue.push_decode(outcome.decoding);
+                    }
+                    Err(e) => {
+                        pooled.record_execute_error();
+                        own.record_execute_error();
+                        inflight.fetch_sub(n, Ordering::AcqRel);
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
                 }
             }
-            Err(e) => {
-                pooled.record_execute_error();
-                own.record_execute_error();
-                inflight.fetch_sub(n, Ordering::AcqRel);
-                if first_err.is_none() {
-                    first_err = Some(e);
+            WorkItem::Decode(group) => {
+                last_was_decode = true;
+                let n = group.len();
+                pooled.record_decode_step();
+                own.record_decode_step();
+                match engine.execute_decode(group) {
+                    Ok(outcome) => {
+                        for mut ev in outcome.tokens {
+                            ev.worker = ctx.worker;
+                            pooled.record_token(&ev);
+                            own.record_token(&ev);
+                            let _ = tok_tx.send(ev);
+                        }
+                        queue.push_decode(outcome.active);
+                        outcome.responses.into_iter().for_each(&finish);
+                    }
+                    Err(e) => {
+                        // Shed the whole group: their requests never answer.
+                        pooled.record_execute_error();
+                        own.record_execute_error();
+                        inflight.fetch_sub(n, Ordering::AcqRel);
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
                 }
             }
         }

@@ -1,16 +1,48 @@
 //! Process-wide simulation cache shared by all pool workers.
 //!
-//! Chip passes are deterministic per `(BatchClass, padded-seq)`, so the
-//! cycle-level simulation only ever needs to run once per key no matter how
-//! many engine workers serve traffic. The cache computes misses *under the
-//! write lock*, which guarantees exactly-once simulation even when several
-//! workers race on a cold key — the simulation is microseconds-cheap next
-//! to a duplicated run, and cold keys are rare (≤ 3 classes × slot widths).
+//! Chip passes are deterministic per [`PassKey`], so the cycle-level
+//! simulation only ever needs to run once per key no matter how many engine
+//! workers serve traffic. The cache computes misses *under the write lock*,
+//! which guarantees exactly-once simulation even when several workers race
+//! on a cold key — the simulation is microseconds-cheap next to a duplicated
+//! run, and cold keys are rare.
+//!
+//! Keys carry `past_len` so decode steps cache alongside prefill passes:
+//! a generate request's prefill (`past_len` = 0) shares the exact key a
+//! plain request of the same class/slot uses — prefill results are reused as
+//! decode prefixes — while each `(group size, KV depth)` decode step gets
+//! its own entry.
 
 use crate::sim::BatchClass;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
+
+/// Identity of one deterministic chip pass.
+///
+/// * Prefill: `batch` = class batch, `seq` = the class's per-input slot,
+///   `past_len` = 0.
+/// * Decode step: `batch` = decode-group size (1..=4), `seq` = 1,
+///   `past_len` = the KV depth the step attends over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PassKey {
+    pub batch: usize,
+    pub seq: usize,
+    pub past_len: usize,
+}
+
+impl PassKey {
+    /// Key for a whole-sequence pass of `class` at per-input slot `seq`.
+    pub fn prefill(class: BatchClass, seq: usize) -> PassKey {
+        PassKey { batch: class.batch(), seq, past_len: 0 }
+    }
+
+    /// Key for one decode step of a `batch`-stream group at KV depth
+    /// `past_len` (always ≥ 1: the stream prefilled at least one token).
+    pub fn decode(batch: usize, past_len: usize) -> PassKey {
+        PassKey { batch, seq: 1, past_len }
+    }
+}
 
 /// One simulated chip pass (the per-batch quantities the engine attaches to
 /// every response it serves from that pass).
@@ -41,11 +73,11 @@ impl CacheStats {
     }
 }
 
-/// Thread-safe `(BatchClass, seq) → CachedPass` map with exactly-once
-/// compute semantics and hit/miss accounting.
+/// Thread-safe `PassKey → CachedPass` map with exactly-once compute
+/// semantics and hit/miss accounting.
 #[derive(Debug, Default)]
 pub struct SimCache {
-    map: RwLock<HashMap<(BatchClass, usize), CachedPass>>,
+    map: RwLock<HashMap<PassKey, CachedPass>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -55,15 +87,13 @@ impl SimCache {
         Self::default()
     }
 
-    /// Return the cached pass for `(class, seq)`, simulating it with
-    /// `simulate` exactly once across all threads if absent.
+    /// Return the cached pass for `key`, simulating it with `simulate`
+    /// exactly once across all threads if absent.
     pub fn get_or_simulate(
         &self,
-        class: BatchClass,
-        seq: usize,
+        key: PassKey,
         simulate: impl FnOnce() -> CachedPass,
     ) -> CachedPass {
-        let key = (class, seq);
         if let Some(pass) = self.map.read().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return *pass;
@@ -112,7 +142,7 @@ mod tests {
         let cache = SimCache::new();
         let mut computed = 0;
         for _ in 0..5 {
-            cache.get_or_simulate(BatchClass::B4, 8, || {
+            cache.get_or_simulate(PassKey::prefill(BatchClass::B4, 8), || {
                 computed += 1;
                 pass(1.0)
             });
@@ -126,12 +156,38 @@ mod tests {
     #[test]
     fn distinct_keys_are_distinct_entries() {
         let cache = SimCache::new();
-        cache.get_or_simulate(BatchClass::B4, 8, || pass(1.0));
-        cache.get_or_simulate(BatchClass::B2, 8, || pass(2.0));
-        cache.get_or_simulate(BatchClass::B4, 16, || pass(3.0));
+        cache.get_or_simulate(PassKey::prefill(BatchClass::B4, 8), || pass(1.0));
+        cache.get_or_simulate(PassKey::prefill(BatchClass::B2, 8), || pass(2.0));
+        cache.get_or_simulate(PassKey::prefill(BatchClass::B4, 16), || pass(3.0));
         assert_eq!(cache.len(), 3);
-        let got = cache.get_or_simulate(BatchClass::B2, 8, || unreachable!());
+        let got = cache.get_or_simulate(PassKey::prefill(BatchClass::B2, 8), || unreachable!());
         assert_eq!(got.chip_us, 2.0);
+    }
+
+    #[test]
+    fn decode_steps_key_by_group_and_past_len() {
+        let cache = SimCache::new();
+        cache.get_or_simulate(PassKey::decode(4, 16), || pass(1.0));
+        cache.get_or_simulate(PassKey::decode(4, 17), || pass(2.0)); // deeper KV
+        cache.get_or_simulate(PassKey::decode(2, 16), || pass(3.0)); // smaller group
+        assert_eq!(cache.len(), 3);
+        // Same (group, depth) hits.
+        let got = cache.get_or_simulate(PassKey::decode(4, 16), || unreachable!());
+        assert_eq!(got.chip_us, 1.0);
+        // Prefill keys never collide with decode keys on the same numbers.
+        assert_ne!(PassKey::prefill(BatchClass::B4, 1), PassKey::decode(4, 16));
+    }
+
+    #[test]
+    fn prefill_key_is_shared_with_decode_prefixes() {
+        // A generate request's prefill pass and a plain request of the same
+        // class/slot must map to one entry — that reuse is the point of
+        // keying by past_len instead of a separate decode cache.
+        let cache = SimCache::new();
+        cache.get_or_simulate(PassKey::prefill(BatchClass::B2, 16), || pass(5.0));
+        let reused = cache.get_or_simulate(PassKey::prefill(BatchClass::B2, 16), || unreachable!());
+        assert_eq!(reused.chip_us, 5.0);
+        assert_eq!(cache.stats().hits, 1);
     }
 
     #[test]
@@ -143,7 +199,7 @@ mod tests {
             let cache = Arc::clone(&cache);
             let calls = Arc::clone(&calls);
             threads.push(std::thread::spawn(move || {
-                cache.get_or_simulate(BatchClass::B1, 32, || {
+                cache.get_or_simulate(PassKey::prefill(BatchClass::B1, 32), || {
                     calls.fetch_add(1, Ordering::SeqCst);
                     pass(7.0)
                 })

@@ -18,6 +18,8 @@ pub struct TraceGenerator {
     /// Sample lengths uniformly over each batch class in turn (equal
     /// B1/B2/B4 traffic) instead of the workload distribution.
     class_mix: bool,
+    /// Decode tokens each emitted request asks for (0 = encode-only).
+    generate: usize,
 }
 
 impl TraceGenerator {
@@ -34,7 +36,14 @@ impl TraceGenerator {
             next_id: 0,
             fixed,
             class_mix: false,
+            generate: 0,
         }
+    }
+
+    /// Every emitted request asks for `n` decode tokens (builder-style).
+    pub fn with_generate(mut self, n: usize) -> Self {
+        self.generate = n;
+        self
     }
 
     /// Uniform-random payload request with workload-distributed length.
@@ -58,7 +67,7 @@ impl TraceGenerator {
             .collect();
         let id = self.next_id;
         self.next_id += 1;
-        Request::new(id, len, payload)
+        Request::new(id, len, payload).with_generate(self.generate)
     }
 
     pub fn take(&mut self, n: usize) -> Vec<Request> {
@@ -76,6 +85,7 @@ impl TraceGenerator {
             next_id: 0,
             fixed: false,
             class_mix: true,
+            generate: 0,
         }
     }
 }

@@ -4,6 +4,7 @@
 //!   trex sim   --model <preset> [--seq N] [--batch N] [--vdd V] [--no-trf]
 //!   trex serve --requests N [--workers N] [--queue-depth N] [--max-inflight N]
 //!              [--no-affinity] [--artifacts DIR] [--perf-model <preset>]
+//!              [--generate N]            # decode N tokens per request
 //!   trex report --model <preset>         # compression report (Fig 23.1.3)
 //!   trex selftest [--artifacts DIR]      # PJRT vs jax check vectors
 //!   trex workloads                       # list presets
@@ -55,6 +56,7 @@ fn main() -> CliResult {
                  \n  sim      --model <preset> [--seq N] [--batch 1|2|4] [--vdd V] [--no-trf] [--no-prefetch]\
                  \n  serve    --requests N [--workers N] [--queue-depth N] [--max-inflight N]\
                  \n           [--no-affinity] [--artifacts DIR] [--perf-model <preset>]\
+                 \n           [--generate N]  (decode N tokens per request; perf-model defaults to s2t-small)\
                  \n  report   --model <preset>\
                  \n  selftest [--artifacts DIR]"
             );
@@ -102,16 +104,31 @@ fn cmd_serve(args: &[String]) -> CliResult {
     let max_inflight: usize =
         arg_value(args, "--max-inflight").map(|s| s.parse()).transpose()?.unwrap_or(4096);
     let affinity = !args.iter().any(|a| a == "--no-affinity");
+    let generate: usize =
+        arg_value(args, "--generate").map(|s| s.parse()).transpose()?.unwrap_or(0);
     let dir = arg_value(args, "--artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(artifacts::default_dir);
-    let perf_name = arg_value(args, "--perf-model").unwrap_or_else(|| "bert-large".to_string());
+    // Decode mode defaults to the paper's autoregressive workload (fairseq-
+    // S2T): the fat encoder-only presets can't keep a useful KV prefix
+    // resident in the 4 MiB GB, so their decode caps clamp generation hard.
+    let default_perf = if generate > 0 { "s2t-small" } else { "bert-large" };
+    let perf_name = arg_value(args, "--perf-model").unwrap_or_else(|| default_perf.to_string());
     let perf_model = ModelConfig::preset(&perf_name)?;
 
     // Geometry from the AOT manifest when it exists (PJRT numerics), else
     // the dependency-free deterministic reference backend on the tiny plane.
     let manifest = trex::util::json::Json::from_file(dir.join("manifest.json")).ok();
     let use_pjrt = manifest.is_some() && cfg!(feature = "pjrt");
+    if generate > 0 && use_pjrt {
+        // Decode steps run 1–4-row planes; the AOT executables are
+        // fixed-shape, so every step would fail and shed its group. Refuse
+        // up front instead of timing out mid-run (AOT decode artifacts are
+        // a ROADMAP item).
+        return Err("serve --generate requires the reference backend: fixed-shape AOT \
+                    artifacts cannot run single-token decode planes yet"
+            .into());
+    }
     let (d_model, max_seq) = match &manifest {
         Some(m) => (
             m.get("model")?.get("d_model")?.as_usize()?,
@@ -155,7 +172,8 @@ fn cmd_serve(args: &[String]) -> CliResult {
         pool,
     );
 
-    let mut gen = TraceGenerator::for_model(&perf_model, max_seq, d_model, 1);
+    let mut gen =
+        TraceGenerator::for_model(&perf_model, max_seq, d_model, 1).with_generate(generate);
     let mut got = 0usize;
     for _ in 0..n {
         let mut req = gen.next();
@@ -179,6 +197,12 @@ fn cmd_serve(args: &[String]) -> CliResult {
     while got < n {
         handle.responses.recv_timeout(Duration::from_secs(30))?;
         got += 1;
+    }
+    if generate > 0 {
+        // Every token streamed before its request's final response; the
+        // channel already holds them all.
+        let streamed = handle.tokens.try_iter().count();
+        println!("streamed {streamed} decode tokens across {n} requests");
     }
     let report = handle.shutdown()?;
     println!("{}", report.json().to_string_pretty());

@@ -4,6 +4,16 @@
 //! The op IR carries *shapes*, not tensors — it is the schedule the RISC-V
 //! top controller would issue. Functional numerics run through the PJRT
 //! runtime; the simulator maps this stream to cycles, bytes and joules.
+//!
+//! Programs are split into [`Phase`]s — contiguous per-layer spans of the op
+//! stream — so the executor's [`crate::sim::Stepper`] can run one phase at a
+//! time against persistent state. Two builders exist:
+//!
+//! * [`build_program`] — one whole-sequence (prefill / scoring) pass;
+//! * [`build_decode_step`] — ONE autoregressive decode step: a single new
+//!   token per input attending over a `past_len`-deep KV cache resident in
+//!   the GB. Stepping this program repeatedly (with growing `past_len`) is
+//!   the paper's µs/token decode workload.
 
 pub mod ops;
 
@@ -11,18 +21,49 @@ pub use ops::{Op, OpKind};
 
 use crate::config::{ArchKind, ModelConfig};
 
-/// A compiled op program for one forward pass.
+/// One schedulable phase: a contiguous span of a program's op stream at
+/// per-layer granularity. Phases always tile the op stream exactly (no gaps,
+/// no overlap) so "step every phase" is identical to "run every op".
+#[derive(Debug, Clone)]
+pub struct Phase {
+    /// Human label: "input", "enc_layer 3", "decode_layer 0", "output", …
+    pub label: String,
+    /// Global transformer layer this phase covers (None for model-level DMA).
+    pub layer: Option<usize>,
+    /// Span `[start, end)` into [`Program::ops`].
+    pub start: usize,
+    pub end: usize,
+}
+
+/// A compiled op program for one forward pass (or one decode step).
 #[derive(Debug, Clone)]
 pub struct Program {
     pub model: String,
     /// Dynamic batch size (1, 2 or 4 — the paper's dataflow classes).
     pub batch: usize,
-    /// Per-input sequence length this program was built for.
+    /// Per-input sequence length this program was built for (1 for a decode
+    /// step: one new token per input).
     pub seq: usize,
+    /// KV prefix length a decode step attends over (0 for prefill passes).
+    pub past_len: usize,
     pub ops: Vec<Op>,
+    /// Per-layer execution phases tiling `ops` (see [`Phase`]).
+    pub phases: Vec<Phase>,
 }
 
 impl Program {
+    /// Wrap a raw op stream as a single-phase program (baseline comparators
+    /// that don't need per-layer stepping).
+    pub fn from_ops(model: String, batch: usize, seq: usize, ops: Vec<Op>) -> Program {
+        let all = Phase { label: "all".to_string(), layer: None, start: 0, end: ops.len() };
+        Program { model, batch, seq, past_len: 0, ops, phases: vec![all] }
+    }
+
+    /// The ops of one phase.
+    pub fn phase_ops(&self, phase: &Phase) -> &[Op] {
+        &self.ops[phase.start..phase.end]
+    }
+
     /// Total MAC operations across DMM+SMM ops.
     pub fn total_macs(&self) -> u64 {
         self.ops.iter().map(|o| o.macs()).sum()
@@ -52,20 +93,54 @@ impl Program {
 /// must fit the chip's 128-token plane.
 pub fn build_program(m: &ModelConfig, seq: usize, batch: usize) -> Program {
     let mut b = Builder::new(m, seq, batch);
-    b.input_load();
+    b.phase("input", None, |b| b.input_load());
     for l in 0..m.enc_layers {
-        b.encoder_layer(l);
+        b.phase(&format!("enc_layer {l}"), Some(l), |b| b.encoder_layer(l));
     }
     if m.arch == ArchKind::EncoderDecoder {
         // Non-autoregressive single decode pass over `seq` target positions
         // (scoring mode): the chip's decode workloads are measured per-token;
         // per-token cost is derived by the simulator from this pass.
         for l in 0..m.dec_layers {
-            b.decoder_layer(l);
+            let g = m.enc_layers + l;
+            b.phase(&format!("dec_layer {l}"), Some(g), |b| b.decoder_layer(l));
         }
     }
-    b.output_store();
-    Program { model: m.name.clone(), batch, seq, ops: b.ops }
+    b.phase("output", None, |b| b.output_store());
+    Program { model: m.name.clone(), batch, seq, past_len: 0, ops: b.ops, phases: b.phases }
+}
+
+/// Build ONE autoregressive decode step: `batch` streams each produce one
+/// new token attending over a `past_len`-deep KV cache (kept resident in the
+/// GB — see [`crate::sim::GbBudget::kv_cache_bytes`]; no EMA is charged for
+/// KV reads). Per step the chip still streams every decode layer's W_D —
+/// that weight traffic is the dominant per-token EMA the paper's batching
+/// amortizes.
+///
+/// The decode stack is the decoder for encoder-decoder models (self-attention
+/// over the cache plus cross-attention whose K/V were projected once at
+/// prefill) and the full encoder stack run LM-style for encoder-only models.
+/// Cross-attention length uses the workload's `mean_input_len` (the builder
+/// is keyed by `past_len` alone so decode-step simulations stay cacheable).
+pub fn build_decode_step(m: &ModelConfig, past_len: usize, batch: usize) -> Program {
+    let mut b = Builder::new(m, 1, batch); // seq = 1: one new token per input
+    let kv = past_len + 1; // the new token attends over past + itself
+    b.phase("input", None, |b| b.input_load());
+    if m.arch == ArchKind::EncoderDecoder {
+        let cross = (m.mean_input_len as usize).clamp(1, m.max_seq);
+        for l in 0..m.dec_layers {
+            let g = m.enc_layers + l;
+            b.phase(&format!("decode_layer {l}"), Some(g), |b| {
+                b.decode_layer(g, kv, Some(cross))
+            });
+        }
+    } else {
+        for l in 0..m.enc_layers {
+            b.phase(&format!("decode_layer {l}"), Some(l), |b| b.decode_layer(l, kv, None));
+        }
+    }
+    b.phase("output", None, |b| b.output_store());
+    Program { model: m.name.clone(), batch, seq: 1, past_len, ops: b.ops, phases: b.phases }
 }
 
 struct Builder<'a> {
@@ -73,11 +148,19 @@ struct Builder<'a> {
     seq: usize,
     batch: usize,
     ops: Vec<Op>,
+    phases: Vec<Phase>,
 }
 
 impl<'a> Builder<'a> {
     fn new(m: &'a ModelConfig, seq: usize, batch: usize) -> Self {
-        Builder { m, seq, batch, ops: Vec::new() }
+        Builder { m, seq, batch, ops: Vec::new(), phases: Vec::new() }
+    }
+
+    /// Run `f` and record the ops it emitted as one phase.
+    fn phase(&mut self, label: &str, layer: Option<usize>, f: impl FnOnce(&mut Self)) {
+        let start = self.ops.len();
+        f(self);
+        self.phases.push(Phase { label: label.to_string(), layer, start, end: self.ops.len() });
     }
 
     /// Rows of the token-parallel activation matrix.
@@ -175,6 +258,39 @@ impl<'a> Builder<'a> {
         self.ops.push(Op::residual(l, self.rows(), d));
         self.ops.push(Op::layernorm(l, self.rows(), d));
     }
+
+    /// One decode-step layer: single-token self-attention over `kv_self`
+    /// cached positions; for encoder-decoder stacks (`cross = Some(len)`)
+    /// also single-token cross-attention over the encoder memory — whose K/V
+    /// were projected once at prefill, so only the Q (and output) projections
+    /// run per step.
+    fn decode_layer(&mut self, l: usize, kv_self: usize, cross: Option<usize>) {
+        let d = self.m.d_model;
+        let ff = self.m.d_ff;
+        // Self-attention: project Q/K/V for the new token (K/V rows are
+        // appended to the GB-resident cache), attend over the whole cache.
+        for name in ["wq", "wk", "wv"] {
+            self.projection(l, name, d, d);
+        }
+        self.attention_core(l, 1, kv_self);
+        self.projection(l, "wo", d, d);
+        self.ops.push(Op::residual(l, self.rows(), d));
+        self.ops.push(Op::layernorm(l, self.rows(), d));
+        if let Some(cross_len) = cross {
+            // Cross-attention: encoder-memory K/V are already cached, so the
+            // step only projects Q and the attention output.
+            self.projection(l, "x_wq", d, d);
+            self.attention_core(l, 1, cross_len);
+            self.projection(l, "x_wo", d, d);
+            self.ops.push(Op::residual(l, self.rows(), d));
+            self.ops.push(Op::layernorm(l, self.rows(), d));
+        }
+        self.projection(l, "ffn_up", d, ff);
+        self.ops.push(Op::gelu(l, self.rows(), ff));
+        self.projection(l, "ffn_down", ff, d);
+        self.ops.push(Op::residual(l, self.rows(), d));
+        self.ops.push(Op::layernorm(l, self.rows(), d));
+    }
 }
 
 #[cfg(test)]
@@ -239,5 +355,89 @@ mod tests {
         let a = build_program(&m, 8, 1).total_macs();
         let b = build_program(&m, 32, 1).total_macs();
         assert!(b > 3 * a, "quadratic attention + linear projections");
+    }
+
+    #[test]
+    fn phases_tile_the_op_stream_exactly() {
+        for prog in [
+            build_program(&ModelConfig::tiny(), 16, 2),
+            build_program(&ModelConfig::s2t_small(), 32, 1),
+            build_decode_step(&ModelConfig::s2t_small(), 17, 4),
+            build_decode_step(&ModelConfig::tiny(), 0, 1),
+        ] {
+            assert!(!prog.phases.is_empty());
+            let mut cursor = 0;
+            for p in &prog.phases {
+                assert_eq!(p.start, cursor, "{}: gap/overlap at {}", prog.model, p.label);
+                assert!(p.end >= p.start);
+                cursor = p.end;
+            }
+            assert_eq!(cursor, prog.ops.len(), "{}: phases must cover all ops", prog.model);
+            // Layer phases carry their layer; DMA phases don't.
+            assert!(prog.phases.first().unwrap().layer.is_none());
+            assert!(prog.phases.last().unwrap().layer.is_none());
+            assert!(prog.phases.iter().any(|p| p.layer.is_some()));
+        }
+    }
+
+    #[test]
+    fn decode_step_is_single_token() {
+        let m = ModelConfig::tiny();
+        let p = build_decode_step(&m, 10, 4);
+        assert_eq!((p.seq, p.batch, p.past_len), (1, 4, 10));
+        // One new token per input: tokens = batch × 1.
+        assert_eq!(p.batch * p.seq, 4);
+        // Attention score MM attends over past_len + 1 keys.
+        let scores = p.ops.iter().find(|o| o.name == "attn_scores").unwrap();
+        match scores.kind {
+            OpKind::Dmm { count, m: q, k: _, n: kv, .. } => {
+                assert_eq!(q, 1, "one query row per (batch, head)");
+                assert_eq!(kv, 11, "kv length = past_len + 1");
+                assert_eq!(count, 4 * m.heads);
+            }
+            _ => panic!("attn_scores must be a Dmm"),
+        }
+    }
+
+    #[test]
+    fn decode_step_streams_full_wd_each_step() {
+        // Per decode step the chip re-streams every decode layer's W_D —
+        // the per-token EMA cost the paper's batching divides by `batch`.
+        let m = ModelConfig::tiny();
+        let step = build_decode_step(&m, 16, 1);
+        let prefill = build_program(&m, 16, 1);
+        assert_eq!(
+            step.weight_ema_bytes(),
+            prefill.weight_ema_bytes(),
+            "encoder-only decode streams the same per-layer W_D as a pass"
+        );
+        // And the weight bytes are batch-invariant (amortized per token).
+        let b4 = build_decode_step(&m, 16, 4);
+        assert_eq!(step.weight_ema_bytes(), b4.weight_ema_bytes());
+    }
+
+    #[test]
+    fn decode_step_macs_grow_with_past_len() {
+        let m = ModelConfig::s2t_small();
+        let near = build_decode_step(&m, 4, 1).total_macs();
+        let far = build_decode_step(&m, 100, 1).total_macs();
+        assert!(far > near, "attention MACs scale with the KV prefix");
+        // Decoder-only stack: cheaper than a full prefill pass per token.
+        let prefill = build_program(&m, 64, 1);
+        assert!(far < prefill.total_macs());
+    }
+
+    #[test]
+    fn enc_dec_decode_skips_cross_kv_projections() {
+        // Cross-attention K/V are projected once at prefill; a decode step
+        // must only project x_wq / x_wo.
+        let m = ModelConfig::nmt_rdrop();
+        let p = build_decode_step(&m, 8, 2);
+        assert!(p.ops.iter().any(|o| o.name == "x_wq"));
+        assert!(p.ops.iter().any(|o| o.name == "x_wo"));
+        assert!(!p.ops.iter().any(|o| o.name == "x_wk" || o.name == "x_wv"));
+        // Decode runs the decoder stack only — one phase per decoder layer.
+        let layer_phases = p.phases.iter().filter(|ph| ph.layer.is_some()).count();
+        assert_eq!(layer_phases, m.dec_layers);
     }
 }

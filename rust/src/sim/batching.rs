@@ -10,13 +10,19 @@
 use crate::error::{Error, Result};
 
 /// The three dataflow configurations.
+///
+/// [`batch_class`] assigns each length to the *smallest* slot it fits (for
+/// `hw_max_seq` = 128): lengths in [1, 32] → B4, (32, 64] → B2,
+/// (64, 128] → B1. [`BatchClass::max_len`] is the class's per-input *slot
+/// size* (the upper admission bound); the lower bound is the next smaller
+/// class's slot, since shorter inputs classify downward.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum BatchClass {
     /// One input, length in (64, 128].
     B1,
-    /// Two inputs, each ≤ 64.
+    /// Two inputs, each in (32, 64].
     B2,
-    /// Four inputs, each ≤ 32.
+    /// Four inputs, each in [1, 32].
     B4,
 }
 
@@ -95,6 +101,45 @@ mod tests {
         // batch × max_len always equals the 128-token plane.
         for c in BatchClass::ALL {
             assert_eq!(c.batch() * c.max_len(128), 128);
+        }
+    }
+
+    #[test]
+    fn max_len_boundaries_pin_classify_exactly() {
+        // Satellite: pin the exact admission boundaries at len
+        // 32/33/64/65/128/129 against `batch_class` AND against each class's
+        // `max_len` slot, so the doc ((64,128] / (32,64] / ≤32) can never
+        // drift from the code again.
+        let hw_max = 128;
+        assert_eq!(BatchClass::B4.max_len(hw_max), 32);
+        assert_eq!(BatchClass::B2.max_len(hw_max), 64);
+        assert_eq!(BatchClass::B1.max_len(hw_max), 128);
+        let expect = [
+            (32, Some(BatchClass::B4)),  // top of B4: still four-up
+            (33, Some(BatchClass::B2)),  // one past B4's slot: two-up
+            (64, Some(BatchClass::B2)),  // top of B2
+            (65, Some(BatchClass::B1)),  // one past B2's slot: alone
+            (128, Some(BatchClass::B1)), // full plane
+            (129, None),                 // beyond the plane: rejected
+        ];
+        for (len, want) in expect {
+            match want {
+                Some(class) => {
+                    let got = batch_class(len, hw_max).unwrap();
+                    assert_eq!(got, class, "len {len}");
+                    // Every classified length fits its class's slot…
+                    assert!(len <= got.max_len(hw_max), "len {len} overflows its slot");
+                    // …and is too long for the next denser class (B4 has none).
+                    if got != BatchClass::B4 {
+                        let denser = match got {
+                            BatchClass::B1 => BatchClass::B2,
+                            _ => BatchClass::B4,
+                        };
+                        assert!(len > denser.max_len(hw_max), "len {len} should be denser");
+                    }
+                }
+                None => assert!(batch_class(len, hw_max).is_err(), "len {len} must reject"),
+            }
         }
     }
 }

@@ -6,6 +6,20 @@
 //! and the executor's prefetch depth (one W_D slot ahead) is only legal when
 //! the double-buffer slot fits. Overflowing configurations spill
 //! activations to DRAM — charged per layer as EMA.
+//!
+//! Decode adds a fourth resident: the **KV cache**. Autoregressive steps
+//! read the whole prefix's K/V from the GB every token (zero EMA — the
+//! entire point of keeping it resident), so admission *caps the decode
+//! length* at [`GbBudget::max_decode_len`] instead of rejecting the request:
+//! generation simply stops where residency would break.
+//!
+//! Scope of the residency model: it is **per decode step** — the budget
+//! covers the streams sharing one step (bounded by the pool's class-width
+//! grouping). Streams parked *between* steps are not budgeted; a pool
+//! serving many concurrent generations would in reality swap their KV in
+//! and out of the GB, a cost this model does not charge (idealized as free,
+//! like an infinite second-level cache). Charging KV swap EMA / bounding
+//! concurrent decode streams is a ROADMAP open item.
 
 use crate::config::{HwConfig, ModelConfig};
 use crate::util::json::Json;
@@ -22,40 +36,101 @@ pub struct GbBudget {
     /// Activation working set: two ping-pong planes of the widest
     /// intermediate (`batch·seq × max(d_model, d_ff)`).
     pub activation_bytes: u64,
+    /// KV cache resident across decode steps (0 for prefill budgets).
+    pub kv_bytes: u64,
     /// GB capacity.
     pub capacity: u64,
 }
 
 impl GbBudget {
-    /// Compute the budget for a configuration.
+    /// Compute the budget for a whole-sequence (prefill) configuration.
     pub fn for_config(hw: &HwConfig, m: &ModelConfig, seq: usize, batch: usize) -> GbBudget {
-        let ws_bytes: u64 = m
-            .shared_groups()
-            .iter()
-            .map(|g| (g.d_in * g.rank) as u64 / 2 + 32)
-            .sum();
-        // Largest per-layer W_D: the group set a single layer draws from.
-        // Encoder layer: attn (4×d) + ffn up (d_ff) + ffn down (d) columns;
-        // decoder adds cross-attention.
-        let enc_cols = (4 * m.d_model + m.d_ff + m.d_model) as u64;
-        let dec_cols = (8 * m.d_model + m.d_ff + m.d_model) as u64;
-        let cols = if m.dec_layers > 0 { enc_cols.max(dec_cols) } else { enc_cols };
-        let nz = cols * m.nnz_per_col as u64;
-        let wd_slot_bytes = (nz * 6).div_ceil(8) + (nz * 5).div_ceil(8) + 4;
         let rows = (batch * seq) as u64;
         let widest = m.d_model.max(m.d_ff) as u64;
         let activation_bytes = 2 * rows * widest * m.act_bits as u64 / 8;
         GbBudget {
-            ws_bytes,
-            wd_slot_bytes,
-            prefetch_slot_bytes: wd_slot_bytes,
+            ws_bytes: Self::ws_resident_bytes(m),
+            wd_slot_bytes: Self::wd_slot(m),
+            prefetch_slot_bytes: Self::wd_slot(m),
             activation_bytes,
+            kv_bytes: 0,
             capacity: hw.gb_bytes as u64,
         }
     }
 
+    /// Budget for one decode step: `batch` streams, one new token each, with
+    /// a `past_len`-deep self-attention KV cache resident — plus, for
+    /// encoder-decoder models, the encoder-memory cross-attention K/V that
+    /// `build_decode_step` reads every step with zero EMA.
+    pub fn for_decode(hw: &HwConfig, m: &ModelConfig, past_len: usize, batch: usize) -> GbBudget {
+        let widest = m.d_model.max(m.d_ff) as u64;
+        let activation_bytes = 2 * batch as u64 * widest * m.act_bits as u64 / 8;
+        GbBudget {
+            ws_bytes: Self::ws_resident_bytes(m),
+            wd_slot_bytes: Self::wd_slot(m),
+            prefetch_slot_bytes: Self::wd_slot(m),
+            activation_bytes,
+            kv_bytes: Self::kv_cache_bytes(m, past_len, batch) + Self::cross_kv_bytes(m, batch),
+            capacity: hw.gb_bytes as u64,
+        }
+    }
+
+    /// Self-attention KV-cache bytes for `batch` decode streams at
+    /// `past_len`: K and V, one `d_model`-wide row per cached position, per
+    /// layer of the decode stack (decoder layers for encoder-decoder models,
+    /// the whole encoder stack run LM-style otherwise).
+    pub fn kv_cache_bytes(m: &ModelConfig, past_len: usize, batch: usize) -> u64 {
+        let layers = if m.dec_layers > 0 { m.dec_layers } else { m.enc_layers } as u64;
+        2 * layers * (past_len as u64) * m.d_model as u64 * batch as u64 * m.act_bits as u64 / 8
+    }
+
+    /// Encoder-memory cross-attention K/V resident across a decode stream
+    /// (encoder-decoder models only): projected once at prefill, read every
+    /// step with zero EMA. Length follows `build_decode_step`'s convention
+    /// (the workload's mean input length, clamped to the plane).
+    pub fn cross_kv_bytes(m: &ModelConfig, batch: usize) -> u64 {
+        if m.dec_layers == 0 {
+            return 0;
+        }
+        let cross = (m.mean_input_len as usize).clamp(1, m.max_seq) as u64;
+        2 * m.dec_layers as u64 * cross * m.d_model as u64 * batch as u64 * m.act_bits as u64 / 8
+    }
+
+    /// Longest self-attention KV prefix that stays resident for `batch`
+    /// concurrent decode streams (single-buffer floor: the prefetch slot is
+    /// given up first; the cross-attention memory is part of the fixed
+    /// residents). This is the admission cap — generation is clamped here,
+    /// not rejected.
+    pub fn max_decode_len(hw: &HwConfig, m: &ModelConfig, batch: usize) -> usize {
+        let base = Self::for_decode(hw, m, 0, batch);
+        // base.kv_bytes at past_len 0 is exactly the cross-attention memory.
+        let fixed = base.ws_bytes + base.wd_slot_bytes + base.activation_bytes + base.kv_bytes;
+        let free = base.capacity.saturating_sub(fixed);
+        let per_token = Self::kv_cache_bytes(m, 1, batch).max(1);
+        (free / per_token) as usize
+    }
+
+    fn ws_resident_bytes(m: &ModelConfig) -> u64 {
+        m.shared_groups().iter().map(|g| (g.d_in * g.rank) as u64 / 2 + 32).sum()
+    }
+
+    /// Largest per-layer W_D: the group set a single layer draws from.
+    /// Encoder layer: attn (4×d) + ffn up (d_ff) + ffn down (d) columns;
+    /// decoder adds cross-attention.
+    fn wd_slot(m: &ModelConfig) -> u64 {
+        let enc_cols = (4 * m.d_model + m.d_ff + m.d_model) as u64;
+        let dec_cols = (8 * m.d_model + m.d_ff + m.d_model) as u64;
+        let cols = if m.dec_layers > 0 { enc_cols.max(dec_cols) } else { enc_cols };
+        let nz = cols * m.nnz_per_col as u64;
+        (nz * 6).div_ceil(8) + (nz * 5).div_ceil(8) + 4
+    }
+
     pub fn total(&self) -> u64 {
-        self.ws_bytes + self.wd_slot_bytes + self.prefetch_slot_bytes + self.activation_bytes
+        self.ws_bytes
+            + self.wd_slot_bytes
+            + self.prefetch_slot_bytes
+            + self.activation_bytes
+            + self.kv_bytes
     }
 
     /// Fits with double-buffered prefetch.
@@ -71,7 +146,7 @@ impl GbBudget {
     /// Activation bytes that must spill per layer when over capacity
     /// (single-buffer mode assumed first; 0 when everything fits).
     pub fn spill_bytes_per_layer(&self) -> u64 {
-        let need = self.ws_bytes + self.wd_slot_bytes + self.activation_bytes;
+        let need = self.ws_bytes + self.wd_slot_bytes + self.activation_bytes + self.kv_bytes;
         need.saturating_sub(self.capacity)
     }
 
@@ -85,6 +160,7 @@ impl GbBudget {
             ("wd_slot_bytes", Json::num(self.wd_slot_bytes as f64)),
             ("prefetch_slot_bytes", Json::num(self.prefetch_slot_bytes as f64)),
             ("activation_bytes", Json::num(self.activation_bytes as f64)),
+            ("kv_bytes", Json::num(self.kv_bytes as f64)),
             ("capacity", Json::num(self.capacity as f64)),
             ("occupancy", Json::num(self.occupancy())),
             ("fits_with_prefetch", Json::Bool(self.fits_with_prefetch())),
@@ -152,5 +228,99 @@ mod tests {
         let b = GbBudget::for_config(&hw, &m, 32, 1);
         assert_eq!(b.spill_bytes_per_layer(), 0);
         assert!(b.occupancy() < 0.1);
+    }
+
+    #[test]
+    fn activation_overflow_reports_spill() {
+        // Satellite: an activation plane larger than the GB must report a
+        // positive per-layer spill (and not fit in either buffer mode).
+        let mut hw = HwConfig::default();
+        hw.gb_bytes = 256 << 10;
+        let m = ModelConfig::bert_large();
+        let b = GbBudget::for_config(&hw, &m, 128, 1);
+        assert!(b.activation_bytes > b.capacity, "plane must exceed capacity");
+        assert!(!b.fits_single() && !b.fits_with_prefetch());
+        let spill = b.spill_bytes_per_layer();
+        assert!(spill > 0);
+        // Spill is exactly the residency shortfall in single-buffer mode.
+        assert_eq!(spill, b.ws_bytes + b.wd_slot_bytes + b.activation_bytes - b.capacity);
+    }
+
+    #[test]
+    fn kv_cache_scales_with_past_batch_and_stack() {
+        let m = ModelConfig::s2t_small(); // 6 decoder layers, d=256
+        assert_eq!(GbBudget::kv_cache_bytes(&m, 0, 1), 0);
+        let one = GbBudget::kv_cache_bytes(&m, 1, 1);
+        assert_eq!(one, 2 * 6 * 256); // K+V rows × dec layers × d_model @8b
+        assert_eq!(GbBudget::kv_cache_bytes(&m, 10, 1), 10 * one);
+        assert_eq!(GbBudget::kv_cache_bytes(&m, 10, 4), 40 * one);
+        // Encoder-only models decode over the full encoder stack.
+        let enc = ModelConfig::tiny(); // 2 enc layers, d=64
+        assert_eq!(GbBudget::kv_cache_bytes(&enc, 1, 1), 2 * 2 * 64);
+    }
+
+    #[test]
+    fn cross_kv_is_a_fixed_decode_resident_for_enc_dec() {
+        // The encoder-memory K/V read every decode step must be budgeted:
+        // fixed (past-independent), per-stream, decoder models only.
+        let s2t = ModelConfig::s2t_small(); // mean_input_len 72, 6 dec layers
+        let one = GbBudget::cross_kv_bytes(&s2t, 1);
+        assert_eq!(one, 2 * 6 * 72 * 256);
+        assert_eq!(GbBudget::cross_kv_bytes(&s2t, 4), 4 * one);
+        assert_eq!(GbBudget::cross_kv_bytes(&ModelConfig::tiny(), 4), 0);
+        // It reduces the decode cap (same GB, more fixed residents): the
+        // cap with cross memory counted must sit its token-equivalent below
+        // the self-cache-only figure.
+        let hw = HwConfig::default();
+        let cap = GbBudget::max_decode_len(&hw, &s2t, 4);
+        let slope = GbBudget::kv_cache_bytes(&s2t, 1, 4);
+        let base = GbBudget::for_decode(&hw, &s2t, 0, 4);
+        let free_no_cross =
+            base.capacity - (base.ws_bytes + base.wd_slot_bytes + base.activation_bytes);
+        let cap_no_cross = (free_no_cross / slope) as usize;
+        let reclaimed = (GbBudget::cross_kv_bytes(&s2t, 4) / slope) as usize;
+        assert!(cap < cap_no_cross);
+        assert!(cap_no_cross - cap >= reclaimed, "cross memory costs its token-slots");
+    }
+
+    #[test]
+    fn decode_budget_includes_kv_and_caps_length() {
+        let hw = HwConfig::default();
+        for name in WORKLOADS {
+            let m = ModelConfig::preset(name).unwrap();
+            let b = GbBudget::for_decode(&hw, &m, 64, 4);
+            assert_eq!(
+                b.kv_bytes,
+                GbBudget::kv_cache_bytes(&m, 64, 4) + GbBudget::cross_kv_bytes(&m, 4)
+            );
+            assert!(b.total() > GbBudget::for_decode(&hw, &m, 0, 4).total());
+            let cap = GbBudget::max_decode_len(&hw, &m, 4);
+            assert!(cap > 0, "{name}: no resident decode at all");
+            // More concurrent streams → shorter resident prefix per stream.
+            assert!(GbBudget::max_decode_len(&hw, &m, 1) >= cap);
+            // The cap is exact: at the cap the KV fits, one past it overflows.
+            assert!(GbBudget::for_decode(&hw, &m, cap, 4).fits_single(), "{name}");
+            assert!(!GbBudget::for_decode(&hw, &m, cap + 1, 4).fits_single(), "{name}");
+        }
+        // The paper's decode workload (fairseq-S2T, 6 thin decoder layers)
+        // keeps a full 128-token prefix resident even four-up; the fat
+        // encoder-only models can't — their cap is what admission clamps to.
+        let s2t = ModelConfig::s2t_small();
+        assert!(GbBudget::max_decode_len(&hw, &s2t, 4) >= s2t.max_seq);
+        let bert = ModelConfig::bert_large();
+        assert!(GbBudget::max_decode_len(&hw, &bert, 4) < bert.max_seq);
+    }
+
+    #[test]
+    fn tight_gb_yields_small_decode_cap() {
+        // Shrunk GB: the cap clamps decode length instead of rejecting.
+        let mut hw = HwConfig::default();
+        hw.gb_bytes = 64 << 10;
+        let m = ModelConfig::tiny();
+        let cap = GbBudget::max_decode_len(&hw, &m, 4);
+        assert!(cap > 0 && cap < 1024, "cap {cap} should bind under a 64 KiB GB");
+        // A GB too small even for the fixed residents caps at zero.
+        hw.gb_bytes = 1 << 10;
+        assert_eq!(GbBudget::max_decode_len(&hw, &m, 4), 0);
     }
 }

@@ -22,5 +22,7 @@ pub mod gb;
 pub use batching::{batch_class, BatchClass};
 pub use cores::{afu_cycles, dmm_cycles, mac_cycles, smm_cycles, CoreTiming};
 pub use energy::EnergyBreakdown;
-pub use exec::{boot_ema_bytes, simulate, simulate_workload, RunStats, SimOptions};
+pub use exec::{
+    boot_ema_bytes, simulate, simulate_workload, RunStats, SimOptions, SimState, Stepper,
+};
 pub use gb::GbBudget;

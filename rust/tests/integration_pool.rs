@@ -1,16 +1,18 @@
 //! Worker-pool integration over the deterministic reference backend —
 //! runs everywhere (no AOT artifacts, no PJRT): concurrency, deadline
-//! flushing, backpressure, drain-on-shutdown, and shared-sim-cache
-//! semantics.
+//! flushing, backpressure, drain-on-shutdown, shared-sim-cache semantics,
+//! and token-level continuous batching on the decode path.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 use trex::config::{HwConfig, ModelConfig};
 use trex::coordinator::{
-    BatcherConfig, Engine, EngineConfig, PoolConfig, Request, Server, ServerHandle,
+    BatcherConfig, Engine, EngineConfig, PoolConfig, Request, Server, ServerHandle, TokenEvent,
     TraceGenerator,
 };
 use trex::runtime::ArtifactSet;
+use trex::sim::GbBudget;
 
 const MAX_SEQ: usize = 32;
 const D: usize = 64;
@@ -170,6 +172,181 @@ fn sim_cache_simulates_each_class_slot_exactly_once() {
     let report = handle.shutdown().unwrap();
     assert_eq!(report.cache.hits + report.cache.misses, 10, "one lookup per batch");
     assert_eq!(report.cache.misses, 1);
+}
+
+/// Pool whose engines simulate performance for `perf` on hardware `hw`
+/// (decode caps derive from both).
+fn start_with(pool: PoolConfig, hw: HwConfig, perf: ModelConfig) -> ServerHandle {
+    Server::start_pool(
+        move |ctx| {
+            let set = ArtifactSet::reference("tiny", D, MAX_SEQ)?;
+            Engine::with_cache(
+                set,
+                EngineConfig { hw: hw.clone(), perf_model: perf.clone(), self_test: false },
+                Arc::clone(&ctx.sim_cache),
+            )
+        },
+        pool,
+    )
+}
+
+#[test]
+fn decode_streams_tokens_with_continuous_batching() {
+    // Acceptance: N generate requests stream tokens back with monotone
+    // per-token timestamps, and decode batches mix requests at different
+    // past_len. One worker + one deadline-flushed partial B4 batch makes
+    // the grouping deterministic: three streams prefilled at lens 4/6/8
+    // decode together from step one, each at its own KV depth.
+    let n_tokens = 5usize;
+    let lens = [4usize, 6, 8];
+    let handle = start(pool(1, Duration::from_millis(5)));
+    for (i, len) in lens.iter().enumerate() {
+        let req = Request::new(i as u64, *len, vec![0.2; len * D]).with_generate(n_tokens);
+        handle.submit(req).unwrap();
+    }
+    let mut finals = BTreeMap::new();
+    for _ in 0..lens.len() {
+        let r = handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+        finals.insert(r.id, r);
+    }
+    // Every token precedes its final response, so the channel holds all.
+    let events: Vec<TokenEvent> = handle.tokens.try_iter().collect();
+    assert_eq!(events.len(), lens.len() * n_tokens);
+
+    for (i, len) in lens.iter().enumerate() {
+        let id = i as u64;
+        let r = &finals[&id];
+        assert_eq!(r.tokens_generated, n_tokens, "req {id}");
+        assert_eq!(r.prefill_len, *len);
+        assert_eq!(r.output.len(), len * D, "final response carries prefill output");
+        let mine: Vec<&TokenEvent> = events.iter().filter(|e| e.id == id).collect();
+        assert_eq!(mine.len(), n_tokens);
+        for (j, ev) in mine.iter().enumerate() {
+            assert_eq!(ev.index, j, "tokens arrive in order");
+            assert_eq!(ev.past_len, len + j, "KV depth grows one per step");
+            assert!(ev.us_per_token > 0.0);
+            if j > 0 {
+                assert!(
+                    ev.emitted >= mine[j - 1].emitted,
+                    "req {id}: token {j} timestamp must be monotone"
+                );
+            }
+        }
+    }
+    // Continuous batching observable: some step served streams at
+    // different KV depths simultaneously.
+    let mixed = events.iter().any(|e| {
+        e.group_past_lens.len() > 1
+            && e.group_past_lens.iter().any(|&p| p != e.group_past_lens[0])
+    });
+    assert!(mixed, "decode groups must mix past_len values: {events:#?}");
+
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.metrics.completed(), lens.len() as u64);
+    assert_eq!(report.metrics.tokens_decoded(), (lens.len() * n_tokens) as u64);
+    let j = report.json();
+    assert!(j.get("us_per_token_p50").unwrap().as_f64().unwrap() > 0.0);
+    assert!(j.get("us_per_token_p95").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(j.get("tokens_decoded").unwrap().as_f64().unwrap(), 15.0);
+}
+
+#[test]
+fn decode_joins_streams_from_separate_prefills() {
+    // Streams from different prefill batches must merge into shared decode
+    // groups (token-level continuous batching across admissions). A zero
+    // deadline flushes each of the five B4 requests as its own prefill
+    // batch; with one worker alternating prefill/decode, each new stream
+    // lands in the between-steps pool mid-generation and the FIFO regroup
+    // mixes it into the earlier streams' steps.
+    let n_tokens = 60usize;
+    let handle = start(pool(1, Duration::from_millis(0)));
+    for i in 0..5u64 {
+        handle.submit(Request::new(i, 4, vec![0.1; 4 * D]).with_generate(n_tokens)).unwrap();
+    }
+    for _ in 0..5 {
+        handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let events: Vec<TokenEvent> = handle.tokens.try_iter().collect();
+    assert_eq!(events.len(), 5 * n_tokens);
+    // The late (5th) stream must share at least one step with others.
+    let joined = events.iter().any(|e| e.id == 4 && e.group_past_lens.len() > 1);
+    assert!(joined, "late stream must join the in-flight generation");
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn decode_groups_respect_class_width() {
+    // A stream's decode budget is cap-clamped at its CLASS's batch width, so
+    // the regrouper must never batch it wider: B1 streams decode solo even
+    // when B4 streams are waiting alongside them.
+    let n_tokens = 12usize;
+    let handle = start(pool(1, Duration::from_millis(2)));
+    // len 20 on the 32-token plane → B1 (flushes immediately).
+    handle.submit(Request::new(0, 20, vec![0.4; 20 * D]).with_generate(n_tokens)).unwrap();
+    // Four len-4 B4 requests → one full batch.
+    for i in 1..=4u64 {
+        handle.submit(Request::new(i, 4, vec![0.1; 4 * D]).with_generate(n_tokens)).unwrap();
+    }
+    for _ in 0..5 {
+        handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let events: Vec<TokenEvent> = handle.tokens.try_iter().collect();
+    assert_eq!(events.len(), 5 * n_tokens);
+    for e in events.iter().filter(|e| e.id == 0) {
+        assert_eq!(e.group_past_lens.len(), 1, "B1 stream must decode solo: {e:?}");
+    }
+    // The B4 streams do share steps.
+    assert!(events.iter().any(|e| e.id != 0 && e.group_past_lens.len() > 1));
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn decode_cap_clamps_generation_instead_of_rejecting() {
+    // A GB too small for the asked-for KV depth must CAP generation (serve
+    // what stays resident), not reject the request.
+    let mut hw = HwConfig::default();
+    hw.gb_bytes = 64 << 10;
+    let perf = ModelConfig::tiny();
+    let cap = GbBudget::max_decode_len(&hw, &perf, 4); // len 4 → B4 class
+    assert!(cap > 4 && cap < 1000, "cap {cap} must bind below the ask");
+    let handle = start_with(pool(2, Duration::from_millis(1)), hw, perf);
+    handle.submit(Request::new(0, 4, vec![0.5; 4 * D]).with_generate(1000)).unwrap();
+    let r = handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(r.tokens_generated, cap - 4, "generation clamps at cap - prefill");
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.metrics.completed(), 1);
+    assert_eq!(report.metrics.tokens_decoded(), (cap - 4) as u64);
+}
+
+#[test]
+fn plain_and_generate_requests_share_prefill_sim_entries() {
+    // A generate request's prefill pass must hit the same cache entry a
+    // plain request of the same class/slot created — prefill results are
+    // reused as decode prefixes (PassKey carries past_len = 0).
+    let handle = start(pool(2, Duration::from_secs(60)));
+    for i in 0..4u64 {
+        handle.submit(Request::new(i, 6, vec![0.3; 6 * D])).unwrap();
+    }
+    for _ in 0..4 {
+        handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let prefill_only = handle.cache_stats();
+    assert_eq!(prefill_only.entries, 1);
+    for i in 4..8u64 {
+        handle.submit(Request::new(i, 6, vec![0.3; 6 * D]).with_generate(3)).unwrap();
+    }
+    for _ in 0..4 {
+        handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let stats = handle.cache_stats();
+    // New entries are decode steps only; the prefill key was reused.
+    assert_eq!(prefill_only.misses, 1);
+    assert!(stats.misses >= 2, "decode steps add entries");
+    assert!(
+        stats.entries < 1 + 4 * 3,
+        "decode keys are (group, depth), shared across streams: {stats:?}"
+    );
+    handle.shutdown().unwrap();
 }
 
 #[test]

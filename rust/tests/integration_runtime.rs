@@ -77,7 +77,7 @@ fn engine_executes_batches_and_strips_padding() {
         }
     }
     let batch = formed.expect("4 B4 requests form a batch");
-    let responses = engine.execute(batch).unwrap();
+    let responses = engine.execute(batch).unwrap().responses;
     assert_eq!(responses.len(), 4);
     for r in &responses {
         assert_eq!(r.output.len(), 5 * d, "padding must be stripped");
