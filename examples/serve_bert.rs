@@ -14,7 +14,6 @@
 //! ```
 
 use std::sync::mpsc::RecvTimeoutError;
-use std::sync::Arc;
 use std::time::Duration;
 use trex::config::{HwConfig, ModelConfig};
 use trex::coordinator::{
@@ -55,14 +54,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             } else {
                 ArtifactSet::reference(artifacts::TINY_MODEL, d_model, max_seq)?
             };
-            Engine::with_cache(
+            Engine::for_worker(
                 set,
                 EngineConfig {
                     hw: hw.clone(),
                     perf_model: pm.clone(),
                     self_test: ctx.worker == 0,
+                    kv_quant: trex::kv::KvQuant::Fp16,
+                    kv_pages: None,
                 },
-                Arc::clone(&ctx.sim_cache),
+                ctx,
             )
         },
         PoolConfig {

@@ -16,7 +16,6 @@
 //! `--test` (CI smoke): one quick iteration of both parts.
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 use trex::bench_util::{banner, ratio, table};
 use trex::config::{HwConfig, ModelConfig};
@@ -115,10 +114,16 @@ fn run_pool(workers: usize, requests: Vec<Request>, max_seq: usize) -> (f64, f64
     let handle = Server::start_pool(
         move |ctx| {
             let set = ArtifactSet::reference("pool-bench", 128, max_seq)?;
-            Engine::with_cache(
+            Engine::for_worker(
                 set,
-                EngineConfig { hw: hw.clone(), perf_model: pm.clone(), self_test: false },
-                Arc::clone(&ctx.sim_cache),
+                EngineConfig {
+                    hw: hw.clone(),
+                    perf_model: pm.clone(),
+                    self_test: false,
+                    kv_quant: trex::kv::KvQuant::Fp16,
+                    kv_pages: None,
+                },
+                ctx,
             )
         },
         PoolConfig {

@@ -16,23 +16,28 @@
 //!    `us_per_token` p50/p95, with token-level continuous batching live.
 //!
 //! `--test` (CI smoke): one quick configuration of each part.
+//! `--kv-quant fp16|int8|int4` / `--kv-pages N` set the KV arena the pool
+//! section decodes against (fig9_kv sweeps these systematically).
 
-use std::sync::Arc;
 use std::time::Duration;
-use trex::bench_util::{banner, table};
+use trex::bench_util::{arg_value, banner, table};
 use trex::config::{HwConfig, ModelConfig};
 use trex::coordinator::{
     BatcherConfig, Engine, EngineConfig, PoolConfig, Server, TraceGenerator,
 };
+use trex::kv::KvQuant;
 use trex::model::{build_decode_step, build_program};
 use trex::runtime::ArtifactSet;
 use trex::sim::{simulate, GbBudget, SimOptions, Stepper};
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--test");
+    let quant = KvQuant::parse(&arg_value("--kv-quant").unwrap_or_else(|| "fp16".to_string()))
+        .expect("--kv-quant fp16|int8|int4");
+    let pages: Option<usize> = arg_value("--kv-pages").map(|s| s.parse().expect("--kv-pages N"));
     per_step_sweep(smoke);
-    full_generation(smoke);
-    pool_decode(smoke);
+    full_generation(smoke, quant);
+    pool_decode(smoke, quant, pages);
 }
 
 fn opts_for(hw: &HwConfig, m: &ModelConfig) -> SimOptions {
@@ -73,7 +78,7 @@ fn per_step_sweep(smoke: bool) {
     );
 }
 
-fn full_generation(smoke: bool) {
+fn full_generation(smoke: bool, quant: KvQuant) {
     let hw = HwConfig::default();
     banner("fig-decode: full generation through one persistent Stepper");
     let gen_tokens = if smoke { 8 } else { 64 };
@@ -111,14 +116,15 @@ fn full_generation(smoke: bool) {
         &["streams", "prompt+gen", "total µs", "decode µs/token", "decode µJ/token", "util"],
         &rows,
     );
-    let cap = GbBudget::max_decode_len(&hw, &ModelConfig::s2t_small(), 4);
+    let cap = GbBudget::max_decode_len_quant(&hw, &ModelConfig::s2t_small(), 4, quant);
     println!(
-        "\nKV residency: s2t-small keeps a {cap}-token prefix resident four-up\n\
-         in the 4 MiB GB; admission caps generation there instead of rejecting."
+        "\nKV residency ({}): s2t-small keeps a {cap}-token prefix resident four-up\n\
+         in the 4 MiB GB; admission caps generation there instead of rejecting.",
+        quant.name()
     );
 }
 
-fn pool_decode(smoke: bool) {
+fn pool_decode(smoke: bool, quant: KvQuant, pages: Option<usize>) {
     banner("fig-decode: serving-pool decode (reference backend)");
     let max_seq = 32;
     let d_model = 128;
@@ -129,13 +135,22 @@ fn pool_decode(smoke: bool) {
     for &w in workers {
         let hw = HwConfig::default();
         let pm = ModelConfig::s2t_small();
+        // Engine-side KV arena only (no pool admission bound): this bench's
+        // client submits its whole trace up front and expects zero sheds —
+        // fig9_kv exercises the pool-wide admission/eviction story.
         let handle = Server::start_pool(
             move |ctx| {
                 let set = ArtifactSet::reference("pool-decode", d_model, max_seq)?;
-                Engine::with_cache(
+                Engine::for_worker(
                     set,
-                    EngineConfig { hw: hw.clone(), perf_model: pm.clone(), self_test: false },
-                    Arc::clone(&ctx.sim_cache),
+                    EngineConfig {
+                        hw: hw.clone(),
+                        perf_model: pm.clone(),
+                        self_test: false,
+                        kv_quant: quant,
+                        kv_pages: pages,
+                    },
+                    ctx,
                 )
             },
             PoolConfig {

@@ -25,6 +25,13 @@ impl BenchResult {
     }
 }
 
+/// Value of a `--key VALUE` pair in this process's CLI args (the benches'
+/// shared flag parser — clap is not vendored offline).
+pub fn arg_value(key: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1).cloned())
+}
+
 /// Time `f` for `iters` iterations after `warmup` iterations.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
     for _ in 0..warmup {

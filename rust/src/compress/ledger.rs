@@ -24,6 +24,10 @@ pub enum EmaCategory {
     ActivationOut,
     /// Intermediate activation spills (GB overflow).
     ActivationSpill,
+    /// Evicted KV cache re-streamed into the GB arena before a decode step.
+    KvSwap,
+    /// Quantized-KV dequant traffic charged per decode-step layer.
+    KvDequant,
     /// Dense baseline weight streaming (unfactorized comparator).
     DenseWeights,
 }
@@ -38,10 +42,12 @@ impl EmaCategory {
             EmaCategory::ActivationIn => "act_in",
             EmaCategory::ActivationOut => "act_out",
             EmaCategory::ActivationSpill => "act_spill",
+            EmaCategory::KvSwap => "kv_swap",
+            EmaCategory::KvDequant => "kv_dequant",
             EmaCategory::DenseWeights => "dense_weights",
         }
     }
-    pub const ALL: [EmaCategory; 8] = [
+    pub const ALL: [EmaCategory; 10] = [
         EmaCategory::WsLoad,
         EmaCategory::WdValues,
         EmaCategory::WdIndices,
@@ -49,6 +55,8 @@ impl EmaCategory {
         EmaCategory::ActivationIn,
         EmaCategory::ActivationOut,
         EmaCategory::ActivationSpill,
+        EmaCategory::KvSwap,
+        EmaCategory::KvDequant,
         EmaCategory::DenseWeights,
     ];
 }

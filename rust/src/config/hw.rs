@@ -121,6 +121,9 @@ pub struct HwConfig {
     pub dram_gbps: f64,
     /// DRAM energy, pJ/bit (paper: 3.7).
     pub dram_pj_per_bit: f64,
+    /// Fixed page size of the GB's KV-cache arena, bytes (the allocation
+    /// granule of [`crate::kv::KvManager`]).
+    pub kv_page_bytes: usize,
 
     // --- limits ---
     /// Maximum supported input length (tokens).
@@ -148,6 +151,7 @@ impl Default for HwConfig {
             trf_dim: 16,
             dram_gbps: 6.4,
             dram_pj_per_bit: 3.7,
+            kv_page_bytes: 2048,
             max_seq: 128,
             points: vec![
                 OperatingPoint { vdd: 0.45, freq_mhz: 60.0, peak_mw: 7.12 },
@@ -269,6 +273,9 @@ impl HwConfig {
         if self.max_seq == 0 || self.gb_bytes == 0 {
             return Err(Error::config("zero capacity"));
         }
+        if self.kv_page_bytes == 0 {
+            return Err(Error::config("zero kv page size"));
+        }
         Ok(())
     }
 
@@ -287,6 +294,7 @@ impl HwConfig {
             ("trf_dim", Json::num(self.trf_dim as f64)),
             ("dram_gbps", Json::num(self.dram_gbps)),
             ("dram_pj_per_bit", Json::num(self.dram_pj_per_bit)),
+            ("kv_page_bytes", Json::num(self.kv_page_bytes as f64)),
             ("max_seq", Json::num(self.max_seq as f64)),
             (
                 "points",
@@ -332,6 +340,11 @@ impl HwConfig {
             trf_dim: j.get("trf_dim")?.as_usize()?,
             dram_gbps: j.get("dram_gbps")?.as_f64()?,
             dram_pj_per_bit: j.get("dram_pj_per_bit")?.as_f64()?,
+            // Absent in pre-KV-arena configs: fall back to the default page.
+            kv_page_bytes: match j.get("kv_page_bytes") {
+                Ok(v) => v.as_usize()?,
+                Err(_) => 2048,
+            },
             max_seq: j.get("max_seq")?.as_usize()?,
             points,
         };
@@ -423,6 +436,7 @@ mod tests {
         assert_eq!(hw.dmm_macs(), hw2.dmm_macs());
         assert_eq!(hw.points, hw2.points);
         assert_eq!(hw.gb_bytes, hw2.gb_bytes);
+        assert_eq!(hw2.kv_page_bytes, 2048);
         // And via text
         let hw3 = HwConfig::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
         assert_eq!(hw3.dram_gbps, hw.dram_gbps);
@@ -438,6 +452,9 @@ mod tests {
         assert!(hw.validate().is_err());
         let mut hw = HwConfig::default();
         hw.max_seq = 0;
+        assert!(hw.validate().is_err());
+        let mut hw = HwConfig::default();
+        hw.kv_page_bytes = 0;
         assert!(hw.validate().is_err());
     }
 }

@@ -8,9 +8,17 @@
 //!
 //! The batcher is pure data structure (no threads) so it can be driven by
 //! the server loop and tested deterministically.
+//!
+//! Decode-side grouping lives here too: [`form_decode_group`] regroups the
+//! pool's between-steps streams under a [`DecodePolicy`] — greedy FIFO (the
+//! chip takes whatever waits) or depth-bucketed, which only groups streams
+//! whose `past_len` falls in the same bucket so the pad waste of a step
+//! (each stream pads to the group's deepest member; ∝ max−min `past_len`)
+//! stays bounded by the bucket width.
 
-use crate::error::Result;
+use crate::coordinator::engine::{DecodeState, MAX_DECODE_GROUP};
 use crate::coordinator::request::Request;
+use crate::error::Result;
 use crate::sim::{batch_class, BatchClass};
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -108,6 +116,85 @@ impl DynamicBatcher {
     }
 }
 
+// ------------------------------------------------------- decode regrouping
+
+/// How the pool regroups decode streams between steps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DecodePolicy {
+    /// FIFO greedy: group whatever sits at the queue front, up to the
+    /// narrowest member's class width (the seed behavior). Mixed depths
+    /// welcome — but the step pads to the deepest member, so a shallow
+    /// stream riding with a deep one wastes `max − min` token-slots.
+    #[default]
+    Greedy,
+    /// Only group streams whose `past_len` falls in the head stream's
+    /// `past_len / bucket` bucket: pad waste per stream is bounded by
+    /// `bucket − 1`. The head of the FIFO always leads its group, so no
+    /// stream waits forever for bucket-mates.
+    DepthBucketed {
+        /// Bucket width in tokens (≥ 1).
+        bucket: usize,
+    },
+}
+
+/// Form one decode group from the between-steps pool under `policy`.
+///
+/// Both policies pop the FIFO head first (fairness) and never group wider
+/// than the narrowest member's class width — each stream's decode budget
+/// was cap-clamped against KV residency at its *class's* batch width, so
+/// grouping it wider would overflow the GB the clamp promised to respect
+/// (B1 streams decode solo, B2 pairs, B4 fours).
+pub fn form_decode_group(
+    pool: &mut VecDeque<DecodeState>,
+    policy: DecodePolicy,
+) -> Vec<DecodeState> {
+    if pool.is_empty() {
+        return Vec::new();
+    }
+    match policy {
+        DecodePolicy::Greedy => {
+            let mut limit = MAX_DECODE_GROUP;
+            let mut take = 0;
+            while take < pool.len() && take < limit {
+                let width = pool[take].class.batch().min(MAX_DECODE_GROUP);
+                if take + 1 > width {
+                    break;
+                }
+                limit = limit.min(width);
+                take += 1;
+            }
+            pool.drain(..take).collect()
+        }
+        DecodePolicy::DepthBucketed { bucket } => {
+            let bucket = bucket.max(1);
+            let head_bucket = pool[0].past_len / bucket;
+            let mut limit = MAX_DECODE_GROUP;
+            let mut picked: Vec<usize> = Vec::new();
+            let mut i = 0;
+            while i < pool.len() && picked.len() < limit {
+                let s = &pool[i];
+                if s.past_len / bucket == head_bucket {
+                    let width = s.class.batch().min(MAX_DECODE_GROUP);
+                    if picked.len() + 1 > width {
+                        // A narrower bucket-mate can't ride this group;
+                        // stop so it leads its own group soon (FIFO-ish).
+                        break;
+                    }
+                    limit = limit.min(width);
+                    picked.push(i);
+                }
+                i += 1;
+            }
+            let mut out = Vec::with_capacity(picked.len());
+            for &idx in picked.iter().rev() {
+                out.push(pool.remove(idx).expect("picked index valid"));
+            }
+            out.reverse();
+            out
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -183,6 +270,109 @@ mod tests {
         let batches = b.drain();
         assert_eq!(batches.iter().map(|f| f.requests.len()).sum::<usize>(), 2);
         assert_eq!(b.pending(), 0);
+    }
+
+    fn stream(id: u64, class: BatchClass, past_len: usize) -> DecodeState {
+        DecodeState::stub(id, class, past_len)
+    }
+
+    fn pool_of(streams: Vec<DecodeState>) -> VecDeque<DecodeState> {
+        streams.into_iter().collect()
+    }
+
+    fn pad_waste(group: &[DecodeState]) -> usize {
+        let max = group.iter().map(|s| s.past_len).max().unwrap_or(0);
+        group.iter().map(|s| max - s.past_len).sum()
+    }
+
+    #[test]
+    fn greedy_groups_fifo_up_to_narrowest_width() {
+        let mut pool = pool_of(vec![
+            stream(0, BatchClass::B4, 10),
+            stream(1, BatchClass::B4, 50),
+            stream(2, BatchClass::B4, 11),
+            stream(3, BatchClass::B4, 12),
+            stream(4, BatchClass::B4, 13),
+        ]);
+        let g = form_decode_group(&mut pool, DecodePolicy::Greedy);
+        assert_eq!(g.iter().map(|s| s.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(pool.len(), 1);
+        // A B1 head decodes solo; a B1 mid-queue stops the group before it.
+        let mut pool = pool_of(vec![stream(0, BatchClass::B1, 5), stream(1, BatchClass::B4, 5)]);
+        let g = form_decode_group(&mut pool, DecodePolicy::Greedy);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].id, 0);
+        let mut pool = pool_of(vec![
+            stream(0, BatchClass::B4, 5),
+            stream(1, BatchClass::B1, 5),
+            stream(2, BatchClass::B4, 5),
+        ]);
+        let g = form_decode_group(&mut pool, DecodePolicy::Greedy);
+        assert_eq!(g.len(), 1, "B1 can't ride a pair — group stops at it");
+    }
+
+    #[test]
+    fn depth_bucketed_bounds_pad_waste() {
+        // Greedy over a mixed-depth pool pads shallow streams to the
+        // deepest rider; bucketed grouping keeps the spread ≤ bucket−1.
+        let streams = || {
+            vec![
+                stream(0, BatchClass::B4, 4),
+                stream(1, BatchClass::B4, 64),
+                stream(2, BatchClass::B4, 5),
+                stream(3, BatchClass::B4, 6),
+                stream(4, BatchClass::B4, 70),
+            ]
+        };
+        let mut greedy_pool = pool_of(streams());
+        let greedy = form_decode_group(&mut greedy_pool, DecodePolicy::Greedy);
+        assert!(pad_waste(&greedy) >= 60, "greedy pads 4..64: {}", pad_waste(&greedy));
+
+        let bucket = 8;
+        let mut pool = pool_of(streams());
+        let g1 = form_decode_group(&mut pool, DecodePolicy::DepthBucketed { bucket });
+        assert_eq!(g1.iter().map(|s| s.id).collect::<Vec<_>>(), vec![0, 2, 3]);
+        assert!(pad_waste(&g1) <= (bucket - 1) * g1.len());
+        // The deep streams lead the next group.
+        let g2 = form_decode_group(&mut pool, DecodePolicy::DepthBucketed { bucket });
+        assert_eq!(g2.iter().map(|s| s.id).collect::<Vec<_>>(), vec![1, 4]);
+        assert!(pool.is_empty());
+    }
+
+    #[test]
+    fn depth_bucketed_head_always_leads_and_pool_drains() {
+        let mut pool = pool_of(vec![
+            stream(0, BatchClass::B4, 100),
+            stream(1, BatchClass::B4, 3),
+            stream(2, BatchClass::B4, 101),
+            stream(3, BatchClass::B1, 102),
+        ]);
+        let mut seen = Vec::new();
+        let mut guard = 0;
+        while !pool.is_empty() {
+            let g = form_decode_group(&mut pool, DecodePolicy::DepthBucketed { bucket: 16 });
+            assert!(!g.is_empty(), "progress on every call");
+            seen.extend(g.iter().map(|s| s.id));
+            guard += 1;
+            assert!(guard < 10);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3], "every stream exits exactly once");
+    }
+
+    #[test]
+    fn depth_bucketed_respects_class_width() {
+        // Two streams in one bucket, but the second is B2: the group is
+        // bounded by the narrowest member's width (2), and a third
+        // bucket-mate can't join.
+        let mut pool = pool_of(vec![
+            stream(0, BatchClass::B4, 8),
+            stream(1, BatchClass::B2, 9),
+            stream(2, BatchClass::B4, 10),
+        ]);
+        let g = form_decode_group(&mut pool, DecodePolicy::DepthBucketed { bucket: 16 });
+        assert_eq!(g.iter().map(|s| s.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(pool.len(), 1);
     }
 
     #[test]

@@ -26,8 +26,10 @@
 use crate::config::{HwConfig, ModelConfig};
 use crate::coordinator::batcher::FormedBatch;
 use crate::coordinator::request::{RequestId, Response, TokenEvent};
+use crate::coordinator::server::WorkerCtx;
 use crate::coordinator::sim_cache::{CachedPass, PassKey, SimCache};
 use crate::error::{Error, Result};
+use crate::kv::{KvArenaConfig, KvManager, KvQuant};
 use crate::model::{build_decode_step, build_program};
 use crate::runtime::ArtifactSet;
 use crate::sim::{simulate, BatchClass, GbBudget, SimOptions};
@@ -35,7 +37,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 /// Most streams one decode step batches (the chip's four-up plane slicing).
-pub const MAX_DECODE_GROUP: usize = 4;
+pub const MAX_DECODE_GROUP: usize = crate::kv::MAX_GROUP_STREAMS;
 
 /// Engine configuration.
 pub struct EngineConfig {
@@ -44,6 +46,13 @@ pub struct EngineConfig {
     pub perf_model: ModelConfig,
     /// Run the artifact self-test at startup.
     pub self_test: bool,
+    /// KV-cache arena precision: residency accounting, decode caps, and the
+    /// per-step dequant charge all follow it. `Fp16` is the honest
+    /// full-precision baseline; `Int8`/`Int4` halve/quarter residency.
+    pub kv_quant: KvQuant,
+    /// Override the KV arena's page budget (`None`: carve it out of the GB
+    /// after the fixed decode residents — see [`KvArenaConfig::for_pool`]).
+    pub kv_pages: Option<usize>,
 }
 
 /// A generate request's in-flight decode stream between steps. Created by
@@ -115,16 +124,30 @@ pub struct DecodeOutcome {
     pub tokens: Vec<TokenEvent>,
     pub active: Vec<DecodeState>,
     pub responses: Vec<Response>,
+    /// Token-slots the step wasted padding shallower members to the
+    /// deepest (`Σ max(past) − past_i`) — what depth-bucketed grouping
+    /// exists to bound.
+    pub pad_waste_tokens: u64,
+    /// Evicted members that had to swap their KV back in for this step.
+    pub kv_swap_ins: u64,
+    /// Swap-in EMA bytes the step paid before running.
+    pub kv_swap_bytes: u64,
 }
 
 /// Executes batches. Owns the compiled artifacts; the simulation cache is
-/// shared (keyed by [`PassKey`] — programs are deterministic).
+/// shared (keyed by [`PassKey`] — programs are deterministic), and so is
+/// the [`KvManager`] in pool setups — aggregate KV residency is a
+/// *pool-wide* property, not a per-worker one.
 pub struct Engine {
     artifacts: ArtifactSet,
     cfg: EngineConfig,
     sim_cache: Arc<SimCache>,
+    /// Paged KV-cache manager: registered at prefill, consulted before
+    /// every decode step (swap-in charges), released at completion.
+    kv: Arc<KvManager>,
     /// Per-class decode-length caps (indexed by `BatchClass::index()`),
-    /// derived from the GB's KV residency at the class's batch width.
+    /// derived from the GB's KV residency at the class's batch width and
+    /// the arena's quantization mode.
     decode_caps: [usize; 3],
 }
 
@@ -134,22 +157,65 @@ impl Engine {
         Self::with_cache(artifacts, cfg, Arc::new(SimCache::new()))
     }
 
-    /// Engine over a shared simulation cache (the pool path — every worker
-    /// passes the pool's cache so passes are simulated once process-wide).
+    /// Engine over a shared simulation cache with a *private* KV manager —
+    /// the single-engine shape. Pool workers should share one manager via
+    /// [`Engine::with_parts`] / [`Engine::for_worker`] instead, or each
+    /// worker budgets the arena as if it owned the whole GB.
     pub fn with_cache(
         artifacts: ArtifactSet,
         cfg: EngineConfig,
         sim_cache: Arc<SimCache>,
+    ) -> Result<Self> {
+        let kv = Arc::new(KvManager::new(
+            &cfg.hw,
+            &cfg.perf_model,
+            KvArenaConfig::for_pool(&cfg.hw, &cfg.perf_model, cfg.kv_quant, cfg.kv_pages),
+        ));
+        Self::with_parts(artifacts, cfg, sim_cache, kv)
+    }
+
+    /// Engine over an explicitly shared simulation cache *and* KV manager
+    /// (the pool path). The manager's quantization mode is authoritative
+    /// for decode caps and dequant charges.
+    pub fn with_parts(
+        artifacts: ArtifactSet,
+        cfg: EngineConfig,
+        sim_cache: Arc<SimCache>,
+        kv: Arc<KvManager>,
     ) -> Result<Self> {
         if cfg.self_test {
             artifacts.self_test()?;
         }
         let mut decode_caps = [0usize; 3];
         for class in BatchClass::ALL {
-            decode_caps[class.index()] =
-                GbBudget::max_decode_len(&cfg.hw, &cfg.perf_model, class.batch());
+            decode_caps[class.index()] = GbBudget::max_decode_len_quant(
+                &cfg.hw,
+                &cfg.perf_model,
+                class.batch(),
+                kv.quant(),
+            );
         }
-        Ok(Engine { artifacts, cfg, sim_cache, decode_caps })
+        Ok(Engine { artifacts, cfg, sim_cache, kv, decode_caps })
+    }
+
+    /// Convenience for pool engine factories: shared cache always, shared
+    /// KV manager always — the one from `PoolConfig::kv` when configured,
+    /// else a pool-wide fallback the first worker's engine installs in
+    /// [`WorkerCtx::kv_shared`] (decode streams hop workers through the
+    /// shared queue, so per-worker private arenas would leak entries and
+    /// miss eviction/swap charges).
+    pub fn for_worker(artifacts: ArtifactSet, cfg: EngineConfig, ctx: &WorkerCtx) -> Result<Self> {
+        let kv = match &ctx.kv {
+            Some(kv) => Arc::clone(kv),
+            None => Arc::clone(ctx.kv_shared.get_or_init(|| {
+                Arc::new(KvManager::new(
+                    &cfg.hw,
+                    &cfg.perf_model,
+                    KvArenaConfig::for_pool(&cfg.hw, &cfg.perf_model, cfg.kv_quant, cfg.kv_pages),
+                ))
+            })),
+        };
+        Self::with_parts(artifacts, cfg, Arc::clone(&ctx.sim_cache), kv)
     }
 
     pub fn model_name(&self) -> &str {
@@ -163,6 +229,10 @@ impl Engine {
     }
     pub fn sim_cache(&self) -> &Arc<SimCache> {
         &self.sim_cache
+    }
+    /// The paged KV-cache manager this engine charges residency against.
+    pub fn kv_manager(&self) -> &Arc<KvManager> {
+        &self.kv
     }
 
     /// Admission cap on total KV depth (prefill + generated) for a class:
@@ -202,13 +272,22 @@ impl Engine {
     }
 
     /// Simulate (with shared caching) one decode step of a `group`-stream
-    /// batch at KV depth `past_len`.
+    /// batch at KV depth `past_len`. The budget and the dequant charge
+    /// follow the arena's quantization mode; both are deterministic in
+    /// `(group, past_len)`, so they live inside the cached pass (swap-in
+    /// charges are *not* — they depend on eviction history and are added
+    /// per occurrence by [`Engine::execute_decode`]).
     fn decode_perf(&self, group: usize, past_len: usize) -> CachedPass {
-        self.sim_cache.get_or_simulate(PassKey::decode(group, past_len), || {
+        let quant = self.kv.quant();
+        self.sim_cache.get_or_simulate(PassKey::decode(group, past_len, quant), || {
             let m = &self.cfg.perf_model;
             let prog = build_decode_step(m, past_len, group);
-            let gb = GbBudget::for_decode(&self.cfg.hw, m, past_len, group);
-            let stats = simulate(&self.cfg.hw, &prog, &self.sim_options(gb));
+            let gb = GbBudget::for_decode_quant(&self.cfg.hw, m, past_len, group, quant);
+            let mut opts = self.sim_options(gb);
+            // The chip pads the group to its deepest member, so the
+            // dequant pass covers the padded planes too.
+            opts.kv_dequant_bytes_per_layer = self.kv.dequant_bytes_per_layer(group, past_len);
+            let stats = simulate(&self.cfg.hw, &prog, &opts);
             CachedPass {
                 chip_us: stats.seconds() * 1e6,
                 chip_uj: stats.energy.total_uj(),
@@ -277,6 +356,9 @@ impl Engine {
             // the resident KV prefix — capped, not rejected.
             let generate = r.generate.min(cap.saturating_sub(r.len));
             if generate > 0 {
+                // The stream's prefill KV becomes arena-resident (no swap
+                // charge — prefill writes the planes fresh).
+                self.kv.register(r.id, r.len);
                 // The stream's next input is its last prefill output row.
                 let last = output[(r.len - 1) * d..r.len * d].to_vec();
                 outcome.decoding.push(DecodeState {
@@ -296,6 +378,11 @@ impl Engine {
                     ema_bytes: per_req_ema,
                 });
             } else {
+                if r.generate > 0 {
+                    // Asked to generate but cap-clamped to zero: release
+                    // any admission reservation so the arena slot frees.
+                    self.kv.release(r.id);
+                }
                 outcome.responses.push(Response {
                     id: r.id,
                     output,
@@ -345,6 +432,13 @@ impl Engine {
         }
         let group_past_lens: Vec<usize> = group.iter().map(|s| s.past_len).collect();
         let max_past = *group_past_lens.iter().max().expect("non-empty group");
+        // Aggregate residency: every member becomes arena-resident at its
+        // current depth before the step — evicted members pay swap-in EMA
+        // for their whole KV (parked streams are never free).
+        let members: Vec<(RequestId, usize)> = group.iter().map(|s| (s.id, s.past_len)).collect();
+        let charge = self.kv.prepare_group(&members);
+        let swap_us = self.cfg.hw.dram_ns(charge.swap_in_bytes as usize) * 1e-3;
+        let swap_uj = self.cfg.hw.dram_pj(charge.swap_in_bytes as usize) * 1e-6;
         // Any class entry works: the decode plane is row-wise and `n` rows.
         let out = self.artifacts.get(BatchClass::B4)?.exe.run_f32(&plane, n, d)?;
         let perf = self.decode_perf(n, max_past);
@@ -352,12 +446,19 @@ impl Engine {
         // step's cost split across the group, like prefill's per-request
         // split), while `us_per_token` is the paper's µs/token (step wall
         // time over n tokens) and `Response.chip_us` accumulates the FULL
-        // step latency — every rider experiences the whole step's wall time.
-        let per_us = perf.chip_us / n as f64;
-        let per_uj = perf.chip_uj / n as f64;
-        let per_ema = perf.ema_bytes / n as u64;
+        // step latency — every rider experiences the whole step's wall
+        // time, swap-in stalls included.
+        let step_us = perf.chip_us + swap_us;
+        let per_us = step_us / n as f64;
+        let per_uj = (perf.chip_uj + swap_uj) / n as f64;
+        let per_ema = (perf.ema_bytes + charge.swap_in_bytes) / n as u64;
 
-        let mut outcome = DecodeOutcome::default();
+        let mut outcome = DecodeOutcome {
+            pad_waste_tokens: group_past_lens.iter().map(|&p| (max_past - p) as u64).sum(),
+            kv_swap_ins: charge.swap_ins,
+            kv_swap_bytes: charge.swap_in_bytes,
+            ..DecodeOutcome::default()
+        };
         for (i, mut s) in group.into_iter().enumerate() {
             let step_past = s.past_len;
             let index = s.generated;
@@ -365,7 +466,7 @@ impl Engine {
             s.past_len += 1;
             s.generated += 1;
             s.remaining -= 1;
-            s.chip_us += perf.chip_us;
+            s.chip_us += step_us;
             s.chip_uj += per_uj;
             s.ema_bytes += per_ema;
             outcome.tokens.push(TokenEvent {
@@ -380,11 +481,39 @@ impl Engine {
                 emitted: Instant::now(),
             });
             if s.remaining == 0 {
+                // Final token: the stream's arena pages and admission
+                // reservation free up for waiting streams.
+                self.kv.release(s.id);
                 outcome.responses.push(s.into_response());
             } else {
                 outcome.active.push(s);
             }
         }
+        // Step done: surviving members park (resident, evictable again).
+        self.kv.finish_group(&members);
         Ok(outcome)
+    }
+}
+
+#[cfg(test)]
+impl DecodeState {
+    /// Bare stream for grouper unit tests (no payload, one token left).
+    pub(crate) fn stub(id: RequestId, class: BatchClass, past_len: usize) -> DecodeState {
+        DecodeState {
+            id,
+            class,
+            prefill_len: past_len,
+            past_len,
+            remaining: 1,
+            generated: 0,
+            arrival: Instant::now(),
+            last: Vec::new(),
+            output: Vec::new(),
+            queue_us: 0.0,
+            utilization: 0.0,
+            chip_us: 0.0,
+            chip_uj: 0.0,
+            ema_bytes: 0,
+        }
     }
 }

@@ -19,6 +19,13 @@ struct Inner {
     decode_steps: u64,
     /// Tokens generated autoregressively across all streams.
     tokens_decoded: u64,
+    /// Token-slots decode steps wasted padding shallower group members to
+    /// the deepest (what depth-bucketed grouping bounds).
+    pad_waste_tokens: u64,
+    /// Evicted streams swapped back into the KV arena (and the EMA bytes
+    /// those swap-ins were charged).
+    kv_swap_ins: u64,
+    kv_swap_bytes: u64,
     /// Requests refused at admission (backpressure / malformed length).
     rejected: u64,
     /// Batches dropped because the engine's execute failed.
@@ -78,9 +85,14 @@ impl ServerMetrics {
         m.us_per_token.push(ev.us_per_token);
     }
 
-    /// One decode step executed (any group size).
-    pub fn record_decode_step(&self) {
-        self.inner.lock().unwrap().decode_steps += 1;
+    /// One decode step executed (any group size), with the step's padding
+    /// waste and KV swap-in charges.
+    pub fn record_decode_step(&self, pad_waste_tokens: u64, kv_swap_ins: u64, kv_swap_bytes: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.decode_steps += 1;
+        m.pad_waste_tokens += pad_waste_tokens;
+        m.kv_swap_ins += kv_swap_ins;
+        m.kv_swap_bytes += kv_swap_bytes;
     }
 
     /// A request refused at admission (backpressure or bad length).
@@ -99,6 +111,14 @@ impl ServerMetrics {
 
     pub fn tokens_decoded(&self) -> u64 {
         self.inner.lock().unwrap().tokens_decoded
+    }
+
+    pub fn pad_waste_tokens(&self) -> u64 {
+        self.inner.lock().unwrap().pad_waste_tokens
+    }
+
+    pub fn kv_swap_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().kv_swap_bytes
     }
 
     pub fn rejected(&self) -> u64 {
@@ -125,6 +145,9 @@ impl ServerMetrics {
             ("tokens", Json::num(m.tokens as f64)),
             ("decode_steps", Json::num(m.decode_steps as f64)),
             ("tokens_decoded", Json::num(m.tokens_decoded as f64)),
+            ("pad_waste_tokens", Json::num(m.pad_waste_tokens as f64)),
+            ("kv_swap_ins", Json::num(m.kv_swap_ins as f64)),
+            ("kv_swap_bytes", Json::num(m.kv_swap_bytes as f64)),
             ("rejected", Json::num(m.rejected as f64)),
             ("execute_errors", Json::num(m.execute_errors as f64)),
             ("throughput_rps", Json::num(thr)),
@@ -208,7 +231,7 @@ mod tests {
         use std::time::Instant;
         let m = ServerMetrics::new();
         for (i, us) in [100.0, 200.0, 300.0, 400.0, 500.0].iter().enumerate() {
-            m.record_decode_step();
+            m.record_decode_step(0, 0, 0);
             m.record_token(&TokenEvent {
                 id: 7,
                 index: i,
@@ -231,6 +254,20 @@ mod tests {
         // carries the accumulated decode shares and is counted exactly once
         // (no double counting).
         assert_eq!(j.get("ema_bytes_total").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn decode_step_pad_and_swap_counters_aggregate() {
+        let m = ServerMetrics::new();
+        m.record_decode_step(3, 1, 4096);
+        m.record_decode_step(0, 0, 0);
+        assert_eq!(m.pad_waste_tokens(), 3);
+        assert_eq!(m.kv_swap_bytes(), 4096);
+        let j = m.report(1.0);
+        assert_eq!(j.get("decode_steps").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.get("pad_waste_tokens").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get("kv_swap_ins").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(j.get("kv_swap_bytes").unwrap().as_f64().unwrap(), 4096.0);
     }
 
     #[test]

@@ -8,11 +8,14 @@
 //! cycle-level simulator via a process-wide shared [`sim_cache::SimCache`].
 //! Generate requests continue past prefill as [`engine::DecodeState`]
 //! streams with token-level continuous batching: they re-enter the queue
-//! after every decode step, regrouping with whatever streams are waiting
-//! (mixed KV depths welcome), and stream [`request::TokenEvent`]s back while
-//! in flight. Admission applies bounded-queue backpressure (reject/shed when
-//! saturated). `std::thread` + mpsc channels (tokio is not vendored offline
-//! — DESIGN.md §2).
+//! after every decode step, regrouping under the pool's
+//! [`batcher::DecodePolicy`] (greedy FIFO or depth-bucketed to bound pad
+//! waste), and stream [`request::TokenEvent`]s back while in flight. Their
+//! KV lives in the pool-wide paged arena of [`crate::kv::KvManager`]:
+//! admission bounds aggregate decode state, parked streams keep their
+//! pages, and evicted streams pay swap-in EMA on rejoin. Admission applies
+//! bounded-queue backpressure (reject/shed when saturated). `std::thread`
+//! + mpsc channels (tokio is not vendored offline — DESIGN.md §2).
 
 pub mod batcher;
 pub mod engine;
@@ -22,7 +25,9 @@ pub mod server;
 pub mod sim_cache;
 pub mod trace;
 
-pub use batcher::{BatcherConfig, DynamicBatcher, FormedBatch};
+pub use batcher::{
+    form_decode_group, BatcherConfig, DecodePolicy, DynamicBatcher, FormedBatch,
+};
 pub use engine::{
     DecodeOutcome, DecodeState, Engine, EngineConfig, ExecOutcome, MAX_DECODE_GROUP,
 };

@@ -15,15 +15,23 @@
 //!
 //! **Token-level continuous batching**: a generate request's prefill turns
 //! it into a [`DecodeState`] that re-enters the shared queue after *every*
-//! decode step. Workers pull decode groups of up to [`MAX_DECODE_GROUP`]
-//! streams — whatever is waiting, at whatever KV depths, bounded by the
-//! narrowest member's class width so the per-class KV-residency cap each
-//! stream was admitted under keeps holding — so streams join and leave
-//! batches between steps and freshly-prefilled requests merge into
-//! in-flight generations. Per-token results stream on a dedicated channel
+//! decode step. Workers pull decode groups of up to
+//! [`crate::coordinator::engine::MAX_DECODE_GROUP`] streams under the
+//! pool's [`DecodePolicy`] — greedy FIFO at whatever KV depths, or
+//! depth-bucketed to bound pad waste — always bounded by the narrowest
+//! member's class width so the per-class KV-residency cap each stream was
+//! admitted under keeps holding. Streams join and leave batches between
+//! steps and freshly-prefilled requests merge into in-flight generations.
+//! Per-token results stream on a dedicated channel
 //! ([`ServerHandle::tokens`]) while the final response still arrives on
 //! `responses`. A worker with both kinds of work alternates prefill/decode
 //! so neither side starves.
+//!
+//! **Aggregate KV residency**: with a [`KvManager`] configured
+//! ([`PoolConfig::kv`]), generate admissions are additionally bounded by
+//! projected KV-arena bytes, and the engines (sharing the same manager via
+//! [`WorkerCtx::kv`]) charge swap-in EMA whenever an evicted stream
+//! rejoins a step — parked KV is never free.
 //!
 //! **Backpressure**: admission rejects (`Error::Serve`) once the in-flight
 //! request count or the work-queue depth crosses the configured bound, so
@@ -32,18 +40,21 @@
 //! response. (std threads + mpsc — tokio is not vendored offline,
 //! DESIGN.md §2.)
 
-use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher, FormedBatch};
-use crate::coordinator::engine::{DecodeState, Engine, MAX_DECODE_GROUP};
+use crate::coordinator::batcher::{
+    form_decode_group, BatcherConfig, DecodePolicy, DynamicBatcher, FormedBatch,
+};
+use crate::coordinator::engine::{DecodeState, Engine};
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::request::{Request, Response, TokenEvent};
 use crate::coordinator::sim_cache::{CacheStats, SimCache};
 use crate::error::{Error, Result};
+use crate::kv::KvManager;
 use crate::sim::{batch_class, BatchClass};
 use crate::util::json::Json;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -83,6 +94,16 @@ pub struct PoolConfig {
     pub max_inflight: usize,
     /// Warm-worker class-affinity scheduling (see module docs).
     pub affinity: bool,
+    /// How decode streams regroup between steps (greedy FIFO or
+    /// depth-bucketed — see [`DecodePolicy`]).
+    pub decode: DecodePolicy,
+    /// Pool-wide KV-cache manager: when set, admission bounds generate
+    /// requests by projected arena bytes ([`KvManager::try_admit`]), and
+    /// the same `Arc` reaches every worker's engine factory through
+    /// [`WorkerCtx::kv`] (use [`Engine::for_worker`]) so residency,
+    /// eviction and swap-in charging are pool-wide. `None`: each engine
+    /// keeps a private manager and admission skips the KV bound.
+    pub kv: Option<Arc<KvManager>>,
     pub batcher: BatcherConfig,
 }
 
@@ -106,16 +127,27 @@ impl Default for PoolConfig {
             queue_depth: 256,
             max_inflight: 4096,
             affinity: true,
+            decode: DecodePolicy::Greedy,
+            kv: None,
             batcher: BatcherConfig::default(),
         }
     }
 }
 
-/// Everything a worker's engine factory gets handed: its index and the
-/// pool-wide simulation cache (pass it to [`Engine::with_cache`]).
+/// Everything a worker's engine factory gets handed: its index, the
+/// pool-wide simulation cache, and the pool-wide KV manager when one was
+/// configured (pass both through [`Engine::for_worker`]).
 pub struct WorkerCtx {
     pub worker: usize,
     pub sim_cache: Arc<SimCache>,
+    /// The pool's shared KV-cache manager (`PoolConfig::kv`), if any.
+    pub kv: Option<Arc<KvManager>>,
+    /// Fallback shared slot when `kv` is `None`: the first engine built via
+    /// [`Engine::for_worker`] installs its manager here and every later
+    /// worker adopts it — decode streams hop workers through the shared
+    /// queue, so per-worker private arenas would leak entries and miss
+    /// eviction/swap charges. One pool, one arena.
+    pub kv_shared: Arc<OnceLock<Arc<KvManager>>>,
 }
 
 // ---------------------------------------------------------------- work queue
@@ -141,15 +173,18 @@ struct WorkQueue {
     /// Lock-free length mirror for the admission path (prefill batches).
     len_hint: AtomicUsize,
     affinity: bool,
+    /// Decode regrouping policy ([`form_decode_group`]).
+    decode: DecodePolicy,
 }
 
 impl WorkQueue {
-    fn new(affinity: bool) -> Self {
+    fn new(affinity: bool, decode: DecodePolicy) -> Self {
         WorkQueue {
             state: Mutex::new(QueueState::default()),
             ready: Condvar::new(),
             len_hint: AtomicUsize::new(0),
             affinity,
+            decode,
         }
     }
 
@@ -198,23 +233,10 @@ impl WorkQueue {
             let has_decode = !s.decode.is_empty();
             let has_prefill = s.len > 0;
             if has_decode && !(prefer_prefill && has_prefill) {
-                // Group from the FIFO front, never wider than the narrowest
-                // member's class width: each stream's decode budget was
-                // cap-clamped against KV residency at its *class's* batch
-                // width (Engine::decode_cap), so grouping it wider would
-                // overflow the GB the clamp promised to respect. B4 streams
-                // batch four-up, B2 pairs, B1 decodes solo.
-                let mut limit = MAX_DECODE_GROUP;
-                let mut take = 0;
-                while take < s.decode.len() && take < limit {
-                    let width = s.decode[take].class.batch().min(MAX_DECODE_GROUP);
-                    if take + 1 > width {
-                        break;
-                    }
-                    limit = limit.min(width);
-                    take += 1;
-                }
-                let group: Vec<DecodeState> = s.decode.drain(..take).collect();
+                // Regroup under the configured policy (greedy FIFO or
+                // depth-bucketed); both bound the group by the narrowest
+                // member's class width so per-class KV caps keep holding.
+                let group = form_decode_group(&mut s.decode, self.decode);
                 return Some(WorkItem::Decode(group));
             }
             if has_prefill {
@@ -263,6 +285,8 @@ pub struct Submitter {
     metrics: Arc<ServerMetrics>,
     queue: Arc<WorkQueue>,
     inflight: Arc<AtomicUsize>,
+    /// KV-arena admission for generate requests (None = unbounded).
+    kv: Option<Arc<KvManager>>,
     /// Send gate: submits hold the read side across the closed-check +
     /// send, shutdown takes the write side to flip it — so no send can be
     /// in flight when the pool closes, and a submit that returned `Ok` is
@@ -287,10 +311,14 @@ impl Submitter {
     pub fn try_submit(&self, req: Request) -> std::result::Result<(), (Request, Error)> {
         // Validate at the door: an unservable length must fail the caller,
         // not vanish in the ingest thread with no response ever coming.
-        if let Err(e) = batch_class(req.len, self.max_seq) {
-            self.metrics.record_rejected();
-            return Err((req, e));
-        }
+        // (The class also fixes the width the KV projection clamps at.)
+        let class = match batch_class(req.len, self.max_seq) {
+            Ok(class) => class,
+            Err(e) => {
+                self.metrics.record_rejected();
+                return Err((req, e));
+            }
+        };
         // Hold the gate's read side for the rest of admission: shutdown
         // can't flip `closed` (write side) until this send has completed.
         let gate = self.closed.read().unwrap();
@@ -321,9 +349,34 @@ impl Submitter {
                 )),
             ));
         }
+        // Generate requests are additionally bounded by the KV arena: the
+        // pool won't accept more projected decode state than the arena's
+        // oversubscription bound — per-class caps alone don't see the
+        // *aggregate* across concurrent streams.
+        if req.generate > 0 {
+            if let Some(kv) = &self.kv {
+                if !kv.try_admit(req.id, req.len, req.generate, class.batch()) {
+                    self.inflight.fetch_sub(1, Ordering::AcqRel);
+                    self.metrics.record_rejected();
+                    return Err((
+                        req,
+                        Error::serve(format!(
+                            "kv arena full: {} live streams project past the residency bound",
+                            kv.live_streams()
+                        )),
+                    ));
+                }
+            }
+        }
         if let Err(send_err) = self.tx.send(Msg::Req(req)) {
             self.inflight.fetch_sub(1, Ordering::AcqRel);
             let Msg::Req(req) = send_err.0 else { unreachable!("we sent a request") };
+            if req.generate > 0 {
+                if let Some(kv) = &self.kv {
+                    // Undo the arena reservation — the stream never ran.
+                    kv.release(req.id);
+                }
+            }
             return Err((req, Error::serve("server is down".to_string())));
         }
         Ok(())
@@ -352,6 +405,7 @@ pub struct ServerHandle {
     pub metrics: Arc<ServerMetrics>,
     worker_metrics: Vec<Arc<ServerMetrics>>,
     sim_cache: Arc<SimCache>,
+    kv: Option<Arc<KvManager>>,
     ingest: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<Result<()>>>,
     started: Instant,
@@ -425,6 +479,7 @@ impl ServerHandle {
             metrics: Arc::clone(&self.metrics),
             workers: self.worker_metrics.clone(),
             cache: self.sim_cache.stats(),
+            kv: self.kv.clone(),
         })
     }
 
@@ -442,6 +497,8 @@ pub struct ServerReport {
     /// Per-worker metrics, indexed by worker id.
     pub workers: Vec<Arc<ServerMetrics>>,
     pub cache: CacheStats,
+    /// The pool's shared KV manager (when one was configured).
+    pub kv: Option<Arc<KvManager>>,
 }
 
 impl ServerReport {
@@ -457,6 +514,9 @@ impl ServerReport {
                     ("hit_rate", Json::num(self.cache.hit_rate())),
                 ]),
             );
+            if let Some(kv) = &self.kv {
+                m.insert("kv_arena".to_string(), kv.to_json());
+            }
             m.insert(
                 "workers".to_string(),
                 Json::Arr(
@@ -501,17 +561,23 @@ impl Server {
         let (tok_tx, tok_rx) = channel::<TokenEvent>();
         let pooled = Arc::new(ServerMetrics::new());
         let sim_cache = Arc::new(SimCache::new());
-        let queue = Arc::new(WorkQueue::new(cfg.affinity));
+        let queue = Arc::new(WorkQueue::new(cfg.affinity, cfg.decode));
         let inflight = Arc::new(AtomicUsize::new(0));
         let factory = Arc::new(make_engine);
 
         let n_workers = cfg.workers.max(1);
+        let kv_shared: Arc<OnceLock<Arc<KvManager>>> = Arc::new(OnceLock::new());
         let mut worker_metrics = Vec::with_capacity(n_workers);
         let mut workers = Vec::with_capacity(n_workers);
         for worker in 0..n_workers {
             let own = Arc::new(ServerMetrics::new());
             worker_metrics.push(Arc::clone(&own));
-            let ctx = WorkerCtx { worker, sim_cache: Arc::clone(&sim_cache) };
+            let ctx = WorkerCtx {
+                worker,
+                sim_cache: Arc::clone(&sim_cache),
+                kv: cfg.kv.clone(),
+                kv_shared: Arc::clone(&kv_shared),
+            };
             let factory = Arc::clone(&factory);
             let queue = Arc::clone(&queue);
             let pooled = Arc::clone(&pooled);
@@ -542,11 +608,19 @@ impl Server {
         let ingest_metrics = Arc::clone(&pooled);
         let ingest_queue = Arc::clone(&queue);
         let ingest_inflight = Arc::clone(&inflight);
+        let ingest_kv = cfg.kv.clone();
         let batcher_cfg = cfg.batcher;
         let ingest = std::thread::Builder::new()
             .name("trex-ingest".to_string())
             .spawn(move || {
-                ingest_loop(batcher_cfg, rx, ingest_queue, ingest_metrics, ingest_inflight)
+                ingest_loop(
+                    batcher_cfg,
+                    rx,
+                    ingest_queue,
+                    ingest_metrics,
+                    ingest_inflight,
+                    ingest_kv,
+                )
             })
             .expect("spawn ingest thread");
 
@@ -556,6 +630,7 @@ impl Server {
                 metrics: Arc::clone(&pooled),
                 queue,
                 inflight,
+                kv: cfg.kv.clone(),
                 closed: Arc::new(RwLock::new(false)),
                 queue_depth: cfg.queue_depth,
                 max_inflight: cfg.max_inflight,
@@ -566,6 +641,7 @@ impl Server {
             metrics: pooled,
             worker_metrics,
             sim_cache,
+            kv: cfg.kv,
             ingest: Some(ingest),
             workers,
             started: Instant::now(),
@@ -582,17 +658,27 @@ fn ingest_loop(
     queue: Arc<WorkQueue>,
     metrics: Arc<ServerMetrics>,
     inflight: Arc<AtomicUsize>,
+    kv: Option<Arc<KvManager>>,
 ) {
     let mut batcher = DynamicBatcher::new(batcher_cfg);
     // Admit one request into the batcher, forwarding any formed batch.
     // Unservable lengths are normally rejected at submit; this is the
-    // defense-in-depth path (shed, never poison the pool).
-    let admit = |batcher: &mut DynamicBatcher, req: Request| match batcher.push(req) {
-        Ok(Some(batch)) => queue.push(batch),
-        Ok(None) => {}
-        Err(_) => {
-            metrics.record_rejected();
-            inflight.fetch_sub(1, Ordering::AcqRel);
+    // defense-in-depth path (shed, never poison the pool — and a shed
+    // generate request must give back its kv-arena reservation).
+    let admit = |batcher: &mut DynamicBatcher, req: Request| {
+        let (id, generate) = (req.id, req.generate);
+        match batcher.push(req) {
+            Ok(Some(batch)) => queue.push(batch),
+            Ok(None) => {}
+            Err(_) => {
+                metrics.record_rejected();
+                inflight.fetch_sub(1, Ordering::AcqRel);
+                if generate > 0 {
+                    if let Some(kv) = &kv {
+                        kv.release(id);
+                    }
+                }
+            }
         }
     };
     loop {
@@ -660,6 +746,12 @@ fn worker_loop(
                 last_was_decode = false;
                 warm = Some(batch.class);
                 let n = batch.requests.len();
+                // Generate requests may hold kv-arena admission
+                // reservations; a shed batch must release them or the
+                // admission bound leaks shut (client-triggerable via a
+                // malformed payload).
+                let gen_ids: Vec<_> =
+                    batch.requests.iter().filter(|r| r.generate > 0).map(|r| r.id).collect();
                 pooled.record_batch(batch.class, n);
                 own.record_batch(batch.class, n);
                 match engine.execute(batch) {
@@ -673,6 +765,9 @@ fn worker_loop(
                         pooled.record_execute_error();
                         own.record_execute_error();
                         inflight.fetch_sub(n, Ordering::AcqRel);
+                        for id in gen_ids {
+                            engine.kv_manager().release(id);
+                        }
                         if first_err.is_none() {
                             first_err = Some(e);
                         }
@@ -682,10 +777,19 @@ fn worker_loop(
             WorkItem::Decode(group) => {
                 last_was_decode = true;
                 let n = group.len();
-                pooled.record_decode_step();
-                own.record_decode_step();
+                let ids: Vec<_> = group.iter().map(|s| s.id).collect();
                 match engine.execute_decode(group) {
                     Ok(outcome) => {
+                        pooled.record_decode_step(
+                            outcome.pad_waste_tokens,
+                            outcome.kv_swap_ins,
+                            outcome.kv_swap_bytes,
+                        );
+                        own.record_decode_step(
+                            outcome.pad_waste_tokens,
+                            outcome.kv_swap_ins,
+                            outcome.kv_swap_bytes,
+                        );
                         for mut ev in outcome.tokens {
                             ev.worker = ctx.worker;
                             pooled.record_token(&ev);
@@ -696,10 +800,14 @@ fn worker_loop(
                         outcome.responses.into_iter().for_each(&finish);
                     }
                     Err(e) => {
-                        // Shed the whole group: their requests never answer.
+                        // Shed the whole group: their requests never answer,
+                        // so their arena pages and reservations free up.
                         pooled.record_execute_error();
                         own.record_execute_error();
                         inflight.fetch_sub(n, Ordering::AcqRel);
+                        for id in ids {
+                            engine.kv_manager().release(id);
+                        }
                         if first_err.is_none() {
                             first_err = Some(e);
                         }

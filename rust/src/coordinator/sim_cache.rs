@@ -13,6 +13,7 @@
 //! decode prefixes — while each `(group size, KV depth)` decode step gets
 //! its own entry.
 
+use crate::kv::KvQuant;
 use crate::sim::BatchClass;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -21,26 +22,31 @@ use std::sync::RwLock;
 /// Identity of one deterministic chip pass.
 ///
 /// * Prefill: `batch` = class batch, `seq` = the class's per-input slot,
-///   `past_len` = 0.
+///   `past_len` = 0, `kv_bits` = 0.
 /// * Decode step: `batch` = decode-group size (1..=4), `seq` = 1,
-///   `past_len` = the KV depth the step attends over.
+///   `past_len` = the KV depth the step attends over, `kv_bits` = the
+///   arena's storage width — decode timing/EMA depend on the quant mode
+///   (dequant charge + quantized GB budget), so engines with different
+///   modes sharing one cache must not collide.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct PassKey {
     pub batch: usize,
     pub seq: usize,
     pub past_len: usize,
+    pub kv_bits: u64,
 }
 
 impl PassKey {
     /// Key for a whole-sequence pass of `class` at per-input slot `seq`.
     pub fn prefill(class: BatchClass, seq: usize) -> PassKey {
-        PassKey { batch: class.batch(), seq, past_len: 0 }
+        PassKey { batch: class.batch(), seq, past_len: 0, kv_bits: 0 }
     }
 
     /// Key for one decode step of a `batch`-stream group at KV depth
-    /// `past_len` (always ≥ 1: the stream prefilled at least one token).
-    pub fn decode(batch: usize, past_len: usize) -> PassKey {
-        PassKey { batch, seq: 1, past_len }
+    /// `past_len` (always ≥ 1: the stream prefilled at least one token)
+    /// over a `quant`-precision KV arena.
+    pub fn decode(batch: usize, past_len: usize, quant: KvQuant) -> PassKey {
+        PassKey { batch, seq: 1, past_len, kv_bits: quant.bits() }
     }
 }
 
@@ -165,17 +171,21 @@ mod tests {
     }
 
     #[test]
-    fn decode_steps_key_by_group_and_past_len() {
+    fn decode_steps_key_by_group_past_len_and_quant() {
+        let q = KvQuant::Fp16;
         let cache = SimCache::new();
-        cache.get_or_simulate(PassKey::decode(4, 16), || pass(1.0));
-        cache.get_or_simulate(PassKey::decode(4, 17), || pass(2.0)); // deeper KV
-        cache.get_or_simulate(PassKey::decode(2, 16), || pass(3.0)); // smaller group
-        assert_eq!(cache.len(), 3);
-        // Same (group, depth) hits.
-        let got = cache.get_or_simulate(PassKey::decode(4, 16), || unreachable!());
+        cache.get_or_simulate(PassKey::decode(4, 16, q), || pass(1.0));
+        cache.get_or_simulate(PassKey::decode(4, 17, q), || pass(2.0)); // deeper KV
+        cache.get_or_simulate(PassKey::decode(2, 16, q), || pass(3.0)); // smaller group
+        // A different arena precision is a different pass (its dequant
+        // charge and GB budget differ) — never a shared entry.
+        cache.get_or_simulate(PassKey::decode(4, 16, KvQuant::Int4), || pass(4.0));
+        assert_eq!(cache.len(), 4);
+        // Same (group, depth, quant) hits.
+        let got = cache.get_or_simulate(PassKey::decode(4, 16, q), || unreachable!());
         assert_eq!(got.chip_us, 1.0);
         // Prefill keys never collide with decode keys on the same numbers.
-        assert_ne!(PassKey::prefill(BatchClass::B4, 1), PassKey::decode(4, 16));
+        assert_ne!(PassKey::prefill(BatchClass::B4, 1), PassKey::decode(4, 16, q));
     }
 
     #[test]

@@ -1,0 +1,96 @@
+//! Fixed-size page accounting for the global-buffer KV arena.
+//!
+//! The arena is a byte-capacity carved out of the GB (everything left after
+//! W_S, the W_D slot(s) and the activation planes) and divided into
+//! fixed-size pages. Streams are allocated whole pages, so a stream's
+//! footprint is `ceil(kv_bytes / page_bytes)` — the page granularity is what
+//! makes eviction and swap-in O(1) bookkeeping instead of a byte-range
+//! compactor. Policy (who to evict, when to refuse) lives in
+//! [`super::manager::KvManager`]; this type only counts pages, and it
+//! deliberately *allows* `used > capacity` so the manager can choose forced
+//! overcommit over deadlock (recorded in its stats).
+
+/// Page-granular occupancy counter for the KV arena.
+#[derive(Debug, Clone, Copy)]
+pub struct KvArena {
+    page_bytes: u64,
+    capacity_pages: usize,
+    used_pages: usize,
+}
+
+impl KvArena {
+    pub fn new(page_bytes: u64, capacity_pages: usize) -> KvArena {
+        KvArena { page_bytes: page_bytes.max(1), capacity_pages, used_pages: 0 }
+    }
+
+    /// Pages needed to back `bytes` of KV (at least one for a live stream).
+    pub fn pages_for(&self, bytes: u64) -> usize {
+        (bytes.div_ceil(self.page_bytes) as usize).max(1)
+    }
+
+    /// Claim `pages` (the manager has already made room — or has chosen
+    /// forced overcommit, which this accounting permits).
+    pub fn alloc(&mut self, pages: usize) {
+        self.used_pages += pages;
+    }
+
+    pub fn free(&mut self, pages: usize) {
+        self.used_pages = self.used_pages.saturating_sub(pages);
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.capacity_pages.saturating_sub(self.used_pages)
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.used_pages
+    }
+
+    pub fn capacity_pages(&self) -> usize {
+        self.capacity_pages
+    }
+
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.page_bytes * self.capacity_pages as u64
+    }
+
+    pub fn occupancy(&self) -> f64 {
+        if self.capacity_pages == 0 {
+            return 0.0;
+        }
+        self.used_pages as f64 / self.capacity_pages as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_math() {
+        let a = KvArena::new(2048, 16);
+        assert_eq!(a.pages_for(1), 1);
+        assert_eq!(a.pages_for(2048), 1);
+        assert_eq!(a.pages_for(2049), 2);
+        assert_eq!(a.pages_for(0), 1, "a live stream owns at least one page");
+        assert_eq!(a.capacity_bytes(), 32768);
+    }
+
+    #[test]
+    fn alloc_free_and_overcommit() {
+        let mut a = KvArena::new(2048, 4);
+        a.alloc(3);
+        assert_eq!(a.free_pages(), 1);
+        a.alloc(3); // forced overcommit is the manager's call; counting allows it
+        assert_eq!(a.used_pages(), 6);
+        assert_eq!(a.free_pages(), 0);
+        a.free(6);
+        assert_eq!(a.used_pages(), 0);
+        a.free(1); // saturates, never underflows
+        assert_eq!(a.used_pages(), 0);
+    }
+}

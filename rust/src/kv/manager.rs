@@ -1,0 +1,595 @@
+//! Pool-wide paged KV-cache manager.
+//!
+//! One `KvManager` is shared (via `Arc`) by every engine worker of a pool
+//! plus the admission path, and owns the global-buffer KV arena: fixed-size
+//! pages allocated per decode stream (self-attention KV growing with
+//! `past_len`, plus the fixed cross-attention encoder memory for enc-dec
+//! models), stored at a configurable [`KvQuant`] precision.
+//!
+//! It replaces the per-group `GbBudget::for_decode` idealization with an
+//! **aggregate** residency model:
+//!
+//! * **Admission** — [`KvManager::try_admit`] bounds concurrent generate
+//!   streams by projected arena bytes (`admit_oversub ×` capacity), so a
+//!   pool can't accept more decode state than the arena can plausibly turn
+//!   over.
+//! * **Residency** — [`KvManager::register`] makes a freshly-prefilled
+//!   stream resident; streams parked between steps *keep their pages* —
+//!   parked KV is never free.
+//! * **Eviction** — when a step needs pages the arena doesn't have, the
+//!   least-recently-used parked stream is evicted (its pages freed, its
+//!   logical bytes remembered). A group member is never evicted for its own
+//!   step.
+//! * **Swap-in charging** — [`KvManager::prepare_group`] returns the EMA
+//!   bytes the step must pay up front: every evicted member re-streams its
+//!   whole resident KV from DRAM before the step runs.
+//!
+//! If even evicting every evictable stream can't make room (a single group
+//! larger than the arena, or concurrent workers' pinned in-flight groups
+//! that genuinely don't co-fit), the manager *overcommits* rather than
+//! deadlocks and counts it in [`KvStats::forced_overcommit`] — the
+//! physical analogue is per-step spilling, which the GB budget path
+//! already charges.
+
+use crate::config::{HwConfig, ModelConfig};
+use crate::coordinator::request::RequestId;
+use crate::kv::arena::KvArena;
+use crate::kv::quant::KvQuant;
+use crate::kv::MAX_GROUP_STREAMS;
+use crate::sim::GbBudget;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Arena geometry + policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct KvArenaConfig {
+    /// Fixed page size, bytes (default: `HwConfig::kv_page_bytes`).
+    pub page_bytes: u64,
+    /// Aggregate residency cap, pages.
+    pub capacity_pages: usize,
+    /// Storage precision of the arena.
+    pub quant: KvQuant,
+    /// Admission head-room: new generate streams are rejected once the
+    /// projected bytes of live streams exceed `admit_oversub ×` capacity.
+    /// 1.0 bounds admission at exactly what fits resident; > 1.0 admits
+    /// more and lets the LRU churn (rejoining streams pay swap-in EMA).
+    pub admit_oversub: f64,
+}
+
+impl KvArenaConfig {
+    /// Derive the arena from the hardware and model: capacity is the GB
+    /// minus the fixed decode residents (W_S, both W_D slots, activations
+    /// and dequant scratch at the pool's widest group). `pages_override`
+    /// (the `--kv-pages` knob) replaces the derived page count.
+    pub fn for_pool(
+        hw: &HwConfig,
+        m: &ModelConfig,
+        quant: KvQuant,
+        pages_override: Option<usize>,
+    ) -> KvArenaConfig {
+        let b = GbBudget::for_decode_quant(hw, m, 0, MAX_GROUP_STREAMS, quant);
+        // Single-buffer floor, same as `max_decode_len_quant`: deep-KV decode
+        // gives the prefetch slot up first, so the arena and the caps are
+        // derived from the SAME fixed-resident set — a group of streams at
+        // their class cap fits the arena up to page rounding. (Cross-attention
+        // memory is per-stream and lives in the streams' bytes, not here.)
+        let fixed = b.ws_bytes + b.wd_slot_bytes + b.activation_bytes;
+        let page_bytes = (hw.kv_page_bytes as u64).max(1);
+        let derived = (b.capacity.saturating_sub(fixed) / page_bytes) as usize;
+        KvArenaConfig {
+            page_bytes,
+            capacity_pages: pages_override.unwrap_or(derived).max(1),
+            quant,
+            admit_oversub: 1.5,
+        }
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.page_bytes * self.capacity_pages as u64
+    }
+}
+
+/// Counters the manager accumulates over its lifetime.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct KvStats {
+    /// Generate streams admitted (via `try_admit` or auto-registration).
+    pub admitted: u64,
+    /// Generate streams refused at admission (arena projection full).
+    pub admit_rejected: u64,
+    /// Parked streams evicted to make room.
+    pub evictions: u64,
+    /// Evicted streams that rejoined a step (each paid swap-in EMA).
+    pub swap_ins: u64,
+    /// Total swap-in EMA bytes charged.
+    pub swap_in_bytes: u64,
+    /// Streams released (completed or cap-clamped to zero).
+    pub released: u64,
+    /// Times a group couldn't fit even after evicting every parked stream.
+    pub forced_overcommit: u64,
+    /// High-water mark of arena occupancy, pages.
+    pub peak_used_pages: usize,
+}
+
+/// What one decode step owes the EMA ledger before it runs.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StepCharge {
+    /// KV bytes re-streamed from DRAM for evicted members rejoining.
+    pub swap_in_bytes: u64,
+    /// How many members were swapped in.
+    pub swap_ins: u64,
+}
+
+/// Per-stream arena bookkeeping. `bytes` is the stream's logical quantized
+/// KV (self-attention prefix + cross-attention memory); `pages` backs it
+/// while resident and is 0 after eviction (the bytes are remembered — they
+/// are exactly what a rejoin must swap back in).
+#[derive(Debug, Clone, Copy)]
+struct StreamEntry {
+    bytes: u64,
+    pages: usize,
+    resident: bool,
+    /// In a decode step right now ([`KvManager::prepare_group`] …
+    /// [`KvManager::finish_group`]): never evictable — a concurrent
+    /// worker's group must not pull pages an in-flight step is reading.
+    pinned: bool,
+    last_used: u64,
+    /// Projected lifetime bytes held against the admission bound.
+    projected: u64,
+}
+
+#[derive(Debug)]
+struct Inner {
+    arena: KvArena,
+    streams: HashMap<RequestId, StreamEntry>,
+    /// Sum of live streams' projected bytes (the admission ledger).
+    admitted_bytes: u64,
+    /// LRU clock (incremented per step / registration).
+    clock: u64,
+    stats: KvStats,
+}
+
+impl Inner {
+    /// Evict LRU parked streams until `pages` are free (never a `protect`
+    /// member, never a pinned stream — some worker's in-flight step is
+    /// reading those pages). Returns false when room could not be made —
+    /// the caller proceeds overcommitted.
+    fn make_room(&mut self, pages: usize, protect: &[RequestId]) -> bool {
+        while self.arena.free_pages() < pages {
+            let victim = self
+                .streams
+                .iter()
+                .filter(|(id, e)| {
+                    e.resident && e.pages > 0 && !e.pinned && !protect.contains(id)
+                })
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(id, _)| *id);
+            match victim {
+                Some(id) => {
+                    let e = self.streams.get_mut(&id).expect("victim exists");
+                    self.arena.free(e.pages);
+                    e.pages = 0;
+                    e.resident = false;
+                    self.stats.evictions += 1;
+                }
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Make `id` resident with `bytes` of KV, growing/shrinking its pages;
+    /// evicts others as needed. Assumes the entry exists.
+    fn make_resident(&mut self, id: RequestId, bytes: u64, protect: &[RequestId]) {
+        let entry = *self.streams.get(&id).expect("entry exists");
+        let needed = self.arena.pages_for(bytes);
+        let grow = needed.saturating_sub(entry.pages);
+        if grow > 0 && !self.make_room(grow, protect) {
+            self.stats.forced_overcommit += 1;
+        }
+        if needed >= entry.pages {
+            self.arena.alloc(needed - entry.pages);
+        } else {
+            self.arena.free(entry.pages - needed);
+        }
+        let e = self.streams.get_mut(&id).expect("entry exists");
+        e.bytes = bytes;
+        e.pages = needed;
+        e.resident = true;
+        e.last_used = self.clock;
+        self.stats.peak_used_pages = self.stats.peak_used_pages.max(self.arena.used_pages());
+    }
+}
+
+/// Pool-wide paged KV-cache manager (see module docs). All methods take
+/// `&self`; the state sits behind one mutex — decode steps touch it once
+/// per step, far off any per-token hot path.
+#[derive(Debug)]
+pub struct KvManager {
+    cfg: KvArenaConfig,
+    /// Self-attention KV bytes one token adds for one stream.
+    per_token_bytes: u64,
+    /// Fixed cross-attention encoder-memory bytes per stream (enc-dec only).
+    cross_bytes: u64,
+    /// Decode-stack depth (per-layer dequant accounting).
+    layers: u64,
+    /// Residency caps per decode width (1/2/4-wide), indexed by
+    /// `width.trailing_zeros()` — they clamp admission projections so an
+    /// over-asking `generate` doesn't project bytes the engine's class cap
+    /// will never let it grow to.
+    caps: [usize; 3],
+    inner: Mutex<Inner>,
+}
+
+impl KvManager {
+    pub fn new(hw: &HwConfig, m: &ModelConfig, cfg: KvArenaConfig) -> KvManager {
+        let stack = if m.dec_layers > 0 { m.dec_layers } else { m.enc_layers };
+        let layers = (stack as u64).max(1);
+        let cap = |w: usize| GbBudget::max_decode_len_quant(hw, m, w, cfg.quant);
+        KvManager {
+            per_token_bytes: GbBudget::kv_cache_bytes_quant(m, 1, 1, cfg.quant),
+            cross_bytes: GbBudget::cross_kv_bytes_quant(m, 1, cfg.quant),
+            layers,
+            caps: [cap(1), cap(2), cap(4)],
+            inner: Mutex::new(Inner {
+                arena: KvArena::new(cfg.page_bytes, cfg.capacity_pages),
+                streams: HashMap::new(),
+                admitted_bytes: 0,
+                clock: 0,
+                stats: KvStats::default(),
+            }),
+            cfg,
+        }
+    }
+
+    pub fn quant(&self) -> KvQuant {
+        self.cfg.quant
+    }
+
+    pub fn config(&self) -> KvArenaConfig {
+        self.cfg
+    }
+
+    /// Logical quantized KV bytes of one stream at `past_len`.
+    pub fn stream_bytes(&self, past_len: usize) -> u64 {
+        self.cross_bytes + past_len as u64 * self.per_token_bytes
+    }
+
+    /// Quantized bytes one layer's dequant pass touches for a `group`-wide
+    /// step padded to depth `past_len` (0 when the mode needs no dequant).
+    /// Deterministic in `(group, past_len)` so it can live inside the
+    /// sim-cache entry for the step.
+    pub fn dequant_bytes_per_layer(&self, group: usize, past_len: usize) -> u64 {
+        if !self.cfg.quant.dequant() {
+            return 0;
+        }
+        group as u64 * self.stream_bytes(past_len) / self.layers
+    }
+
+    /// Residency cap at a decode width (the depth the engine will clamp a
+    /// stream of that class to).
+    pub fn cap_for_width(&self, width: usize) -> usize {
+        let idx = (width.max(1).trailing_zeros() as usize).min(2);
+        self.caps[idx]
+    }
+
+    /// Admission: reserve projected arena bytes for a generate stream of a
+    /// class decoding `width`-wide (its projection clamps at that class's
+    /// residency cap — the depth the engine will actually allow). Returns
+    /// false (and counts the rejection) when the pool's live streams
+    /// already project past the oversubscription bound. A first stream is
+    /// always admitted — a request bigger than the arena is the
+    /// cap/overcommit paths' problem, not a deadlock.
+    pub fn try_admit(
+        &self,
+        id: RequestId,
+        prefill_len: usize,
+        generate: usize,
+        width: usize,
+    ) -> bool {
+        let cap = self.cap_for_width(width);
+        let depth = (prefill_len + generate).min(cap.max(prefill_len));
+        let projected = self.stream_bytes(depth);
+        let limit = (self.cfg.capacity_bytes() as f64 * self.cfg.admit_oversub) as u64;
+        let mut g = self.inner.lock().unwrap();
+        if g.streams.contains_key(&id) {
+            // Duplicate live id (client reuse while the first stream is
+            // still in flight): refusing beats overwriting the live
+            // stream's page/reservation accounting, which could never be
+            // released again.
+            g.stats.admit_rejected += 1;
+            return false;
+        }
+        if g.admitted_bytes > 0 && g.admitted_bytes + projected > limit {
+            g.stats.admit_rejected += 1;
+            return false;
+        }
+        g.admitted_bytes += projected;
+        g.clock += 1;
+        let clock = g.clock;
+        g.streams.insert(
+            id,
+            StreamEntry {
+                bytes: 0,
+                pages: 0,
+                resident: false,
+                pinned: false,
+                last_used: clock,
+                projected,
+            },
+        );
+        g.stats.admitted += 1;
+        true
+    }
+
+    /// A stream finished prefill: its KV becomes arena-resident (no swap
+    /// charge — prefill writes the planes fresh). Auto-admits streams that
+    /// skipped `try_admit` (single-engine setups without pool admission).
+    pub fn register(&self, id: RequestId, prefill_len: usize) {
+        let bytes = self.stream_bytes(prefill_len);
+        let mut g = self.inner.lock().unwrap();
+        let inner = &mut *g;
+        inner.clock += 1;
+        let clock = inner.clock;
+        let e = inner.streams.entry(id).or_insert(StreamEntry {
+            bytes: 0,
+            pages: 0,
+            resident: false,
+            pinned: false,
+            last_used: clock,
+            projected: 0,
+        });
+        e.last_used = clock;
+        if e.projected == 0 {
+            e.projected = bytes;
+            inner.admitted_bytes += bytes;
+            inner.stats.admitted += 1;
+        }
+        inner.make_resident(id, bytes, &[id]);
+    }
+
+    /// Bring every member of a decode group resident at its current depth
+    /// and return the step's swap-in charge: each member that was evicted
+    /// re-streams its whole KV from DRAM before the step runs. Members are
+    /// protected from evicting each other AND pinned until
+    /// [`KvManager::finish_group`] (or [`KvManager::release`]) — a
+    /// concurrent worker's group must not evict pages an in-flight step is
+    /// reading. Parked (unpinned) streams go LRU-first.
+    pub fn prepare_group(&self, members: &[(RequestId, usize)]) -> StepCharge {
+        let mut charge = StepCharge::default();
+        let protect: Vec<RequestId> = members.iter().map(|&(id, _)| id).collect();
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        for &(id, past_len) in members {
+            let bytes = self.stream_bytes(past_len);
+            let known = g.streams.get(&id).copied();
+            let entry = known.unwrap_or(StreamEntry {
+                bytes: 0,
+                pages: 0,
+                resident: false,
+                pinned: false,
+                last_used: clock,
+                projected: 0,
+            });
+            if known.is_none() {
+                // Unregistered stream (defensive): admit + register silently.
+                g.admitted_bytes += bytes;
+                g.stats.admitted += 1;
+                g.streams.insert(id, StreamEntry { projected: bytes, ..entry });
+            }
+            if !entry.resident && entry.bytes > 0 {
+                // Evicted stream rejoining: its resident KV swaps back in.
+                charge.swap_in_bytes += bytes;
+                charge.swap_ins += 1;
+                g.stats.swap_ins += 1;
+                g.stats.swap_in_bytes += bytes;
+            }
+            g.make_resident(id, bytes, &protect);
+            if let Some(e) = g.streams.get_mut(&id) {
+                e.pinned = true;
+            }
+        }
+        charge
+    }
+
+    /// A decode step finished: its members park (stay resident, become
+    /// evictable again). Released/missing ids are skipped.
+    pub fn finish_group(&self, members: &[(RequestId, usize)]) {
+        let mut g = self.inner.lock().unwrap();
+        for &(id, _) in members {
+            if let Some(e) = g.streams.get_mut(&id) {
+                e.pinned = false;
+            }
+        }
+    }
+
+    /// A stream is done (final token, cap-clamped to zero, or shed): free
+    /// its pages and release its admission reservation.
+    pub fn release(&self, id: RequestId) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(e) = g.streams.remove(&id) {
+            if e.resident {
+                g.arena.free(e.pages);
+            }
+            g.admitted_bytes = g.admitted_bytes.saturating_sub(e.projected);
+            g.stats.released += 1;
+        }
+    }
+
+    pub fn stats(&self) -> KvStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Pages currently backing resident streams.
+    pub fn used_pages(&self) -> usize {
+        self.inner.lock().unwrap().arena.used_pages()
+    }
+
+    /// Live (admitted, unreleased) streams.
+    pub fn live_streams(&self) -> usize {
+        self.inner.lock().unwrap().streams.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        Json::obj(vec![
+            ("quant", Json::str(self.cfg.quant.name().to_string())),
+            ("page_bytes", Json::num(self.cfg.page_bytes as f64)),
+            ("capacity_pages", Json::num(self.cfg.capacity_pages as f64)),
+            ("admit_oversub", Json::num(self.cfg.admit_oversub)),
+            ("used_pages", Json::num(g.arena.used_pages() as f64)),
+            ("live_streams", Json::num(g.streams.len() as f64)),
+            ("admitted", Json::num(g.stats.admitted as f64)),
+            ("admit_rejected", Json::num(g.stats.admit_rejected as f64)),
+            ("evictions", Json::num(g.stats.evictions as f64)),
+            ("swap_ins", Json::num(g.stats.swap_ins as f64)),
+            ("swap_in_bytes", Json::num(g.stats.swap_in_bytes as f64)),
+            ("forced_overcommit", Json::num(g.stats.forced_overcommit as f64)),
+            ("peak_used_pages", Json::num(g.stats.peak_used_pages as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_mgr(pages: usize, quant: KvQuant, oversub: f64) -> (KvManager, u64) {
+        let hw = HwConfig::default();
+        let m = ModelConfig::tiny();
+        let mut cfg = KvArenaConfig::for_pool(&hw, &m, quant, Some(pages));
+        cfg.admit_oversub = oversub;
+        let per_token = GbBudget::kv_cache_bytes_quant(&m, 1, 1, quant);
+        (KvManager::new(&hw, &m, cfg), per_token)
+    }
+
+    #[test]
+    fn register_evict_lru_and_charge_swap_on_rejoin() {
+        // 4 × 2 KiB pages; tiny @ fp16 is 512 B/token, so an 8-token stream
+        // owns 2 pages and the arena fits exactly two streams.
+        let (mgr, per_token) = tiny_mgr(4, KvQuant::Fp16, 8.0);
+        assert_eq!(per_token, 512);
+        mgr.register(1, 8);
+        mgr.register(2, 8);
+        assert_eq!(mgr.used_pages(), 4);
+        // A third stream evicts the LRU (stream 1) — parked KV is never
+        // free: it must be evicted, not forgotten.
+        mgr.register(3, 8);
+        assert_eq!(mgr.used_pages(), 4);
+        assert_eq!(mgr.stats().evictions, 1);
+        // Stream 1 rejoins a step: swap-in charged for its whole KV, and
+        // room is made by evicting the next LRU (stream 2).
+        let c = mgr.prepare_group(&[(1, 8)]);
+        assert_eq!(c.swap_ins, 1);
+        assert_eq!(c.swap_in_bytes, 8 * per_token);
+        assert_eq!(mgr.stats().evictions, 2);
+        assert_eq!(mgr.stats().peak_used_pages, 4, "residency cap held throughout");
+        // Resident members never pay again.
+        let c2 = mgr.prepare_group(&[(1, 9)]);
+        assert_eq!(c2.swap_ins, 0);
+        for id in [1, 2, 3] {
+            mgr.release(id);
+        }
+        assert_eq!(mgr.used_pages(), 0);
+        assert_eq!(mgr.live_streams(), 0);
+    }
+
+    #[test]
+    fn group_members_protected_from_each_other() {
+        let (mgr, _) = tiny_mgr(4, KvQuant::Fp16, 8.0);
+        mgr.register(1, 8);
+        mgr.register(2, 8); // arena exactly full with both
+        let c = mgr.prepare_group(&[(1, 8), (2, 8)]);
+        assert_eq!(c.swap_ins, 0, "both resident, neither may evict the other");
+        assert_eq!(mgr.stats().evictions, 0);
+    }
+
+    #[test]
+    fn pinned_in_flight_groups_are_never_evicted() {
+        // Two workers decoding concurrently over one shared arena: a
+        // group's pages must survive another worker's room-making for the
+        // whole step — overcommit is counted instead of a spurious evict.
+        let (mgr, _) = tiny_mgr(4, KvQuant::Fp16, 8.0);
+        mgr.register(1, 8);
+        mgr.register(2, 8); // arena full
+        let _ = mgr.prepare_group(&[(1, 8)]); // worker A: stream 1 in flight
+        let _ = mgr.prepare_group(&[(3, 8)]); // worker B: evicts parked 2, not pinned 1
+        assert_eq!(mgr.stats().evictions, 1);
+        // Stream 2 rejoins while 1 and 3 are both pinned: no victims —
+        // forced overcommit, never an eviction of an in-flight group.
+        let c = mgr.prepare_group(&[(2, 8)]);
+        assert_eq!(c.swap_ins, 1);
+        assert_eq!(mgr.stats().evictions, 1);
+        assert!(mgr.stats().forced_overcommit >= 1);
+        // Once worker A's step finishes, its stream parks and is evictable.
+        mgr.finish_group(&[(1, 8)]);
+        let _ = mgr.prepare_group(&[(4, 8)]);
+        assert_eq!(mgr.stats().evictions, 2, "unpinned stream evictable again");
+    }
+
+    #[test]
+    fn admission_bounds_projected_bytes() {
+        // 4 pages = 8 KiB at oversub 1.0; each stream projects 8 tokens
+        // (4 prefill + 4 generate) × 512 B = 4 KiB.
+        let (mgr, _) = tiny_mgr(4, KvQuant::Fp16, 1.0);
+        assert!(mgr.try_admit(1, 4, 4, 4));
+        assert!(mgr.try_admit(2, 4, 4, 4), "exactly at the bound still admits");
+        assert!(!mgr.try_admit(3, 4, 4, 4), "past the bound rejects");
+        assert_eq!(mgr.stats().admit_rejected, 1);
+        mgr.release(1);
+        assert!(mgr.try_admit(3, 4, 4, 4), "released reservations free the bound");
+        // A live id can't be admitted twice — overwriting would orphan the
+        // first stream's pages and reservation forever.
+        assert!(!mgr.try_admit(3, 4, 4, 4), "duplicate live id refused");
+        mgr.release(3);
+        assert!(mgr.try_admit(3, 4, 4, 4), "released id is reusable");
+        // Projections clamp at the *class's* residency cap: an absurd ask
+        // does not project bytes the engine will never allow, and a wide
+        // class clamps tighter than a solo stream.
+        let (mgr2, per_token) = tiny_mgr(1 << 16, KvQuant::Fp16, 1.0);
+        assert!(mgr2.try_admit(7, 4, usize::MAX / 2, 1));
+        let hw = HwConfig::default();
+        let m = ModelConfig::tiny();
+        let cap_b1 = GbBudget::max_decode_len_quant(&hw, &m, 1, KvQuant::Fp16);
+        let cap_b4 = GbBudget::max_decode_len_quant(&hw, &m, 4, KvQuant::Fp16);
+        assert!(cap_b4 < cap_b1);
+        assert_eq!(mgr2.cap_for_width(1), cap_b1);
+        assert_eq!(mgr2.cap_for_width(4), cap_b4);
+        {
+            let g = mgr2.inner.lock().unwrap();
+            assert_eq!(g.admitted_bytes, cap_b1 as u64 * per_token);
+        }
+        assert!(mgr2.try_admit(8, 4, usize::MAX / 2, 4));
+        let g = mgr2.inner.lock().unwrap();
+        assert_eq!(g.admitted_bytes, (cap_b1 + cap_b4) as u64 * per_token);
+    }
+
+    #[test]
+    fn oversized_group_overcommits_instead_of_deadlocking() {
+        let (mgr, _) = tiny_mgr(1, KvQuant::Fp16, 8.0);
+        mgr.register(1, 100); // 50 KiB into a 2 KiB arena
+        assert!(mgr.stats().forced_overcommit >= 1);
+        assert!(mgr.used_pages() > 1);
+        mgr.release(1);
+        assert_eq!(mgr.used_pages(), 0);
+    }
+
+    #[test]
+    fn quantization_scales_stream_bytes_and_dequant() {
+        let hw = HwConfig::default();
+        let m = ModelConfig::s2t_small();
+        let mk = |q| KvManager::new(&hw, &m, KvArenaConfig::for_pool(&hw, &m, q, None));
+        let f16 = mk(KvQuant::Fp16);
+        let i8_ = mk(KvQuant::Int8);
+        let i4 = mk(KvQuant::Int4);
+        assert_eq!(f16.stream_bytes(32), 2 * i8_.stream_bytes(32));
+        assert_eq!(f16.stream_bytes(32), 4 * i4.stream_bytes(32));
+        // Dequant: zero at full precision, per-layer share of the padded
+        // group below it.
+        assert_eq!(f16.dequant_bytes_per_layer(4, 32), 0);
+        let layers = m.dec_layers as u64;
+        assert_eq!(i8_.dequant_bytes_per_layer(4, 32), 4 * i8_.stream_bytes(32) / layers);
+        assert!(i4.dequant_bytes_per_layer(4, 32) < i8_.dequant_bytes_per_layer(4, 32));
+    }
+}

@@ -1,0 +1,39 @@
+//! Paged KV-cache subsystem: pool-wide residency, quantized storage, and
+//! the charges decode steps owe the EMA ledger.
+//!
+//! T-REX's decode path keeps the autoregressive KV cache resident in the
+//! global buffer so each step reads its prefix with zero external-memory
+//! traffic. The seed model budgeted that residency *per decode step* — one
+//! group's KV, implicitly full-precision, with streams parked between steps
+//! occupying the GB for free. This module replaces that idealization:
+//!
+//! * [`quant::KvQuant`] — the arena's storage precision (`fp16`/`int8`/
+//!   `int4`): reduced modes halve/quarter every residency figure but owe a
+//!   per-step dequant pass, charged by the `Stepper` as `KvDequant` EMA.
+//! * [`arena::KvArena`] — fixed-size-page occupancy accounting over the GB
+//!   bytes left after the weight and activation residents.
+//! * [`manager::KvManager`] — the pool-wide manager: admission bounds
+//!   concurrent generate streams by projected arena bytes, parked streams
+//!   keep their pages (never free), LRU eviction makes room, and an evicted
+//!   stream rejoining a step is charged swap-in EMA for its whole resident
+//!   KV before the step runs.
+//!
+//! The serving integration: `Engine` registers streams at prefill, calls
+//! [`manager::KvManager::prepare_group`] before every decode step, and
+//! releases on completion; the pool's admission path consults
+//! [`manager::KvManager::try_admit`]; `coordinator::batcher::
+//! form_decode_group` optionally groups streams by `past_len` bucket so the
+//! pad waste the manager's depth-padded accounting charges stays bounded.
+
+pub mod arena;
+pub mod manager;
+pub mod quant;
+
+/// Most streams one decode step batches — the chip's four-up plane slicing.
+/// `coordinator::engine::MAX_DECODE_GROUP` re-exports this; the arena sizes
+/// its fixed residents (activation planes, dequant scratch) at this width.
+pub const MAX_GROUP_STREAMS: usize = 4;
+
+pub use arena::KvArena;
+pub use manager::{KvArenaConfig, KvManager, KvStats, StepCharge};
+pub use quant::KvQuant;

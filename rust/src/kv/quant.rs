@@ -1,0 +1,89 @@
+//! KV-cache quantization modes.
+//!
+//! The arena stores K/V planes at a configurable precision: `Fp16` is the
+//! honest full-precision baseline (decode accumulators are 16-bit), `Int8`
+//! and `Int4` halve / quarter every residency figure — pages per stream,
+//! swap-in bytes, the aggregate arena footprint — at the cost of a per-step
+//! dequant pass the executor charges (see `SimOptions::
+//! kv_dequant_bytes_per_layer` and the `KvDequant` EMA category).
+
+use crate::error::{Error, Result};
+
+/// Storage precision of the KV-cache arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KvQuant {
+    /// Full-precision 16-bit K/V (no dequant pass).
+    #[default]
+    Fp16,
+    /// 8-bit quantized K/V: half the residency, dequant charged per step.
+    Int8,
+    /// 4-bit quantized K/V: quarter the residency, dequant charged per step.
+    Int4,
+}
+
+impl KvQuant {
+    pub const ALL: [KvQuant; 3] = [KvQuant::Fp16, KvQuant::Int8, KvQuant::Int4];
+
+    /// Stored bits per K/V element.
+    pub fn bits(self) -> u64 {
+        match self {
+            KvQuant::Fp16 => 16,
+            KvQuant::Int8 => 8,
+            KvQuant::Int4 => 4,
+        }
+    }
+
+    /// Bytes for `elems` stored elements (element counts in this codebase
+    /// are always even — K and V come in pairs — so Int4 never truncates).
+    pub fn bytes(self, elems: u64) -> u64 {
+        elems * self.bits() / 8
+    }
+
+    /// Whether decoding through this mode needs the per-step dequant pass
+    /// (everything below full precision does).
+    pub fn dequant(self) -> bool {
+        !matches!(self, KvQuant::Fp16)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KvQuant::Fp16 => "fp16",
+            KvQuant::Int8 => "int8",
+            KvQuant::Int4 => "int4",
+        }
+    }
+
+    /// Parse a CLI flag value (`fp16` / `int8` / `int4`).
+    pub fn parse(s: &str) -> Result<KvQuant> {
+        match s {
+            "fp16" => Ok(KvQuant::Fp16),
+            "int8" => Ok(KvQuant::Int8),
+            "int4" => Ok(KvQuant::Int4),
+            other => Err(Error::config(format!(
+                "unknown kv quantization mode {other:?} (expected fp16|int8|int4)"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_and_bytes_scale() {
+        assert_eq!(KvQuant::Fp16.bytes(128), 256);
+        assert_eq!(KvQuant::Int8.bytes(128), 128);
+        assert_eq!(KvQuant::Int4.bytes(128), 64);
+        assert!(!KvQuant::Fp16.dequant());
+        assert!(KvQuant::Int8.dequant() && KvQuant::Int4.dequant());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for q in KvQuant::ALL {
+            assert_eq!(KvQuant::parse(q.name()).unwrap(), q);
+        }
+        assert!(KvQuant::parse("bf16").is_err());
+    }
+}

@@ -14,10 +14,11 @@
 //!   quantization, 5b delta-encoded indices with row rearrangement, 6b
 //!   uniform quantization), and the layer-graph builder that turns a model
 //!   config into the op stream the chip executes.
-//! * **Architecture** — [`sim`], [`baseline`]: a cycle-level model of the
-//!   T-REX microarchitecture (DMM/SMM cores, AFUs, TRF buffers, global
-//!   buffer, LPDDR3 DMA) with energy and utilization accounting, plus the
-//!   dense baseline accelerator used for the paper's comparisons.
+//! * **Architecture** — [`sim`], [`baseline`], [`kv`]: a cycle-level model
+//!   of the T-REX microarchitecture (DMM/SMM cores, AFUs, TRF buffers,
+//!   global buffer, LPDDR3 DMA) with energy and utilization accounting, the
+//!   dense baseline accelerator used for the paper's comparisons, and the
+//!   paged KV-cache manager that governs decode residency in the GB.
 //! * **System** — [`coordinator`], [`runtime`]: a production-shaped serving
 //!   stack: dynamic batcher, engine, multi-threaded server, and a PJRT
 //!   runtime that executes the AOT-compiled JAX/Pallas numerics.
@@ -32,6 +33,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod factorize;
+pub mod kv;
 pub mod model;
 pub mod runtime;
 pub mod sim;

@@ -5,6 +5,7 @@
 //!   trex serve --requests N [--workers N] [--queue-depth N] [--max-inflight N]
 //!              [--no-affinity] [--artifacts DIR] [--perf-model <preset>]
 //!              [--generate N]            # decode N tokens per request
+//!              [--kv-quant fp16|int8|int4] [--kv-pages N] [--kv-bucket N]
 //!   trex report --model <preset>         # compression report (Fig 23.1.3)
 //!   trex selftest [--artifacts DIR]      # PJRT vs jax check vectors
 //!   trex workloads                       # list presets
@@ -14,8 +15,10 @@ use std::sync::Arc;
 use std::time::Duration;
 use trex::config::{HwConfig, ModelConfig, WORKLOADS};
 use trex::coordinator::{
-    default_workers, BatcherConfig, Engine, EngineConfig, PoolConfig, Server, TraceGenerator,
+    default_workers, BatcherConfig, DecodePolicy, Engine, EngineConfig, PoolConfig, Server,
+    TraceGenerator,
 };
+use trex::kv::{KvArenaConfig, KvManager, KvQuant};
 use trex::model::build_program;
 use trex::runtime::{artifacts, ArtifactSet, PjrtRuntime};
 use trex::sim::{batch_class, simulate, SimOptions};
@@ -57,6 +60,8 @@ fn main() -> CliResult {
                  \n  serve    --requests N [--workers N] [--queue-depth N] [--max-inflight N]\
                  \n           [--no-affinity] [--artifacts DIR] [--perf-model <preset>]\
                  \n           [--generate N]  (decode N tokens per request; perf-model defaults to s2t-small)\
+                 \n           [--kv-quant fp16|int8|int4] [--kv-pages N]  (KV arena precision / page budget)\
+                 \n           [--kv-bucket N]  (depth-bucketed decode grouping, 0 = greedy)\
                  \n  report   --model <preset>\
                  \n  selftest [--artifacts DIR]"
             );
@@ -106,6 +111,17 @@ fn cmd_serve(args: &[String]) -> CliResult {
     let affinity = !args.iter().any(|a| a == "--no-affinity");
     let generate: usize =
         arg_value(args, "--generate").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let kv_quant =
+        KvQuant::parse(&arg_value(args, "--kv-quant").unwrap_or_else(|| "fp16".to_string()))?;
+    let kv_pages: Option<usize> =
+        arg_value(args, "--kv-pages").map(|s| s.parse()).transpose()?;
+    let kv_bucket: usize =
+        arg_value(args, "--kv-bucket").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let decode_policy = if kv_bucket > 0 {
+        DecodePolicy::DepthBucketed { bucket: kv_bucket }
+    } else {
+        DecodePolicy::Greedy
+    };
     let dir = arg_value(args, "--artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(artifacts::default_dir);
@@ -144,11 +160,21 @@ fn cmd_serve(args: &[String]) -> CliResult {
     let hw = HwConfig::default();
     let dir2 = dir.clone();
     let pm = perf_model.clone();
+    // Pool-wide KV arena: admission bounds concurrent generate streams by
+    // projected arena bytes, and every worker's engine shares the manager
+    // (residency, eviction and swap-in charging are aggregate).
+    let kv_mgr = Arc::new(KvManager::new(
+        &hw,
+        &perf_model,
+        KvArenaConfig::for_pool(&hw, &perf_model, kv_quant, kv_pages),
+    ));
     let pool = PoolConfig {
         workers,
         queue_depth,
         max_inflight,
         affinity,
+        decode: decode_policy,
+        kv: Some(Arc::clone(&kv_mgr)),
         batcher: BatcherConfig { max_seq, max_wait: Duration::from_millis(2) },
     };
     let handle = Server::start_pool(
@@ -159,14 +185,16 @@ fn cmd_serve(args: &[String]) -> CliResult {
             } else {
                 ArtifactSet::reference(artifacts::TINY_MODEL, d_model, max_seq)?
             };
-            Engine::with_cache(
+            Engine::for_worker(
                 set,
                 EngineConfig {
                     hw: hw.clone(),
                     perf_model: pm.clone(),
                     self_test: ctx.worker == 0,
+                    kv_quant,
+                    kv_pages,
                 },
-                Arc::clone(&ctx.sim_cache),
+                ctx,
             )
         },
         pool,

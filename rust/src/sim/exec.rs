@@ -50,11 +50,25 @@ pub struct SimOptions {
     /// an overflowing budget charges `spill_bytes_per_layer()` out-and-back
     /// per layer phase as `ActivationSpill` EMA.
     pub gb: Option<GbBudget>,
+    /// Quantized-KV dequant traffic per layer phase, bytes (0 = KV at full
+    /// precision, no dequant pass). Decode steps over a reduced-precision
+    /// arena re-stream each layer's quantized K/V planes through the
+    /// dequant path before attention; like spills, the charge lands in the
+    /// EMA ledger (`KvDequant`), the energy model, and the compute-critical
+    /// path at DMA rate — the residency halving is not free.
+    pub kv_dequant_bytes_per_layer: u64,
 }
 
 impl SimOptions {
     pub fn paper(hw: &HwConfig) -> Self {
-        SimOptions { point: hw.max_point(), trf: true, prefetch: true, act_bits: 8, gb: None }
+        SimOptions {
+            point: hw.max_point(),
+            trf: true,
+            prefetch: true,
+            act_bits: 8,
+            gb: None,
+            kv_dequant_bytes_per_layer: 0,
+        }
     }
 }
 
@@ -211,6 +225,39 @@ impl<'a> Stepper<'a> {
                 self.st.compute_t += bytes as f64 * dma_cycles_per_byte;
             }
         }
+        // Quantized-KV dequant pass: each layer of a decode step re-streams
+        // its quantized K/V planes before attention — charged like a spill
+        // (conservative), in its own EMA category so benches can report the
+        // overhead against the residency it buys.
+        let dq = self.opts.kv_dequant_bytes_per_layer;
+        if dq > 0 && phase.layer.is_some() {
+            self.ema.add(EmaCategory::KvDequant, dq);
+            self.em.ema(dq);
+            self.em.gb_activity(dq / 2);
+            let dma_cycles_per_byte = self.hw.dram_ns(1) / self.opts.point.cycle_ns();
+            self.st.compute_t += dq as f64 * dma_cycles_per_byte;
+        }
+    }
+
+    /// Charge a KV swap-in: an evicted decode stream re-streams its whole
+    /// resident KV from DRAM into the GB arena before its step runs (the
+    /// [`crate::kv::KvManager`] decides *when* this happens; the stepper
+    /// only prices it). EMA + energy + DMA-rate time on the critical path.
+    pub fn charge_kv_swap(&mut self, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        self.ema.add(EmaCategory::KvSwap, bytes);
+        self.em.ema(bytes);
+        self.em.gb_activity(bytes / 2);
+        let dma_cycles_per_byte = self.hw.dram_ns(1) / self.opts.point.cycle_ns();
+        self.st.compute_t += bytes as f64 * dma_cycles_per_byte;
+    }
+
+    /// Re-tune the per-layer dequant charge for subsequent steps (decode
+    /// chains deepen their KV prefix between step-programs).
+    pub fn set_kv_dequant_bytes_per_layer(&mut self, bytes: u64) {
+        self.opts.kv_dequant_bytes_per_layer = bytes;
     }
 
     /// Execute every phase of `prog` in order and account its tokens
@@ -571,7 +618,7 @@ mod tests {
                             trf,
                             prefetch,
                             act_bits: m.act_bits,
-                            gb: None,
+                            ..SimOptions::paper(&hw)
                         };
                         let new = simulate(&hw, &prog, &opts);
                         let old = simulate_monolithic(&hw, &prog, &opts);
@@ -682,6 +729,51 @@ mod tests {
         let a = simulate(&hw, &p32, &SimOptions { gb: Some(fits), ..base });
         let b = simulate(&hw, &p32, &base);
         assert_eq!(a.ema_bytes(), b.ema_bytes());
+    }
+
+    #[test]
+    fn kv_dequant_charges_ledger_per_layer_phase() {
+        // A reduced-precision KV arena owes a dequant pass per decode-step
+        // layer: its own EMA category, energy, and critical-path time.
+        let hw = hw();
+        let m = ModelConfig::s2t_small();
+        let prog = build_decode_step(&m, 32, 2);
+        let base = SimOptions { act_bits: m.act_bits, ..SimOptions::paper(&hw) };
+        let plain = simulate(&hw, &prog, &base);
+        let dq_bytes = 4096u64;
+        let with = simulate(
+            &hw,
+            &prog,
+            &SimOptions { kv_dequant_bytes_per_layer: dq_bytes, ..base },
+        );
+        let layer_phases = prog.phases.iter().filter(|p| p.layer.is_some()).count() as u64;
+        assert!(layer_phases > 0);
+        assert_eq!(with.ema.get(EmaCategory::KvDequant), dq_bytes * layer_phases);
+        assert_eq!(plain.ema.get(EmaCategory::KvDequant), 0);
+        assert_eq!(
+            with.ema_bytes(),
+            plain.ema_bytes() + dq_bytes * layer_phases,
+            "dequant adds exactly its bytes to the ledger total"
+        );
+        assert!(with.cycles > plain.cycles, "dequant sits on the critical path");
+        assert!(with.energy.ema_pj > plain.energy.ema_pj);
+    }
+
+    #[test]
+    fn kv_swap_charge_hits_ledger_energy_and_clock() {
+        let hw = hw();
+        let m = ModelConfig::s2t_small();
+        let opts = SimOptions { act_bits: m.act_bits, ..SimOptions::paper(&hw) };
+        let mut stepper = Stepper::new(&hw, opts);
+        stepper.run_program(&build_decode_step(&m, 16, 1));
+        let before = stepper.clock_cycles();
+        stepper.charge_kv_swap(0); // zero is free
+        assert_eq!(stepper.clock_cycles(), before);
+        stepper.charge_kv_swap(100_000);
+        assert!(stepper.clock_cycles() > before);
+        let stats = stepper.finish();
+        assert_eq!(stats.ema.get(EmaCategory::KvSwap), 100_000);
+        assert!(stats.energy.ema_pj > 0.0);
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //! concurrent decode streams is a ROADMAP open item.
 
 use crate::config::{HwConfig, ModelConfig};
+use crate::kv::KvQuant;
 use crate::util::json::Json;
 
 /// Byte budget of every GB resident for one dataflow configuration.
@@ -107,6 +108,88 @@ impl GbBudget {
         let fixed = base.ws_bytes + base.wd_slot_bytes + base.activation_bytes + base.kv_bytes;
         let free = base.capacity.saturating_sub(fixed);
         let per_token = Self::kv_cache_bytes(m, 1, batch).max(1);
+        (free / per_token) as usize
+    }
+
+    // -------------------------------------------------- quantized KV arena
+    //
+    // The legacy accounting above stores KV at the model's activation width
+    // (8b for every preset) — an idealization the KV arena makes explicit:
+    // K/V planes are fp16 by default (the decode accumulator precision) and
+    // `Int8`/`Int4` modes halve/quarter them, paying a per-step dequant
+    // pass and a fixed dequant-scratch resident.
+
+    /// [`Self::kv_cache_bytes`] at an explicit arena precision.
+    pub fn kv_cache_bytes_quant(
+        m: &ModelConfig,
+        past_len: usize,
+        batch: usize,
+        quant: KvQuant,
+    ) -> u64 {
+        let layers = if m.dec_layers > 0 { m.dec_layers } else { m.enc_layers } as u64;
+        quant.bytes(2 * layers * (past_len as u64) * m.d_model as u64 * batch as u64)
+    }
+
+    /// [`Self::cross_kv_bytes`] at an explicit arena precision.
+    pub fn cross_kv_bytes_quant(m: &ModelConfig, batch: usize, quant: KvQuant) -> u64 {
+        if m.dec_layers == 0 {
+            return 0;
+        }
+        let cross = (m.mean_input_len as usize).clamp(1, m.max_seq) as u64;
+        quant.bytes(2 * m.dec_layers as u64 * cross * m.d_model as u64 * batch as u64)
+    }
+
+    /// Fixed GB workspace the dequant pass needs for reduced-precision KV:
+    /// one K and one V tile (`trf_dim` rows × `d_model`, fp16) per stream.
+    /// Zero at full precision.
+    pub fn dequant_scratch_bytes(
+        hw: &HwConfig,
+        m: &ModelConfig,
+        batch: usize,
+        quant: KvQuant,
+    ) -> u64 {
+        if !quant.dequant() {
+            return 0;
+        }
+        2 * hw.trf_dim as u64 * m.d_model as u64 * 2 * batch as u64
+    }
+
+    /// [`Self::for_decode`] with the KV planes held at `quant` precision.
+    /// The dequant scratch joins the activation working set.
+    pub fn for_decode_quant(
+        hw: &HwConfig,
+        m: &ModelConfig,
+        past_len: usize,
+        batch: usize,
+        quant: KvQuant,
+    ) -> GbBudget {
+        let widest = m.d_model.max(m.d_ff) as u64;
+        let activation_bytes = 2 * batch as u64 * widest * m.act_bits as u64 / 8
+            + Self::dequant_scratch_bytes(hw, m, batch, quant);
+        GbBudget {
+            ws_bytes: Self::ws_resident_bytes(m),
+            wd_slot_bytes: Self::wd_slot(m),
+            prefetch_slot_bytes: Self::wd_slot(m),
+            activation_bytes,
+            kv_bytes: Self::kv_cache_bytes_quant(m, past_len, batch, quant)
+                + Self::cross_kv_bytes_quant(m, batch, quant),
+            capacity: hw.gb_bytes as u64,
+        }
+    }
+
+    /// [`Self::max_decode_len`] under an arena precision: reduced modes
+    /// roughly double the resident prefix per halving of the storage width,
+    /// shaved by the dequant scratch they add to the fixed residents.
+    pub fn max_decode_len_quant(
+        hw: &HwConfig,
+        m: &ModelConfig,
+        batch: usize,
+        quant: KvQuant,
+    ) -> usize {
+        let base = Self::for_decode_quant(hw, m, 0, batch, quant);
+        let fixed = base.ws_bytes + base.wd_slot_bytes + base.activation_bytes + base.kv_bytes;
+        let free = base.capacity.saturating_sub(fixed);
+        let per_token = Self::kv_cache_bytes_quant(m, 1, batch, quant).max(1);
         (free / per_token) as usize
     }
 
@@ -309,6 +392,90 @@ mod tests {
         assert!(GbBudget::max_decode_len(&hw, &s2t, 4) >= s2t.max_seq);
         let bert = ModelConfig::bert_large();
         assert!(GbBudget::max_decode_len(&hw, &bert, 4) < bert.max_seq);
+    }
+
+    #[test]
+    fn quantized_kv_halves_and_quarters_residency() {
+        let m = ModelConfig::s2t_small();
+        let f16 = GbBudget::kv_cache_bytes_quant(&m, 10, 4, KvQuant::Fp16);
+        assert_eq!(GbBudget::kv_cache_bytes_quant(&m, 10, 4, KvQuant::Int8) * 2, f16);
+        assert_eq!(GbBudget::kv_cache_bytes_quant(&m, 10, 4, KvQuant::Int4) * 4, f16);
+        let xf16 = GbBudget::cross_kv_bytes_quant(&m, 4, KvQuant::Fp16);
+        assert_eq!(GbBudget::cross_kv_bytes_quant(&m, 4, KvQuant::Int8) * 2, xf16);
+        assert_eq!(GbBudget::cross_kv_bytes_quant(&m, 4, KvQuant::Int4) * 4, xf16);
+        // Int8 matches the legacy act-bits accounting (act_bits = 8 presets)
+        // — the seed's implicit storage width, now explicit.
+        assert_eq!(
+            GbBudget::kv_cache_bytes_quant(&m, 10, 4, KvQuant::Int8),
+            GbBudget::kv_cache_bytes(&m, 10, 4)
+        );
+        assert_eq!(
+            GbBudget::cross_kv_bytes_quant(&m, 4, KvQuant::Int8),
+            GbBudget::cross_kv_bytes(&m, 4)
+        );
+        // Scratch exists exactly for the modes that dequantize.
+        let hw = HwConfig::default();
+        assert_eq!(GbBudget::dequant_scratch_bytes(&hw, &m, 4, KvQuant::Fp16), 0);
+        assert!(GbBudget::dequant_scratch_bytes(&hw, &m, 4, KvQuant::Int8) > 0);
+        assert_eq!(
+            GbBudget::dequant_scratch_bytes(&hw, &m, 4, KvQuant::Int8),
+            GbBudget::dequant_scratch_bytes(&hw, &m, 4, KvQuant::Int4)
+        );
+    }
+
+    #[test]
+    fn max_decode_len_quant_roughly_doubles_per_mode() {
+        // Satellite acceptance: the residency cap roughly doubles
+        // fp16 → int8 → int4, minus the dequant scratch the reduced modes
+        // add to the fixed residents.
+        let hw = HwConfig::default();
+        for name in ["s2t-small", "tiny"] {
+            let m = ModelConfig::preset(name).unwrap();
+            for batch in [1usize, 4] {
+                let f16 = GbBudget::max_decode_len_quant(&hw, &m, batch, KvQuant::Fp16);
+                let i8_ = GbBudget::max_decode_len_quant(&hw, &m, batch, KvQuant::Int8);
+                let i4 = GbBudget::max_decode_len_quant(&hw, &m, batch, KvQuant::Int4);
+                assert!(f16 > 0, "{name} b{batch}: no resident fp16 decode at all");
+                assert!(i8_ > f16 && i4 > i8_, "{name} b{batch}: {f16}/{i8_}/{i4}");
+                // Upper bounds are exact halving/quartering of the free
+                // bytes; lower bounds give back the scratch's token-slots
+                // (+ floor-division slop).
+                let slack8 = (GbBudget::dequant_scratch_bytes(&hw, &m, batch, KvQuant::Int8)
+                    / GbBudget::kv_cache_bytes_quant(&m, 1, batch, KvQuant::Int8).max(1))
+                    as usize
+                    + 2;
+                let slack4 = (GbBudget::dequant_scratch_bytes(&hw, &m, batch, KvQuant::Int4)
+                    / GbBudget::kv_cache_bytes_quant(&m, 1, batch, KvQuant::Int4).max(1))
+                    as usize
+                    + 4;
+                assert!(i8_ <= 2 * f16 + 1, "{name} b{batch}: int8 cap {i8_} vs fp16 {f16}");
+                assert!(
+                    i8_ + slack8 >= 2 * f16,
+                    "{name} b{batch}: int8 cap {i8_} too far below 2×{f16}"
+                );
+                assert!(i4 <= 4 * f16 + 3, "{name} b{batch}: int4 cap {i4} vs fp16 {f16}");
+                assert!(
+                    i4 + slack4 >= 4 * f16,
+                    "{name} b{batch}: int4 cap {i4} too far below 4×{f16}"
+                );
+                // At the cap the quantized budget fits single-buffered; one
+                // past it overflows — same exactness contract as legacy.
+                for (quant, cap) in
+                    [(KvQuant::Fp16, f16), (KvQuant::Int8, i8_), (KvQuant::Int4, i4)]
+                {
+                    assert!(
+                        GbBudget::for_decode_quant(&hw, &m, cap, batch, quant).fits_single(),
+                        "{name} b{batch} {}",
+                        quant.name()
+                    );
+                    assert!(
+                        !GbBudget::for_decode_quant(&hw, &m, cap + 1, batch, quant).fits_single(),
+                        "{name} b{batch} {}",
+                        quant.name()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

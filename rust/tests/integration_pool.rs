@@ -11,6 +11,7 @@ use trex::coordinator::{
     BatcherConfig, Engine, EngineConfig, PoolConfig, Request, Server, ServerHandle, TokenEvent,
     TraceGenerator,
 };
+use trex::kv::{KvArenaConfig, KvManager, KvQuant};
 use trex::runtime::ArtifactSet;
 use trex::sim::GbBudget;
 
@@ -23,10 +24,16 @@ fn start(pool: PoolConfig) -> ServerHandle {
     Server::start_pool(
         move |ctx| {
             let set = ArtifactSet::reference("tiny", D, MAX_SEQ)?;
-            Engine::with_cache(
+            Engine::for_worker(
                 set,
-                EngineConfig { hw: hw.clone(), perf_model: pm.clone(), self_test: false },
-                Arc::clone(&ctx.sim_cache),
+                EngineConfig {
+                    hw: hw.clone(),
+                    perf_model: pm.clone(),
+                    self_test: false,
+                    kv_quant: KvQuant::Fp16,
+                    kv_pages: None,
+                },
+                ctx,
             )
         },
         pool,
@@ -180,10 +187,16 @@ fn start_with(pool: PoolConfig, hw: HwConfig, perf: ModelConfig) -> ServerHandle
     Server::start_pool(
         move |ctx| {
             let set = ArtifactSet::reference("tiny", D, MAX_SEQ)?;
-            Engine::with_cache(
+            Engine::for_worker(
                 set,
-                EngineConfig { hw: hw.clone(), perf_model: perf.clone(), self_test: false },
-                Arc::clone(&ctx.sim_cache),
+                EngineConfig {
+                    hw: hw.clone(),
+                    perf_model: perf.clone(),
+                    self_test: false,
+                    kv_quant: KvQuant::Fp16,
+                    kv_pages: None,
+                },
+                ctx,
             )
         },
         pool,
@@ -303,11 +316,12 @@ fn decode_groups_respect_class_width() {
 #[test]
 fn decode_cap_clamps_generation_instead_of_rejecting() {
     // A GB too small for the asked-for KV depth must CAP generation (serve
-    // what stays resident), not reject the request.
+    // what stays resident), not reject the request. Caps follow the KV
+    // arena's precision (fp16 here — the engine default).
     let mut hw = HwConfig::default();
     hw.gb_bytes = 64 << 10;
     let perf = ModelConfig::tiny();
-    let cap = GbBudget::max_decode_len(&hw, &perf, 4); // len 4 → B4 class
+    let cap = GbBudget::max_decode_len_quant(&hw, &perf, 4, KvQuant::Fp16); // len 4 → B4
     assert!(cap > 4 && cap < 1000, "cap {cap} must bind below the ask");
     let handle = start_with(pool(2, Duration::from_millis(1)), hw, perf);
     handle.submit(Request::new(0, 4, vec![0.5; 4 * D]).with_generate(1000)).unwrap();
@@ -347,6 +361,101 @@ fn plain_and_generate_requests_share_prefill_sim_entries() {
         "decode keys are (group, depth), shared across streams: {stats:?}"
     );
     handle.shutdown().unwrap();
+}
+
+/// Pool over a shared, explicitly-sized KV manager: admission consults it
+/// and every worker's engine charges residency against it.
+fn start_kv(workers: usize, kv: Arc<KvManager>, max_wait: Duration) -> ServerHandle {
+    let cfg = PoolConfig {
+        workers,
+        kv: Some(kv),
+        batcher: BatcherConfig { max_seq: MAX_SEQ, max_wait },
+        ..PoolConfig::default()
+    };
+    start(cfg)
+}
+
+#[test]
+fn kv_admission_bounds_concurrent_generate_streams() {
+    // A 4-page (8 KiB) arena at oversub 1.0: one 200-token generate stream
+    // projects past half the arena, so the second and third submits must be
+    // refused at the door with a kv-arena error — admission bounds
+    // aggregate decode state, not just per-class caps.
+    let hw = HwConfig::default();
+    let pm = ModelConfig::tiny();
+    let mut cfg = KvArenaConfig::for_pool(&hw, &pm, KvQuant::Fp16, Some(4));
+    cfg.admit_oversub = 1.0;
+    let kv = Arc::new(KvManager::new(&hw, &pm, cfg));
+    let handle = start_kv(1, Arc::clone(&kv), Duration::from_millis(1));
+    let mut accepted = 0;
+    let mut kv_rejected = 0;
+    for i in 0..3u64 {
+        // len 4 → B4; a long generation keeps the first stream live while
+        // the later submits arrive.
+        match handle.submit(Request::new(i, 4, vec![0.2; 4 * D]).with_generate(200)) {
+            Ok(()) => accepted += 1,
+            Err(e) => {
+                assert!(e.to_string().contains("kv arena"), "got: {e}");
+                kv_rejected += 1;
+            }
+        }
+    }
+    assert_eq!(accepted, 1, "arena projection admits exactly one stream");
+    assert_eq!(kv_rejected, 2);
+    for _ in 0..accepted {
+        handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    assert_eq!(kv.stats().admit_rejected, 2);
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.metrics.completed(), accepted);
+    assert_eq!(report.metrics.rejected(), kv_rejected);
+    // Completed streams released their reservations and pages.
+    assert_eq!(kv.live_streams(), 0);
+    assert_eq!(kv.used_pages(), 0);
+    let j = report.json();
+    assert_eq!(j.get("kv_arena").unwrap().get("admit_rejected").unwrap().as_f64().unwrap(), 2.0);
+}
+
+#[test]
+fn kv_arena_evicts_and_charges_swap_in_across_concurrent_streams() {
+    // Acceptance: aggregate residency enforced across concurrent streams —
+    // 8 generate streams whose combined KV outgrows a 64-page arena. Parked
+    // streams are never free: the LRU must evict them, rejoins must charge
+    // swap-in EMA, and occupancy must never exceed the arena.
+    let hw = HwConfig::default();
+    let pm = ModelConfig::tiny();
+    let pages = 64usize;
+    let mut cfg = KvArenaConfig::for_pool(&hw, &pm, KvQuant::Fp16, Some(pages));
+    cfg.admit_oversub = 8.0; // admit the whole fleet; let residency churn
+    let kv = Arc::new(KvManager::new(&hw, &pm, cfg));
+    let n = 8u64;
+    let gen = 40usize;
+    let handle = start_kv(1, Arc::clone(&kv), Duration::from_millis(0));
+    for i in 0..n {
+        handle.submit(Request::new(i, 4, vec![0.1; 4 * D]).with_generate(gen)).unwrap();
+    }
+    for _ in 0..n {
+        let r = handle.responses.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(r.tokens_generated, gen);
+    }
+    let report = handle.shutdown().unwrap();
+    let stats = kv.stats();
+    // 8 streams at final depth 44 need ~88 pages > 64: eviction must have
+    // triggered, and at least one evicted stream rejoined a step.
+    assert!(stats.evictions > 0, "{stats:?}");
+    assert!(stats.swap_ins > 0 && stats.swap_in_bytes > 0, "{stats:?}");
+    assert_eq!(stats.forced_overcommit, 0, "groups of 4 fit the arena: {stats:?}");
+    assert!(
+        stats.peak_used_pages <= pages,
+        "residency cap violated: {} > {pages}",
+        stats.peak_used_pages
+    );
+    // The charges surfaced in the pooled metrics (and the swap bytes ride
+    // the final responses' EMA shares — never free).
+    assert_eq!(report.metrics.kv_swap_bytes(), stats.swap_in_bytes);
+    let j = report.json();
+    assert!(j.get("kv_swap_ins").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(kv.live_streams(), 0, "all streams released on completion");
 }
 
 #[test]

@@ -11,6 +11,7 @@ use trex::config::{HwConfig, ModelConfig};
 use trex::coordinator::{
     BatcherConfig, Engine, EngineConfig, Request, Server, TraceGenerator,
 };
+use trex::kv::KvQuant;
 use trex::runtime::{ArtifactSet, PjrtRuntime};
 
 fn art_dir() -> Option<PathBuf> {
@@ -58,6 +59,8 @@ fn engine_executes_batches_and_strips_padding() {
             hw: HwConfig::default(),
             perf_model: ModelConfig::tiny(),
             self_test: false,
+            kv_quant: KvQuant::Fp16,
+            kv_pages: None,
         },
     )
     .unwrap();
@@ -104,6 +107,8 @@ fn server_end_to_end_trace() {
                     hw: hw.clone(),
                     perf_model: perf.clone(),
                     self_test: false,
+                    kv_quant: KvQuant::Fp16,
+                    kv_pages: None,
                 },
             )
         },
@@ -134,7 +139,13 @@ fn engine_rejects_oversized_request() {
     let d = set.d_model;
     let mut engine = Engine::new(
         set,
-        EngineConfig { hw: HwConfig::default(), perf_model: ModelConfig::tiny(), self_test: false },
+        EngineConfig {
+            hw: HwConfig::default(),
+            perf_model: ModelConfig::tiny(),
+            self_test: false,
+            kv_quant: KvQuant::Fp16,
+            kv_pages: None,
+        },
     )
     .unwrap();
     // A 20-token request shoved into a B4 batch (slot 8) must error.

@@ -39,7 +39,7 @@ fn generative_sweep_invariants() {
             trf: rng.below(2) == 0,
             prefetch: rng.below(2) == 0,
             act_bits: 8,
-            gb: None,
+            ..SimOptions::paper(&hw)
         };
         let prog = build_program(&m, seq, batch);
         let s = simulate(&hw, &prog, &opts);
