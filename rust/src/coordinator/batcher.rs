@@ -15,6 +15,18 @@
 //! whose `past_len` falls in the same bucket so the pad waste of a step
 //! (each stream pads to the group's deepest member; ∝ max−min `past_len`)
 //! stays bounded by the bucket width.
+//!
+//! [`DecodePool`] is the scheduler's between-steps pool: it timestamps each
+//! parked stream and adds two policies on top of the grouper —
+//!
+//! * a **coalescing window** (`decode_max_wait`): a partial group waits for
+//!   bucket-mates until the pool's oldest entry expires, while a *full*
+//!   group (at its effective class-width bound) dispatches immediately;
+//! * **priority by remaining tokens**: near-done streams lead their groups
+//!   and drain first, freeing KV pages and in-flight slots sooner.
+//!
+//! Its [`DecodePool::next_deadline`] feeds the server's worker poll timeout
+//! the same way [`DynamicBatcher::next_deadline`] feeds the ingest loop.
 
 use crate::coordinator::engine::{DecodeState, MAX_DECODE_GROUP};
 use crate::coordinator::request::Request;
@@ -74,17 +86,21 @@ impl DynamicBatcher {
 
     /// Flush any queue whose head has waited past the deadline — emitted as
     /// a *partial* batch (padded by the engine; the chip runs the class
-    /// configuration regardless, idle slots stay idle).
+    /// configuration regardless, idle slots stay idle). Drains EVERY
+    /// expired width in one call: a burst that grew a queue past one batch
+    /// width must not serialize through successive poll ticks, one batch
+    /// per tick.
     pub fn poll_deadline(&mut self, now: Instant) -> Vec<FormedBatch> {
         let mut out = Vec::new();
         for class in BatchClass::ALL {
             let q = &mut self.queues[slot(class)];
-            if let Some(head) = q.front() {
-                if now.duration_since(head.arrival) >= self.cfg.max_wait {
-                    let take = q.len().min(class.batch());
-                    let requests: Vec<Request> = q.drain(..take).collect();
-                    out.push(FormedBatch { class, requests });
+            while let Some(head) = q.front() {
+                if now.duration_since(head.arrival) < self.cfg.max_wait {
+                    break;
                 }
+                let take = q.len().min(class.batch());
+                let requests: Vec<Request> = q.drain(..take).collect();
+                out.push(FormedBatch { class, requests });
             }
         }
         out
@@ -137,6 +153,44 @@ pub enum DecodePolicy {
     },
 }
 
+/// Plan one group over `streams` — `(class, past_len)` pairs in candidate
+/// order — and report whether the group is **full**: at its effective width
+/// bound, so waiting longer cannot grow it (either the limit is reached or
+/// a narrower stream blocks the walk). Returns indices into `streams`.
+fn plan_group(streams: &[(BatchClass, usize)], policy: DecodePolicy) -> (Vec<usize>, bool) {
+    if streams.is_empty() {
+        return (Vec::new(), false);
+    }
+    let mut limit = MAX_DECODE_GROUP;
+    let mut picked: Vec<usize> = Vec::new();
+    let mut blocked = false;
+    let bucket_of = |past: usize| match policy {
+        DecodePolicy::Greedy => 0,
+        DecodePolicy::DepthBucketed { bucket } => past / bucket.max(1),
+    };
+    let head_bucket = bucket_of(streams[0].1);
+    for (i, &(class, past)) in streams.iter().enumerate() {
+        if picked.len() >= limit {
+            break;
+        }
+        if bucket_of(past) != head_bucket {
+            // Not a bucket-mate of the head (DepthBucketed only) — skip,
+            // it will lead its own group soon (FIFO-ish).
+            continue;
+        }
+        let width = class.batch().min(MAX_DECODE_GROUP);
+        if picked.len() + 1 > width {
+            // A narrower mate can't ride this group; stop the walk.
+            blocked = true;
+            break;
+        }
+        limit = limit.min(width);
+        picked.push(i);
+    }
+    let full = blocked || picked.len() >= limit;
+    (picked, full)
+}
+
 /// Form one decode group from the between-steps pool under `policy`.
 ///
 /// Both policies pop the FIFO head first (fairness) and never group wider
@@ -148,50 +202,195 @@ pub fn form_decode_group(
     pool: &mut VecDeque<DecodeState>,
     policy: DecodePolicy,
 ) -> Vec<DecodeState> {
-    if pool.is_empty() {
-        return Vec::new();
+    let view: Vec<(BatchClass, usize)> = pool.iter().map(|s| (s.class, s.past_len)).collect();
+    let (picked, _) = plan_group(&view, policy);
+    let mut out = Vec::with_capacity(picked.len());
+    for &idx in picked.iter().rev() {
+        out.push(pool.remove(idx).expect("picked index valid"));
     }
-    match policy {
-        DecodePolicy::Greedy => {
-            let mut limit = MAX_DECODE_GROUP;
-            let mut take = 0;
-            while take < pool.len() && take < limit {
-                let width = pool[take].class.batch().min(MAX_DECODE_GROUP);
-                if take + 1 > width {
-                    break;
-                }
-                limit = limit.min(width);
-                take += 1;
-            }
-            pool.drain(..take).collect()
+    out.reverse();
+    out
+}
+
+// ------------------------------------------------- coalescing decode pool
+
+/// One parked decode stream with the instant it (re-)entered the pool.
+#[derive(Debug)]
+pub struct DecodeEntry {
+    pub entered: Instant,
+    pub state: DecodeState,
+}
+
+/// The scheduler's between-steps pool: timestamps parked streams so a
+/// coalescing window (`decode_max_wait`) can hold partial groups back for
+/// bucket-mates, and optionally orders candidates by remaining tokens so
+/// near-done streams drain first. Pure data structure, like the batcher —
+/// the server drives it under its queue lock.
+///
+/// Priority is deliberately unfair: a deep stream can wait indefinitely
+/// while near-done streams keep arriving (each pop still shrinks the pool,
+/// so it drains whenever arrivals pause). The window's expiry is judged on
+/// the *planned group*, so such a waiter never voids coalescing for
+/// everyone else.
+#[derive(Debug, Default)]
+pub struct DecodePool {
+    entries: VecDeque<DecodeEntry>,
+}
+
+impl DecodePool {
+    pub fn new() -> Self {
+        DecodePool { entries: VecDeque::new() }
+    }
+
+    /// Park streams (all stamped `now` — one step's survivors re-enter
+    /// together).
+    pub fn push(&mut self, now: Instant, states: impl IntoIterator<Item = DecodeState>) {
+        for state in states {
+            self.entries.push_back(DecodeEntry { entered: now, state });
         }
-        DecodePolicy::DepthBucketed { bucket } => {
-            let bucket = bucket.max(1);
-            let head_bucket = pool[0].past_len / bucket;
-            let mut limit = MAX_DECODE_GROUP;
-            let mut picked: Vec<usize> = Vec::new();
-            let mut i = 0;
-            while i < pool.len() && picked.len() < limit {
-                let s = &pool[i];
-                if s.past_len / bucket == head_bucket {
-                    let width = s.class.batch().min(MAX_DECODE_GROUP);
-                    if picked.len() + 1 > width {
-                        // A narrower bucket-mate can't ride this group;
-                        // stop so it leads its own group soon (FIFO-ish).
-                        break;
-                    }
-                    limit = limit.min(width);
-                    picked.push(i);
-                }
-                i += 1;
-            }
-            let mut out = Vec::with_capacity(picked.len());
-            for &idx in picked.iter().rev() {
-                out.push(pool.remove(idx).expect("picked index valid"));
-            }
-            out.reverse();
-            out
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Earliest coalescing deadline across parked streams — the instant the
+    /// oldest entry's window expires (feeds the worker poll timeout, like
+    /// the batcher's `next_deadline` feeds the ingest loop).
+    pub fn next_deadline(&self, max_wait: Duration) -> Option<Instant> {
+        self.entries.iter().map(|e| e.entered + max_wait).min()
+    }
+
+    /// Candidate order: FIFO, or near-done-first when `priority` is set
+    /// (stable sort — FIFO breaks remaining-token ties).
+    fn order(&self, priority: bool) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.entries.len()).collect();
+        if priority {
+            order.sort_by_key(|&i| self.entries[i].state.remaining);
         }
+        order
+    }
+
+    /// Plan the group a pop would take right now: pool indices + fullness.
+    fn plan(&self, policy: DecodePolicy, priority: bool) -> (Vec<usize>, bool) {
+        let order = self.order(priority);
+        let view: Vec<(BatchClass, usize)> = order
+            .iter()
+            .map(|&i| (self.entries[i].state.class, self.entries[i].state.past_len))
+            .collect();
+        let (picked, full) = plan_group(&view, policy);
+        (picked.into_iter().map(|v| order[v]).collect(), full)
+    }
+
+    /// Expiry instant of a planned group: its oldest member's window end.
+    /// Judged on the *group*, not the whole pool — a stream the policy
+    /// never picks (e.g. a deep one under priority) must not void the
+    /// window for every later-arriving partial group.
+    fn group_deadline(&self, picked: &[usize], max_wait: Duration) -> Option<Instant> {
+        picked.iter().map(|&i| self.entries[i].entered + max_wait).min()
+    }
+
+    /// Deadline at which the group a pop would form right now stops
+    /// waiting (feeds the worker poll timeout; `None` when empty). Always
+    /// consistent with [`DecodePool::try_pop`]'s gate, so a worker that
+    /// sleeps until this instant is guaranteed a dispatch on wake.
+    pub fn pop_deadline(
+        &self,
+        policy: DecodePolicy,
+        max_wait: Duration,
+        priority: bool,
+    ) -> Option<Instant> {
+        let (picked, _) = self.plan(policy, priority);
+        self.group_deadline(&picked, max_wait)
+    }
+
+    /// Would a pop dispatch right now? Full groups (at their effective
+    /// width bound) always; partial groups only once the group's oldest
+    /// member has waited out the coalescing window.
+    pub fn ready(
+        &self,
+        now: Instant,
+        policy: DecodePolicy,
+        max_wait: Duration,
+        priority: bool,
+    ) -> bool {
+        if self.entries.is_empty() {
+            return false;
+        }
+        if max_wait.is_zero() {
+            return true;
+        }
+        let (picked, full) = self.plan(policy, priority);
+        full || self.group_deadline(&picked, max_wait).map(|d| d <= now).unwrap_or(true)
+    }
+
+    /// Remove a planned group by pool indices. Returns the group plus the
+    /// coalescing wait its oldest member spent parked, µs (the window cost
+    /// the metrics plane reports against the grouping it bought).
+    fn remove_planned(&mut self, mut picked: Vec<usize>, now: Instant) -> (Vec<DecodeState>, f64) {
+        picked.sort_unstable();
+        let mut wait_us: f64 = 0.0;
+        let mut out = Vec::with_capacity(picked.len());
+        for &idx in picked.iter().rev() {
+            let e = self.entries.remove(idx).expect("picked index valid");
+            let waited = now.saturating_duration_since(e.entered).as_nanos() as f64 / 1e3;
+            wait_us = wait_us.max(waited);
+            out.push(e.state);
+        }
+        out.reverse();
+        (out, wait_us)
+    }
+
+    /// Form and remove one group unconditionally (window already decided —
+    /// see [`DecodePool::try_pop`] for the gated form).
+    pub fn pop_group(
+        &mut self,
+        now: Instant,
+        policy: DecodePolicy,
+        priority: bool,
+    ) -> (Vec<DecodeState>, f64) {
+        let (picked, _) = self.plan(policy, priority);
+        self.remove_planned(picked, now)
+    }
+
+    /// Pop a group if one would dispatch right now — [`DecodePool::ready`]
+    /// and [`DecodePool::pop_group`] fused so the group is planned exactly
+    /// once (this runs under the server's queue lock on the decode hot
+    /// path). `None`: empty pool, or a partial group still coalescing.
+    pub fn try_pop(
+        &mut self,
+        now: Instant,
+        policy: DecodePolicy,
+        max_wait: Duration,
+        priority: bool,
+    ) -> Option<(Vec<DecodeState>, f64)> {
+        if self.entries.is_empty() {
+            return None;
+        }
+        let (picked, full) = self.plan(policy, priority);
+        if !max_wait.is_zero() && !full {
+            let expired =
+                self.group_deadline(&picked, max_wait).map(|d| d <= now).unwrap_or(true);
+            if !expired {
+                return None;
+            }
+        }
+        Some(self.remove_planned(picked, now))
+    }
+
+    /// Drain everything as maximal groups, ignoring the window (shutdown).
+    pub fn drain_groups(&mut self, policy: DecodePolicy, priority: bool) -> Vec<Vec<DecodeState>> {
+        let mut out = Vec::new();
+        while !self.entries.is_empty() {
+            let (group, _) = self.pop_group(Instant::now(), policy, priority);
+            debug_assert!(!group.is_empty(), "pop_group must make progress");
+            out.push(group);
+        }
+        out
     }
 }
 
@@ -373,6 +572,115 @@ mod tests {
         let g = form_decode_group(&mut pool, DecodePolicy::DepthBucketed { bucket: 16 });
         assert_eq!(g.iter().map(|s| s.id).collect::<Vec<_>>(), vec![0, 1]);
         assert_eq!(pool.len(), 1);
+    }
+
+    #[test]
+    fn poll_deadline_drains_every_expired_width_in_one_call() {
+        // Regression: poll_deadline emitted at most ONE partial batch per
+        // class per call, so a burst that grew a queue past a batch width
+        // serialized through poll ticks. Admission normally flushes full
+        // widths eagerly; the queue state is stuffed directly here so the
+        // poll path stays robust to any producer.
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_seq: 128,
+            max_wait: Duration::from_millis(0),
+        });
+        for id in 0..9 {
+            b.queues[slot(BatchClass::B4)].push_back(req(id, 20));
+        }
+        b.queues[slot(BatchClass::B2)].push_back(req(100, 50));
+        let out = b.poll_deadline(Instant::now() + Duration::from_millis(1));
+        // 9 B4 → 4 + 4 + 1, plus the B2 partial: four batches, one call.
+        assert_eq!(out.len(), 4, "burst must drain in one poll: {out:?}");
+        assert_eq!(out.iter().map(|f| f.requests.len()).sum::<usize>(), 10);
+        assert_eq!(b.pending(), 0, "nothing left for a second tick");
+    }
+
+    #[test]
+    fn decode_pool_full_groups_dispatch_immediately() {
+        let mut p = DecodePool::new();
+        let now = Instant::now();
+        p.push(now, (0..4).map(|i| stream(i, BatchClass::B4, 5)));
+        let window = Duration::from_secs(3600);
+        assert!(p.ready(now, DecodePolicy::Greedy, window, false), "full group never waits");
+        let (g, wait_us) = p.pop_group(now, DecodePolicy::Greedy, false);
+        assert_eq!(g.iter().map(|s| s.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert!(wait_us < 1e3, "no coalescing wait was paid: {wait_us}");
+        assert!(p.is_empty());
+        // A solo B1 is full at width 1 — no pointless wait either.
+        p.push(now, [stream(9, BatchClass::B1, 7)]);
+        assert!(p.ready(now, DecodePolicy::Greedy, window, false));
+    }
+
+    #[test]
+    fn decode_pool_coalescing_window_holds_partial_groups() {
+        let mut p = DecodePool::new();
+        let t0 = Instant::now();
+        p.push(t0, (0..2).map(|i| stream(i, BatchClass::B4, 5)));
+        let window = Duration::from_millis(50);
+        assert!(!p.ready(t0, DecodePolicy::Greedy, window, false), "partial group waits");
+        assert_eq!(p.next_deadline(window), Some(t0 + window));
+        // Window expired: the partial group dispatches, wait recorded.
+        let later = t0 + Duration::from_millis(60);
+        assert!(p.ready(later, DecodePolicy::Greedy, window, false));
+        let (g, wait_us) = p.pop_group(later, DecodePolicy::Greedy, false);
+        assert_eq!(g.len(), 2);
+        assert!(wait_us >= 50_000.0, "coalesce wait measured in µs: {wait_us}");
+        // Window 0 is the seed behavior: dispatch whatever waits, at once.
+        p.push(t0, [stream(7, BatchClass::B4, 5)]);
+        assert!(p.ready(t0, DecodePolicy::Greedy, Duration::ZERO, false));
+        // try_pop fuses gate + pop: None while the window holds, the group
+        // once it expires (or with the window off).
+        assert!(p.try_pop(t0, DecodePolicy::Greedy, window, false).is_none());
+        assert_eq!(p.len(), 1, "a held pop removes nothing");
+        let (g, _) = p.try_pop(t0, DecodePolicy::Greedy, Duration::ZERO, false).unwrap();
+        assert_eq!(g.len(), 1);
+        assert!(p.is_empty());
+        assert!(p.try_pop(t0, DecodePolicy::Greedy, Duration::ZERO, false).is_none());
+        // Shutdown ignores the window entirely.
+        p.push(t0, [stream(8, BatchClass::B4, 5)]);
+        let groups = p.drain_groups(DecodePolicy::Greedy, false);
+        assert_eq!(groups.len(), 1);
+        assert!(p.is_empty());
+    }
+
+    fn stream_left(id: u64, class: BatchClass, past: usize, remaining: usize) -> DecodeState {
+        let mut s = DecodeState::stub(id, class, past);
+        s.remaining = remaining;
+        s
+    }
+
+    #[test]
+    fn decode_pool_priority_drains_near_done_streams_first() {
+        let now = Instant::now();
+        let mut p = DecodePool::new();
+        p.push(
+            now,
+            vec![
+                stream_left(0, BatchClass::B4, 5, 9),
+                stream_left(1, BatchClass::B4, 5, 3),
+                stream_left(2, BatchClass::B4, 5, 1),
+                stream_left(3, BatchClass::B4, 5, 7),
+                stream_left(4, BatchClass::B4, 5, 2),
+            ],
+        );
+        let (g, _) = p.pop_group(now, DecodePolicy::Greedy, true);
+        let mut ids: Vec<_> = g.iter().map(|s| s.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2, 3, 4], "the deepest stream (9 left) waits its turn");
+        assert_eq!(p.len(), 1);
+        // Without priority the pool is plain FIFO.
+        p.push(now, vec![stream_left(9, BatchClass::B4, 5, 1)]);
+        let (g, _) = p.pop_group(now, DecodePolicy::Greedy, false);
+        assert_eq!(g.iter().map(|s| s.id).collect::<Vec<_>>(), vec![0, 9]);
+        // A near-done B1 leads — and decodes solo, class width intact.
+        let mut p = DecodePool::new();
+        p.push(
+            now,
+            vec![stream_left(0, BatchClass::B4, 5, 9), stream_left(1, BatchClass::B1, 20, 1)],
+        );
+        let (g, _) = p.pop_group(now, DecodePolicy::Greedy, true);
+        assert_eq!(g.iter().map(|s| s.id).collect::<Vec<_>>(), vec![1]);
     }
 
     #[test]

@@ -10,6 +10,18 @@
 //! decode budget is clamped to the GB's KV-residency cap for the class
 //! ([`GbBudget::max_decode_len`]) — capped, never rejected.
 //!
+//! **Chunked prefill** ([`Engine::begin_prefill`] /
+//! [`Engine::prefill_chunk`]): the same pass, split into phase-group
+//! chunks so the worker loop can interleave decode steps mid-prefill
+//! instead of letting one long pass monopolize a worker (the paper's
+//! utilization argument, applied to the serving plane). Between chunks the
+//! simulation parks as a [`PrefillState`] — a suspended
+//! [`crate::sim::Stepper`] plus the batch — in the shared work pool; the
+//! final chunk runs the numerics and settles stats **bit-identical** to
+//! the monolithic pass. KV registration happens at the *first* chunk (the
+//! prefix becomes arena-resident as prefill starts writing it), so a shed
+//! mid-prefill must release it — the worker's Err path does.
+//!
 //! **Decode** ([`Engine::execute_decode`]): one autoregressive step for a
 //! group of up to [`MAX_DECODE_GROUP`] streams, which may sit at *different*
 //! KV depths (the group is whatever the queue held between steps). Each
@@ -25,14 +37,14 @@
 
 use crate::config::{HwConfig, ModelConfig};
 use crate::coordinator::batcher::FormedBatch;
-use crate::coordinator::request::{RequestId, Response, TokenEvent};
+use crate::coordinator::request::{Request, RequestId, Response, TokenEvent};
 use crate::coordinator::server::WorkerCtx;
 use crate::coordinator::sim_cache::{CachedPass, PassKey, SimCache};
 use crate::error::{Error, Result};
 use crate::kv::{KvArenaConfig, KvManager, KvQuant};
-use crate::model::{build_decode_step, build_program};
+use crate::model::{build_decode_step, build_program, Program};
 use crate::runtime::ArtifactSet;
-use crate::sim::{simulate, BatchClass, GbBudget, SimOptions};
+use crate::sim::{simulate, BatchClass, GbBudget, SimOptions, Stepper, StepperParts};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -115,6 +127,61 @@ impl DecodeState {
 pub struct ExecOutcome {
     pub responses: Vec<Response>,
     pub decoding: Vec<DecodeState>,
+}
+
+/// A prefill batch parked between chunks: the requests, the built program,
+/// the phase cursor, and the suspended simulation state. Lives in the
+/// shared work pool alongside [`DecodeState`]s — any worker may resume it
+/// (the suspended half is owned and `Send`; every pool engine clones the
+/// same `HwConfig`/perf model, so resuming elsewhere is exact).
+#[derive(Debug)]
+pub struct PrefillState {
+    class: BatchClass,
+    requests: Vec<Request>,
+    /// First-chunk start: `queue_us` is arrival → here, host latency spans
+    /// here → completion (chunk gaps included — they are real host time the
+    /// request experienced).
+    t0: Instant,
+    prog: Program,
+    next_phase: usize,
+    chunk_phases: usize,
+    parts: Option<StepperParts>,
+    /// The pass was already in the shared sim cache at `begin_prefill`:
+    /// chunk-by-chunk re-simulation would duplicate work the pool promises
+    /// to do exactly once, so the first chunk completes directly with this
+    /// value (there is no simulation occupancy left to break up).
+    cached: Option<CachedPass>,
+    chunks_done: usize,
+}
+
+impl PrefillState {
+    pub fn class(&self) -> BatchClass {
+        self.class
+    }
+    pub fn n_requests(&self) -> usize {
+        self.requests.len()
+    }
+    /// Ids holding KV registrations/reservations — what a shed must release.
+    pub fn generate_ids(&self) -> Vec<RequestId> {
+        self.requests.iter().filter(|r| r.generate > 0).map(|r| r.id).collect()
+    }
+    pub fn chunks_done(&self) -> usize {
+        self.chunks_done
+    }
+    pub fn phases_done(&self) -> usize {
+        self.next_phase
+    }
+    pub fn phases_total(&self) -> usize {
+        self.prog.phases.len()
+    }
+}
+
+/// One chunk's result: the pass parked again, or it completed. The parked
+/// state is boxed — it carries a whole suspended simulation and would
+/// otherwise dwarf the other variant.
+pub enum PrefillProgress {
+    Parked(Box<PrefillState>),
+    Done(ExecOutcome),
 }
 
 /// What one decode step produced: one token per participating stream,
@@ -318,37 +385,172 @@ impl Engine {
                 batch.class.name()
             )));
         }
-        // Assemble the token plane: each request padded to its slot;
-        // missing batch-mates (deadline flush) stay zero.
-        let mut plane = vec![0.0f32; tokens * d];
-        for (i, r) in batch.requests.iter().enumerate() {
+        let plane = assemble_plane(&batch.requests, d, slot, tokens)?;
+        let (seq_for_perf, class) = (slot, batch.class);
+        let out = entry.exe.run_f32(&plane, tokens, d)?;
+        let perf = self.perf(class, seq_for_perf);
+        Ok(self.finish_prefill(batch.requests, class, &out, d, slot, perf, t0, true))
+    }
+
+    /// Start a chunked prefill: validate the batch, register KV for its
+    /// generate streams (first-chunk registration — see module docs), build
+    /// the pass program and park a fresh simulation at phase 0. The caller
+    /// then drives [`Engine::prefill_chunk`] until it reports `Done`. When
+    /// the pass is already in the shared sim cache, the chunk loop is
+    /// skipped entirely, so repeat prefills of a key never re-simulate.
+    /// (Unlike the monolithic path's compute-under-lock, two workers
+    /// racing on a *cold* key may both simulate chunk-by-chunk and the
+    /// cache keeps one result — accepted: cold keys are rare, a duplicated
+    /// prefill simulation costs microseconds, and holding the cache lock
+    /// across parked chunks is not possible.)
+    ///
+    /// Payload-shape validation is deferred to the final chunk's plane
+    /// assembly: a malformed payload sheds *mid-prefill*, exercising the
+    /// release path a parked prefill needs anyway.
+    pub fn begin_prefill(
+        &mut self,
+        batch: FormedBatch,
+        chunk_phases: usize,
+    ) -> Result<PrefillState> {
+        let t0 = Instant::now();
+        let entry = self.artifacts.get(batch.class)?;
+        let slot = entry.seq;
+        let max_batch = entry.batch;
+        let n_req = batch.requests.len();
+        if n_req == 0 || n_req > max_batch {
+            return Err(Error::serve(format!(
+                "batch of {n_req} requests for class {}",
+                batch.class.name()
+            )));
+        }
+        for r in &batch.requests {
             if r.len > slot {
                 return Err(Error::serve(format!(
                     "request {} len {} exceeds class slot {slot}",
                     r.id, r.len
                 )));
             }
-            if r.payload.len() != r.len * d {
-                return Err(Error::serve(format!(
-                    "request {} payload {} != len {} × d_model {d}",
-                    r.id,
-                    r.payload.len(),
-                    r.len
-                )));
-            }
-            plane[i * slot * d..(i * slot + r.len) * d].copy_from_slice(&r.payload);
         }
+        let class = batch.class;
+        let cap = self.decode_cap(class);
+        for r in &batch.requests {
+            if r.generate == 0 {
+                continue;
+            }
+            if r.generate.min(cap.saturating_sub(r.len)) > 0 {
+                // The prefix becomes arena-resident as the first chunk
+                // starts writing it (no swap charge — written fresh).
+                self.kv.register(r.id, r.len);
+            } else {
+                // Cap-clamped to zero: give back the admission reservation.
+                self.kv.release(r.id);
+            }
+        }
+        let m = &self.cfg.perf_model;
+        let prog = build_program(m, slot, class.batch());
+        let cached = self.sim_cache.peek(PassKey::prefill(class, slot));
+        let parts = if cached.is_none() {
+            let gb = GbBudget::for_config(&self.cfg.hw, m, slot, class.batch());
+            let opts = self.sim_options(gb);
+            Some(Stepper::new(&self.cfg.hw, opts).suspend())
+        } else {
+            None
+        };
+        Ok(PrefillState {
+            class,
+            requests: batch.requests,
+            t0,
+            prog,
+            next_phase: 0,
+            chunk_phases: chunk_phases.max(1),
+            parts,
+            cached,
+            chunks_done: 0,
+        })
+    }
 
-        let (seq_for_perf, class) = (slot, batch.class);
+    /// Advance a parked prefill by one chunk (`chunk_phases` phases). While
+    /// phases remain the state parks again — the worker returns it to the
+    /// shared pool so decode steps (or other work) can interleave. The
+    /// final chunk settles the chunked simulation (bit-identical to the
+    /// monolithic pass — pinned by `chunked_phase_ranges_match_monolithic`
+    /// at the sim layer and by the engine-level equivalence integration
+    /// test), runs the numerics, and completes exactly like
+    /// [`Engine::execute`].
+    pub fn prefill_chunk(&mut self, mut st: PrefillState) -> Result<PrefillProgress> {
+        let pass = match st.cached {
+            // Already simulated process-wide: nothing to re-step — complete
+            // directly (the yield points exist to break up simulation
+            // occupancy, and a cached pass has none).
+            Some(pass) => pass,
+            None => {
+                let parts = st.parts.take().expect("unparked prefill holds stepper parts");
+                let mut stepper = Stepper::resume(&self.cfg.hw, parts);
+                let total = st.prog.phases.len();
+                let end = (st.next_phase + st.chunk_phases).min(total);
+                stepper.run_phases(&st.prog, st.next_phase..end);
+                st.next_phase = end;
+                st.chunks_done += 1;
+                if end < total {
+                    st.parts = Some(stepper.suspend());
+                    return Ok(PrefillProgress::Parked(Box::new(st)));
+                }
+                stepper.account_program(&st.prog);
+                let stats = stepper.finish();
+                CachedPass {
+                    chip_us: stats.seconds() * 1e6,
+                    chip_uj: stats.energy.total_uj(),
+                    ema_bytes: stats.ema_bytes(),
+                    utilization: stats.utilization(&self.cfg.hw),
+                }
+            }
+        };
+        let entry = self.artifacts.get(st.class)?;
+        let (d, slot, tokens) = (entry.d_model, entry.seq, entry.tokens);
+        // Deferred payload validation: a malformed payload errors HERE,
+        // mid-prefill — the worker's shed path releases the first-chunk KV
+        // registrations.
+        let plane = assemble_plane(&st.requests, d, slot, tokens)?;
         let out = entry.exe.run_f32(&plane, tokens, d)?;
-        let perf = self.perf(class, seq_for_perf);
+        // Seed the shared cache with the (deterministic) result so
+        // monolithic passes of the same key reuse it, and vice versa.
+        let perf = self.sim_cache.get_or_simulate(PassKey::prefill(st.class, slot), || pass);
+        Ok(PrefillProgress::Done(self.finish_prefill(
+            st.requests,
+            st.class,
+            &out,
+            d,
+            slot,
+            perf,
+            st.t0,
+            false,
+        )))
+    }
+
+    /// Split a finished prefill pass back into per-request responses and
+    /// decode streams. `register_kv` is true on the monolithic path (KV
+    /// registration happens here); the chunked path registered at its
+    /// first chunk.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_prefill(
+        &self,
+        requests: Vec<Request>,
+        class: BatchClass,
+        out: &[f32],
+        d: usize,
+        slot: usize,
+        perf: CachedPass,
+        t0: Instant,
+        register_kv: bool,
+    ) -> ExecOutcome {
+        let n_req = requests.len();
         let per_req_uj = perf.chip_uj / n_req as f64;
         let per_req_ema = perf.ema_bytes / n_req as u64;
         let host_us = t0.elapsed().as_nanos() as f64 / 1e3;
         let cap = self.decode_cap(class);
 
         let mut outcome = ExecOutcome::default();
-        for (i, r) in batch.requests.iter().enumerate() {
+        for (i, r) in requests.iter().enumerate() {
             let start = i * slot * d;
             let output = out[start..start + r.len * d].to_vec();
             let queue_us = t0.saturating_duration_since(r.arrival).as_nanos() as f64 / 1e3;
@@ -356,9 +558,11 @@ impl Engine {
             // the resident KV prefix — capped, not rejected.
             let generate = r.generate.min(cap.saturating_sub(r.len));
             if generate > 0 {
-                // The stream's prefill KV becomes arena-resident (no swap
-                // charge — prefill writes the planes fresh).
-                self.kv.register(r.id, r.len);
+                if register_kv {
+                    // The stream's prefill KV becomes arena-resident (no
+                    // swap charge — prefill writes the planes fresh).
+                    self.kv.register(r.id, r.len);
+                }
                 // The stream's next input is its last prefill output row.
                 let last = output[(r.len - 1) * d..r.len * d].to_vec();
                 outcome.decoding.push(DecodeState {
@@ -378,7 +582,7 @@ impl Engine {
                     ema_bytes: per_req_ema,
                 });
             } else {
-                if r.generate > 0 {
+                if r.generate > 0 && register_kv {
                     // Asked to generate but cap-clamped to zero: release
                     // any admission reservation so the arena slot frees.
                     self.kv.release(r.id);
@@ -399,7 +603,7 @@ impl Engine {
                 });
             }
         }
-        Ok(outcome)
+        outcome
     }
 
     /// Execute ONE decode step for a group of streams. Group membership is
@@ -493,6 +697,31 @@ impl Engine {
         self.kv.finish_group(&members);
         Ok(outcome)
     }
+}
+
+/// Assemble the class token plane: each request padded to its per-input
+/// slot; missing batch-mates (deadline flush) stay zero. Validates payload
+/// shape — the only per-request check that needs the payload itself.
+fn assemble_plane(requests: &[Request], d: usize, slot: usize, tokens: usize) -> Result<Vec<f32>> {
+    let mut plane = vec![0.0f32; tokens * d];
+    for (i, r) in requests.iter().enumerate() {
+        if r.len > slot {
+            return Err(Error::serve(format!(
+                "request {} len {} exceeds class slot {slot}",
+                r.id, r.len
+            )));
+        }
+        if r.payload.len() != r.len * d {
+            return Err(Error::serve(format!(
+                "request {} payload {} != len {} × d_model {d}",
+                r.id,
+                r.payload.len(),
+                r.len
+            )));
+        }
+        plane[i * slot * d..(i * slot + r.len) * d].copy_from_slice(&r.payload);
+    }
+    Ok(plane)
 }
 
 #[cfg(test)]

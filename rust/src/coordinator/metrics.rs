@@ -2,13 +2,20 @@
 //!
 //! The pool keeps one `ServerMetrics` per worker plus one pooled sink every
 //! worker also records into, so per-worker and pooled views stay consistent
-//! without a merge pass at shutdown. Percentiles (p50/p95/p99) come from the
-//! raw end-to-end latency samples each sink retains.
+//! without a merge pass at shutdown. Percentiles (p50/p95/p99) come from
+//! bounded [`Reservoir`] samplers — exact on small runs, O(1)-memory under
+//! sustained traffic (the raw `Vec` they replaced grew without bound and
+//! leaked in a long-running pool).
 
 use crate::sim::BatchClass;
 use crate::util::json::Json;
-use crate::util::stats::Running;
+use crate::util::stats::{Reservoir, Running};
 use std::sync::Mutex;
+use std::time::Instant;
+
+/// Chunk-completion instants retained for observability (tests/benches
+/// verify decode tokens interleave *between* a prefill's chunks).
+const CHUNK_MARKS_CAP: usize = 1024;
 
 #[derive(Debug, Default)]
 struct Inner {
@@ -30,6 +37,16 @@ struct Inner {
     rejected: u64,
     /// Batches dropped because the engine's execute failed.
     execute_errors: u64,
+    /// Prefill chunks executed (0 with chunking off; ≥ phase-count/chunk
+    /// per batch with it on).
+    prefill_chunks: u64,
+    /// Decode steps that ran while at least one prefill was parked
+    /// mid-flight — the interleaving chunked prefill exists to buy.
+    interleaved_decode_steps: u64,
+    /// Coalescing wait each dispatched decode group's oldest member paid.
+    coalesce_wait_us: Running,
+    /// Chunk-completion instants (bounded; observability for tests).
+    chunk_marks: Vec<Instant>,
     host_latency_us: Running,
     queue_us: Running,
     chip_us: Running,
@@ -37,10 +54,10 @@ struct Inner {
     utilization: Running,
     ema_bytes: u64,
     per_class: [u64; 3],
-    /// Raw end-to-end latencies for percentile reporting.
-    latencies: Vec<f64>,
-    /// Raw modeled per-token decode latencies (one sample per token).
-    us_per_token: Vec<f64>,
+    /// End-to-end latency samples for percentile reporting (bounded).
+    latencies: Reservoir,
+    /// Modeled per-token decode latency samples (bounded).
+    us_per_token: Reservoir,
 }
 
 /// Thread-safe metrics sink shared by engine workers.
@@ -86,13 +103,34 @@ impl ServerMetrics {
     }
 
     /// One decode step executed (any group size), with the step's padding
-    /// waste and KV swap-in charges.
-    pub fn record_decode_step(&self, pad_waste_tokens: u64, kv_swap_ins: u64, kv_swap_bytes: u64) {
+    /// waste, KV swap-in charges, whether it interleaved with a parked
+    /// prefill, and the coalescing wait its group paid before dispatch.
+    pub fn record_decode_step(
+        &self,
+        pad_waste_tokens: u64,
+        kv_swap_ins: u64,
+        kv_swap_bytes: u64,
+        interleaved: bool,
+        coalesce_wait_us: f64,
+    ) {
         let mut m = self.inner.lock().unwrap();
         m.decode_steps += 1;
         m.pad_waste_tokens += pad_waste_tokens;
         m.kv_swap_ins += kv_swap_ins;
         m.kv_swap_bytes += kv_swap_bytes;
+        if interleaved {
+            m.interleaved_decode_steps += 1;
+        }
+        m.coalesce_wait_us.push(coalesce_wait_us);
+    }
+
+    /// One prefill chunk executed (parked again or completed).
+    pub fn record_prefill_chunk(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.prefill_chunks += 1;
+        if m.chunk_marks.len() < CHUNK_MARKS_CAP {
+            m.chunk_marks.push(Instant::now());
+        }
     }
 
     /// A request refused at admission (backpressure or bad length).
@@ -117,6 +155,20 @@ impl ServerMetrics {
         self.inner.lock().unwrap().pad_waste_tokens
     }
 
+    pub fn prefill_chunks(&self) -> u64 {
+        self.inner.lock().unwrap().prefill_chunks
+    }
+
+    pub fn interleaved_decode_steps(&self) -> u64 {
+        self.inner.lock().unwrap().interleaved_decode_steps
+    }
+
+    /// Chunk-completion instants, in execution order (bounded — the first
+    /// `CHUNK_MARKS_CAP` chunks of the run).
+    pub fn chunk_marks(&self) -> Vec<Instant> {
+        self.inner.lock().unwrap().chunk_marks.clone()
+    }
+
     pub fn kv_swap_bytes(&self) -> u64 {
         self.inner.lock().unwrap().kv_swap_bytes
     }
@@ -137,14 +189,24 @@ impl ServerMetrics {
         // prefill tokens AND autoregressively decoded ones.
         let all_tokens = (m.tokens + m.tokens_decoded) as f64;
         let tok_thr = if wall_seconds > 0.0 { all_tokens / wall_seconds } else { 0.0 };
-        let pct = |p: f64| Json::num(crate::util::stats::percentile(&m.latencies, p));
-        let tok_pct = |p: f64| Json::num(crate::util::stats::percentile(&m.us_per_token, p));
+        let pct = |p: f64| Json::num(m.latencies.percentile(p));
+        let tok_pct = |p: f64| Json::num(m.us_per_token.percentile(p));
+        // Interleave ratio: share of decode steps that ran while a prefill
+        // was parked mid-flight (0 with chunking off).
+        let interleave = if m.decode_steps > 0 {
+            m.interleaved_decode_steps as f64 / m.decode_steps as f64
+        } else {
+            0.0
+        };
         Json::obj(vec![
             ("completed", Json::num(m.completed as f64)),
             ("batches", Json::num(m.batches as f64)),
             ("tokens", Json::num(m.tokens as f64)),
             ("decode_steps", Json::num(m.decode_steps as f64)),
             ("tokens_decoded", Json::num(m.tokens_decoded as f64)),
+            ("prefill_chunks", Json::num(m.prefill_chunks as f64)),
+            ("interleave_ratio", Json::num(interleave)),
+            ("coalesce_wait_us_mean", Json::num(m.coalesce_wait_us.mean())),
             ("pad_waste_tokens", Json::num(m.pad_waste_tokens as f64)),
             ("kv_swap_ins", Json::num(m.kv_swap_ins as f64)),
             ("kv_swap_bytes", Json::num(m.kv_swap_bytes as f64)),
@@ -231,7 +293,7 @@ mod tests {
         use std::time::Instant;
         let m = ServerMetrics::new();
         for (i, us) in [100.0, 200.0, 300.0, 400.0, 500.0].iter().enumerate() {
-            m.record_decode_step(0, 0, 0);
+            m.record_decode_step(0, 0, 0, false, 0.0);
             m.record_token(&TokenEvent {
                 id: 7,
                 index: i,
@@ -259,15 +321,68 @@ mod tests {
     #[test]
     fn decode_step_pad_and_swap_counters_aggregate() {
         let m = ServerMetrics::new();
-        m.record_decode_step(3, 1, 4096);
-        m.record_decode_step(0, 0, 0);
+        m.record_decode_step(3, 1, 4096, true, 150.0);
+        m.record_decode_step(0, 0, 0, false, 50.0);
         assert_eq!(m.pad_waste_tokens(), 3);
         assert_eq!(m.kv_swap_bytes(), 4096);
+        assert_eq!(m.interleaved_decode_steps(), 1);
         let j = m.report(1.0);
         assert_eq!(j.get("decode_steps").unwrap().as_f64().unwrap(), 2.0);
         assert_eq!(j.get("pad_waste_tokens").unwrap().as_f64().unwrap(), 3.0);
         assert_eq!(j.get("kv_swap_ins").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(j.get("kv_swap_bytes").unwrap().as_f64().unwrap(), 4096.0);
+        assert_eq!(j.get("interleave_ratio").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(j.get("coalesce_wait_us_mean").unwrap().as_f64().unwrap(), 100.0);
+    }
+
+    #[test]
+    fn prefill_chunks_counted_and_marked() {
+        let m = ServerMetrics::new();
+        assert_eq!(m.report(1.0).get("prefill_chunks").unwrap().as_f64().unwrap(), 0.0);
+        for _ in 0..3 {
+            m.record_prefill_chunk();
+        }
+        assert_eq!(m.prefill_chunks(), 3);
+        let marks = m.chunk_marks();
+        assert_eq!(marks.len(), 3);
+        assert!(marks.windows(2).all(|w| w[0] <= w[1]), "marks in execution order");
+    }
+
+    #[test]
+    fn latency_samples_stay_bounded_under_sustained_traffic() {
+        // Regression: `latencies`/`us_per_token` grew one f64 per response/
+        // token forever — a memory leak under sustained serving. The
+        // reservoir keeps percentiles honest at O(cap) memory.
+        use crate::coordinator::request::TokenEvent;
+        use crate::util::stats::RESERVOIR_CAP;
+        use std::time::Instant;
+        let m = ServerMetrics::new();
+        let n = (RESERVOIR_CAP * 3) as u64;
+        for i in 0..n {
+            m.record_response(&resp(i), 8);
+            m.record_token(&TokenEvent {
+                id: i,
+                index: 0,
+                past_len: 8,
+                us_per_token: 250.0,
+                chip_uj: 0.1,
+                ema_bytes: 10,
+                group_past_lens: vec![8],
+                worker: 0,
+                emitted: Instant::now(),
+            });
+        }
+        {
+            let inner = m.inner.lock().unwrap();
+            assert_eq!(inner.latencies.len(), RESERVOIR_CAP, "bounded");
+            assert_eq!(inner.latencies.seen(), n);
+            assert_eq!(inner.us_per_token.len(), RESERVOIR_CAP, "bounded");
+        }
+        // Constant inputs → exact percentiles regardless of sampling.
+        let j = m.report(1.0);
+        assert_eq!(j.get("e2e_latency_us_p95").unwrap().as_f64().unwrap(), 150.0);
+        assert_eq!(j.get("us_per_token_p50").unwrap().as_f64().unwrap(), 250.0);
+        assert_eq!(j.get("tokens_decoded").unwrap().as_f64().unwrap(), n as f64);
     }
 
     #[test]

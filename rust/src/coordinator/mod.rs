@@ -10,7 +10,11 @@
 //! streams with token-level continuous batching: they re-enter the queue
 //! after every decode step, regrouping under the pool's
 //! [`batcher::DecodePolicy`] (greedy FIFO or depth-bucketed to bound pad
-//! waste), and stream [`request::TokenEvent`]s back while in flight. Their
+//! waste), and stream [`request::TokenEvent`]s back while in flight.
+//! The scheduler adds chunked prefill (long passes park between phase
+//! chunks as [`engine::PrefillState`]s so decode steps interleave
+//! mid-prefill), a decode coalescing window, and near-done-first priority
+//! — see [`batcher::DecodePool`] and `PoolConfig`. Their
 //! KV lives in the pool-wide paged arena of [`crate::kv::KvManager`]:
 //! admission bounds aggregate decode state, parked streams keep their
 //! pages, and evicted streams pay swap-in EMA on rejoin. Admission applies
@@ -26,10 +30,12 @@ pub mod sim_cache;
 pub mod trace;
 
 pub use batcher::{
-    form_decode_group, BatcherConfig, DecodePolicy, DynamicBatcher, FormedBatch,
+    form_decode_group, BatcherConfig, DecodeEntry, DecodePolicy, DecodePool, DynamicBatcher,
+    FormedBatch,
 };
 pub use engine::{
-    DecodeOutcome, DecodeState, Engine, EngineConfig, ExecOutcome, MAX_DECODE_GROUP,
+    DecodeOutcome, DecodeState, Engine, EngineConfig, ExecOutcome, PrefillProgress, PrefillState,
+    MAX_DECODE_GROUP,
 };
 pub use metrics::ServerMetrics;
 pub use request::{Request, RequestId, Response, TokenEvent};

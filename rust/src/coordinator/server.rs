@@ -27,6 +27,22 @@
 //! `responses`. A worker with both kinds of work alternates prefill/decode
 //! so neither side starves.
 //!
+//! **Chunked prefill + priority scheduling** (`PoolConfig::prefill_chunk`,
+//! `decode_max_wait`, `decode_priority`): with chunking on, a prefill runs
+//! `prefill_chunk` phases at a time and parks as a
+//! [`crate::coordinator::engine::PrefillState`] in the shared pool between
+//! chunks, so one long pass never monopolizes a worker — decode steps
+//! interleave mid-prefill (the T-REX utilization argument applied to the
+//! serving plane). The worker's pop order is a priority policy: decode
+//! groups that are *ready* (full at their class-width bound, or oldest
+//! member past the coalescing window) go first, near-done streams drain
+//! before deep ones (`decode_priority`), and parked prefill chunks fill
+//! the gaps ahead of fresh batches. Workers waiting on a coalescing
+//! window sleep until the pool's next deadline
+//! ([`crate::coordinator::batcher::DecodePool::next_deadline`]) — the
+//! decode-side analogue of the ingest loop's batcher deadline. A prefill
+//! shed mid-chunk releases its first-chunk KV registrations.
+//!
 //! **Aggregate KV residency**: with a [`KvManager`] configured
 //! ([`PoolConfig::kv`]), generate admissions are additionally bounded by
 //! projected KV-arena bytes, and the engines (sharing the same manager via
@@ -41,9 +57,9 @@
 //! DESIGN.md §2.)
 
 use crate::coordinator::batcher::{
-    form_decode_group, BatcherConfig, DecodePolicy, DynamicBatcher, FormedBatch,
+    BatcherConfig, DecodePolicy, DecodePool, DynamicBatcher, FormedBatch,
 };
-use crate::coordinator::engine::{DecodeState, Engine};
+use crate::coordinator::engine::{DecodeState, Engine, PrefillProgress, PrefillState};
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::request::{Request, Response, TokenEvent};
 use crate::coordinator::sim_cache::{CacheStats, SimCache};
@@ -67,8 +83,18 @@ enum Msg {
 enum WorkItem {
     /// A formed prefill batch from the ingest thread.
     Prefill(FormedBatch),
+    /// A chunked prefill parked between chunks, ready to resume (boxed —
+    /// it carries a suspended simulation).
+    PrefillChunk(Box<PrefillState>),
     /// A group of decode streams regrouped from the between-steps pool.
-    Decode(Vec<DecodeState>),
+    Decode {
+        group: Vec<DecodeState>,
+        /// A prefill was parked mid-flight when this group dispatched —
+        /// the step interleaves with it.
+        interleaved: bool,
+        /// Coalescing wait the group's oldest member paid, µs.
+        coalesce_wait_us: f64,
+    },
 }
 
 /// A worker may jump the global FIFO for a warm same-class batch only if
@@ -97,6 +123,20 @@ pub struct PoolConfig {
     /// How decode streams regroup between steps (greedy FIFO or
     /// depth-bucketed — see [`DecodePolicy`]).
     pub decode: DecodePolicy,
+    /// Decode coalescing window: a *partial* group may wait this long for
+    /// mates before stepping, so steps run fuller and the per-token share
+    /// of the step's weight stream drops. Full-width groups never wait.
+    /// `Duration::ZERO` (default) steps whatever waits — the seed behavior.
+    pub decode_max_wait: Duration,
+    /// Near-done-first priority: order the between-steps pool by remaining
+    /// tokens so short streams drain (and free KV pages + in-flight slots)
+    /// before deep ones. Off by default (FIFO).
+    pub decode_priority: bool,
+    /// Chunked prefill: phases per chunk (0 = monolithic, the seed
+    /// behavior). With chunking on, long prefills park between chunks so
+    /// decode steps interleave mid-prefill instead of stalling behind the
+    /// whole pass.
+    pub prefill_chunk: usize,
     /// Pool-wide KV-cache manager: when set, admission bounds generate
     /// requests by projected arena bytes ([`KvManager::try_admit`]), and
     /// the same `Arc` reaches every worker's engine factory through
@@ -128,6 +168,9 @@ impl Default for PoolConfig {
             max_inflight: 4096,
             affinity: true,
             decode: DecodePolicy::Greedy,
+            decode_max_wait: Duration::ZERO,
+            decode_priority: false,
+            prefill_chunk: 0,
             kv: None,
             batcher: BatcherConfig::default(),
         }
@@ -156,36 +199,65 @@ pub struct WorkerCtx {
 struct QueueState {
     /// Per-class FIFO of `(admission seq, batch)`.
     queues: [VecDeque<(u64, FormedBatch)>; 3],
+    /// Chunked prefills parked between chunks, FIFO.
+    parked: VecDeque<Box<PrefillState>>,
     /// Decode streams waiting between steps — regrouped on every pop, so
     /// batch membership is continuous, not fixed at prefill time.
-    decode: VecDeque<DecodeState>,
+    decode: DecodePool,
     next_seq: u64,
     len: usize,
     closed: bool,
 }
 
-/// Shared work queue: per-class prefill subqueues + the decode pool under
-/// one lock so workers can apply class affinity while preserving
-/// bounded-age FIFO fairness.
+/// Shared work queue: per-class prefill subqueues + parked prefill chunks
+/// + the decode pool under one lock so workers can apply class affinity
+/// and the priority policy while preserving bounded-age FIFO fairness.
 struct WorkQueue {
     state: Mutex<QueueState>,
     ready: Condvar,
     /// Lock-free length mirror for the admission path (prefill batches).
     len_hint: AtomicUsize,
+    /// Prefill chunks currently executing on some worker (between pop and
+    /// park/complete). Parked chunks live in `QueueState::parked`; this
+    /// covers the in-flight ones so multi-worker pools count a decode step
+    /// as interleaved when the chunk runs on a *different* worker too.
+    chunks_executing: AtomicUsize,
     affinity: bool,
-    /// Decode regrouping policy ([`form_decode_group`]).
+    /// Decode regrouping policy ([`DecodePool`]).
     decode: DecodePolicy,
+    /// Coalescing window for partial decode groups.
+    decode_max_wait: Duration,
+    /// Near-done-first decode ordering.
+    decode_priority: bool,
 }
 
 impl WorkQueue {
-    fn new(affinity: bool, decode: DecodePolicy) -> Self {
+    fn new(
+        affinity: bool,
+        decode: DecodePolicy,
+        decode_max_wait: Duration,
+        decode_priority: bool,
+    ) -> Self {
         WorkQueue {
             state: Mutex::new(QueueState::default()),
             ready: Condvar::new(),
             len_hint: AtomicUsize::new(0),
+            chunks_executing: AtomicUsize::new(0),
             affinity,
             decode,
+            decode_max_wait,
+            decode_priority,
         }
+    }
+
+    /// A worker is about to execute one prefill chunk.
+    fn chunk_started(&self) {
+        self.chunks_executing.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// The chunk finished (parked again, completed, or shed).
+    fn chunk_finished(&self) {
+        self.chunks_executing.fetch_sub(1, Ordering::AcqRel);
     }
 
     fn push(&self, batch: FormedBatch) {
@@ -198,6 +270,13 @@ impl WorkQueue {
         self.ready.notify_one();
     }
 
+    /// Park a chunked prefill between chunks — any worker may resume it.
+    fn push_parked(&self, state: Box<PrefillState>) {
+        let mut s = self.state.lock().unwrap();
+        s.parked.push_back(state);
+        self.ready.notify_one();
+    }
+
     /// Return decode streams to the between-steps pool. Called after every
     /// step (and after prefill for streams entering decode) — the next pop
     /// regroups whatever is waiting.
@@ -206,7 +285,7 @@ impl WorkQueue {
             return;
         }
         let mut s = self.state.lock().unwrap();
-        s.decode.extend(states);
+        s.decode.push(Instant::now(), states);
         // One push can seed more than one group — wake everyone waiting.
         self.ready.notify_all();
     }
@@ -224,25 +303,59 @@ impl WorkQueue {
     /// drained. `warm` is the class the calling worker last executed;
     /// `prefer_prefill` breaks ties when both kinds of work wait (workers
     /// alternate so decode streams keep flowing *and* new requests keep
-    /// prefilled streams joining them). Decode streams held by an executing
-    /// worker are invisible here — that worker re-pushes and re-pops them,
-    /// so a closed, momentarily-empty queue never strands work.
+    /// prefilled streams joining them — with chunking on, the alternation
+    /// is what interleaves decode steps between a prefill's chunks).
+    ///
+    /// Priority order: ready decode groups (full at their width bound, or
+    /// past the coalescing window) → parked prefill chunks → fresh prefill
+    /// batches. A worker whose only work is a still-coalescing partial
+    /// group sleeps until the pool's next deadline. Work held by an
+    /// executing worker (a decode group mid-step, a chunk mid-execution)
+    /// is invisible here — that worker re-pushes and re-pops it, so a
+    /// closed, momentarily-empty queue never strands work.
     fn pop(&self, warm: Option<BatchClass>, prefer_prefill: bool) -> Option<WorkItem> {
         let mut s = self.state.lock().unwrap();
         loop {
-            let has_decode = !s.decode.is_empty();
-            let has_prefill = s.len > 0;
-            if has_decode && !(prefer_prefill && has_prefill) {
-                // Regroup under the configured policy (greedy FIFO or
-                // depth-bucketed); both bound the group by the narrowest
-                // member's class width so per-class KV caps keep holding.
-                let group = form_decode_group(&mut s.decode, self.decode);
-                return Some(WorkItem::Decode(group));
+            let now = Instant::now();
+            let has_prefill = s.len > 0 || !s.parked.is_empty();
+            if !(prefer_prefill && has_prefill) {
+                // A closed queue voids coalescing windows: drain everything.
+                let max_wait = if s.closed { Duration::ZERO } else { self.decode_max_wait };
+                let popped = s.decode.try_pop(now, self.decode, max_wait, self.decode_priority);
+                if let Some((group, coalesce_wait_us)) = popped {
+                    // A prefill is mid-flight: parked here, or a chunk
+                    // executing on another worker right now.
+                    let interleaved = !s.parked.is_empty()
+                        || self.chunks_executing.load(Ordering::Relaxed) > 0;
+                    return Some(WorkItem::Decode { group, interleaved, coalesce_wait_us });
+                }
             }
-            if has_prefill {
+            // Parked chunks resume before fresh batches start: in-flight
+            // passes finish first, bounding parked state.
+            if let Some(st) = s.parked.pop_front() {
+                return Some(WorkItem::PrefillChunk(st));
+            }
+            if s.len > 0 {
                 let batch = self.choose(&mut s, warm);
                 self.len_hint.store(s.len, Ordering::Relaxed);
                 return Some(WorkItem::Prefill(batch));
+            }
+            if !s.decode.is_empty() {
+                // Only still-coalescing streams remain: sleep until the
+                // would-be group's window expires (or new work notifies).
+                // pop_deadline is consistent with try_pop's gate, so the
+                // wake is guaranteed a dispatch — no spin.
+                let deadline = s
+                    .decode
+                    .pop_deadline(self.decode, self.decode_max_wait, self.decode_priority)
+                    .expect("non-empty decode pool plans a group");
+                let wait = deadline.saturating_duration_since(now);
+                if wait.is_zero() {
+                    continue;
+                }
+                let (guard, _timeout) = self.ready.wait_timeout(s, wait).unwrap();
+                s = guard;
+                continue;
             }
             if s.closed {
                 return None;
@@ -561,9 +674,15 @@ impl Server {
         let (tok_tx, tok_rx) = channel::<TokenEvent>();
         let pooled = Arc::new(ServerMetrics::new());
         let sim_cache = Arc::new(SimCache::new());
-        let queue = Arc::new(WorkQueue::new(cfg.affinity, cfg.decode));
+        let queue = Arc::new(WorkQueue::new(
+            cfg.affinity,
+            cfg.decode,
+            cfg.decode_max_wait,
+            cfg.decode_priority,
+        ));
         let inflight = Arc::new(AtomicUsize::new(0));
         let factory = Arc::new(make_engine);
+        let prefill_chunk = cfg.prefill_chunk;
 
         let n_workers = cfg.workers.max(1);
         let kv_shared: Arc<OnceLock<Arc<KvManager>>> = Arc::new(OnceLock::new());
@@ -597,6 +716,7 @@ impl Server {
                             pooled,
                             own,
                             inflight,
+                            prefill_chunk,
                         )
                     })
                     .expect("spawn engine worker"),
@@ -715,7 +835,10 @@ fn ingest_loop(
 /// Engine worker: build the engine, then pull work (warm-class first,
 /// alternating prefill/decode when both wait) until the queue closes and
 /// drains. Execute failures shed the batch/group and are counted, not fatal
-/// — one bad batch must not take the pool down.
+/// — one bad batch must not take the pool down. With chunking on
+/// (`prefill_chunk > 0`), prefill batches run one chunk per pop and park
+/// in between; a chunk that fails sheds its whole batch and releases the
+/// first-chunk KV registrations.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     ctx: &WorkerCtx,
@@ -726,6 +849,7 @@ fn worker_loop(
     pooled: Arc<ServerMetrics>,
     own: Arc<ServerMetrics>,
     inflight: Arc<AtomicUsize>,
+    prefill_chunk: usize,
 ) -> Result<()> {
     let mut engine = make_engine(ctx)?;
     let mut warm: Option<BatchClass> = None;
@@ -740,7 +864,29 @@ fn worker_loop(
         inflight.fetch_sub(1, Ordering::AcqRel);
         let _ = resp_tx.send(resp);
     };
+    // Every shed (failed batch, group, or chunk) exits through here: count
+    // the error, free the in-flight slots, release the KV registrations /
+    // reservations, latch the first error. `engine` and `first_err` are
+    // arguments because both are mutably borrowed elsewhere in the loop.
+    let shed = |engine: &Engine,
+                n: usize,
+                ids: Vec<crate::coordinator::request::RequestId>,
+                e: Error,
+                first_err: &mut Option<Error>| {
+        pooled.record_execute_error();
+        own.record_execute_error();
+        inflight.fetch_sub(n, Ordering::AcqRel);
+        for id in ids {
+            engine.kv_manager().release(id);
+        }
+        if first_err.is_none() {
+            *first_err = Some(e);
+        }
+    };
     while let Some(item) = queue.pop(warm, last_was_decode) {
+        // A prefill to advance by one chunk this iteration (fresh from a
+        // batch, or resumed from the parked pool).
+        let mut chunk_to_run: Option<Box<PrefillState>> = None;
         match item {
             WorkItem::Prefill(batch) => {
                 last_was_decode = false;
@@ -754,27 +900,29 @@ fn worker_loop(
                     batch.requests.iter().filter(|r| r.generate > 0).map(|r| r.id).collect();
                 pooled.record_batch(batch.class, n);
                 own.record_batch(batch.class, n);
-                match engine.execute(batch) {
-                    Ok(outcome) => {
-                        outcome.responses.into_iter().for_each(&finish);
-                        // Streams entering decode keep their in-flight slot
-                        // until their final response.
-                        queue.push_decode(outcome.decoding);
+                if prefill_chunk > 0 {
+                    match engine.begin_prefill(batch, prefill_chunk) {
+                        Ok(state) => chunk_to_run = Some(Box::new(state)),
+                        Err(e) => shed(&engine, n, gen_ids, e, &mut first_err),
                     }
-                    Err(e) => {
-                        pooled.record_execute_error();
-                        own.record_execute_error();
-                        inflight.fetch_sub(n, Ordering::AcqRel);
-                        for id in gen_ids {
-                            engine.kv_manager().release(id);
+                } else {
+                    match engine.execute(batch) {
+                        Ok(outcome) => {
+                            outcome.responses.into_iter().for_each(&finish);
+                            // Streams entering decode keep their in-flight
+                            // slot until their final response.
+                            queue.push_decode(outcome.decoding);
                         }
-                        if first_err.is_none() {
-                            first_err = Some(e);
-                        }
+                        Err(e) => shed(&engine, n, gen_ids, e, &mut first_err),
                     }
                 }
             }
-            WorkItem::Decode(group) => {
+            WorkItem::PrefillChunk(state) => {
+                last_was_decode = false;
+                warm = Some(state.class());
+                chunk_to_run = Some(state);
+            }
+            WorkItem::Decode { group, interleaved, coalesce_wait_us } => {
                 last_was_decode = true;
                 let n = group.len();
                 let ids: Vec<_> = group.iter().map(|s| s.id).collect();
@@ -784,11 +932,15 @@ fn worker_loop(
                             outcome.pad_waste_tokens,
                             outcome.kv_swap_ins,
                             outcome.kv_swap_bytes,
+                            interleaved,
+                            coalesce_wait_us,
                         );
                         own.record_decode_step(
                             outcome.pad_waste_tokens,
                             outcome.kv_swap_ins,
                             outcome.kv_swap_bytes,
+                            interleaved,
+                            coalesce_wait_us,
                         );
                         for mut ev in outcome.tokens {
                             ev.worker = ctx.worker;
@@ -799,21 +951,39 @@ fn worker_loop(
                         queue.push_decode(outcome.active);
                         outcome.responses.into_iter().for_each(&finish);
                     }
-                    Err(e) => {
-                        // Shed the whole group: their requests never answer,
-                        // so their arena pages and reservations free up.
-                        pooled.record_execute_error();
-                        own.record_execute_error();
-                        inflight.fetch_sub(n, Ordering::AcqRel);
-                        for id in ids {
-                            engine.kv_manager().release(id);
-                        }
-                        if first_err.is_none() {
-                            first_err = Some(e);
-                        }
-                    }
+                    // Shed the whole group: their requests never answer, so
+                    // their arena pages and reservations free up.
+                    Err(e) => shed(&engine, n, ids, e, &mut first_err),
                 }
             }
+        }
+        if let Some(state) = chunk_to_run {
+            // Snapshot before the call: an Err consumes the state, and the
+            // shed path must release the first-chunk KV registrations and
+            // the batch's in-flight slots.
+            let n = state.n_requests();
+            let gen_ids = state.generate_ids();
+            queue.chunk_started();
+            let progress = engine.prefill_chunk(*state);
+            // (The counter drops only after a Parked state is back in the
+            // queue, so a concurrent decode pop never sees the prefill
+            // vanish for an instant between executing and parked.)
+            match progress {
+                Ok(PrefillProgress::Parked(st)) => {
+                    pooled.record_prefill_chunk();
+                    own.record_prefill_chunk();
+                    queue.push_parked(st);
+                }
+                Ok(PrefillProgress::Done(outcome)) => {
+                    pooled.record_prefill_chunk();
+                    own.record_prefill_chunk();
+                    outcome.responses.into_iter().for_each(&finish);
+                    queue.push_decode(outcome.decoding);
+                }
+                // Shed mid-prefill: the whole batch never answers.
+                Err(e) => shed(&engine, n, gen_ids, e, &mut first_err),
+            }
+            queue.chunk_finished();
         }
     }
     match first_err {

@@ -117,6 +117,15 @@ impl SimCache {
         pass
     }
 
+    /// Non-counting lookup. The chunked-prefill path checks for an already
+    /// simulated pass up front — a hit means phase-by-phase re-simulation
+    /// would be pure duplicated work, so the chunk loop is skipped and the
+    /// completion path's [`SimCache::get_or_simulate`] records the hit when
+    /// the value is actually consumed.
+    pub fn peek(&self, key: PassKey) -> Option<CachedPass> {
+        self.map.read().unwrap().get(&key).copied()
+    }
+
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),

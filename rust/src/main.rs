@@ -6,6 +6,9 @@
 //!              [--no-affinity] [--artifacts DIR] [--perf-model <preset>]
 //!              [--generate N]            # decode N tokens per request
 //!              [--kv-quant fp16|int8|int4] [--kv-pages N] [--kv-bucket N]
+//!              [--prefill-chunk N]       # phases per prefill chunk (0 = whole pass)
+//!              [--decode-max-wait-us N]  # decode coalescing window
+//!              [--decode-priority]       # near-done streams drain first
 //!   trex report --model <preset>         # compression report (Fig 23.1.3)
 //!   trex selftest [--artifacts DIR]      # PJRT vs jax check vectors
 //!   trex workloads                       # list presets
@@ -62,6 +65,8 @@ fn main() -> CliResult {
                  \n           [--generate N]  (decode N tokens per request; perf-model defaults to s2t-small)\
                  \n           [--kv-quant fp16|int8|int4] [--kv-pages N]  (KV arena precision / page budget)\
                  \n           [--kv-bucket N]  (depth-bucketed decode grouping, 0 = greedy)\
+                 \n           [--prefill-chunk N]  (phases per prefill chunk, 0 = monolithic)\
+                 \n           [--decode-max-wait-us N] [--decode-priority]  (coalescing / near-done-first)\
                  \n  report   --model <preset>\
                  \n  selftest [--artifacts DIR]"
             );
@@ -122,6 +127,13 @@ fn cmd_serve(args: &[String]) -> CliResult {
     } else {
         DecodePolicy::Greedy
     };
+    // Scheduler knobs: chunked prefill (phases per chunk; 0 = monolithic),
+    // decode coalescing window, near-done-first decode priority.
+    let prefill_chunk: usize =
+        arg_value(args, "--prefill-chunk").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let decode_max_wait_us: u64 =
+        arg_value(args, "--decode-max-wait-us").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let decode_priority = args.iter().any(|a| a == "--decode-priority");
     let dir = arg_value(args, "--artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(artifacts::default_dir);
@@ -174,6 +186,9 @@ fn cmd_serve(args: &[String]) -> CliResult {
         max_inflight,
         affinity,
         decode: decode_policy,
+        decode_max_wait: Duration::from_micros(decode_max_wait_us),
+        decode_priority,
+        prefill_chunk,
         kv: Some(Arc::clone(&kv_mgr)),
         batcher: BatcherConfig { max_seq, max_wait: Duration::from_millis(2) },
     };

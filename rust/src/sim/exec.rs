@@ -177,11 +177,29 @@ pub struct SimState {
 }
 
 /// Resumable phase-at-a-time executor. Create one per logical run; feed it
-/// whole programs ([`Stepper::run_program`]) or individual phases
-/// ([`Stepper::step`]) — decode chains feed one step-program per generated
-/// token — then [`Stepper::finish`] to settle idle energy and read stats.
+/// whole programs ([`Stepper::run_program`]), phase ranges
+/// ([`Stepper::run_phases`] — chunked prefill runs a program a few phases
+/// at a time) or individual phases ([`Stepper::step`]) — decode chains feed
+/// one step-program per generated token — then [`Stepper::finish`] to
+/// settle idle energy and read stats. A stepper borrows its `HwConfig`, so
+/// a run that must *park* (leave the executing thread and resume later,
+/// possibly on another worker) detaches the owned state with
+/// [`Stepper::suspend`] and re-attaches it with [`Stepper::resume`].
 pub struct Stepper<'a> {
     hw: &'a HwConfig,
+    opts: SimOptions,
+    em: EnergyModel,
+    ema: EmaLedger,
+    st: SimState,
+}
+
+/// The owned, `Send` half of a suspended [`Stepper`]: everything but the
+/// `HwConfig` borrow. Holding one of these *is* a parked simulation — the
+/// cycle frontiers, EMA ledger and energy accumulated so far all travel
+/// with it, and resuming against the same `HwConfig`/options continues the
+/// run bit-identically (pinned by `chunked_phase_ranges_match_monolithic`).
+#[derive(Debug, Clone)]
+pub struct StepperParts {
     opts: SimOptions,
     em: EnergyModel,
     ema: EmaLedger,
@@ -260,14 +278,42 @@ impl<'a> Stepper<'a> {
         self.opts.kv_dequant_bytes_per_layer = bytes;
     }
 
+    /// Execute a contiguous range of `prog`'s phases (`[range.start,
+    /// range.end)`, clamped to the program) against the persistent state.
+    /// Token accounting is per *program*, not per phase — call
+    /// [`Stepper::account_program`] once after the final range.
+    pub fn run_phases(&mut self, prog: &Program, range: std::ops::Range<usize>) {
+        let end = range.end.min(prog.phases.len());
+        for phase in &prog.phases[range.start.min(end)..end] {
+            self.step(prog, phase);
+        }
+    }
+
+    /// Credit `prog`'s tokens/inputs to the run — exactly once per program,
+    /// after its last phase (or range of phases) executed.
+    pub fn account_program(&mut self, prog: &Program) {
+        self.st.tokens += (prog.batch * prog.seq) as u64;
+        self.st.inputs += prog.batch as u64;
+    }
+
     /// Execute every phase of `prog` in order and account its tokens
     /// (`batch × seq` — for a decode step, one new token per input).
     pub fn run_program(&mut self, prog: &Program) {
-        for phase in &prog.phases {
-            self.step(prog, phase);
-        }
-        self.st.tokens += (prog.batch * prog.seq) as u64;
-        self.st.inputs += prog.batch as u64;
+        self.run_phases(prog, 0..prog.phases.len());
+        self.account_program(prog);
+    }
+
+    /// Detach the owned simulation state so the run can park off-thread
+    /// (see [`StepperParts`]).
+    pub fn suspend(self) -> StepperParts {
+        StepperParts { opts: self.opts, em: self.em, ema: self.ema, st: self.st }
+    }
+
+    /// Re-attach parked state to a `HwConfig` and continue the run. The
+    /// config must be equivalent to the one the parts were created under
+    /// (the pool clones one `HwConfig` into every worker's engine).
+    pub fn resume(hw: &'a HwConfig, parts: StepperParts) -> Stepper<'a> {
+        Stepper { hw, opts: parts.opts, em: parts.em, ema: parts.ema, st: parts.st }
     }
 
     /// Settle idle energy over the total elapsed cycles and return the
@@ -626,6 +672,37 @@ mod tests {
                         assert_bit_identical(&new, &old, &ctx);
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_phase_ranges_match_monolithic() {
+        // Acceptance: a prefill split into phase-group chunks — suspended
+        // and resumed between every chunk, as the scheduler parks it — must
+        // finish with RunStats bit-identical to the one-shot run. Covers
+        // chunk sizes that don't divide the phase count and chunk size 1.
+        let hw = hw();
+        for name in ["bert-large", "s2t-small", "tiny"] {
+            let m = ModelConfig::preset(name).unwrap();
+            let prog = build_program(&m, 32, 4);
+            let opts = SimOptions { act_bits: m.act_bits, ..SimOptions::paper(&hw) };
+            let whole = simulate(&hw, &prog, &opts);
+            for chunk in [1usize, 2, 3, 7] {
+                let mut parts = Stepper::new(&hw, opts).suspend();
+                let mut at = 0;
+                while at < prog.phases.len() {
+                    let mut stepper = Stepper::resume(&hw, parts);
+                    let end = (at + chunk).min(prog.phases.len());
+                    stepper.run_phases(&prog, at..end);
+                    at = end;
+                    parts = stepper.suspend();
+                }
+                let mut stepper = Stepper::resume(&hw, parts);
+                stepper.account_program(&prog);
+                let chunked = stepper.finish();
+                let ctx = format!("{name} chunk={chunk}");
+                assert_bit_identical(&chunked, &whole, &ctx);
             }
         }
     }

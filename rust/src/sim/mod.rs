@@ -24,5 +24,6 @@ pub use cores::{afu_cycles, dmm_cycles, mac_cycles, smm_cycles, CoreTiming};
 pub use energy::EnergyBreakdown;
 pub use exec::{
     boot_ema_bytes, simulate, simulate_workload, RunStats, SimOptions, SimState, Stepper,
+    StepperParts,
 };
 pub use gb::GbBudget;

@@ -18,12 +18,18 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile by linear interpolation on the sorted data, `p` in [0, 100].
+///
+/// NaN-tolerant twice over: samples sort by `f64::total_cmp` (no
+/// `partial_cmp().unwrap()` panic — a single bad latency sample must never
+/// take the metrics thread down), and NaN samples are dropped before
+/// ranking so the result itself stays finite (a NaN percentile would
+/// serialize as invalid JSON in reports).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -34,11 +40,20 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Minimum (0 for empty — ±∞ from the fold identity would serialize as
+/// invalid JSON in reports).
 pub fn min(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
     xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
 
+/// Maximum (0 for empty; see [`min`]).
 pub fn max(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
@@ -95,6 +110,72 @@ impl Running {
     }
 }
 
+/// Bounded percentile sampler: keeps every observation up to `cap`, then
+/// switches to uniform reservoir sampling (Vitter's algorithm R) so a
+/// long-running pool's latency metrics stay O(cap) memory no matter how
+/// much traffic flows. Below `cap` the percentiles are exact — the small
+/// deterministic workloads the tests pin are unaffected.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    rng: crate::util::rng::Rng,
+}
+
+/// Default reservoir size: plenty for stable p50/p95/p99, tiny in memory.
+pub const RESERVOIR_CAP: usize = 4096;
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Reservoir::new(RESERVOIR_CAP)
+    }
+}
+
+impl Reservoir {
+    pub fn new(cap: usize) -> Self {
+        Reservoir {
+            cap: cap.max(1),
+            seen: 0,
+            samples: Vec::new(),
+            rng: crate::util::rng::Rng::new(0x5EED_5A3B),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            // Replace a random slot with probability cap/seen — every
+            // observation ends up retained with equal probability.
+            let j = ((self.rng.next_u64() as u128 * self.seen as u128) >> 64) as u64;
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = x;
+            }
+        }
+    }
+
+    /// Observations offered (not retained).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Observations retained (≤ cap).
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Percentile over the retained sample (exact below cap).
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile(&self.samples, p)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,6 +199,59 @@ mod tests {
         assert_eq!(stddev(&[]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
         assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // Regression: `partial_cmp().unwrap()` panicked on any NaN sample,
+        // taking the metrics thread down with it. NaNs are dropped before
+        // ranking, so every percentile stays finite (JSON-serializable).
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        let p50 = percentile(&xs, 50.0);
+        assert_eq!(p50, 2.0, "percentile over the finite samples [1, 2, 3]");
+        let p100 = percentile(&xs, 100.0);
+        assert!(p100.is_finite(), "top percentile must not surface the NaN: {p100}");
+        assert_eq!(p100, 3.0);
+        assert_eq!(percentile(&[f64::NAN], 50.0), 0.0, "all-NaN input clamps to 0");
+    }
+
+    #[test]
+    fn empty_min_max_serialize_to_valid_json() {
+        // Regression: ±INFINITY from the fold identities reached Json::num
+        // and serialized as non-JSON ("inf"). Empty summaries clamp to 0.
+        assert_eq!(min(&[]), 0.0);
+        assert_eq!(max(&[]), 0.0);
+        let j = crate::util::json::Json::obj(vec![
+            ("min", crate::util::json::Json::num(min(&[]))),
+            ("max", crate::util::json::Json::num(max(&[]))),
+        ]);
+        let s = j.to_string();
+        assert!(!s.contains("inf") && !s.contains("Inf"), "invalid JSON: {s}");
+        assert!(s.contains('0'));
+    }
+
+    #[test]
+    fn reservoir_exact_below_cap_and_bounded_above() {
+        // Below cap: identical to the unbounded percentile.
+        let mut r = Reservoir::new(64);
+        let xs: Vec<f64> = (1..=50).map(|i| i as f64).collect();
+        for &x in &xs {
+            r.push(x);
+        }
+        assert_eq!(r.len(), 50);
+        assert_eq!(r.percentile(50.0), percentile(&xs, 50.0));
+        assert_eq!(r.percentile(95.0), percentile(&xs, 95.0));
+
+        // Far above cap: memory stays bounded and the sampled percentile
+        // tracks the true distribution (uniform 0..10_000 here).
+        let mut big = Reservoir::new(512);
+        for i in 0..100_000u64 {
+            big.push((i % 10_000) as f64);
+        }
+        assert_eq!(big.len(), 512, "reservoir never outgrows its cap");
+        assert_eq!(big.seen(), 100_000);
+        let p50 = big.percentile(50.0);
+        assert!((3500.0..6500.0).contains(&p50), "sampled p50 {p50} off a uniform median");
     }
 
     #[test]

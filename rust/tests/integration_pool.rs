@@ -5,15 +5,15 @@
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 use trex::config::{HwConfig, ModelConfig};
 use trex::coordinator::{
-    BatcherConfig, Engine, EngineConfig, PoolConfig, Request, Server, ServerHandle, TokenEvent,
-    TraceGenerator,
+    BatcherConfig, Engine, EngineConfig, FormedBatch, PoolConfig, PrefillProgress, Request,
+    Server, ServerHandle, TokenEvent, TraceGenerator,
 };
 use trex::kv::{KvArenaConfig, KvManager, KvQuant};
 use trex::runtime::ArtifactSet;
-use trex::sim::GbBudget;
+use trex::sim::{BatchClass, GbBudget};
 
 const MAX_SEQ: usize = 32;
 const D: usize = 64;
@@ -456,6 +456,258 @@ fn kv_arena_evicts_and_charges_swap_in_across_concurrent_streams() {
     let j = report.json();
     assert!(j.get("kv_swap_ins").unwrap().as_f64().unwrap() > 0.0);
     assert_eq!(kv.live_streams(), 0, "all streams released on completion");
+}
+
+/// Pool with the scheduler knobs set (1 worker unless stated — the
+/// single-worker pop sequence is what makes these tests deterministic).
+fn sched_pool(
+    batcher_wait: Duration,
+    prefill_chunk: usize,
+    decode_max_wait: Duration,
+    decode_priority: bool,
+) -> PoolConfig {
+    PoolConfig {
+        workers: 1,
+        prefill_chunk,
+        decode_max_wait,
+        decode_priority,
+        batcher: BatcherConfig { max_seq: MAX_SEQ, max_wait: batcher_wait },
+        ..PoolConfig::default()
+    }
+}
+
+#[test]
+fn decode_coalescing_window_actually_waits() {
+    // Two B4 streams can never fill a 4-wide group, so every step must
+    // wait out the coalescing window — consecutive tokens of a stream are
+    // separated by at least (most of) the window.
+    let window = Duration::from_millis(200);
+    let handle = start(sched_pool(Duration::from_millis(5), 0, window, false));
+    for i in 0..2u64 {
+        handle.submit(Request::new(i, 4, vec![0.2; 4 * D]).with_generate(2)).unwrap();
+    }
+    for _ in 0..2 {
+        handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let events: Vec<TokenEvent> = handle.tokens.try_iter().collect();
+    assert_eq!(events.len(), 4);
+    // The window coalesced the pair: every step served both streams.
+    for e in &events {
+        assert_eq!(e.group_past_lens.len(), 2, "streams must share steps: {e:?}");
+    }
+    for id in 0..2u64 {
+        let mine: Vec<&TokenEvent> = events.iter().filter(|e| e.id == id).collect();
+        assert_eq!(mine.len(), 2);
+        let gap = mine[1].emitted.duration_since(mine[0].emitted);
+        assert!(
+            gap >= Duration::from_millis(140),
+            "req {id}: steps only {gap:?} apart — the window did not hold"
+        );
+    }
+    let report = handle.shutdown().unwrap();
+    let j = report.json();
+    assert!(
+        j.get("coalesce_wait_us_mean").unwrap().as_f64().unwrap() >= 100_000.0,
+        "coalescing wait must be measured"
+    );
+}
+
+#[test]
+fn full_width_decode_groups_skip_the_coalescing_window() {
+    // Four B4 streams fill the group: despite a huge window, steps
+    // dispatch immediately — the window only holds *partial* groups.
+    let window = Duration::from_millis(200);
+    let handle = start(sched_pool(Duration::from_millis(5), 0, window, false));
+    // Warm up first (engine construction + prefill simulation) so the
+    // wall-clock bound below measures scheduling, not startup.
+    handle.submit(Request::new(99, 4, vec![0.2; 4 * D])).unwrap();
+    handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    for i in 0..4u64 {
+        handle.submit(Request::new(i, 4, vec![0.2; 4 * D]).with_generate(2)).unwrap();
+    }
+    let t0 = Instant::now();
+    for _ in 0..4 {
+        handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_millis(150),
+        "full groups must not wait the 200ms window per step: {elapsed:?}"
+    );
+    let events: Vec<TokenEvent> = handle.tokens.try_iter().collect();
+    assert_eq!(events.len(), 8);
+    assert!(events.iter().all(|e| e.group_past_lens.len() == 4), "steps ran full");
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn decode_priority_drains_near_done_streams_first() {
+    // Stream A (24 tokens) decodes solo (B1); stream B (3 tokens) joins
+    // mid-generation. With near-done-first priority, B drains completely
+    // before A steps again — its response arrives while A still decodes.
+    let handle = start(sched_pool(Duration::from_millis(1), 0, Duration::ZERO, true));
+    handle.submit(Request::new(0, 20, vec![0.4; 20 * D]).with_generate(24)).unwrap();
+    // Wait for A's first token so it is decoding when B arrives.
+    let first = handle.tokens.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(first.id, 0);
+    handle.submit(Request::new(1, 24, vec![0.4; 24 * D]).with_generate(3)).unwrap();
+    let r1 = handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(r1.id, 1, "near-done stream must finish first");
+    let r0 = handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(r0.id, 0);
+    // The discriminator vs FIFO (which would alternate A,B,A,B…): once B
+    // leads the pool (3 remaining vs A's ≥ 8), every pop picks B until it
+    // drains — no A token lands between B's first and last.
+    let events: Vec<TokenEvent> = handle.tokens.try_iter().collect();
+    let b_first = events.iter().filter(|e| e.id == 1).map(|e| e.emitted).min().unwrap();
+    let b_last = events.iter().filter(|e| e.id == 1).map(|e| e.emitted).max().unwrap();
+    let a_between = events
+        .iter()
+        .filter(|e| e.id == 0 && e.emitted > b_first && e.emitted < b_last)
+        .count();
+    assert_eq!(a_between, 0, "B must drain consecutively, ahead of the deeper stream");
+    let a_after = events.iter().filter(|e| e.id == 0 && e.emitted >= b_last).count();
+    assert!(a_after >= 2, "A must still be decoding after B drained (saw {a_after})");
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn chunked_prefill_interleaves_decode_with_a_long_prefill() {
+    // One worker, chunk = 1 phase: while the long B1 request prefills,
+    // decode steps of stream A must land BETWEEN its chunk completions —
+    // the head-of-line blocking a monolithic prefill would cause is gone.
+    let hw = HwConfig::default();
+    let perf = ModelConfig::s2t_small(); // 20 phases → many chunks
+    let pool = sched_pool(Duration::from_millis(1), 1, Duration::ZERO, false);
+    let handle = start_with(pool, hw, perf);
+    handle.submit(Request::new(0, 4, vec![0.2; 4 * D]).with_generate(40)).unwrap();
+    // A is decoding (its own prefill chunks are done once a token streams).
+    let first = handle.tokens.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(first.id, 0);
+    let marks_before = handle.metrics.chunk_marks().len();
+    handle.submit(Request::new(1, 30, vec![0.3; 30 * D])).unwrap();
+    let rb = handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(rb.id, 1, "encode-only blocker finishes while A still decodes");
+    assert_eq!(rb.output.len(), 30 * D);
+    let ra = handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(ra.id, 0);
+    assert_eq!(ra.tokens_generated, 40);
+
+    let marks = handle.metrics.chunk_marks();
+    assert!(marks.len() > marks_before + 2, "the blocker must have run as many chunks");
+    let b_marks = &marks[marks_before..];
+    let (b_first, b_last) = (*b_marks.first().unwrap(), *b_marks.last().unwrap());
+    let events: Vec<TokenEvent> = handle.tokens.try_iter().collect();
+    let between = events
+        .iter()
+        .filter(|e| e.id == 0 && e.emitted > b_first && e.emitted < b_last)
+        .count();
+    assert!(
+        between > 0,
+        "decode tokens must land between the blocker's chunk completions \
+         ({} chunks over {:?})",
+        b_marks.len(),
+        b_last.duration_since(b_first)
+    );
+    assert!(
+        handle.metrics.interleaved_decode_steps() > 0,
+        "interleaved steps must be counted"
+    );
+    let report = handle.shutdown().unwrap();
+    let j = report.json();
+    assert!(j.get("prefill_chunks").unwrap().as_f64().unwrap() > 0.0);
+    assert!(j.get("interleave_ratio").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn shed_mid_prefill_releases_kv_reservations() {
+    // A generate request with a corrupt payload passes length admission,
+    // reserves KV, registers at its first chunk, then fails at the final
+    // chunk's plane assembly — mid-prefill. The shed path must release the
+    // arena pages AND the admission reservation, and free the in-flight
+    // slot.
+    let hw = HwConfig::default();
+    let pm = ModelConfig::tiny();
+    let kv = Arc::new(KvManager::new(
+        &hw,
+        &pm,
+        KvArenaConfig::for_pool(&hw, &pm, KvQuant::Fp16, Some(64)),
+    ));
+    let cfg = PoolConfig {
+        kv: Some(Arc::clone(&kv)),
+        ..sched_pool(Duration::from_millis(1), 2, Duration::ZERO, false)
+    };
+    let handle = start(cfg);
+    // len 4 but only 3 rows of payload: invalid shape, valid length.
+    handle.submit(Request::new(7, 4, vec![0.1; 3 * D]).with_generate(5)).unwrap();
+    let mut sheds = 0;
+    for _ in 0..500 {
+        sheds = handle.metrics.execute_errors();
+        if sheds > 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(sheds, 1, "the corrupt batch must shed");
+    assert!(
+        handle.metrics.prefill_chunks() >= 1,
+        "the shed happened mid-prefill, after at least one parked chunk"
+    );
+    assert_eq!(kv.live_streams(), 0, "shed must release the stream's registration");
+    assert_eq!(kv.used_pages(), 0, "shed must free the arena pages");
+    assert_eq!(handle.inflight(), 0, "shed must free the in-flight slot");
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.metrics.completed(), 0);
+}
+
+#[test]
+fn chunked_prefill_outcome_matches_monolithic_execute() {
+    // Acceptance: the chunked path's final per-request stats are
+    // bit-identical to Engine::execute — same simulation, different
+    // schedule (the sim-level twin is chunked_phase_ranges_match_monolithic
+    // in sim::exec).
+    let hw = HwConfig::default();
+    let pm = ModelConfig::s2t_small();
+    let mk_engine = || {
+        let set = ArtifactSet::reference("tiny", D, MAX_SEQ).unwrap();
+        Engine::new(
+            set,
+            EngineConfig {
+                hw: hw.clone(),
+                perf_model: pm.clone(),
+                self_test: false,
+                kv_quant: KvQuant::Fp16,
+                kv_pages: None,
+            },
+        )
+        .unwrap()
+    };
+    let reqs =
+        vec![Request::new(0, 10, vec![0.3; 10 * D]), Request::new(1, 12, vec![-0.2; 12 * D])];
+    let batch = |reqs: &[Request]| FormedBatch { class: BatchClass::B2, requests: reqs.to_vec() };
+
+    let mut mono = mk_engine();
+    let mono_out = mono.execute(batch(&reqs)).unwrap();
+
+    let mut chunked = mk_engine();
+    let mut st = chunked.begin_prefill(batch(&reqs), 3).unwrap();
+    let done = loop {
+        match chunked.prefill_chunk(st).unwrap() {
+            PrefillProgress::Parked(next) => st = *next,
+            PrefillProgress::Done(outcome) => break outcome,
+        }
+    };
+    assert_eq!(done.responses.len(), 2);
+    assert_eq!(done.responses.len(), mono_out.responses.len());
+    for (a, b) in done.responses.iter().zip(mono_out.responses.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.output, b.output, "req {}: numerics identical", a.id);
+        assert_eq!(a.chip_us, b.chip_us, "req {}: chunked sim bit-identical", a.id);
+        assert_eq!(a.chip_uj, b.chip_uj, "req {}", a.id);
+        assert_eq!(a.ema_bytes, b.ema_bytes, "req {}", a.id);
+        assert_eq!(a.utilization, b.utilization, "req {}", a.id);
+        assert_eq!(a.class, b.class);
+    }
 }
 
 #[test]
