@@ -18,8 +18,13 @@
 //! `--test` (CI smoke): one quick configuration of each part.
 //! `--kv-quant fp16|int8|int4` / `--kv-pages N` set the KV arena the pool
 //! section decodes against (fig9_kv sweeps these systematically).
+//! `--gen-len N` sets the full-generation sweep length — the sweep runs on
+//! the compiled step-plan path, so its harness wall time grows linearly in
+//! N instead of superlinearly (the rebuild-per-token path re-built and
+//! re-walked a program whose attention grows with depth); one exact-path
+//! column cross-checks the plan at the final depth.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 use trex::bench_util::{arg_value, banner, table};
 use trex::config::{HwConfig, ModelConfig};
 use trex::coordinator::{
@@ -28,15 +33,16 @@ use trex::coordinator::{
 use trex::kv::KvQuant;
 use trex::model::{build_decode_step, build_program};
 use trex::runtime::ArtifactSet;
-use trex::sim::{simulate, GbBudget, SimOptions, Stepper};
+use trex::sim::{simulate, GbBudget, SimOptions, StepPlan, Stepper};
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--test");
     let quant = KvQuant::parse(&arg_value("--kv-quant").unwrap_or_else(|| "fp16".to_string()))
         .expect("--kv-quant fp16|int8|int4");
     let pages: Option<usize> = arg_value("--kv-pages").map(|s| s.parse().expect("--kv-pages N"));
+    let gen_len: Option<usize> = arg_value("--gen-len").map(|s| s.parse().expect("--gen-len N"));
     per_step_sweep(smoke);
-    full_generation(smoke, quant);
+    full_generation(smoke, quant, gen_len);
     pool_decode(smoke, quant, pages);
 }
 
@@ -78,21 +84,31 @@ fn per_step_sweep(smoke: bool) {
     );
 }
 
-fn full_generation(smoke: bool, quant: KvQuant) {
+fn full_generation(smoke: bool, quant: KvQuant, gen_len: Option<usize>) {
     let hw = HwConfig::default();
-    banner("fig-decode: full generation through one persistent Stepper");
-    let gen_tokens = if smoke { 8 } else { 64 };
+    banner("fig-decode: full generation through one persistent Stepper (plan path)");
+    let gen_tokens = gen_len.unwrap_or(if smoke { 8 } else { 64 }).max(1);
     let prompt = 32;
     let mut rows = Vec::new();
     for batch in [1usize, 4] {
         let m = ModelConfig::s2t_small();
         let opts = opts_for(&hw, &m);
+        // The decode chain runs on the compiled plan: harness time per
+        // token is O(phases), so the sweep's wall cost is linear in
+        // --gen-len (the rebuild path re-built + re-walked every op per
+        // token, superlinear once attention deepens).
+        let plan = StepPlan::compile_fixed(&hw, &m, batch, &opts);
         let mut stepper = Stepper::new(&hw, opts);
         stepper.run_program(&build_program(&m, prompt, batch));
         let prefill_cycles = stepper.clock_cycles();
+        // Time the decode loop only — the column demonstrates that the
+        // plan path's harness cost is linear in --gen-len, so the O(ops)
+        // prefill walk must not dilute it.
+        let t_host = Instant::now();
         for t in 0..gen_tokens {
-            stepper.run_program(&build_decode_step(&m, prompt + t, batch));
+            stepper.run_plan(&plan, prompt + t);
         }
+        let host_ms = t_host.elapsed().as_secs_f64() * 1e3;
         let stats = stepper.finish();
         let total_us = stats.seconds() * 1e6;
         let decode_cycles = (stats.cycles - prefill_cycles) as f64;
@@ -103,6 +119,17 @@ fn full_generation(smoke: bool, quant: KvQuant) {
         // cycles), so the subtraction isolates the decode phase.
         let prefill = simulate(&hw, &build_program(&m, prompt, batch), &opts);
         let decode_uj = stats.energy.total_uj() - prefill.energy.total_uj();
+        // Exact-path cross-check column: one rebuilt step at the final
+        // depth must price identically to the plan's replay of it.
+        let last = prompt + gen_tokens - 1;
+        let exact = simulate(&hw, &build_decode_step(&m, last, batch), &opts);
+        let planned = {
+            let mut s = Stepper::new(&hw, opts);
+            s.run_plan(&plan, last);
+            s.finish()
+        };
+        assert_eq!(planned.cycles, exact.cycles, "plan/exact mismatch at depth {last}");
+        assert_eq!(planned.ema_bytes(), exact.ema_bytes(), "plan/exact EMA at depth {last}");
         rows.push(vec![
             format!("{batch}"),
             format!("{prompt}+{gen_tokens}"),
@@ -110,10 +137,21 @@ fn full_generation(smoke: bool, quant: KvQuant) {
             format!("{:.0}", decode_us / decoded),
             format!("{:.2}", decode_uj / decoded),
             format!("{:.1}%", stats.utilization(&hw) * 100.0),
+            format!("{host_ms:.1}"),
+            format!("{:.0}", exact.us_per_token()),
         ]);
     }
     table(
-        &["streams", "prompt+gen", "total µs", "decode µs/token", "decode µJ/token", "util"],
+        &[
+            "streams",
+            "prompt+gen",
+            "total µs",
+            "decode µs/token",
+            "decode µJ/token",
+            "util",
+            "host ms (plan)",
+            "exact µs/tok @final",
+        ],
         &rows,
     );
     let cap = GbBudget::max_decode_len_quant(&hw, &ModelConfig::s2t_small(), 4, quant);

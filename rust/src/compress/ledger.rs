@@ -92,6 +92,15 @@ impl EmaLedger {
     pub fn clear(&mut self) {
         self.bytes.clear();
     }
+    /// Zero every category **in place**, keeping the allocated map nodes.
+    /// The decode plan hot path resets a reusable ledger between steps
+    /// ([`crate::sim::Stepper::reset`]); after the first step has touched
+    /// its categories, subsequent resets and re-adds allocate nothing.
+    pub fn reset(&mut self) {
+        for b in self.bytes.values_mut() {
+            *b = 0;
+        }
+    }
     pub fn to_json(&self) -> Json {
         Json::Obj(
             self.bytes
@@ -232,6 +241,20 @@ mod tests {
         b.add(EmaCategory::ActivationIn, 7);
         b.merge(&a);
         assert_eq!(b.total(), 1157);
+    }
+
+    #[test]
+    fn reset_zeroes_in_place_and_readds_cleanly() {
+        let mut l = EmaLedger::new();
+        l.add(EmaCategory::WdValues, 100);
+        l.add(EmaCategory::KvDequant, 64);
+        l.reset();
+        assert_eq!(l.total(), 0);
+        assert_eq!(l.get(EmaCategory::WdValues), 0);
+        // Re-adding after reset behaves exactly like a fresh ledger.
+        l.add(EmaCategory::WdValues, 9);
+        assert_eq!(l.get(EmaCategory::WdValues), 9);
+        assert_eq!(l.total(), 9);
     }
 
     #[test]

@@ -154,15 +154,21 @@ pub enum DecodePolicy {
 }
 
 /// Plan one group over `streams` — `(class, past_len)` pairs in candidate
-/// order — and report whether the group is **full**: at its effective width
-/// bound, so waiting longer cannot grow it (either the limit is reached or
-/// a narrower stream blocks the walk). Returns indices into `streams`.
-fn plan_group(streams: &[(BatchClass, usize)], policy: DecodePolicy) -> (Vec<usize>, bool) {
+/// order — into `picked` (cleared first; indices into `streams`) and
+/// report whether the group is **full**: at its effective width bound, so
+/// waiting longer cannot grow it (either the limit is reached or a
+/// narrower stream blocks the walk). Takes the output vector by reference
+/// so the pool's hot path plans into a reused scratch buffer.
+fn plan_group_into(
+    streams: &[(BatchClass, usize)],
+    policy: DecodePolicy,
+    picked: &mut Vec<usize>,
+) -> bool {
+    picked.clear();
     if streams.is_empty() {
-        return (Vec::new(), false);
+        return false;
     }
     let mut limit = MAX_DECODE_GROUP;
-    let mut picked: Vec<usize> = Vec::new();
     let mut blocked = false;
     let bucket_of = |past: usize| match policy {
         DecodePolicy::Greedy => 0,
@@ -187,7 +193,13 @@ fn plan_group(streams: &[(BatchClass, usize)], policy: DecodePolicy) -> (Vec<usi
         limit = limit.min(width);
         picked.push(i);
     }
-    let full = blocked || picked.len() >= limit;
+    blocked || picked.len() >= limit
+}
+
+/// Allocating convenience form of [`plan_group_into`].
+fn plan_group(streams: &[(BatchClass, usize)], policy: DecodePolicy) -> (Vec<usize>, bool) {
+    let mut picked = Vec::new();
+    let full = plan_group_into(streams, policy, &mut picked);
     (picked, full)
 }
 
@@ -221,6 +233,17 @@ pub struct DecodeEntry {
     pub state: DecodeState,
 }
 
+/// Reused planning buffers: the pool plans a group on every pop/ready/
+/// deadline query on the server's decode hot path, so the candidate
+/// ordering, the `(class, past_len)` view and the picked indices live in
+/// scratch vectors instead of fresh allocations per token-step.
+#[derive(Debug, Default)]
+struct PlanScratch {
+    order: Vec<usize>,
+    view: Vec<(BatchClass, usize)>,
+    picked: Vec<usize>,
+}
+
 /// The scheduler's between-steps pool: timestamps parked streams so a
 /// coalescing window (`decode_max_wait`) can hold partial groups back for
 /// bucket-mates, and optionally orders candidates by remaining tokens so
@@ -235,11 +258,12 @@ pub struct DecodeEntry {
 #[derive(Debug, Default)]
 pub struct DecodePool {
     entries: VecDeque<DecodeEntry>,
+    scratch: PlanScratch,
 }
 
 impl DecodePool {
     pub fn new() -> Self {
-        DecodePool { entries: VecDeque::new() }
+        DecodePool::default()
     }
 
     /// Park streams (all stamped `now` — one step's survivors re-enter
@@ -265,33 +289,40 @@ impl DecodePool {
         self.entries.iter().map(|e| e.entered + max_wait).min()
     }
 
-    /// Candidate order: FIFO, or near-done-first when `priority` is set
-    /// (stable sort — FIFO breaks remaining-token ties).
-    fn order(&self, priority: bool) -> Vec<usize> {
-        let mut order: Vec<usize> = (0..self.entries.len()).collect();
+    /// Plan the group a pop would take right now into the scratch buffers
+    /// (`scratch.picked` holds pool indices afterwards); returns fullness.
+    /// Zero allocations once the scratch vectors are warm.
+    fn plan_into(&mut self, policy: DecodePolicy, priority: bool) -> bool {
+        let DecodePool { entries, scratch } = self;
+        scratch.order.clear();
+        scratch.order.extend(0..entries.len());
         if priority {
-            order.sort_by_key(|&i| self.entries[i].state.remaining);
+            // Unstable sort with the pool index as tie-break: identical
+            // order to a stable sort (FIFO breaks remaining-token ties)
+            // without the merge buffer a stable sort heap-allocates on
+            // larger pools — this runs on every pop/ready/deadline query.
+            scratch.order.sort_unstable_by_key(|&i| (entries[i].state.remaining, i));
         }
-        order
+        scratch.view.clear();
+        scratch
+            .view
+            .extend(scratch.order.iter().map(|&i| {
+                (entries[i].state.class, entries[i].state.past_len)
+            }));
+        let full = plan_group_into(&scratch.view, policy, &mut scratch.picked);
+        // Map view positions back to pool indices.
+        for p in scratch.picked.iter_mut() {
+            *p = scratch.order[*p];
+        }
+        full
     }
 
-    /// Plan the group a pop would take right now: pool indices + fullness.
-    fn plan(&self, policy: DecodePolicy, priority: bool) -> (Vec<usize>, bool) {
-        let order = self.order(priority);
-        let view: Vec<(BatchClass, usize)> = order
-            .iter()
-            .map(|&i| (self.entries[i].state.class, self.entries[i].state.past_len))
-            .collect();
-        let (picked, full) = plan_group(&view, policy);
-        (picked.into_iter().map(|v| order[v]).collect(), full)
-    }
-
-    /// Expiry instant of a planned group: its oldest member's window end.
-    /// Judged on the *group*, not the whole pool — a stream the policy
-    /// never picks (e.g. a deep one under priority) must not void the
-    /// window for every later-arriving partial group.
-    fn group_deadline(&self, picked: &[usize], max_wait: Duration) -> Option<Instant> {
-        picked.iter().map(|&i| self.entries[i].entered + max_wait).min()
+    /// Expiry instant of the scratch-planned group: its oldest member's
+    /// window end. Judged on the *group*, not the whole pool — a stream
+    /// the policy never picks (e.g. a deep one under priority) must not
+    /// void the window for every later-arriving partial group.
+    fn planned_deadline(&self, max_wait: Duration) -> Option<Instant> {
+        self.scratch.picked.iter().map(|&i| self.entries[i].entered + max_wait).min()
     }
 
     /// Deadline at which the group a pop would form right now stops
@@ -299,20 +330,20 @@ impl DecodePool {
     /// consistent with [`DecodePool::try_pop`]'s gate, so a worker that
     /// sleeps until this instant is guaranteed a dispatch on wake.
     pub fn pop_deadline(
-        &self,
+        &mut self,
         policy: DecodePolicy,
         max_wait: Duration,
         priority: bool,
     ) -> Option<Instant> {
-        let (picked, _) = self.plan(policy, priority);
-        self.group_deadline(&picked, max_wait)
+        self.plan_into(policy, priority);
+        self.planned_deadline(max_wait)
     }
 
     /// Would a pop dispatch right now? Full groups (at their effective
     /// width bound) always; partial groups only once the group's oldest
     /// member has waited out the coalescing window.
     pub fn ready(
-        &self,
+        &mut self,
         now: Instant,
         policy: DecodePolicy,
         max_wait: Duration,
@@ -324,25 +355,29 @@ impl DecodePool {
         if max_wait.is_zero() {
             return true;
         }
-        let (picked, full) = self.plan(policy, priority);
-        full || self.group_deadline(&picked, max_wait).map(|d| d <= now).unwrap_or(true)
+        let full = self.plan_into(policy, priority);
+        full || self.planned_deadline(max_wait).map(|d| d <= now).unwrap_or(true)
     }
 
-    /// Remove a planned group by pool indices. Returns the group plus the
-    /// coalescing wait its oldest member spent parked, µs (the window cost
-    /// the metrics plane reports against the grouping it bought).
-    fn remove_planned(&mut self, mut picked: Vec<usize>, now: Instant) -> (Vec<DecodeState>, f64) {
+    /// Remove the scratch-planned group, appending its streams to `out` in
+    /// candidate order. Returns the coalescing wait its oldest member spent
+    /// parked, µs (the window cost the metrics plane reports against the
+    /// grouping it bought).
+    fn remove_planned_into(&mut self, now: Instant, out: &mut Vec<DecodeState>) -> f64 {
+        let mut picked = std::mem::take(&mut self.scratch.picked);
         picked.sort_unstable();
         let mut wait_us: f64 = 0.0;
-        let mut out = Vec::with_capacity(picked.len());
+        let start = out.len();
         for &idx in picked.iter().rev() {
             let e = self.entries.remove(idx).expect("picked index valid");
             let waited = now.saturating_duration_since(e.entered).as_nanos() as f64 / 1e3;
             wait_us = wait_us.max(waited);
             out.push(e.state);
         }
-        out.reverse();
-        (out, wait_us)
+        out[start..].reverse();
+        // Hand the buffer back so the next plan reuses its capacity.
+        self.scratch.picked = picked;
+        wait_us
     }
 
     /// Form and remove one group unconditionally (window already decided —
@@ -353,8 +388,22 @@ impl DecodePool {
         policy: DecodePolicy,
         priority: bool,
     ) -> (Vec<DecodeState>, f64) {
-        let (picked, _) = self.plan(policy, priority);
-        self.remove_planned(picked, now)
+        let mut out = Vec::new();
+        let wait_us = self.pop_group_into(now, policy, priority, &mut out);
+        (out, wait_us)
+    }
+
+    /// [`DecodePool::pop_group`] into a caller-reused buffer (the worker
+    /// loop's per-thread group vector) — no per-step group allocation.
+    pub fn pop_group_into(
+        &mut self,
+        now: Instant,
+        policy: DecodePolicy,
+        priority: bool,
+        out: &mut Vec<DecodeState>,
+    ) -> f64 {
+        self.plan_into(policy, priority);
+        self.remove_planned_into(now, out)
     }
 
     /// Pop a group if one would dispatch right now — [`DecodePool::ready`]
@@ -368,18 +417,32 @@ impl DecodePool {
         max_wait: Duration,
         priority: bool,
     ) -> Option<(Vec<DecodeState>, f64)> {
+        let mut out = Vec::new();
+        self.try_pop_into(now, policy, max_wait, priority, &mut out).map(|w| (out, w))
+    }
+
+    /// [`DecodePool::try_pop`] into a caller-reused buffer: the gate and
+    /// the removal share one scratch plan, and the popped group lands in
+    /// `out` (appended) instead of a fresh vector per token-step.
+    pub fn try_pop_into(
+        &mut self,
+        now: Instant,
+        policy: DecodePolicy,
+        max_wait: Duration,
+        priority: bool,
+        out: &mut Vec<DecodeState>,
+    ) -> Option<f64> {
         if self.entries.is_empty() {
             return None;
         }
-        let (picked, full) = self.plan(policy, priority);
+        let full = self.plan_into(policy, priority);
         if !max_wait.is_zero() && !full {
-            let expired =
-                self.group_deadline(&picked, max_wait).map(|d| d <= now).unwrap_or(true);
+            let expired = self.planned_deadline(max_wait).map(|d| d <= now).unwrap_or(true);
             if !expired {
                 return None;
             }
         }
-        Some(self.remove_planned(picked, now))
+        Some(self.remove_planned_into(now, out))
     }
 
     /// Drain everything as maximal groups, ignoring the window (shutdown).
@@ -642,6 +705,31 @@ mod tests {
         let groups = p.drain_groups(DecodePolicy::Greedy, false);
         assert_eq!(groups.len(), 1);
         assert!(p.is_empty());
+    }
+
+    #[test]
+    fn pop_into_reuses_the_caller_buffer() {
+        // Satellite acceptance: the worker's group buffer is refilled in
+        // place — no reallocation once its capacity covers a group.
+        let now = Instant::now();
+        let mut p = DecodePool::new();
+        let mut buf: Vec<DecodeState> = Vec::with_capacity(MAX_DECODE_GROUP);
+        p.push(now, (0..4).map(|i| stream(i, BatchClass::B4, 5)));
+        let w = p.try_pop_into(now, DecodePolicy::Greedy, Duration::ZERO, false, &mut buf);
+        assert!(w.is_some());
+        assert_eq!(buf.iter().map(|s| s.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        let cap = buf.capacity();
+        buf.clear();
+        p.push(now, (4..6).map(|i| stream(i, BatchClass::B2, 5)));
+        p.try_pop_into(now, DecodePolicy::Greedy, Duration::ZERO, false, &mut buf).unwrap();
+        assert_eq!(buf.iter().map(|s| s.id).collect::<Vec<_>>(), vec![4, 5]);
+        assert_eq!(buf.capacity(), cap, "buffer reused, not reallocated");
+        // An empty pool is a clean None, buffer untouched.
+        buf.clear();
+        assert!(p
+            .try_pop_into(now, DecodePolicy::Greedy, Duration::ZERO, false, &mut buf)
+            .is_none());
+        assert!(buf.is_empty());
     }
 
     fn stream_left(id: u64, class: BatchClass, past: usize, remaining: usize) -> DecodeState {

@@ -26,25 +26,33 @@
 //! group of up to [`MAX_DECODE_GROUP`] streams, which may sit at *different*
 //! KV depths (the group is whatever the queue held between steps). Each
 //! stream emits one [`TokenEvent`]; exhausted streams fold into their final
-//! [`Response`]. The step is simulated once per `(group size, max KV depth)`
-//! through the shared [`SimCache`] and its weight-streaming EMA is split
-//! across the group — the decode-side amortization the paper's batching
-//! argument predicts.
+//! [`Response`]. A stream's FIRST step is simulated exactly (program
+//! rebuild + op walk, cached per `(group size, max KV depth)` in the shared
+//! [`SimCache`]); every steady-state step is priced through the compiled
+//! [`StepPlan`] — O(phases) arithmetic on a reusable scratch stepper, zero
+//! per-step heap allocation, bit-identical to the exact path (the parity
+//! sweep pins it). The step's weight-streaming EMA is split across the
+//! group — the decode-side amortization the paper's batching argument
+//! predicts.
 //!
 //! In the worker pool each worker owns its own `Engine` (executables are
-//! not `Send`), but all engines share one [`SimCache`] so every pass is
-//! simulated exactly once process-wide.
+//! not `Send`), but all engines share one [`SimCache`] — every pass is
+//! simulated exactly once process-wide, with chunked prefills claiming
+//! their key via the cache's in-flight guard — and one [`PlanRegistry`],
+//! so every decode plan is compiled exactly once.
 
 use crate::config::{HwConfig, ModelConfig};
 use crate::coordinator::batcher::FormedBatch;
 use crate::coordinator::request::{Request, RequestId, Response, TokenEvent};
 use crate::coordinator::server::WorkerCtx;
-use crate::coordinator::sim_cache::{CachedPass, PassKey, SimCache};
+use crate::coordinator::sim_cache::{CachedPass, ChunkClaim, PassKey, SimCache};
 use crate::error::{Error, Result};
 use crate::kv::{KvArenaConfig, KvManager, KvQuant};
 use crate::model::{build_decode_step, build_program, Program};
 use crate::runtime::ArtifactSet;
-use crate::sim::{simulate, BatchClass, GbBudget, SimOptions, Stepper, StepperParts};
+use crate::sim::{
+    simulate, BatchClass, GbBudget, PlanRegistry, SimOptions, StepPlan, Stepper, StepperParts,
+};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -145,13 +153,36 @@ pub struct PrefillState {
     prog: Program,
     next_phase: usize,
     chunk_phases: usize,
+    /// `Some`: this state OWNS the chunked simulation for its pass key
+    /// (it claimed it via [`SimCache::begin_chunked`]) and steps it chunk
+    /// by chunk. `None` with `cached` unset: a *follower* — another
+    /// worker's chunked simulation was mid-flight at `begin_prefill`, so
+    /// this state runs no simulation and resolves the value at its final
+    /// chunk (riding the owner's publish).
     parts: Option<StepperParts>,
     /// The pass was already in the shared sim cache at `begin_prefill`:
     /// chunk-by-chunk re-simulation would duplicate work the pool promises
     /// to do exactly once, so the first chunk completes directly with this
     /// value (there is no simulation occupancy left to break up).
     cached: Option<CachedPass>,
+    /// The shared cache the claim lives in (for the `Drop` release).
+    cache: Arc<SimCache>,
+    /// Holds the sim-cache in-flight claim for its key. Released by
+    /// `publish_chunked` at the final chunk (which happens before any
+    /// fallible numerics, so worker sheds never leak it); a state dropped
+    /// while still owning — an external driver discarding a parked owner —
+    /// abandons the claim in `Drop`, so later prefills of the key are
+    /// never demoted to stalling followers.
+    owns_key: bool,
     chunks_done: usize,
+}
+
+impl Drop for PrefillState {
+    fn drop(&mut self) {
+        if self.owns_key {
+            self.cache.abandon_chunked(PassKey::prefill(self.class, self.prog.seq));
+        }
+    }
 }
 
 impl PrefillState {
@@ -167,6 +198,12 @@ impl PrefillState {
     }
     pub fn chunks_done(&self) -> usize {
         self.chunks_done
+    }
+    /// This parked prefill holds the sim-cache in-flight claim for its
+    /// pass key — it is the chunked-simulation owner; followers and
+    /// cached-at-begin states return false.
+    pub fn owns_simulation(&self) -> bool {
+        self.owns_key
     }
     pub fn phases_done(&self) -> usize {
         self.next_phase
@@ -199,12 +236,41 @@ pub struct DecodeOutcome {
     pub kv_swap_ins: u64,
     /// Swap-in EMA bytes the step paid before running.
     pub kv_swap_bytes: u64,
+    /// The step was priced through the compiled plan path (steady state)
+    /// rather than the exact program rebuild.
+    pub planned: bool,
+}
+
+/// Slots in the engine's direct-mapped plan-step memo. Groups of streams
+/// revisit the same `(group, past_len)` while a cohort decodes in lockstep;
+/// the memo catches those without the shared cache growing one entry per
+/// depth. (First steps still insert `PassKey{past_len}` entries via the
+/// exact path, so the shared decode family grows with first-step depths —
+/// but no longer with every token of every generation.)
+const PLAN_MEMO_SLOTS: usize = 32;
+
+/// One memoized plan-priced step (`group` 0 marks an empty slot).
+#[derive(Debug, Clone, Copy, Default)]
+struct PlanMemoSlot {
+    group: usize,
+    past_len: usize,
+    pass: CachedPass,
+}
+
+/// Reused per-step buffers for [`Engine::execute_decode`]: the decode hot
+/// path re-fills these instead of allocating fresh vectors every token.
+#[derive(Debug, Default)]
+struct DecodeScratch {
+    plane: Vec<f32>,
+    past_lens: Vec<usize>,
+    members: Vec<(RequestId, usize)>,
 }
 
 /// Executes batches. Owns the compiled artifacts; the simulation cache is
 /// shared (keyed by [`PassKey`] — programs are deterministic), and so is
 /// the [`KvManager`] in pool setups — aggregate KV residency is a
-/// *pool-wide* property, not a per-worker one.
+/// *pool-wide* property, not a per-worker one — and the [`PlanRegistry`]
+/// of compiled decode step plans.
 pub struct Engine {
     artifacts: ArtifactSet,
     cfg: EngineConfig,
@@ -216,6 +282,22 @@ pub struct Engine {
     /// derived from the GB's KV residency at the class's batch width and
     /// the arena's quantization mode.
     decode_caps: [usize; 3],
+    /// Compiled decode step plans, shared pool-wide (one compile per
+    /// `(model, group, quant)` key across all workers).
+    plans: Arc<PlanRegistry>,
+    /// Per-group-width handles into the registry (this engine's model and
+    /// quant are fixed), so the hot path never touches the registry lock
+    /// after the first step at each width.
+    plan_cache: [Option<Arc<StepPlan>>; MAX_DECODE_GROUP + 1],
+    /// Reusable plan-execution state, suspended between steps: the
+    /// steady-state decode hot path prices steps with zero per-step heap
+    /// allocations (ledger nodes and frontier state persist across
+    /// [`Stepper::reset`]).
+    plan_scratch: Option<StepperParts>,
+    /// Small per-engine memo of recently plan-priced steps.
+    plan_memo: [PlanMemoSlot; PLAN_MEMO_SLOTS],
+    /// Reused decode-step buffers.
+    scratch: DecodeScratch,
 }
 
 impl Engine {
@@ -238,17 +320,18 @@ impl Engine {
             &cfg.perf_model,
             KvArenaConfig::for_pool(&cfg.hw, &cfg.perf_model, cfg.kv_quant, cfg.kv_pages),
         ));
-        Self::with_parts(artifacts, cfg, sim_cache, kv)
+        Self::with_parts(artifacts, cfg, sim_cache, kv, Arc::new(PlanRegistry::new()))
     }
 
-    /// Engine over an explicitly shared simulation cache *and* KV manager
-    /// (the pool path). The manager's quantization mode is authoritative
-    /// for decode caps and dequant charges.
+    /// Engine over an explicitly shared simulation cache, KV manager *and*
+    /// step-plan registry (the pool path). The manager's quantization mode
+    /// is authoritative for decode caps, dequant charges and plan keys.
     pub fn with_parts(
         artifacts: ArtifactSet,
         cfg: EngineConfig,
         sim_cache: Arc<SimCache>,
         kv: Arc<KvManager>,
+        plans: Arc<PlanRegistry>,
     ) -> Result<Self> {
         if cfg.self_test {
             artifacts.self_test()?;
@@ -262,7 +345,18 @@ impl Engine {
                 kv.quant(),
             );
         }
-        Ok(Engine { artifacts, cfg, sim_cache, kv, decode_caps })
+        Ok(Engine {
+            artifacts,
+            cfg,
+            sim_cache,
+            kv,
+            decode_caps,
+            plans,
+            plan_cache: std::array::from_fn(|_| None),
+            plan_scratch: None,
+            plan_memo: [PlanMemoSlot::default(); PLAN_MEMO_SLOTS],
+            scratch: DecodeScratch::default(),
+        })
     }
 
     /// Convenience for pool engine factories: shared cache always, shared
@@ -282,7 +376,7 @@ impl Engine {
                 ))
             })),
         };
-        Self::with_parts(artifacts, cfg, Arc::clone(&ctx.sim_cache), kv)
+        Self::with_parts(artifacts, cfg, Arc::clone(&ctx.sim_cache), kv, Arc::clone(&ctx.plans))
     }
 
     pub fn model_name(&self) -> &str {
@@ -322,28 +416,38 @@ impl Engine {
         }
     }
 
-    /// Simulate (with shared caching) the chip pass for a batch class at `seq`.
+    /// Compute (no caching) the chip pass value for a batch class at `seq`.
+    fn prefill_pass_value(&self, class: BatchClass, seq: usize) -> CachedPass {
+        let m = &self.cfg.perf_model;
+        let prog = build_program(m, seq, class.batch());
+        let gb = GbBudget::for_config(&self.cfg.hw, m, seq, class.batch());
+        let stats = simulate(&self.cfg.hw, &prog, &self.sim_options(gb));
+        CachedPass {
+            chip_us: stats.seconds() * 1e6,
+            chip_uj: stats.energy.total_uj(),
+            ema_bytes: stats.ema_bytes(),
+            utilization: stats.utilization(&self.cfg.hw),
+        }
+    }
+
+    /// Simulate (with shared caching) the chip pass for a batch class at
+    /// `seq`. Rides an in-flight chunked owner's simulation when one holds
+    /// the key, so the monolithic and chunked paths together still compute
+    /// each pass exactly once.
     fn perf(&self, class: BatchClass, seq: usize) -> CachedPass {
-        self.sim_cache.get_or_simulate(PassKey::prefill(class, seq), || {
-            let m = &self.cfg.perf_model;
-            let prog = build_program(m, seq, class.batch());
-            let gb = GbBudget::for_config(&self.cfg.hw, m, seq, class.batch());
-            let stats = simulate(&self.cfg.hw, &prog, &self.sim_options(gb));
-            CachedPass {
-                chip_us: stats.seconds() * 1e6,
-                chip_uj: stats.energy.total_uj(),
-                ema_bytes: stats.ema_bytes(),
-                utilization: stats.utilization(&self.cfg.hw),
-            }
-        })
+        self.sim_cache
+            .wait_or_simulate(PassKey::prefill(class, seq), || self.prefill_pass_value(class, seq))
     }
 
     /// Simulate (with shared caching) one decode step of a `group`-stream
-    /// batch at KV depth `past_len`. The budget and the dequant charge
-    /// follow the arena's quantization mode; both are deterministic in
-    /// `(group, past_len)`, so they live inside the cached pass (swap-in
-    /// charges are *not* — they depend on eviction history and are added
-    /// per occurrence by [`Engine::execute_decode`]).
+    /// batch at KV depth `past_len` — the EXACT path: build the step
+    /// program and walk it through the Stepper. Kept for prefill-adjacent
+    /// first steps (and as the plan path's parity anchor); steady-state
+    /// steps go through [`Engine::decode_perf_plan`]. The budget and the
+    /// dequant charge follow the arena's quantization mode; both are
+    /// deterministic in `(group, past_len)`, so they live inside the
+    /// cached pass (swap-in charges are *not* — they depend on eviction
+    /// history and are added per occurrence by [`Engine::execute_decode`]).
     fn decode_perf(&self, group: usize, past_len: usize) -> CachedPass {
         let quant = self.kv.quant();
         self.sim_cache.get_or_simulate(PassKey::decode(group, past_len, quant), || {
@@ -362,6 +466,54 @@ impl Engine {
                 utilization: stats.utilization(&self.cfg.hw),
             }
         })
+    }
+
+    /// Price one steady-state decode step through the compiled plan:
+    /// O(phases) arithmetic against a reusable scratch stepper — zero heap
+    /// allocation per step once warm — memoized per `(group, past_len)` in
+    /// a small direct-mapped table. Bit-identical to [`Engine::decode_perf`]
+    /// (the parity sweep pins `run_plan` against the rebuilt program).
+    fn decode_perf_plan(&mut self, group: usize, past_len: usize) -> CachedPass {
+        let slot = group.wrapping_mul(31).wrapping_add(past_len) % PLAN_MEMO_SLOTS;
+        let hit = self.plan_memo[slot];
+        if hit.group == group && hit.past_len == past_len {
+            return hit.pass;
+        }
+        if self.plan_cache[group].is_none() {
+            let quant = self.kv.quant();
+            let plan = {
+                let hw = &self.cfg.hw;
+                let m = &self.cfg.perf_model;
+                self.plans.get_or_compile(&m.name, group, quant, || {
+                    StepPlan::compile_budgeted(hw, m, group, quant)
+                })
+            };
+            self.plan_cache[group] = Some(plan);
+        }
+        let plan = Arc::clone(self.plan_cache[group].as_ref().expect("cache just filled"));
+        let parts = match self.plan_scratch.take() {
+            Some(parts) => parts,
+            None => {
+                let opts = SimOptions {
+                    act_bits: self.cfg.perf_model.act_bits,
+                    ..SimOptions::paper(&self.cfg.hw)
+                };
+                Stepper::new(&self.cfg.hw, opts).suspend()
+            }
+        };
+        let mut stepper = Stepper::resume(&self.cfg.hw, parts);
+        stepper.reset();
+        stepper.run_plan(&plan, past_len);
+        let s = stepper.settle();
+        let pass = CachedPass {
+            chip_us: s.seconds() * 1e6,
+            chip_uj: s.energy.total_uj(),
+            ema_bytes: s.ema_bytes,
+            utilization: s.utilization(&self.cfg.hw),
+        };
+        self.plan_scratch = Some(stepper.suspend());
+        self.plan_memo[slot] = PlanMemoSlot { group, past_len, pass };
+        pass
     }
 
     /// Execute one formed prefill batch end-to-end.
@@ -398,11 +550,12 @@ impl Engine {
     /// then drives [`Engine::prefill_chunk`] until it reports `Done`. When
     /// the pass is already in the shared sim cache, the chunk loop is
     /// skipped entirely, so repeat prefills of a key never re-simulate.
-    /// (Unlike the monolithic path's compute-under-lock, two workers
-    /// racing on a *cold* key may both simulate chunk-by-chunk and the
-    /// cache keeps one result — accepted: cold keys are rare, a duplicated
-    /// prefill simulation costs microseconds, and holding the cache lock
-    /// across parked chunks is not possible.)
+    /// Cold keys are claimed through the cache's per-key in-flight guard
+    /// ([`SimCache::begin_chunked`]): exactly one racer becomes the owner
+    /// and simulates chunk by chunk; the others become *followers* that
+    /// run no simulation and ride the owner's published value at their
+    /// final chunk — chunked and monolithic paths together compute every
+    /// pass exactly once (closing the race PR 4 documented as accepted).
     ///
     /// Payload-shape validation is deferred to the final chunk's plane
     /// assembly: a malformed payload sheds *mid-prefill*, exercising the
@@ -448,13 +601,17 @@ impl Engine {
         }
         let m = &self.cfg.perf_model;
         let prog = build_program(m, slot, class.batch());
-        let cached = self.sim_cache.peek(PassKey::prefill(class, slot));
-        let parts = if cached.is_none() {
-            let gb = GbBudget::for_config(&self.cfg.hw, m, slot, class.batch());
-            let opts = self.sim_options(gb);
-            Some(Stepper::new(&self.cfg.hw, opts).suspend())
-        } else {
-            None
+        let (cached, parts, owns_key) = match self.sim_cache.begin_chunked(PassKey::prefill(
+            class, slot,
+        )) {
+            ChunkClaim::Cached(pass) => (Some(pass), None, false),
+            ChunkClaim::Owner => {
+                let gb = GbBudget::for_config(&self.cfg.hw, m, slot, class.batch());
+                let opts = self.sim_options(gb);
+                (None, Some(Stepper::new(&self.cfg.hw, opts).suspend()), true)
+            }
+            // Another worker's chunked simulation is mid-flight: follow it.
+            ChunkClaim::InFlight => (None, None, false),
         };
         Ok(PrefillState {
             class,
@@ -465,6 +622,8 @@ impl Engine {
             chunk_phases: chunk_phases.max(1),
             parts,
             cached,
+            cache: Arc::clone(&self.sim_cache),
+            owns_key,
             chunks_done: 0,
         })
     }
@@ -478,13 +637,11 @@ impl Engine {
     /// test), runs the numerics, and completes exactly like
     /// [`Engine::execute`].
     pub fn prefill_chunk(&mut self, mut st: PrefillState) -> Result<PrefillProgress> {
-        let pass = match st.cached {
-            // Already simulated process-wide: nothing to re-step — complete
-            // directly (the yield points exist to break up simulation
-            // occupancy, and a cached pass has none).
-            Some(pass) => pass,
-            None => {
-                let parts = st.parts.take().expect("unparked prefill holds stepper parts");
+        let key = PassKey::prefill(st.class, st.prog.seq);
+        let mut published: Option<CachedPass> = None;
+        if st.cached.is_none() {
+            if let Some(parts) = st.parts.take() {
+                // Owner: advance the claimed chunked simulation.
                 let mut stepper = Stepper::resume(&self.cfg.hw, parts);
                 let total = st.prog.phases.len();
                 let end = (st.next_phase + st.chunk_phases).min(total);
@@ -497,13 +654,31 @@ impl Engine {
                 }
                 stepper.account_program(&st.prog);
                 let stats = stepper.finish();
-                CachedPass {
+                let pass = CachedPass {
                     chip_us: stats.seconds() * 1e6,
                     chip_uj: stats.energy.total_uj(),
                     ema_bytes: stats.ema_bytes(),
                     utilization: stats.utilization(&self.cfg.hw),
-                }
+                };
+                // Publish BEFORE the fallible numerics below: the simulated
+                // value is payload-independent, so even a batch that sheds
+                // on a malformed payload leaves the cache warm — and the
+                // claim released, so followers never stall on a shed owner.
+                published = Some(self.sim_cache.publish_chunked(key, pass));
+                st.owns_key = false;
             }
+        }
+        let perf = if let Some(pass) = published {
+            pass
+        } else if let Some(pass) = st.cached {
+            // Cached at begin: nothing was re-stepped — count the hit when
+            // the value is actually consumed (as the monolithic path does).
+            self.sim_cache.get_or_simulate(key, || pass)
+        } else {
+            // Follower: ride the in-flight owner's publish (bounded wait);
+            // if the owner shed, compute exactly once under the cache lock.
+            self.sim_cache
+                .wait_or_simulate(key, || self.prefill_pass_value(st.class, st.prog.seq))
         };
         let entry = self.artifacts.get(st.class)?;
         let (d, slot, tokens) = (entry.d_model, entry.seq, entry.tokens);
@@ -512,11 +687,10 @@ impl Engine {
         // registrations.
         let plane = assemble_plane(&st.requests, d, slot, tokens)?;
         let out = entry.exe.run_f32(&plane, tokens, d)?;
-        // Seed the shared cache with the (deterministic) result so
-        // monolithic passes of the same key reuse it, and vice versa.
-        let perf = self.sim_cache.get_or_simulate(PassKey::prefill(st.class, slot), || pass);
+        // `take`, not move: PrefillState has a Drop guard for its claim.
+        let requests = std::mem::take(&mut st.requests);
         Ok(PrefillProgress::Done(self.finish_prefill(
-            st.requests,
+            requests,
             st.class,
             &out,
             d,
@@ -611,10 +785,22 @@ impl Engine {
     /// steps, and their KV depths may differ (the chip pads to the deepest;
     /// the simulation is keyed by that max).
     ///
+    /// The group arrives in the caller's reusable buffer and is **drained**
+    /// on success (the worker loop re-pops into the same buffer every step
+    /// — no per-step group allocation). On error the buffer is left intact
+    /// so the shed path can read the member ids.
+    ///
+    /// Pricing: a group whose members have all generated at least one
+    /// token is in steady state and goes through the compiled plan
+    /// ([`Engine::decode_perf_plan`]); a group containing a stream's FIRST
+    /// decode step keeps the exact rebuild path — prefill-adjacent, cold
+    /// by definition, and it keeps the exact path continuously exercised
+    /// in production as the plan's parity anchor.
+    ///
     /// Numerics run one `d_model` row per stream through the backend — the
     /// reference backend accepts any row count; fixed-shape AOT artifacts
     /// would need dedicated decode executables (ROADMAP).
-    pub fn execute_decode(&mut self, group: Vec<DecodeState>) -> Result<DecodeOutcome> {
+    pub fn execute_decode(&mut self, group: &mut Vec<DecodeState>) -> Result<DecodeOutcome> {
         let n = group.len();
         if n == 0 {
             return Ok(DecodeOutcome::default());
@@ -623,8 +809,10 @@ impl Engine {
             return Err(Error::serve(format!("decode group of {n} exceeds {MAX_DECODE_GROUP}")));
         }
         let d = self.artifacts.d_model;
-        let mut plane = Vec::with_capacity(n * d);
-        for s in &group {
+        self.scratch.plane.clear();
+        self.scratch.past_lens.clear();
+        self.scratch.members.clear();
+        for s in group.iter() {
             if s.last.len() != d {
                 return Err(Error::serve(format!(
                     "stream {}: token row {} != d_model {d}",
@@ -632,20 +820,22 @@ impl Engine {
                     s.last.len()
                 )));
             }
-            plane.extend_from_slice(&s.last);
+            self.scratch.plane.extend_from_slice(&s.last);
+            self.scratch.past_lens.push(s.past_len);
+            self.scratch.members.push((s.id, s.past_len));
         }
-        let group_past_lens: Vec<usize> = group.iter().map(|s| s.past_len).collect();
-        let max_past = *group_past_lens.iter().max().expect("non-empty group");
+        let max_past = *self.scratch.past_lens.iter().max().expect("non-empty group");
+        let steady = group.iter().all(|s| s.generated > 0);
         // Aggregate residency: every member becomes arena-resident at its
         // current depth before the step — evicted members pay swap-in EMA
         // for their whole KV (parked streams are never free).
-        let members: Vec<(RequestId, usize)> = group.iter().map(|s| (s.id, s.past_len)).collect();
-        let charge = self.kv.prepare_group(&members);
+        let charge = self.kv.prepare_group(&self.scratch.members);
         let swap_us = self.cfg.hw.dram_ns(charge.swap_in_bytes as usize) * 1e-3;
         let swap_uj = self.cfg.hw.dram_pj(charge.swap_in_bytes as usize) * 1e-6;
         // Any class entry works: the decode plane is row-wise and `n` rows.
-        let out = self.artifacts.get(BatchClass::B4)?.exe.run_f32(&plane, n, d)?;
-        let perf = self.decode_perf(n, max_past);
+        let out = self.artifacts.get(BatchClass::B4)?.exe.run_f32(&self.scratch.plane, n, d)?;
+        let perf =
+            if steady { self.decode_perf_plan(n, max_past) } else { self.decode_perf(n, max_past) };
         // Two conventions, both deliberate: energy/EMA are *shares* (the
         // step's cost split across the group, like prefill's per-request
         // split), while `us_per_token` is the paper's µs/token (step wall
@@ -658,15 +848,17 @@ impl Engine {
         let per_ema = (perf.ema_bytes + charge.swap_in_bytes) / n as u64;
 
         let mut outcome = DecodeOutcome {
-            pad_waste_tokens: group_past_lens.iter().map(|&p| (max_past - p) as u64).sum(),
+            pad_waste_tokens: self.scratch.past_lens.iter().map(|&p| (max_past - p) as u64).sum(),
             kv_swap_ins: charge.swap_ins,
             kv_swap_bytes: charge.swap_in_bytes,
+            planned: steady,
             ..DecodeOutcome::default()
         };
-        for (i, mut s) in group.into_iter().enumerate() {
+        for (i, mut s) in group.drain(..).enumerate() {
             let step_past = s.past_len;
             let index = s.generated;
-            s.last = out[i * d..(i + 1) * d].to_vec();
+            // Reuse the stream's token-row allocation (validated == d).
+            s.last.copy_from_slice(&out[i * d..(i + 1) * d]);
             s.past_len += 1;
             s.generated += 1;
             s.remaining -= 1;
@@ -680,7 +872,7 @@ impl Engine {
                 us_per_token: per_us,
                 chip_uj: per_uj,
                 ema_bytes: per_ema,
-                group_past_lens: group_past_lens.clone(),
+                group_past_lens: self.scratch.past_lens.clone(),
                 worker: 0,
                 emitted: Instant::now(),
             });
@@ -694,7 +886,7 @@ impl Engine {
             }
         }
         // Step done: surviving members park (resident, evictable again).
-        self.kv.finish_group(&members);
+        self.kv.finish_group(&self.scratch.members);
         Ok(outcome)
     }
 }

@@ -43,6 +43,9 @@ struct Inner {
     /// Decode steps that ran while at least one prefill was parked
     /// mid-flight — the interleaving chunked prefill exists to buy.
     interleaved_decode_steps: u64,
+    /// Decode steps priced through the compiled step plan (steady state);
+    /// the rest took the exact program-rebuild path (first steps).
+    decode_plan_steps: u64,
     /// Coalescing wait each dispatched decode group's oldest member paid.
     coalesce_wait_us: Running,
     /// Chunk-completion instants (bounded; observability for tests).
@@ -104,13 +107,16 @@ impl ServerMetrics {
 
     /// One decode step executed (any group size), with the step's padding
     /// waste, KV swap-in charges, whether it interleaved with a parked
-    /// prefill, and the coalescing wait its group paid before dispatch.
+    /// prefill, whether the compiled plan priced it, and the coalescing
+    /// wait its group paid before dispatch.
+    #[allow(clippy::too_many_arguments)]
     pub fn record_decode_step(
         &self,
         pad_waste_tokens: u64,
         kv_swap_ins: u64,
         kv_swap_bytes: u64,
         interleaved: bool,
+        planned: bool,
         coalesce_wait_us: f64,
     ) {
         let mut m = self.inner.lock().unwrap();
@@ -121,7 +127,15 @@ impl ServerMetrics {
         if interleaved {
             m.interleaved_decode_steps += 1;
         }
+        if planned {
+            m.decode_plan_steps += 1;
+        }
         m.coalesce_wait_us.push(coalesce_wait_us);
+    }
+
+    /// Decode steps priced through the compiled step plan.
+    pub fn decode_plan_steps(&self) -> u64 {
+        self.inner.lock().unwrap().decode_plan_steps
     }
 
     /// One prefill chunk executed (parked again or completed).
@@ -203,6 +217,7 @@ impl ServerMetrics {
             ("batches", Json::num(m.batches as f64)),
             ("tokens", Json::num(m.tokens as f64)),
             ("decode_steps", Json::num(m.decode_steps as f64)),
+            ("decode_plan_steps", Json::num(m.decode_plan_steps as f64)),
             ("tokens_decoded", Json::num(m.tokens_decoded as f64)),
             ("prefill_chunks", Json::num(m.prefill_chunks as f64)),
             ("interleave_ratio", Json::num(interleave)),
@@ -293,7 +308,7 @@ mod tests {
         use std::time::Instant;
         let m = ServerMetrics::new();
         for (i, us) in [100.0, 200.0, 300.0, 400.0, 500.0].iter().enumerate() {
-            m.record_decode_step(0, 0, 0, false, 0.0);
+            m.record_decode_step(0, 0, 0, false, false, 0.0);
             m.record_token(&TokenEvent {
                 id: 7,
                 index: i,
@@ -321,13 +336,15 @@ mod tests {
     #[test]
     fn decode_step_pad_and_swap_counters_aggregate() {
         let m = ServerMetrics::new();
-        m.record_decode_step(3, 1, 4096, true, 150.0);
-        m.record_decode_step(0, 0, 0, false, 50.0);
+        m.record_decode_step(3, 1, 4096, true, true, 150.0);
+        m.record_decode_step(0, 0, 0, false, false, 50.0);
         assert_eq!(m.pad_waste_tokens(), 3);
         assert_eq!(m.kv_swap_bytes(), 4096);
         assert_eq!(m.interleaved_decode_steps(), 1);
+        assert_eq!(m.decode_plan_steps(), 1);
         let j = m.report(1.0);
         assert_eq!(j.get("decode_steps").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.get("decode_plan_steps").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(j.get("pad_waste_tokens").unwrap().as_f64().unwrap(), 3.0);
         assert_eq!(j.get("kv_swap_ins").unwrap().as_f64().unwrap(), 1.0);
         assert_eq!(j.get("kv_swap_bytes").unwrap().as_f64().unwrap(), 4096.0);

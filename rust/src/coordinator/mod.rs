@@ -42,5 +42,5 @@ pub use request::{Request, RequestId, Response, TokenEvent};
 pub use server::{
     default_workers, PoolConfig, Server, ServerHandle, ServerReport, Submitter, WorkerCtx,
 };
-pub use sim_cache::{CacheStats, CachedPass, PassKey, SimCache};
+pub use sim_cache::{CacheStats, CachedPass, ChunkClaim, PassKey, SimCache};
 pub use trace::TraceGenerator;

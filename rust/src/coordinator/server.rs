@@ -59,13 +59,15 @@
 use crate::coordinator::batcher::{
     BatcherConfig, DecodePolicy, DecodePool, DynamicBatcher, FormedBatch,
 };
-use crate::coordinator::engine::{DecodeState, Engine, PrefillProgress, PrefillState};
+use crate::coordinator::engine::{
+    DecodeState, Engine, PrefillProgress, PrefillState, MAX_DECODE_GROUP,
+};
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::request::{Request, Response, TokenEvent};
 use crate::coordinator::sim_cache::{CacheStats, SimCache};
 use crate::error::{Error, Result};
 use crate::kv::KvManager;
-use crate::sim::{batch_class, BatchClass};
+use crate::sim::{batch_class, BatchClass, PlanRegistry};
 use crate::util::json::Json;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -86,9 +88,10 @@ enum WorkItem {
     /// A chunked prefill parked between chunks, ready to resume (boxed —
     /// it carries a suspended simulation).
     PrefillChunk(Box<PrefillState>),
-    /// A group of decode streams regrouped from the between-steps pool.
+    /// A decode group regrouped from the between-steps pool — the streams
+    /// were popped into the calling worker's reusable group buffer (no
+    /// per-step group allocation).
     Decode {
-        group: Vec<DecodeState>,
         /// A prefill was parked mid-flight when this group dispatched —
         /// the step interleaves with it.
         interleaved: bool,
@@ -183,6 +186,10 @@ impl Default for PoolConfig {
 pub struct WorkerCtx {
     pub worker: usize,
     pub sim_cache: Arc<SimCache>,
+    /// Pool-wide compiled decode step-plan registry: every `(group,
+    /// quant)` plan is compiled once across all workers (pass through
+    /// [`Engine::for_worker`], like the sim cache).
+    pub plans: Arc<PlanRegistry>,
     /// The pool's shared KV-cache manager (`PoolConfig::kv`), if any.
     pub kv: Option<Arc<KvManager>>,
     /// Fallback shared slot when `kv` is `None`: the first engine built via
@@ -305,6 +312,8 @@ impl WorkQueue {
     /// alternate so decode streams keep flowing *and* new requests keep
     /// prefilled streams joining them — with chunking on, the alternation
     /// is what interleaves decode steps between a prefill's chunks).
+    /// `group_buf` is the worker's reusable decode-group buffer: a
+    /// [`WorkItem::Decode`] return means the group was popped into it.
     ///
     /// Priority order: ready decode groups (full at their width bound, or
     /// past the coalescing window) → parked prefill chunks → fresh prefill
@@ -313,7 +322,13 @@ impl WorkQueue {
     /// executing worker (a decode group mid-step, a chunk mid-execution)
     /// is invisible here — that worker re-pushes and re-pops it, so a
     /// closed, momentarily-empty queue never strands work.
-    fn pop(&self, warm: Option<BatchClass>, prefer_prefill: bool) -> Option<WorkItem> {
+    fn pop(
+        &self,
+        warm: Option<BatchClass>,
+        prefer_prefill: bool,
+        group_buf: &mut Vec<DecodeState>,
+    ) -> Option<WorkItem> {
+        debug_assert!(group_buf.is_empty(), "caller must drain the group buffer between pops");
         let mut s = self.state.lock().unwrap();
         loop {
             let now = Instant::now();
@@ -321,13 +336,19 @@ impl WorkQueue {
             if !(prefer_prefill && has_prefill) {
                 // A closed queue voids coalescing windows: drain everything.
                 let max_wait = if s.closed { Duration::ZERO } else { self.decode_max_wait };
-                let popped = s.decode.try_pop(now, self.decode, max_wait, self.decode_priority);
-                if let Some((group, coalesce_wait_us)) = popped {
+                let popped = s.decode.try_pop_into(
+                    now,
+                    self.decode,
+                    max_wait,
+                    self.decode_priority,
+                    group_buf,
+                );
+                if let Some(coalesce_wait_us) = popped {
                     // A prefill is mid-flight: parked here, or a chunk
                     // executing on another worker right now.
                     let interleaved = !s.parked.is_empty()
                         || self.chunks_executing.load(Ordering::Relaxed) > 0;
-                    return Some(WorkItem::Decode { group, interleaved, coalesce_wait_us });
+                    return Some(WorkItem::Decode { interleaved, coalesce_wait_us });
                 }
             }
             // Parked chunks resume before fresh batches start: in-flight
@@ -686,6 +707,7 @@ impl Server {
 
         let n_workers = cfg.workers.max(1);
         let kv_shared: Arc<OnceLock<Arc<KvManager>>> = Arc::new(OnceLock::new());
+        let plans = Arc::new(PlanRegistry::new());
         let mut worker_metrics = Vec::with_capacity(n_workers);
         let mut workers = Vec::with_capacity(n_workers);
         for worker in 0..n_workers {
@@ -694,6 +716,7 @@ impl Server {
             let ctx = WorkerCtx {
                 worker,
                 sim_cache: Arc::clone(&sim_cache),
+                plans: Arc::clone(&plans),
                 kv: cfg.kv.clone(),
                 kv_shared: Arc::clone(&kv_shared),
             };
@@ -855,6 +878,9 @@ fn worker_loop(
     let mut warm: Option<BatchClass> = None;
     let mut first_err: Option<Error> = None;
     let mut last_was_decode = false;
+    // Reusable decode-group buffer: pop fills it, execute_decode drains it
+    // — the steady-state token loop never allocates a group vector.
+    let mut group_buf: Vec<DecodeState> = Vec::with_capacity(MAX_DECODE_GROUP);
     // Final responses all leave through here: record, release the in-flight
     // slot, send. A dropped receiver is a client gone — not a pool error.
     let finish = |mut resp: Response| {
@@ -883,7 +909,7 @@ fn worker_loop(
             *first_err = Some(e);
         }
     };
-    while let Some(item) = queue.pop(warm, last_was_decode) {
+    while let Some(item) = queue.pop(warm, last_was_decode, &mut group_buf) {
         // A prefill to advance by one chunk this iteration (fresh from a
         // batch, or resumed from the parked pool).
         let mut chunk_to_run: Option<Box<PrefillState>> = None;
@@ -922,17 +948,17 @@ fn worker_loop(
                 warm = Some(state.class());
                 chunk_to_run = Some(state);
             }
-            WorkItem::Decode { group, interleaved, coalesce_wait_us } => {
+            WorkItem::Decode { interleaved, coalesce_wait_us } => {
                 last_was_decode = true;
-                let n = group.len();
-                let ids: Vec<_> = group.iter().map(|s| s.id).collect();
-                match engine.execute_decode(group) {
+                let n = group_buf.len();
+                match engine.execute_decode(&mut group_buf) {
                     Ok(outcome) => {
                         pooled.record_decode_step(
                             outcome.pad_waste_tokens,
                             outcome.kv_swap_ins,
                             outcome.kv_swap_bytes,
                             interleaved,
+                            outcome.planned,
                             coalesce_wait_us,
                         );
                         own.record_decode_step(
@@ -940,6 +966,7 @@ fn worker_loop(
                             outcome.kv_swap_ins,
                             outcome.kv_swap_bytes,
                             interleaved,
+                            outcome.planned,
                             coalesce_wait_us,
                         );
                         for mut ev in outcome.tokens {
@@ -952,8 +979,14 @@ fn worker_loop(
                         outcome.responses.into_iter().for_each(&finish);
                     }
                     // Shed the whole group: their requests never answer, so
-                    // their arena pages and reservations free up.
-                    Err(e) => shed(&engine, n, ids, e, &mut first_err),
+                    // their arena pages and reservations free up (the ids
+                    // are still in the buffer — execute_decode drains it
+                    // only on success).
+                    Err(e) => {
+                        let ids: Vec<_> = group_buf.iter().map(|s| s.id).collect();
+                        group_buf.clear();
+                        shed(&engine, n, ids, e, &mut first_err);
+                    }
                 }
             }
         }

@@ -15,9 +15,16 @@
 
 use crate::kv::KvQuant;
 use crate::sim::BatchClass;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// Upper bound a [`SimCache::wait_or_simulate`] caller spends waiting for
+/// an in-flight chunked owner before falling back to computing the value
+/// itself (liveness over strict exactly-once in the stalled-owner corner —
+/// an owner normally publishes in well under a millisecond of execution).
+const CHUNK_WAIT_MAX: Duration = Duration::from_millis(100);
 
 /// Identity of one deterministic chip pass.
 ///
@@ -52,7 +59,7 @@ impl PassKey {
 
 /// One simulated chip pass (the per-batch quantities the engine attaches to
 /// every response it serves from that pass).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct CachedPass {
     pub chip_us: f64,
     pub chip_uj: f64,
@@ -79,11 +86,42 @@ impl CacheStats {
     }
 }
 
+/// Outcome of claiming a key for an out-of-lock (chunked) simulation —
+/// see [`SimCache::begin_chunked`].
+pub enum ChunkClaim {
+    /// Already simulated — complete directly, nothing to re-step.
+    Cached(CachedPass),
+    /// The caller owns the chunked simulation for this key. It must
+    /// [`SimCache::publish_chunked`] when done (or
+    /// [`SimCache::abandon_chunked`] on a shed) — the claim is what keeps
+    /// racers from duplicating the compute.
+    Owner,
+    /// Another worker's chunked simulation is mid-flight: don't simulate;
+    /// resolve the value at completion via [`SimCache::wait_or_simulate`].
+    InFlight,
+}
+
 /// Thread-safe `PassKey → CachedPass` map with exactly-once compute
 /// semantics and hit/miss accounting.
+///
+/// Two compute disciplines cover every caller:
+/// * [`SimCache::get_or_simulate`] computes misses *under the write lock*
+///   — exactly-once for monolithic simulations, which finish in
+///   microseconds.
+/// * Chunked prefills step their simulation across parked chunks, far
+///   outside any lock, so they claim the key first
+///   ([`SimCache::begin_chunked`]): one owner simulates, racers ride its
+///   published result ([`SimCache::wait_or_simulate`]) instead of
+///   duplicating the chunk-by-chunk compute — closing the cold-key race
+///   the chunked path previously documented as accepted.
 #[derive(Debug, Default)]
 pub struct SimCache {
     map: RwLock<HashMap<PassKey, CachedPass>>,
+    /// Keys whose chunked simulation is being computed outside the cache
+    /// lock right now (owner claims). Guarded by its own mutex; never
+    /// locked while holding `map` (the reverse nesting is allowed).
+    in_flight: Mutex<HashSet<PassKey>>,
+    in_flight_cv: Condvar,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -117,13 +155,87 @@ impl SimCache {
         pass
     }
 
-    /// Non-counting lookup. The chunked-prefill path checks for an already
-    /// simulated pass up front — a hit means phase-by-phase re-simulation
-    /// would be pure duplicated work, so the chunk loop is skipped and the
-    /// completion path's [`SimCache::get_or_simulate`] records the hit when
-    /// the value is actually consumed.
+    /// Non-counting lookup (the chunked path now claims keys through
+    /// [`SimCache::begin_chunked`], which folds this check in; `peek`
+    /// remains for observability and tests).
     pub fn peek(&self, key: PassKey) -> Option<CachedPass> {
         self.map.read().unwrap().get(&key).copied()
+    }
+
+    /// Claim `key` for an out-of-lock chunked simulation. Exactly one
+    /// caller per cold key becomes the [`ChunkClaim::Owner`]; later racers
+    /// see [`ChunkClaim::InFlight`] and skip simulating entirely.
+    pub fn begin_chunked(&self, key: PassKey) -> ChunkClaim {
+        let mut inf = self.in_flight.lock().unwrap();
+        // Check the map under the guard lock so a publish between an
+        // unlocked peek and the claim can't be missed.
+        if let Some(pass) = self.map.read().unwrap().get(&key) {
+            return ChunkClaim::Cached(*pass);
+        }
+        if !inf.insert(key) {
+            return ChunkClaim::InFlight;
+        }
+        ChunkClaim::Owner
+    }
+
+    /// Publish the owner's finished chunked simulation and release the
+    /// claim, waking any waiters. Returns the value now cached for the key
+    /// (the owner's, unless a fallback racer beat it — then the cached one
+    /// wins, keeping every consumer consistent).
+    pub fn publish_chunked(&self, key: PassKey, pass: CachedPass) -> CachedPass {
+        let out = self.get_or_simulate(key, || pass);
+        let mut inf = self.in_flight.lock().unwrap();
+        inf.remove(&key);
+        self.in_flight_cv.notify_all();
+        out
+    }
+
+    /// The owner shed before finishing: release the claim so waiters stop
+    /// waiting (they fall back to computing the value themselves, still
+    /// exactly once, under the cache lock).
+    pub fn abandon_chunked(&self, key: PassKey) {
+        let mut inf = self.in_flight.lock().unwrap();
+        inf.remove(&key);
+        self.in_flight_cv.notify_all();
+    }
+
+    /// Resolve `key`, riding an in-flight chunked owner's result when one
+    /// exists: wait (bounded by [`CHUNK_WAIT_MAX`]) for its publish instead
+    /// of duplicating the simulation; with no owner this is exactly
+    /// [`SimCache::get_or_simulate`]. The bounded wait guarantees liveness
+    /// even if an owner stalls or never publishes.
+    pub fn wait_or_simulate(
+        &self,
+        key: PassKey,
+        simulate: impl FnOnce() -> CachedPass,
+    ) -> CachedPass {
+        // Fast path: already cached.
+        if let Some(pass) = self.map.read().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *pass;
+        }
+        let deadline = Instant::now() + CHUNK_WAIT_MAX;
+        let mut inf = self.in_flight.lock().unwrap();
+        loop {
+            if let Some(pass) = self.map.read().unwrap().get(&key) {
+                drop(inf);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return *pass;
+            }
+            let now = Instant::now();
+            if !inf.contains(&key) || now >= deadline {
+                drop(inf);
+                return self.get_or_simulate(key, simulate);
+            }
+            let wait = deadline.saturating_duration_since(now).min(Duration::from_millis(10));
+            let (guard, _timeout) = self.in_flight_cv.wait_timeout(inf, wait).unwrap();
+            inf = guard;
+        }
+    }
+
+    /// Keys currently claimed by chunked owners (observability/tests).
+    pub fn in_flight_chunked(&self) -> usize {
+        self.in_flight.lock().unwrap().len()
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -207,6 +319,58 @@ mod tests {
         let reused = cache.get_or_simulate(PassKey::prefill(BatchClass::B2, 16), || unreachable!());
         assert_eq!(reused.chip_us, 5.0);
         assert_eq!(cache.stats().hits, 1);
+    }
+
+    #[test]
+    fn chunked_claim_is_exclusive_and_waiters_ride_the_publish() {
+        let cache = Arc::new(SimCache::new());
+        let key = PassKey::prefill(BatchClass::B2, 16);
+        // First claimer owns; racers see InFlight and must not simulate.
+        assert!(matches!(cache.begin_chunked(key), ChunkClaim::Owner));
+        assert!(matches!(cache.begin_chunked(key), ChunkClaim::InFlight));
+        assert_eq!(cache.in_flight_chunked(), 1);
+        // A waiter rides the owner's publish — its own closure never runs.
+        let waiter = {
+            let cache = Arc::clone(&cache);
+            std::thread::spawn(move || {
+                cache.wait_or_simulate(key, || unreachable!("waiter must ride the publish"))
+            })
+        };
+        std::thread::sleep(Duration::from_millis(5));
+        let out = cache.publish_chunked(key, pass(9.0));
+        assert_eq!(out.chip_us, 9.0);
+        assert_eq!(waiter.join().unwrap().chip_us, 9.0);
+        assert_eq!(cache.in_flight_chunked(), 0);
+        // The key is now plainly cached; exactly one miss was recorded.
+        assert!(matches!(cache.begin_chunked(key), ChunkClaim::Cached(_)));
+        assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn abandoned_claim_falls_back_to_compute_under_lock() {
+        let cache = SimCache::new();
+        let key = PassKey::prefill(BatchClass::B1, 8);
+        assert!(matches!(cache.begin_chunked(key), ChunkClaim::Owner));
+        // The owner sheds mid-prefill: the claim is released and the next
+        // consumer computes the value itself — still exactly once.
+        cache.abandon_chunked(key);
+        assert_eq!(cache.in_flight_chunked(), 0);
+        let got = cache.wait_or_simulate(key, || pass(3.0));
+        assert_eq!(got.chip_us, 3.0);
+        assert_eq!(cache.stats().misses, 1);
+        assert!(matches!(cache.begin_chunked(key), ChunkClaim::Cached(_)));
+    }
+
+    #[test]
+    fn wait_or_simulate_without_owner_matches_get_or_simulate() {
+        let cache = SimCache::new();
+        let key = PassKey::prefill(BatchClass::B4, 32);
+        let got = cache.wait_or_simulate(key, || pass(2.0));
+        assert_eq!(got.chip_us, 2.0);
+        let again = cache.wait_or_simulate(key, || unreachable!());
+        assert_eq!(again.chip_us, 2.0);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
     }
 
     #[test]

@@ -123,7 +123,60 @@ pub fn build_program(m: &ModelConfig, seq: usize, batch: usize) -> Program {
 /// Cross-attention length uses the workload's `mean_input_len` (the builder
 /// is keyed by `past_len` alone so decode-step simulations stay cacheable).
 pub fn build_decode_step(m: &ModelConfig, past_len: usize, batch: usize) -> Program {
+    build_decode_step_impl(m, past_len, batch, false).0
+}
+
+/// Role a `past_len`-dependent op plays in a decode step's self-attention —
+/// the ONLY ops of a decode-step program whose shapes vary with the KV
+/// depth (every projection, the cross-attention core, and all DMA ops are
+/// fixed by `(model, batch)` alone).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvRole {
+    /// `attn_scores` Dmm: `n` = kv length.
+    Scores,
+    /// Attention `softmax`: `cols` = kv length.
+    Softmax,
+    /// `attn_context` Dmm: `k` = kv length.
+    Context,
+}
+
+/// One kv-dependent op site in a decode-step program.
+#[derive(Debug, Clone, Copy)]
+pub struct KvSite {
+    /// Index into [`Program::ops`].
+    pub op: usize,
+    pub role: KvRole,
+}
+
+/// A decode-step program with its `past_len`-dependent op sites marked:
+/// the parametric emission the step-plan compiler
+/// ([`crate::sim::StepPlan`]) consumes. The program is built at
+/// `past_len = 0` (kv = 1); every op NOT listed in `kv_sites` is invariant
+/// in `past_len` for this `(model, batch)` pair, so its cost can be priced
+/// once ahead of time.
+#[derive(Debug, Clone)]
+pub struct DecodeStepTemplate {
+    pub prog: Program,
+    /// Kv-dependent op sites, in op order (three per decode layer:
+    /// self-attention scores, softmax, context).
+    pub kv_sites: Vec<KvSite>,
+}
+
+/// Build the decode-step template for `(m, batch)` — see
+/// [`DecodeStepTemplate`].
+pub fn build_decode_template(m: &ModelConfig, batch: usize) -> DecodeStepTemplate {
+    let (prog, kv_sites) = build_decode_step_impl(m, 0, batch, true);
+    DecodeStepTemplate { prog, kv_sites }
+}
+
+fn build_decode_step_impl(
+    m: &ModelConfig,
+    past_len: usize,
+    batch: usize,
+    track_kv: bool,
+) -> (Program, Vec<KvSite>) {
     let mut b = Builder::new(m, 1, batch); // seq = 1: one new token per input
+    b.track_kv = track_kv;
     let kv = past_len + 1; // the new token attends over past + itself
     b.phase("input", None, |b| b.input_load());
     if m.arch == ArchKind::EncoderDecoder {
@@ -140,7 +193,9 @@ pub fn build_decode_step(m: &ModelConfig, past_len: usize, batch: usize) -> Prog
         }
     }
     b.phase("output", None, |b| b.output_store());
-    Program { model: m.name.clone(), batch, seq: 1, past_len, ops: b.ops, phases: b.phases }
+    let prog =
+        Program { model: m.name.clone(), batch, seq: 1, past_len, ops: b.ops, phases: b.phases };
+    (prog, b.kv_sites)
 }
 
 struct Builder<'a> {
@@ -149,11 +204,22 @@ struct Builder<'a> {
     batch: usize,
     ops: Vec<Op>,
     phases: Vec<Phase>,
+    /// Record kv-dependent op sites (decode-step templates only).
+    track_kv: bool,
+    kv_sites: Vec<KvSite>,
 }
 
 impl<'a> Builder<'a> {
     fn new(m: &'a ModelConfig, seq: usize, batch: usize) -> Self {
-        Builder { m, seq, batch, ops: Vec::new(), phases: Vec::new() }
+        Builder {
+            m,
+            seq,
+            batch,
+            ops: Vec::new(),
+            phases: Vec::new(),
+            track_kv: false,
+            kv_sites: Vec::new(),
+        }
     }
 
     /// Run `f` and record the ops it emitted as one phase.
@@ -197,6 +263,19 @@ impl<'a> Builder<'a> {
         self.ops.push(Op::load_wd(layer, name, bytes_val, bytes_idx, bytes_meta));
         self.ops.push(Op::dmm(layer, name, self.rows(), d_in, self.m.rank));
         self.ops.push(Op::smm(layer, name, self.rows(), self.m.rank, d_out, self.m.nnz_per_col));
+    }
+
+    /// [`Builder::attention_core`] over the decode step's *growing* self-
+    /// attention KV — records the three kv-dependent op sites when the
+    /// builder is assembling a [`DecodeStepTemplate`].
+    fn attention_core_kv(&mut self, layer: usize, q_seq: usize, kv_seq: usize) {
+        let base = self.ops.len();
+        self.attention_core(layer, q_seq, kv_seq);
+        if self.track_kv {
+            self.kv_sites.push(KvSite { op: base, role: KvRole::Scores });
+            self.kv_sites.push(KvSite { op: base + 1, role: KvRole::Softmax });
+            self.kv_sites.push(KvSite { op: base + 2, role: KvRole::Context });
+        }
     }
 
     /// Multi-head attention core: scores, softmax, context. `kv_seq` differs
@@ -272,7 +351,7 @@ impl<'a> Builder<'a> {
         for name in ["wq", "wk", "wv"] {
             self.projection(l, name, d, d);
         }
-        self.attention_core(l, 1, kv_self);
+        self.attention_core_kv(l, 1, kv_self);
         self.projection(l, "wo", d, d);
         self.ops.push(Op::residual(l, self.rows(), d));
         self.ops.push(Op::layernorm(l, self.rows(), d));
@@ -425,6 +504,38 @@ mod tests {
         // Decoder-only stack: cheaper than a full prefill pass per token.
         let prefill = build_program(&m, 64, 1);
         assert!(far < prefill.total_macs());
+    }
+
+    #[test]
+    fn decode_template_marks_exactly_the_kv_dependent_ops() {
+        for name in ["tiny", "s2t-small", "nmt-rdrop"] {
+            let m = ModelConfig::preset(name).unwrap();
+            for batch in [1usize, 4] {
+                let tpl = build_decode_template(&m, batch);
+                let stack = if m.dec_layers > 0 { m.dec_layers } else { m.enc_layers };
+                assert_eq!(tpl.kv_sites.len(), 3 * stack, "{name}: 3 sites per decode layer");
+                for site in tpl.kv_sites.chunks(3) {
+                    assert_eq!(site[0].role, KvRole::Scores);
+                    assert_eq!(site[1].role, KvRole::Softmax);
+                    assert_eq!(site[2].role, KvRole::Context);
+                    assert_eq!(tpl.prog.ops[site[0].op].name, "attn_scores");
+                    assert_eq!(tpl.prog.ops[site[1].op].name, "softmax");
+                    assert_eq!(tpl.prog.ops[site[2].op].name, "attn_context");
+                }
+                // The marked sites are EXACTLY the ops whose shapes change
+                // with past_len: diff the template (past 0) vs a deep step.
+                let deep = build_decode_step(&m, 57, batch);
+                assert_eq!(deep.ops.len(), tpl.prog.ops.len());
+                let marked: std::collections::BTreeSet<usize> =
+                    tpl.kv_sites.iter().map(|s| s.op).collect();
+                for (i, (a, b)) in tpl.prog.ops.iter().zip(deep.ops.iter()).enumerate() {
+                    let changed = a.kind != b.kind;
+                    assert_eq!(changed, marked.contains(&i), "{name} op {i} ({})", a.name);
+                }
+                // And build_decode_step itself never records sites.
+                assert!(!deep.phases.is_empty());
+            }
+        }
     }
 
     #[test]

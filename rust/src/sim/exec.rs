@@ -30,6 +30,7 @@ use crate::model::{OpKind, Phase, Program};
 use crate::sim::cores::{active_cores, afu_cycles, dmm_cycles, smm_cycles};
 use crate::sim::energy::{EnergyBreakdown, EnergyModel};
 use crate::sim::gb::GbBudget;
+use crate::sim::plan::{PlanOp, StepPlan};
 use crate::util::json::Json;
 
 /// Simulation options.
@@ -135,6 +136,37 @@ impl RunStats {
             ("energy", self.energy.to_json()),
             ("ema", self.ema.to_json()),
         ])
+    }
+}
+
+/// Scalar outputs of a settled plan run ([`Stepper::settle`]): everything
+/// the serving plane attaches to a decode step, with no owned ledger — the
+/// plan hot path is allocation-free. Formulas are copies of the
+/// [`RunStats`] ones (same float operations, bit-identical results).
+#[derive(Debug, Clone, Copy)]
+pub struct SettledStats {
+    pub cycles: u64,
+    pub dmm_busy: u64,
+    pub smm_busy: u64,
+    pub energy: EnergyBreakdown,
+    pub ema_bytes: u64,
+    pub tokens: u64,
+    pub point: OperatingPoint,
+}
+
+impl SettledStats {
+    pub fn seconds(&self) -> f64 {
+        self.cycles as f64 / (self.point.freq_mhz * 1e6)
+    }
+    pub fn us_per_token(&self) -> f64 {
+        self.seconds() * 1e6 / self.tokens.max(1) as f64
+    }
+    pub fn utilization(&self, hw: &HwConfig) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        let avail = self.cycles as f64 * hw.total_macs() as f64;
+        (self.dmm_busy + self.smm_busy) as f64 / avail
     }
 }
 
@@ -314,6 +346,202 @@ impl<'a> Stepper<'a> {
     /// (the pool clones one `HwConfig` into every worker's engine).
     pub fn resume(hw: &'a HwConfig, parts: StepperParts) -> Stepper<'a> {
         Stepper { hw, opts: parts.opts, em: parts.em, ema: parts.ema, st: parts.st }
+    }
+
+    /// Reset the stepper to a fresh run **without dropping its
+    /// allocations**: the EMA ledger keeps its category nodes (zeroed in
+    /// place), so a reused stepper prices compiled decode steps
+    /// ([`Stepper::run_plan`]) with no per-step heap traffic after the
+    /// first step has touched its categories.
+    pub fn reset(&mut self) {
+        self.st = SimState::default();
+        self.em.breakdown = EnergyBreakdown::default();
+        self.ema.reset();
+    }
+
+    /// Execute one compiled decode step ([`StepPlan`]) at `past_len`
+    /// against the persistent state — the zero-allocation twin of
+    /// `run_program(&build_decode_step(m, past_len, batch))`, bit-identical
+    /// to it by construction (pinned by the plan parity tests in
+    /// `tests/integration_plan.rs`). Pricing arithmetic is O(phases): only
+    /// the self-attention triple per layer is re-priced for this
+    /// `past_len`; every other coefficient was fixed at compile and the
+    /// replay performs the executor's exact f64 operation sequence over
+    /// the flat pre-priced arrays.
+    ///
+    /// The plan must have been compiled for the operating point this
+    /// stepper runs at (the pool shares one `HwConfig`; debug-asserted).
+    /// Chains may freely interleave `run_program` and `run_plan` — the
+    /// frontier state carries across both. Assumes no dense-baseline
+    /// weight load is pending (decode programs never emit them).
+    pub fn run_plan(&mut self, plan: &StepPlan, past_len: usize) {
+        let hw = self.hw;
+        debug_assert_eq!(
+            plan.point, self.opts.point,
+            "plan compiled for a different operating point"
+        );
+        debug_assert!(!self.st.dense_pending, "dense baseline mid-stream before a decode plan");
+        let dma_cycles_per_byte = plan.dma_cycles_per_byte;
+        let kv = past_len + 1;
+        let ch = plan.charges(past_len);
+        // Price the kv-dependent self-attention triple once for this depth
+        // (identical calls to the ones exec_ops would make per op).
+        let at = plan.attn;
+        let scores = dmm_cycles(
+            hw,
+            at.dmm_active,
+            at.count_i,
+            at.m_i,
+            at.dh,
+            kv,
+            at.a_bits,
+            at.w_bits,
+            at.trf,
+        );
+        let context = dmm_cycles(
+            hw,
+            at.dmm_active,
+            at.count_i,
+            at.m_i,
+            kv,
+            at.dh,
+            at.a_bits,
+            at.w_bits,
+            at.trf,
+        );
+        let sm_elems = (at.sm_rows * kv * 4) as u64;
+        let softmax = afu_cycles(hw, at.afu_active, sm_elems);
+        let scores_elapsed = scores.elapsed as f64;
+        let scores_busy = scores.busy_mac_cycles * at.batch;
+        let scores_stall = scores.stall_cycles * at.batch;
+        let scores_gb = (at.count * (at.q_m * at.dh + at.dh * kv + at.q_m * kv)) as u64 / 4;
+        let context_elapsed = context.elapsed as f64;
+        let context_busy = context.busy_mac_cycles * at.batch;
+        let context_stall = context.stall_cycles * at.batch;
+        let context_gb = (at.count * (at.q_m * kv + kv * at.dh + at.q_m * at.dh)) as u64 / 4;
+        let softmax_elapsed = softmax.elapsed as f64;
+        // Per-layer-phase charges at this depth.
+        let spill_bytes = 2 * ch.spill;
+        let spill_dur = spill_bytes as f64 * dma_cycles_per_byte;
+        let dq = ch.dequant;
+        let dq_dur = dq as f64 * dma_cycles_per_byte;
+
+        for phase in &plan.phases {
+            for op in &plan.ops[phase.start..phase.end] {
+                match *op {
+                    PlanOp::LoadWd { bytes, dur, gb_words } => {
+                        self.em.ema(bytes);
+                        if ch.prefetch {
+                            self.st.dma_t = self.st.dma_t.max(0.0) + dur;
+                        } else {
+                            self.st.dma_t = self.st.compute_t.max(self.st.dma_t) + dur;
+                        }
+                        self.st.wd_ready = self.st.dma_t;
+                        self.em.gb_activity(gb_words);
+                    }
+                    PlanOp::LoadInput { bytes, dur, gb_words } => {
+                        self.em.ema(bytes);
+                        self.st.compute_t = self.st.compute_t.max(self.st.dma_t) + dur;
+                        self.em.gb_activity(gb_words);
+                    }
+                    PlanOp::StoreOutput { bytes, dur, gb_words } => {
+                        self.em.ema(bytes);
+                        self.st.compute_t += dur;
+                        self.em.gb_activity(gb_words);
+                    }
+                    PlanOp::DmmPipe { elapsed, busy, stall, gb_words } => {
+                        self.st.pipelined_dmm = elapsed;
+                        self.st.dmm_busy += busy;
+                        self.st.trf_stall += stall;
+                        self.em.mac_activity(busy);
+                        self.em.gb_activity(gb_words);
+                    }
+                    PlanOp::DmmSeq { elapsed, busy, stall, gb_words } => {
+                        self.st.compute_t += elapsed;
+                        self.st.dmm_busy += busy;
+                        self.st.trf_stall += stall;
+                        self.em.mac_activity(busy);
+                        self.em.gb_activity(gb_words);
+                    }
+                    PlanOp::Smm { elapsed, busy, stall, gb_words } => {
+                        let start = self.st.compute_t.max(self.st.wd_ready);
+                        self.st.dma_stall += (start - self.st.compute_t).max(0.0);
+                        let e = elapsed.max(self.st.pipelined_dmm);
+                        self.st.pipelined_dmm = 0.0;
+                        self.st.compute_t = start + e;
+                        self.st.smm_busy += busy;
+                        self.st.trf_stall += stall;
+                        self.em.mac_activity(busy);
+                        self.em.gb_activity(gb_words);
+                    }
+                    PlanOp::Afu { elapsed, elems } => {
+                        self.st.compute_t += elapsed;
+                        self.st.afu_busy += elems;
+                        self.em.afu_activity(elems);
+                    }
+                    PlanOp::AttnScores => {
+                        self.st.compute_t += scores_elapsed;
+                        self.st.dmm_busy += scores_busy;
+                        self.st.trf_stall += scores_stall;
+                        self.em.mac_activity(scores_busy);
+                        self.em.gb_activity(scores_gb);
+                    }
+                    PlanOp::AttnSoftmax => {
+                        self.st.compute_t += softmax_elapsed;
+                        self.st.afu_busy += sm_elems;
+                        self.em.afu_activity(sm_elems);
+                    }
+                    PlanOp::AttnContext => {
+                        self.st.compute_t += context_elapsed;
+                        self.st.dmm_busy += context_busy;
+                        self.st.trf_stall += context_stall;
+                        self.em.mac_activity(context_busy);
+                        self.em.gb_activity(context_gb);
+                    }
+                }
+            }
+            if phase.layered {
+                if ch.spill > 0 {
+                    self.ema.add(EmaCategory::ActivationSpill, spill_bytes);
+                    self.em.ema(spill_bytes);
+                    self.em.gb_activity(spill_bytes / 2);
+                    self.st.compute_t += spill_dur;
+                }
+                if dq > 0 {
+                    self.ema.add(EmaCategory::KvDequant, dq);
+                    self.em.ema(dq);
+                    self.em.gb_activity(dq / 2);
+                    self.st.compute_t += dq_dur;
+                }
+            }
+        }
+        // Ledger bytes are u64 sums — order-insensitive, so the invariant
+        // categories land in one pass (bit-identical to per-op adds).
+        for &(cat, bytes) in &plan.ledger {
+            self.ema.add(cat, bytes);
+        }
+        self.st.tokens += plan.tokens;
+        self.st.inputs += plan.inputs;
+    }
+
+    /// Settle idle energy and read the run's scalar stats WITHOUT
+    /// consuming the stepper: the plan hot path resets
+    /// ([`Stepper::reset`]) and reuses it next step, avoiding the ledger
+    /// clone a [`RunStats`] would cost. Performs the same float operations
+    /// `finish` would, so the scalars are bit-identical to the one-shot
+    /// form. Call once per run — idle energy must not settle twice.
+    pub fn settle(&mut self) -> SettledStats {
+        let cycles = self.st.compute_t.max(self.st.dma_t).ceil() as u64;
+        self.em.idle(cycles);
+        SettledStats {
+            cycles,
+            dmm_busy: self.st.dmm_busy,
+            smm_busy: self.st.smm_busy,
+            energy: self.em.breakdown,
+            ema_bytes: self.ema.total(),
+            tokens: self.st.tokens,
+            point: self.opts.point,
+        }
     }
 
     /// Settle idle energy over the total elapsed cycles and return the

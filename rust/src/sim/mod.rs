@@ -18,12 +18,14 @@ pub mod cores;
 pub mod energy;
 pub mod exec;
 pub mod gb;
+pub mod plan;
 
 pub use batching::{batch_class, BatchClass};
 pub use cores::{afu_cycles, dmm_cycles, mac_cycles, smm_cycles, CoreTiming};
 pub use energy::EnergyBreakdown;
 pub use exec::{
-    boot_ema_bytes, simulate, simulate_workload, RunStats, SimOptions, SimState, Stepper,
-    StepperParts,
+    boot_ema_bytes, simulate, simulate_workload, RunStats, SettledStats, SimOptions, SimState,
+    Stepper, StepperParts,
 };
 pub use gb::GbBudget;
+pub use plan::{PlanRegistry, StepCharges, StepPlan};

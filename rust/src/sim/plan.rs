@@ -1,0 +1,589 @@
+//! Compiled decode step plans: closed-form per-token costing for the
+//! serving hot path.
+//!
+//! A decode step's op stream is almost entirely invariant in `past_len`:
+//! for a fixed `(model, batch)` every weight load, projection DMM/SMM,
+//! residual/layernorm/gelu, the cross-attention core (its KV is the
+//! encoder memory, fixed at prefill) and the input/output DMA have shapes
+//! that never change as the KV prefix deepens. The ONLY `past_len`-
+//! dependent ops are the three self-attention ops per decode layer —
+//! `attn_scores` (`n` = kv), `softmax` (`cols` = kv) and `attn_context`
+//! (`k` = kv) — marked by [`crate::model::DecodeStepTemplate`].
+//!
+//! [`StepPlan::compile`] therefore prices the whole step ONCE per
+//! `(model, batch, quant)`: each invariant op becomes a [`PlanOp`] holding
+//! its fully pre-computed coefficients (DMA durations already converted to
+//! cycles, busy/stall MAC-cycle tallies already scaled by batch, GB word
+//! counts already divided down). Per token,
+//! [`crate::sim::Stepper::run_plan`] then does **O(phases) pricing
+//! arithmetic**: it re-prices only the attention triple (whose MAC/AFU
+//! tallies are affine in kv — `busy = bh·dh·kv·cyc`, `elems = 4·bh·kv` —
+//! and whose elapsed cycles are the closed-form tile formulas of
+//! `sim::cores` evaluated at `n`/`k` = kv), resolves the three depth-
+//! dependent charges below, and replays the flat coefficient arrays with
+//! zero heap allocation. The replay itself walks the precomputed events
+//! because bit-identity forbids re-associating the executor's sequential
+//! f64 accumulation — but every event is a handful of adds; all cycle-model
+//! math, program construction and per-op branching happened at compile.
+//!
+//! Which coefficients are affine in `past_len`, and which are not:
+//!
+//! * **Affine** — the EMA ledger (spill/dequant bytes grow linearly with
+//!   the resident KV; all other categories are constant), MAC busy-cycles
+//!   and AFU element counts of the attention triple, the GB-overflow spill
+//!   (`max(0, fixed + past·kv_per_token − capacity)` — affine past the
+//!   hinge) and the dequant charge (`batch·(cross + past·per_token)/layers`
+//!   up to integer floor).
+//! * **Not affine, still closed-form O(1)** — attention *elapsed* cycles
+//!   round kv up to 16-wide tiles (`div_ceil`), and DMA-prefetch legality
+//!   is a threshold (`past ≤ P*`): both are evaluated exactly per call, so
+//!   the plan stays bit-identical to pricing the rebuilt program.
+//!
+//! Attention is the only cost that isn't constant per token because the
+//! new token's Q·Kᵀ and A·V genuinely touch the whole prefix; everything
+//! else the chip does per step — stream W_D, project one token, run the
+//! FFN — is the same work at depth 5 or 500. That is exactly the paper's
+//! per-token steady-state argument, and why a compiled plan can price a
+//! step in microseconds-of-host-time instead of rebuilding and re-walking
+//! a few hundred ops per token.
+
+use crate::compress::EmaCategory;
+use crate::config::{HwConfig, ModelConfig, OperatingPoint};
+use crate::kv::KvQuant;
+use crate::model::{build_decode_template, KvRole, OpKind};
+use crate::sim::cores::{active_cores, afu_cycles, dmm_cycles, smm_cycles};
+use crate::sim::exec::SimOptions;
+use crate::sim::gb::GbBudget;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, RwLock};
+
+/// One pre-priced op of a [`StepPlan`]: every `past_len`-invariant quantity
+/// the `Stepper` would derive from the op is already computed (durations in
+/// cycles, busy/stall tallies scaled by batch, GB words divided down), so
+/// replaying an op is a handful of adds on the frontier/energy state. The
+/// three kv-dependent markers carry no payload — `run_plan` prices them
+/// once per call from [`StepPlan`]'s attention parameters.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum PlanOp {
+    /// `LoadWd`: DMA onto the weight frontier (`bytes` feeds the EMA energy
+    /// charge, `dur` is the transfer in cycles, `gb_words` the GB writes).
+    LoadWd { bytes: u64, dur: f64, gb_words: u64 },
+    /// `LoadInput`: compute waits for the DMA frontier, then the transfer.
+    LoadInput { bytes: u64, dur: f64, gb_words: u64 },
+    /// `StoreOutput`: pure compute-frontier add.
+    StoreOutput { bytes: u64, dur: f64, gb_words: u64 },
+    /// Projection DMM (4b LUT codes): pipelines into the following Smm.
+    DmmPipe { elapsed: f64, busy: u64, stall: u64, gb_words: u64 },
+    /// Activation·activation DMM with constant shapes (cross-attention).
+    DmmSeq { elapsed: f64, busy: u64, stall: u64, gb_words: u64 },
+    /// SMM: waits on `wd_ready`, max-merges with the pipelined DMM.
+    Smm { elapsed: f64, busy: u64, stall: u64, gb_words: u64 },
+    /// AFU op with constant shape.
+    Afu { elapsed: f64, elems: u64 },
+    /// Self-attention `attn_scores` (`n` = kv): priced per call.
+    AttnScores,
+    /// Self-attention softmax (`cols` = kv): priced per call.
+    AttnSoftmax,
+    /// Self-attention `attn_context` (`k` = kv): priced per call.
+    AttnContext,
+}
+
+/// One schedulable span of a plan's op array (mirrors
+/// [`crate::model::Phase`]; layer phases charge spill/dequant).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PlanPhase {
+    pub start: usize,
+    pub end: usize,
+    /// The phase covers a transformer layer (spill/dequant charge site).
+    pub layered: bool,
+}
+
+/// Static shape parameters of the self-attention triple — identical for
+/// every decode layer of the stack (same `d_model`/`heads` throughout).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct AttnParams {
+    /// `count` of the batched attention DMMs (`batch × heads`).
+    pub count: usize,
+    /// Per-input split the executor applies (`count / batch`, `m`).
+    pub count_i: usize,
+    pub m_i: usize,
+    /// Op-level `m` (= q_seq = 1 for a decode step).
+    pub q_m: usize,
+    /// Head dimension (`d_model / heads`).
+    pub dh: usize,
+    /// Softmax rows (`batch × heads × q_seq`).
+    pub sm_rows: usize,
+    pub dmm_active: usize,
+    pub afu_active: usize,
+    pub a_bits: u32,
+    /// Attention operand width (activations on both sides).
+    pub w_bits: u32,
+    pub trf: bool,
+    /// Busy/stall tallies scale by the program batch.
+    pub batch: u64,
+}
+
+/// How [`crate::sim::Stepper::run_plan`] resolves the three depth-dependent
+/// charges of a step: GB-overflow spill, DMA-prefetch legality, and the
+/// quantized-KV dequant pass.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum ChargeModel {
+    /// Price the compile-time [`SimOptions`] verbatim — fixed prefetch /
+    /// spill / dequant regardless of `past_len`. Mirrors
+    /// `simulate(&hw, &build_decode_step(..), &opts)` for those options.
+    Fixed { prefetch: bool, spill: u64, dequant: u64 },
+    /// The engine's decode semantics: a [`GbBudget::for_decode_quant`]
+    /// budget at each depth and the
+    /// [`crate::kv::KvManager::dequant_bytes_per_layer`] formula, reduced
+    /// to closed form (pinned against both by tests).
+    Budgeted {
+        /// Single-buffer residents at `past_len` 0 (W_S + W_D slot +
+        /// activations & dequant scratch + cross-attention KV).
+        fixed_single: u64,
+        /// `fixed_single` + the prefetch double-buffer slot.
+        fixed_prefetch: u64,
+        /// Quantized self-attention KV bytes per token of depth
+        /// (group-wide).
+        kv_per_token: u64,
+        capacity: u64,
+        /// Dequant formula numerator parts:
+        /// `batch × (dq_cross + past × dq_per_token) / dq_layers`.
+        dq_cross: u64,
+        dq_per_token: u64,
+        dq_layers: u64,
+        dequant: bool,
+    },
+}
+
+/// The three depth-dependent charges resolved for one step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepCharges {
+    /// Double-buffered W_D prefetch legal at this depth.
+    pub prefetch: bool,
+    /// Activation spill bytes per layer phase (before the out-and-back ×2).
+    pub spill: u64,
+    /// Dequant bytes per layer phase.
+    pub dequant: u64,
+}
+
+/// A compiled decode step for one `(model, batch, quant)`: flat pre-priced
+/// op array + per-phase spans + the closed-form depth models. Immutable
+/// after compile; share it via [`PlanRegistry`].
+#[derive(Debug, Clone)]
+pub struct StepPlan {
+    /// Model the plan prices.
+    pub model: String,
+    /// Decode-group width the plan was compiled for.
+    pub batch: usize,
+    pub(crate) point: OperatingPoint,
+    pub(crate) ops: Vec<PlanOp>,
+    pub(crate) phases: Vec<PlanPhase>,
+    pub(crate) attn: AttnParams,
+    /// `past_len`-invariant EMA ledger bytes of one step, by category.
+    pub(crate) ledger: Vec<(EmaCategory, u64)>,
+    pub(crate) charge: ChargeModel,
+    pub(crate) dma_cycles_per_byte: f64,
+    /// Tokens/inputs one step credits (`batch × 1`, `batch`).
+    pub(crate) tokens: u64,
+    pub(crate) inputs: u64,
+}
+
+impl StepPlan {
+    /// Compile the decode step for `batch` streams of `m`, pricing `opts`
+    /// verbatim (fixed prefetch/spill/dequant — the twin of
+    /// `simulate(&hw, &build_decode_step(m, past, batch), &opts)` at every
+    /// `past`). Chained decode sweeps (benches) use this form.
+    pub fn compile_fixed(
+        hw: &HwConfig,
+        m: &ModelConfig,
+        batch: usize,
+        opts: &SimOptions,
+    ) -> StepPlan {
+        let charge = ChargeModel::Fixed {
+            prefetch: opts.prefetch,
+            spill: opts.gb.map(|g| g.spill_bytes_per_layer()).unwrap_or(0),
+            dequant: opts.kv_dequant_bytes_per_layer,
+        };
+        Self::compile(hw, m, batch, opts, charge)
+    }
+
+    /// Compile with the engine's decode-step semantics: budget, prefetch
+    /// legality and dequant traffic resolved from `past_len` at run time,
+    /// exactly as `Engine::decode_perf` derives them per step (pinned by
+    /// the plan parity tests).
+    pub fn compile_budgeted(
+        hw: &HwConfig,
+        m: &ModelConfig,
+        batch: usize,
+        quant: KvQuant,
+    ) -> StepPlan {
+        let b0 = GbBudget::for_decode_quant(hw, m, 0, batch, quant);
+        let stack = if m.dec_layers > 0 { m.dec_layers } else { m.enc_layers };
+        let charge = ChargeModel::Budgeted {
+            fixed_single: b0.ws_bytes + b0.wd_slot_bytes + b0.activation_bytes + b0.kv_bytes,
+            fixed_prefetch: b0.total(),
+            kv_per_token: GbBudget::kv_cache_bytes_quant(m, 1, batch, quant),
+            capacity: b0.capacity,
+            dq_cross: GbBudget::cross_kv_bytes_quant(m, 1, quant),
+            dq_per_token: GbBudget::kv_cache_bytes_quant(m, 1, 1, quant),
+            dq_layers: (stack as u64).max(1),
+            dequant: quant.dequant(),
+        };
+        // The engine builds its decode options on the paper defaults
+        // (fastest point, TRF on) with the model's activation width;
+        // prefetch/gb/dequant are the per-depth charges resolved above.
+        let opts = SimOptions { act_bits: m.act_bits, ..SimOptions::paper(hw) };
+        Self::compile(hw, m, batch, &opts, charge)
+    }
+
+    fn compile(
+        hw: &HwConfig,
+        m: &ModelConfig,
+        batch: usize,
+        opts: &SimOptions,
+        charge: ChargeModel,
+    ) -> StepPlan {
+        let tpl = build_decode_template(m, batch);
+        let prog = &tpl.prog;
+        let cycle_ns = opts.point.cycle_ns();
+        let dma_cycles_per_byte = hw.dram_ns(1) / cycle_ns;
+        let a = opts.act_bits;
+        let batch_n = prog.batch.max(1);
+        let dmm_active = active_cores(hw.dmm_cores, hw.max_seq, prog.seq, prog.batch) / batch_n;
+        let smm_active = active_cores(hw.smm_cores, hw.max_seq, prog.seq, prog.batch) / batch_n;
+        let afu_active = active_cores(hw.afus, hw.max_seq, prog.seq, prog.batch);
+        let (dmm_active, smm_active) = (dmm_active.max(1), smm_active.max(1));
+
+        let mut roles: HashMap<usize, KvRole> =
+            tpl.kv_sites.iter().map(|s| (s.op, s.role)).collect();
+        let mut ops = Vec::with_capacity(prog.ops.len());
+        let mut ledger: BTreeMap<EmaCategory, u64> = BTreeMap::new();
+        let mut attn: Option<AttnParams> = None;
+        for (i, op) in prog.ops.iter().enumerate() {
+            if let Some(role) = roles.remove(&i) {
+                match (role, op.kind) {
+                    (KvRole::Scores, OpKind::Dmm { count, m: q_m, k: dh, w_bits, .. }) => {
+                        let (count_i, m_i) = if count >= batch_n {
+                            (count / batch_n, q_m)
+                        } else {
+                            (count, q_m / batch_n)
+                        };
+                        let params = AttnParams {
+                            count,
+                            count_i,
+                            m_i,
+                            q_m,
+                            dh,
+                            sm_rows: count * q_m,
+                            dmm_active,
+                            afu_active,
+                            a_bits: a,
+                            w_bits,
+                            trf: opts.trf,
+                            batch: batch_n as u64,
+                        };
+                        match attn {
+                            None => attn = Some(params),
+                            Some(prev) => debug_assert_eq!(
+                                (prev.count, prev.dh, prev.q_m),
+                                (params.count, params.dh, params.q_m),
+                                "attention shapes must match across layers"
+                            ),
+                        }
+                        ops.push(PlanOp::AttnScores);
+                    }
+                    (KvRole::Softmax, OpKind::Softmax { .. }) => ops.push(PlanOp::AttnSoftmax),
+                    (KvRole::Context, OpKind::Dmm { .. }) => ops.push(PlanOp::AttnContext),
+                    _ => unreachable!("kv site role does not match its op kind"),
+                }
+                continue;
+            }
+            match op.kind {
+                OpKind::LoadWd { bytes_val, bytes_idx, bytes_meta } => {
+                    *ledger.entry(EmaCategory::WdValues).or_insert(0) += bytes_val;
+                    *ledger.entry(EmaCategory::WdIndices).or_insert(0) += bytes_idx;
+                    *ledger.entry(EmaCategory::Metadata).or_insert(0) += bytes_meta;
+                    let bytes = bytes_val + bytes_idx + bytes_meta;
+                    ops.push(PlanOp::LoadWd {
+                        bytes,
+                        dur: bytes as f64 * dma_cycles_per_byte,
+                        gb_words: bytes / 2,
+                    });
+                }
+                OpKind::LoadInput { bytes } => {
+                    *ledger.entry(EmaCategory::ActivationIn).or_insert(0) += bytes;
+                    ops.push(PlanOp::LoadInput {
+                        bytes,
+                        dur: bytes as f64 * dma_cycles_per_byte,
+                        gb_words: bytes / 2,
+                    });
+                }
+                OpKind::StoreOutput { bytes } => {
+                    *ledger.entry(EmaCategory::ActivationOut).or_insert(0) += bytes;
+                    ops.push(PlanOp::StoreOutput {
+                        bytes,
+                        dur: bytes as f64 * dma_cycles_per_byte,
+                        gb_words: bytes / 2,
+                    });
+                }
+                OpKind::Dmm { count, m: dm, k, n, w_bits } => {
+                    let (count_i, m_i) = if count >= batch_n {
+                        (count / batch_n, dm)
+                    } else {
+                        (count, dm / batch_n)
+                    };
+                    let t = dmm_cycles(hw, dmm_active, count_i, m_i, k, n, a, w_bits, opts.trf);
+                    let busy = t.busy_mac_cycles * batch_n as u64;
+                    let stall = t.stall_cycles * batch_n as u64;
+                    let gb_words = (count * (dm * k + k * n + dm * n)) as u64 / 4;
+                    let elapsed = t.elapsed as f64;
+                    if w_bits == 4 {
+                        ops.push(PlanOp::DmmPipe { elapsed, busy, stall, gb_words });
+                    } else {
+                        ops.push(PlanOp::DmmSeq { elapsed, busy, stall, gb_words });
+                    }
+                }
+                OpKind::Smm { m: sm, r: _, n, nnz_per_col, w_bits } => {
+                    let m_i = sm / batch_n;
+                    let t =
+                        smm_cycles(hw, smm_active, m_i.max(1), n, nnz_per_col, a, w_bits, opts.trf);
+                    let busy = t.busy_mac_cycles * batch_n as u64;
+                    let stall = t.stall_cycles * batch_n as u64;
+                    let gb_words = (sm * n + n * nnz_per_col * 2) as u64 / 4;
+                    ops.push(PlanOp::Smm { elapsed: t.elapsed as f64, busy, stall, gb_words });
+                }
+                OpKind::Softmax { .. }
+                | OpKind::LayerNorm { .. }
+                | OpKind::Gelu { .. }
+                | OpKind::Residual { .. } => {
+                    let elems = op.afu_elems();
+                    let t = afu_cycles(hw, afu_active, elems);
+                    ops.push(PlanOp::Afu { elapsed: t.elapsed as f64, elems });
+                }
+                OpKind::LoadDenseWeights { .. } => {
+                    unreachable!("decode steps never stream dense weights")
+                }
+            }
+        }
+        debug_assert!(roles.is_empty(), "every kv site must be consumed");
+        let phases = prog
+            .phases
+            .iter()
+            .map(|p| PlanPhase { start: p.start, end: p.end, layered: p.layer.is_some() })
+            .collect();
+        StepPlan {
+            model: m.name.clone(),
+            batch,
+            point: opts.point,
+            ops,
+            phases,
+            attn: attn.expect("a decode step always has self-attention"),
+            ledger: ledger.into_iter().collect(),
+            charge,
+            dma_cycles_per_byte,
+            tokens: (prog.batch * prog.seq) as u64,
+            inputs: prog.batch as u64,
+        }
+    }
+
+    /// Resolve the depth-dependent charges for one step at `past_len`.
+    pub fn charges(&self, past_len: usize) -> StepCharges {
+        match self.charge {
+            ChargeModel::Fixed { prefetch, spill, dequant } => {
+                StepCharges { prefetch, spill, dequant }
+            }
+            ChargeModel::Budgeted {
+                fixed_single,
+                fixed_prefetch,
+                kv_per_token,
+                capacity,
+                dq_cross,
+                dq_per_token,
+                dq_layers,
+                dequant,
+            } => {
+                let kv = past_len as u64 * kv_per_token;
+                let spill = (fixed_single + kv).saturating_sub(capacity);
+                let prefetch = fixed_prefetch + kv <= capacity;
+                let dq = if dequant {
+                    self.batch as u64 * (dq_cross + past_len as u64 * dq_per_token) / dq_layers
+                } else {
+                    0
+                };
+                StepCharges { prefetch, spill, dequant: dq }
+            }
+        }
+    }
+
+    /// Number of layer phases (the spill/dequant charge sites).
+    pub fn layer_phases(&self) -> usize {
+        self.phases.iter().filter(|p| p.layered).count()
+    }
+
+    /// Plan size in pre-priced ops (diagnostics).
+    pub fn n_ops(&self) -> usize {
+        self.ops.len()
+    }
+}
+
+/// Pool-wide registry of compiled step plans, shared by every worker the
+/// way the `SimCache` is: one compile per `(model, batch, quant)` key no
+/// matter how many engines serve decode traffic. The model name is part of
+/// the key — a registry shared by engines simulating different perf models
+/// must never hand one model's plan to the other. (Engines additionally
+/// cache the `Arc` per group width, so this map is off the per-token path.)
+#[derive(Debug, Default)]
+pub struct PlanRegistry {
+    plans: RwLock<HashMap<(String, usize, u64), Arc<StepPlan>>>,
+}
+
+impl PlanRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The plan for `(model, batch, quant)`, compiling it (under the write
+    /// lock, exactly once process-wide) if absent.
+    pub fn get_or_compile(
+        &self,
+        model: &str,
+        batch: usize,
+        quant: KvQuant,
+        compile: impl FnOnce() -> StepPlan,
+    ) -> Arc<StepPlan> {
+        let key = (model.to_string(), batch, quant.bits());
+        if let Some(p) = self.plans.read().unwrap().get(&key) {
+            return Arc::clone(p);
+        }
+        let mut map = self.plans.write().unwrap();
+        if let Some(p) = map.get(&key) {
+            return Arc::clone(p);
+        }
+        let plan = Arc::new(compile());
+        debug_assert_eq!(plan.model, key.0, "compiled plan must match its registry key");
+        debug_assert_eq!(plan.batch, batch, "compiled plan must match its registry key");
+        map.insert(key, Arc::clone(&plan));
+        plan
+    }
+
+    pub fn len(&self) -> usize {
+        self.plans.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::{KvArenaConfig, KvManager};
+
+    #[test]
+    fn budgeted_charges_match_gb_budget_and_kv_manager() {
+        // The closed-form charge model must agree with the exact per-depth
+        // derivation the engine performs (budget rebuild + manager formula)
+        // at every depth — that equality is what lets run_plan skip both.
+        let hw = HwConfig::default();
+        for name in ["s2t-small", "tiny", "bert-large"] {
+            let m = ModelConfig::preset(name).unwrap();
+            for batch in [1usize, 2, 4] {
+                for quant in KvQuant::ALL {
+                    let plan = StepPlan::compile_budgeted(&hw, &m, batch, quant);
+                    let kv = KvManager::new(
+                        &hw,
+                        &m,
+                        KvArenaConfig::for_pool(&hw, &m, quant, None),
+                    );
+                    for past in [0usize, 1, 4, 16, 100, 513] {
+                        let gb = GbBudget::for_decode_quant(&hw, &m, past, batch, quant);
+                        let ch = plan.charges(past);
+                        let ctx = format!("{name} b{batch} {} past {past}", quant.name());
+                        assert_eq!(ch.spill, gb.spill_bytes_per_layer(), "{ctx}: spill");
+                        assert_eq!(ch.prefetch, gb.fits_with_prefetch(), "{ctx}: prefetch");
+                        assert_eq!(
+                            ch.dequant,
+                            kv.dequant_bytes_per_layer(batch, past),
+                            "{ctx}: dequant"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tight_gb_budgeted_charges_cross_the_spill_hinge() {
+        // With a GB sized to hold the fixed residents plus ~64 tokens of
+        // four-up KV, the charge model must traverse all three regimes as
+        // depth grows: prefetch on → single-buffered → spilling.
+        let mut hw = HwConfig::default();
+        let m = ModelConfig::s2t_small();
+        let b0 = GbBudget::for_decode_quant(&hw, &m, 0, 4, KvQuant::Fp16);
+        let per = GbBudget::kv_cache_bytes_quant(&m, 1, 4, KvQuant::Fp16);
+        hw.gb_bytes = (b0.total() + 64 * per) as usize;
+        let plan = StepPlan::compile_budgeted(&hw, &m, 4, KvQuant::Fp16);
+        let (mut saw_prefetch, mut saw_single, mut saw_spill) = (false, false, false);
+        for past in 0..400 {
+            let ch = plan.charges(past);
+            let gb = GbBudget::for_decode_quant(&hw, &m, past, 4, KvQuant::Fp16);
+            assert_eq!(ch.spill, gb.spill_bytes_per_layer(), "past {past}");
+            assert_eq!(ch.prefetch, gb.fits_with_prefetch(), "past {past}");
+            saw_prefetch |= ch.prefetch;
+            saw_single |= !ch.prefetch && ch.spill == 0;
+            saw_spill |= ch.spill > 0;
+        }
+        assert!(saw_prefetch && saw_single && saw_spill, "all three GB regimes exercised");
+    }
+
+    #[test]
+    fn fixed_charges_pass_opts_through() {
+        let hw = HwConfig::default();
+        let m = ModelConfig::s2t_small();
+        let mut opts = SimOptions { act_bits: m.act_bits, ..SimOptions::paper(&hw) };
+        opts.prefetch = false;
+        opts.kv_dequant_bytes_per_layer = 4096;
+        let plan = StepPlan::compile_fixed(&hw, &m, 2, &opts);
+        for past in [0usize, 7, 100] {
+            let ch = plan.charges(past);
+            assert!(!ch.prefetch);
+            assert_eq!(ch.spill, 0);
+            assert_eq!(ch.dequant, 4096);
+        }
+        assert_eq!(plan.batch, 2);
+        assert_eq!(plan.layer_phases(), m.dec_layers);
+        assert!(plan.n_ops() > 10);
+    }
+
+    #[test]
+    fn registry_compiles_each_key_once() {
+        let hw = HwConfig::default();
+        let m = ModelConfig::tiny();
+        let reg = PlanRegistry::new();
+        let mut compiles = 0;
+        for _ in 0..3 {
+            for batch in [1usize, 4] {
+                reg.get_or_compile(&m.name, batch, KvQuant::Fp16, || {
+                    compiles += 1;
+                    StepPlan::compile_budgeted(&hw, &m, batch, KvQuant::Fp16)
+                });
+            }
+        }
+        assert_eq!(compiles, 2, "one compile per (model, batch, quant) key");
+        assert_eq!(reg.len(), 2);
+        // A different quant is a different plan (its charge model differs).
+        reg.get_or_compile(&m.name, 4, KvQuant::Int4, || {
+            StepPlan::compile_budgeted(&hw, &m, 4, KvQuant::Int4)
+        });
+        assert_eq!(reg.len(), 3);
+        // A different MODEL is a different plan — a registry shared across
+        // engines with different perf models must never cross-serve.
+        let other = ModelConfig::s2t_small();
+        let plan = reg.get_or_compile(&other.name, 4, KvQuant::Fp16, || {
+            StepPlan::compile_budgeted(&hw, &other, 4, KvQuant::Fp16)
+        });
+        assert_eq!(plan.model, other.name);
+        assert_eq!(reg.len(), 4);
+    }
+}

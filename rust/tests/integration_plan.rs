@@ -1,0 +1,168 @@
+//! Step-plan parity: the compiled decode plan (`Stepper::run_plan`) must
+//! price a step **bit-identically** to building the op program and walking
+//! it (`build_decode_step` + `Stepper::run_program`) — cycles, busy/stall
+//! tallies, every EMA category, and the f64 energy breakdown, across KV
+//! depths, group widths, quantization modes, both architectures, and the
+//! spill/dequant/single-buffer GB regimes.
+
+use trex::compress::EmaCategory;
+use trex::config::{HwConfig, ModelConfig};
+use trex::kv::{KvArenaConfig, KvManager, KvQuant};
+use trex::model::{build_decode_step, build_program};
+use trex::sim::{simulate, GbBudget, RunStats, SimOptions, StepPlan, Stepper};
+
+fn assert_bit_identical(a: &RunStats, b: &RunStats, ctx: &str) {
+    assert_eq!(a.cycles, b.cycles, "{ctx}: cycles");
+    assert_eq!(a.dmm_busy, b.dmm_busy, "{ctx}: dmm_busy");
+    assert_eq!(a.smm_busy, b.smm_busy, "{ctx}: smm_busy");
+    assert_eq!(a.afu_busy, b.afu_busy, "{ctx}: afu_busy");
+    assert_eq!(a.dma_stall_cycles, b.dma_stall_cycles, "{ctx}: dma_stall");
+    assert_eq!(a.trf_stall_cycles, b.trf_stall_cycles, "{ctx}: trf_stall");
+    assert_eq!(a.tokens, b.tokens, "{ctx}: tokens");
+    assert_eq!(a.inputs, b.inputs, "{ctx}: inputs");
+    for cat in EmaCategory::ALL {
+        assert_eq!(a.ema.get(cat), b.ema.get(cat), "{ctx}: ema {}", cat.name());
+    }
+    // f64 energy must match *bitwise* — both paths execute the same float
+    // operations in the same order.
+    assert_eq!(a.energy, b.energy, "{ctx}: energy breakdown");
+}
+
+/// The engine's exact per-depth option derivation for one decode step.
+fn engine_opts(
+    hw: &HwConfig,
+    m: &ModelConfig,
+    kv: &KvManager,
+    past: usize,
+    batch: usize,
+    quant: KvQuant,
+) -> SimOptions {
+    let gb = GbBudget::for_decode_quant(hw, m, past, batch, quant);
+    let mut opts = SimOptions {
+        act_bits: m.act_bits,
+        prefetch: gb.fits_with_prefetch(),
+        gb: Some(gb),
+        ..SimOptions::paper(hw)
+    };
+    opts.kv_dequant_bytes_per_layer = kv.dequant_bytes_per_layer(batch, past);
+    opts
+}
+
+#[test]
+fn plan_matches_exact_stepper_across_depths_batches_and_quants() {
+    // The headline parity sweep: past_len × batch × quant × architecture,
+    // budgeted (engine-semantics) plans against the exact rebuild path.
+    let hw = HwConfig::default();
+    for name in ["s2t-small", "nmt-rdrop", "tiny", "bert-large"] {
+        let m = ModelConfig::preset(name).unwrap();
+        for batch in [1usize, 2, 4] {
+            for quant in KvQuant::ALL {
+                let plan = StepPlan::compile_budgeted(&hw, &m, batch, quant);
+                let kv =
+                    KvManager::new(&hw, &m, KvArenaConfig::for_pool(&hw, &m, quant, None));
+                for past in [0usize, 1, 4, 16, 100] {
+                    let opts = engine_opts(&hw, &m, &kv, past, batch, quant);
+                    let exact = simulate(&hw, &build_decode_step(&m, past, batch), &opts);
+                    let mut stepper = Stepper::new(&hw, opts);
+                    stepper.run_plan(&plan, past);
+                    let planned = stepper.finish();
+                    let ctx = format!("{name} b{batch} {} past {past}", quant.name());
+                    assert_bit_identical(&planned, &exact, &ctx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_parity_holds_under_tight_gb_spill_and_dequant() {
+    // Shrunken GB: the sweep must traverse prefetch-on, single-buffered
+    // and spilling regimes (and charge dequant under the reduced modes) —
+    // with bit identity holding in all of them.
+    let mut hw = HwConfig::default();
+    hw.gb_bytes = 96 << 10;
+    let m = ModelConfig::s2t_small();
+    let (mut saw_spill, mut saw_single, mut saw_dequant) = (false, false, false);
+    for quant in KvQuant::ALL {
+        let kv = KvManager::new(&hw, &m, KvArenaConfig::for_pool(&hw, &m, quant, None));
+        for batch in [1usize, 4] {
+            let plan = StepPlan::compile_budgeted(&hw, &m, batch, quant);
+            for past in [4usize, 64, 200] {
+                let opts = engine_opts(&hw, &m, &kv, past, batch, quant);
+                let exact = simulate(&hw, &build_decode_step(&m, past, batch), &opts);
+                let mut stepper = Stepper::new(&hw, opts);
+                stepper.run_plan(&plan, past);
+                let planned = stepper.finish();
+                let ctx = format!("tight-gb b{batch} {} past {past}", quant.name());
+                assert_bit_identical(&planned, &exact, &ctx);
+                saw_spill |= exact.ema.get(EmaCategory::ActivationSpill) > 0;
+                saw_dequant |= exact.ema.get(EmaCategory::KvDequant) > 0;
+                saw_single |= !opts.prefetch;
+            }
+        }
+    }
+    assert!(saw_spill, "sweep must exercise the spill regime");
+    assert!(saw_single, "sweep must exercise the single-buffered regime");
+    assert!(saw_dequant, "sweep must exercise the dequant charge");
+}
+
+#[test]
+fn plan_chain_matches_program_chain_through_one_stepper() {
+    // A full generation — prefill then T decode steps through ONE
+    // persistent stepper — must finish bit-identical whether the decode
+    // steps are rebuilt programs or plan replays (frontier, EMA and energy
+    // all carry across the boundary between the two forms).
+    let hw = HwConfig::default();
+    let (prompt, gen) = (24usize, 12usize);
+    for name in ["s2t-small", "tiny"] {
+        let m = ModelConfig::preset(name).unwrap();
+        for batch in [1usize, 4] {
+            let opts = SimOptions { act_bits: m.act_bits, ..SimOptions::paper(&hw) };
+            let plan = StepPlan::compile_fixed(&hw, &m, batch, &opts);
+            let mut exact = Stepper::new(&hw, opts);
+            exact.run_program(&build_program(&m, prompt, batch));
+            for t in 0..gen {
+                exact.run_program(&build_decode_step(&m, prompt + t, batch));
+            }
+            let exact = exact.finish();
+            let mut planned = Stepper::new(&hw, opts);
+            planned.run_program(&build_program(&m, prompt, batch));
+            for t in 0..gen {
+                planned.run_plan(&plan, prompt + t);
+            }
+            let planned = planned.finish();
+            assert_bit_identical(&planned, &exact, &format!("{name} b{batch} chain"));
+            assert_eq!(exact.tokens, (prompt * batch + gen * batch) as u64);
+        }
+    }
+}
+
+#[test]
+fn scratch_stepper_reset_reuse_is_bit_identical_to_fresh() {
+    // The engine's hot path reuses ONE stepper (reset + run_plan + settle)
+    // across steps; every step must read exactly what a fresh stepper
+    // would. Revisited depths exercise the reset of every accumulator.
+    let hw = HwConfig::default();
+    let m = ModelConfig::s2t_small();
+    let opts = SimOptions { act_bits: m.act_bits, ..SimOptions::paper(&hw) };
+    let plan = StepPlan::compile_budgeted(&hw, &m, 4, KvQuant::Int8);
+    let mut scratch = Stepper::new(&hw, opts);
+    for past in [8usize, 9, 33, 9, 8, 100, 8] {
+        scratch.reset();
+        scratch.run_plan(&plan, past);
+        let s = scratch.settle();
+        let fresh = {
+            let mut st = Stepper::new(&hw, opts);
+            st.run_plan(&plan, past);
+            st.finish()
+        };
+        assert_eq!(s.cycles, fresh.cycles, "past {past}: cycles");
+        assert_eq!(s.energy, fresh.energy, "past {past}: energy");
+        assert_eq!(s.ema_bytes, fresh.ema_bytes(), "past {past}: ema");
+        assert_eq!(s.tokens, fresh.tokens, "past {past}: tokens");
+        assert_eq!(s.dmm_busy, fresh.dmm_busy, "past {past}: dmm busy");
+        assert_eq!(s.smm_busy, fresh.smm_busy, "past {past}: smm busy");
+        assert!(s.utilization(&hw) == fresh.utilization(&hw), "past {past}: utilization");
+        assert!(s.seconds() == fresh.seconds(), "past {past}: seconds");
+    }
+}

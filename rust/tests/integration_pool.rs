@@ -8,8 +8,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 use trex::config::{HwConfig, ModelConfig};
 use trex::coordinator::{
-    BatcherConfig, Engine, EngineConfig, FormedBatch, PoolConfig, PrefillProgress, Request,
-    Server, ServerHandle, TokenEvent, TraceGenerator,
+    BatcherConfig, Engine, EngineConfig, FormedBatch, PassKey, PoolConfig, PrefillProgress,
+    Request, Server, ServerHandle, SimCache, TokenEvent, TraceGenerator,
 };
 use trex::kv::{KvArenaConfig, KvManager, KvQuant};
 use trex::runtime::ArtifactSet;
@@ -730,4 +730,123 @@ fn identical_numerics_any_worker_count() {
         out
     };
     assert_eq!(run(1), run(4));
+}
+
+#[test]
+fn chunked_cold_key_race_simulates_exactly_once() {
+    // Satellite acceptance (PR 4 race closed): two engines sharing one
+    // SimCache begin the SAME cold prefill key. The first claims the
+    // chunked simulation; the second becomes a follower that steps no
+    // simulation at all and rides the owner's published value.
+    let hw = HwConfig::default();
+    let pm = ModelConfig::s2t_small();
+    let cache = Arc::new(SimCache::new());
+    let mk = |cache: &Arc<SimCache>| {
+        let set = ArtifactSet::reference("tiny", D, MAX_SEQ).unwrap();
+        Engine::with_cache(
+            set,
+            EngineConfig {
+                hw: hw.clone(),
+                perf_model: pm.clone(),
+                self_test: false,
+                kv_quant: KvQuant::Fp16,
+                kv_pages: None,
+            },
+            Arc::clone(cache),
+        )
+        .unwrap()
+    };
+    let mut a = mk(&cache);
+    let mut b = mk(&cache);
+    let reqs = |base: u64| {
+        vec![
+            Request::new(base, 10, vec![0.1; 10 * D]),
+            Request::new(base + 1, 12, vec![0.2; 12 * D]),
+        ]
+    };
+    let batch = |requests: Vec<Request>| FormedBatch { class: BatchClass::B2, requests };
+    let mut sa = a.begin_prefill(batch(reqs(0)), 2).unwrap();
+    let sb = b.begin_prefill(batch(reqs(10)), 2).unwrap();
+    assert!(sa.owns_simulation(), "first racer owns the chunked simulation");
+    assert!(!sb.owns_simulation(), "second racer follows instead of re-simulating");
+    assert_eq!(cache.in_flight_chunked(), 1);
+    // Drive the owner to completion; its final chunk publishes the pass.
+    let oa = loop {
+        match a.prefill_chunk(sa).unwrap() {
+            PrefillProgress::Parked(next) => sa = *next,
+            PrefillProgress::Done(outcome) => break outcome,
+        }
+    };
+    assert_eq!(cache.in_flight_chunked(), 0, "publish releases the claim");
+    // The follower completes in ONE chunk (nothing to re-step).
+    let ob = match b.prefill_chunk(sb).unwrap() {
+        PrefillProgress::Done(outcome) => outcome,
+        PrefillProgress::Parked(_) => panic!("follower must complete directly"),
+    };
+    assert_eq!(cache.stats().misses, 1, "exactly one simulation for the racing key");
+    // Both batches carry the same modeled pass.
+    assert_eq!(oa.responses[0].chip_us, ob.responses[0].chip_us);
+    assert_eq!(oa.responses[0].utilization, ob.responses[0].utilization);
+
+    // A dropped OWNER (an external driver discarding a parked state)
+    // abandons its claim in Drop — the key stays claimable and later
+    // prefills are never demoted to stalling followers.
+    let st = a.begin_prefill(batch(reqs(20)), 2).unwrap();
+    assert!(!st.owns_simulation(), "key already cached: no claim to hold");
+    drop(st);
+    let cold = PassKey::prefill(BatchClass::B1, 32);
+    assert!(cache.peek(cold).is_none(), "B1 slot is a fresh key");
+    let st = a
+        .begin_prefill(
+            FormedBatch {
+                class: BatchClass::B1,
+                requests: vec![Request::new(30, 20, vec![0.1; 20 * D])],
+            },
+            2,
+        )
+        .unwrap();
+    assert!(st.owns_simulation());
+    assert_eq!(cache.in_flight_chunked(), 1);
+    drop(st);
+    assert_eq!(cache.in_flight_chunked(), 0, "Drop releases an owned claim");
+}
+
+#[test]
+fn steady_state_decode_routes_through_step_plans() {
+    // Tentpole acceptance at the pool level: generate traffic's decode
+    // steps split into exact first steps plus plan-priced steady-state
+    // steps, and the per-token numbers stay identical either way (the
+    // us_per_token stream is what clients see).
+    let gen = 6usize;
+    let n = 4u64;
+    let handle = start(pool(2, Duration::from_millis(1)));
+    for i in 0..n {
+        handle.submit(Request::new(i, 6, vec![0.3; 6 * D]).with_generate(gen)).unwrap();
+    }
+    for _ in 0..n {
+        handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let tokens: Vec<TokenEvent> = handle.tokens.try_iter().collect();
+    assert_eq!(tokens.len(), (n as usize) * gen);
+    let report = handle.shutdown().unwrap();
+    let steps = report.metrics.decode_plan_steps();
+    assert!(steps > 0, "steady-state steps must take the plan path");
+    let j = report.json();
+    let total = j.get("decode_steps").unwrap().as_f64().unwrap();
+    let planned = j.get("decode_plan_steps").unwrap().as_f64().unwrap();
+    assert!(planned < total, "first steps keep the exact path");
+    // Every stream's deeper steps (all past the first) were plan-priced;
+    // steps at the same group width and padded depth (the group's MAX —
+    // what the simulation keys on) must report identical modeled per-token
+    // cost regardless of which path priced them.
+    let mut by_key: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    for ev in &tokens {
+        let max_past = *ev.group_past_lens.iter().max().expect("non-empty group");
+        let key = (ev.group_past_lens.len(), max_past);
+        let us = by_key.entry(key).or_insert(ev.us_per_token);
+        assert!(
+            (*us - ev.us_per_token).abs() < 1e-9,
+            "same (group, max depth) must price identically: {key:?}"
+        );
+    }
 }
