@@ -196,6 +196,11 @@ impl PrefillState {
     pub fn generate_ids(&self) -> Vec<RequestId> {
         self.requests.iter().filter(|r| r.generate > 0).map(|r| r.id).collect()
     }
+    /// Every id in the batch — what a shed must mark terminal in the
+    /// lifecycle ledger (encode-only requests too, not just KV holders).
+    pub fn request_ids(&self) -> Vec<RequestId> {
+        self.requests.iter().map(|r| r.id).collect()
+    }
     pub fn chunks_done(&self) -> usize {
         self.chunks_done
     }

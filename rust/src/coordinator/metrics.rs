@@ -7,9 +7,11 @@
 //! sustained traffic (the raw `Vec` they replaced grew without bound and
 //! leaked in a long-running pool).
 
+use crate::coordinator::request::RequestId;
 use crate::sim::BatchClass;
 use crate::util::json::Json;
 use crate::util::stats::{Reservoir, Running};
+use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -63,15 +65,178 @@ struct Inner {
     us_per_token: Reservoir,
 }
 
+/// Where one admitted request currently is in its lifecycle. Terminal
+/// states carry the instant of the transition so ordering properties
+/// ("no token event after its stream sheds") are checkable after the fact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lifecycle {
+    /// Admitted (submit returned `Ok`), no terminal event yet.
+    Admitted,
+    /// Final response sent.
+    Completed,
+    /// Shed after admission (batcher reject, engine execute error, chunk
+    /// or decode-group failure) — the request will never answer.
+    Shed,
+}
+
+/// Per-request lifecycle ledger (opt-in via
+/// [`crate::coordinator::PoolConfig::lifecycle_ledger`]): every admitted
+/// request must reach **exactly one** terminal state — completed or shed —
+/// which is the scheduler-conservation invariant the fuzzer and the replay
+/// driver check. Transition violations (double terminal, terminal without
+/// admission, re-admission of a live id) are latched as strings rather
+/// than panicking the pool: the *checker* fails, the serving plane keeps
+/// running.
+#[derive(Debug, Default)]
+struct LedgerInner {
+    states: HashMap<RequestId, (Lifecycle, Instant)>,
+    admitted: u64,
+    completed: u64,
+    shed: u64,
+    violations: Vec<String>,
+}
+
+impl LedgerInner {
+    fn admit(&mut self, id: RequestId) {
+        match self.states.get(&id) {
+            Some((Lifecycle::Admitted, _)) => {
+                self.violations.push(format!("request {id} admitted twice while live"));
+            }
+            // Id reuse after a terminal is legal (a client retrying a shed
+            // id): the new life starts a fresh entry.
+            _ => {
+                self.states.insert(id, (Lifecycle::Admitted, Instant::now()));
+                self.admitted += 1;
+            }
+        }
+    }
+
+    fn terminal(&mut self, id: RequestId, to: Lifecycle) {
+        let verb = if to == Lifecycle::Completed { "completed" } else { "shed" };
+        match self.states.get_mut(&id) {
+            Some(entry) => {
+                if entry.0 == Lifecycle::Admitted {
+                    *entry = (to, Instant::now());
+                    if to == Lifecycle::Completed {
+                        self.completed += 1;
+                    } else {
+                        self.shed += 1;
+                    }
+                } else {
+                    self.violations.push(format!(
+                        "request {id} {verb} after already terminal ({:?}) — double terminal",
+                        entry.0
+                    ));
+                }
+            }
+            None => {
+                self.violations.push(format!("request {id} {verb} without admission"));
+            }
+        }
+    }
+}
+
+/// Snapshot of the ledger for post-drain auditing.
+#[derive(Debug, Clone, Default)]
+pub struct LedgerAudit {
+    pub admitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    /// Admitted requests with no terminal event — after a full drain this
+    /// must be empty (a non-empty list is a lost request).
+    pub open: Vec<RequestId>,
+    /// Transition violations observed live (double terminal, terminal
+    /// without admission, re-admission of a live id).
+    pub violations: Vec<String>,
+}
+
+impl LedgerAudit {
+    /// Conservation holds: every admission reached exactly one terminal.
+    pub fn conserved(&self) -> bool {
+        self.open.is_empty()
+            && self.violations.is_empty()
+            && self.admitted == self.completed + self.shed
+    }
+}
+
 /// Thread-safe metrics sink shared by engine workers.
 #[derive(Debug, Default)]
 pub struct ServerMetrics {
     inner: Mutex<Inner>,
+    /// `Some` once [`ServerMetrics::enable_ledger`] ran — the pool enables
+    /// it on the pooled sink only (per-worker sinks see a per-id lifecycle
+    /// only partially: prefill and final decode step may run on different
+    /// workers).
+    ledger: Mutex<Option<LedgerInner>>,
 }
 
 impl ServerMetrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    // ------------------------------------------------------ lifecycle ledger
+
+    /// Turn on per-request lifecycle tracking (see [`LedgerAudit`]). Off by
+    /// default: the ledger holds one entry per request ever admitted, which
+    /// is unbounded memory under sustained production traffic — it exists
+    /// for the fuzzer, the replay driver, and tests.
+    pub fn enable_ledger(&self) {
+        let mut l = self.ledger.lock().unwrap();
+        if l.is_none() {
+            *l = Some(LedgerInner::default());
+        }
+    }
+
+    pub fn ledger_enabled(&self) -> bool {
+        self.ledger.lock().unwrap().is_some()
+    }
+
+    /// A request's submit returned `Ok` — it is now the pool's to finish.
+    pub fn ledger_admit(&self, id: RequestId) {
+        if let Some(l) = self.ledger.lock().unwrap().as_mut() {
+            l.admit(id);
+        }
+    }
+
+    /// Terminal: final response sent.
+    pub fn ledger_complete(&self, id: RequestId) {
+        if let Some(l) = self.ledger.lock().unwrap().as_mut() {
+            l.terminal(id, Lifecycle::Completed);
+        }
+    }
+
+    /// Terminal: shed after admission — the request will never answer.
+    pub fn ledger_shed(&self, id: RequestId) {
+        if let Some(l) = self.ledger.lock().unwrap().as_mut() {
+            l.terminal(id, Lifecycle::Shed);
+        }
+    }
+
+    /// Current lifecycle of one id (with the instant of its last
+    /// transition), if the ledger is enabled and has seen it.
+    pub fn ledger_state(&self, id: RequestId) -> Option<(Lifecycle, Instant)> {
+        self.ledger.lock().unwrap().as_ref().and_then(|l| l.states.get(&id).copied())
+    }
+
+    /// Snapshot for post-drain auditing (`None`: ledger disabled).
+    pub fn ledger_audit(&self) -> Option<LedgerAudit> {
+        let guard = self.ledger.lock().unwrap();
+        let l = guard.as_ref()?;
+        let mut open: Vec<RequestId> = l
+            .states
+            .iter()
+            .filter(|(_, (s, _))| *s == Lifecycle::Admitted)
+            .map(|(id, _)| *id)
+            .collect();
+        open.sort_unstable();
+        Some(LedgerAudit {
+            admitted: l.admitted,
+            completed: l.completed,
+            shed: l.shed,
+            open,
+            violations: l.violations.clone(),
+        })
     }
 
     pub fn record_batch(&self, class: BatchClass, n_requests: usize) {
@@ -400,6 +565,81 @@ mod tests {
         assert_eq!(j.get("e2e_latency_us_p95").unwrap().as_f64().unwrap(), 150.0);
         assert_eq!(j.get("us_per_token_p50").unwrap().as_f64().unwrap(), 250.0);
         assert_eq!(j.get("tokens_decoded").unwrap().as_f64().unwrap(), n as f64);
+    }
+
+    #[test]
+    fn ledger_disabled_is_inert() {
+        let m = ServerMetrics::new();
+        m.ledger_admit(1);
+        m.ledger_complete(1);
+        assert!(!m.ledger_enabled());
+        assert!(m.ledger_audit().is_none());
+        assert!(m.ledger_state(1).is_none());
+    }
+
+    #[test]
+    fn ledger_conservation_happy_path() {
+        let m = ServerMetrics::new();
+        m.enable_ledger();
+        m.enable_ledger(); // idempotent — does not reset counts
+        for id in 0..4u64 {
+            m.ledger_admit(id);
+        }
+        m.ledger_complete(0);
+        m.ledger_complete(1);
+        m.ledger_shed(2);
+        let mid = m.ledger_audit().unwrap();
+        assert_eq!(mid.admitted, 4);
+        assert_eq!(mid.open, vec![3]);
+        assert!(!mid.conserved(), "3 is still open");
+        m.ledger_complete(3);
+        let done = m.ledger_audit().unwrap();
+        assert!(done.conserved(), "{done:?}");
+        assert_eq!((done.completed, done.shed), (3, 1));
+        assert_eq!(m.ledger_state(2).unwrap().0, Lifecycle::Shed);
+        assert_eq!(m.ledger_state(3).unwrap().0, Lifecycle::Completed);
+    }
+
+    #[test]
+    fn ledger_latches_violations_instead_of_panicking() {
+        let m = ServerMetrics::new();
+        m.enable_ledger();
+        m.ledger_admit(1);
+        m.ledger_admit(1); // live re-admit
+        m.ledger_complete(1);
+        m.ledger_shed(1); // double terminal
+        m.ledger_complete(9); // terminal without admission
+        let a = m.ledger_audit().unwrap();
+        assert_eq!(a.violations.len(), 3, "{:?}", a.violations);
+        assert!(!a.conserved());
+        assert!(a.violations[0].contains("admitted twice"));
+        assert!(a.violations[1].contains("double terminal"));
+        assert!(a.violations[2].contains("without admission"));
+    }
+
+    #[test]
+    fn ledger_allows_id_reuse_after_terminal() {
+        let m = ServerMetrics::new();
+        m.enable_ledger();
+        m.ledger_admit(7);
+        m.ledger_shed(7);
+        m.ledger_admit(7); // retry of a shed id: a fresh life
+        m.ledger_complete(7);
+        let a = m.ledger_audit().unwrap();
+        assert!(a.conserved(), "{a:?}");
+        assert_eq!((a.admitted, a.completed, a.shed), (2, 1, 1));
+    }
+
+    #[test]
+    fn ledger_terminal_instants_order_token_events() {
+        let m = ServerMetrics::new();
+        m.enable_ledger();
+        m.ledger_admit(1);
+        let before = Instant::now();
+        m.ledger_shed(1);
+        let (state, at) = m.ledger_state(1).unwrap();
+        assert_eq!(state, Lifecycle::Shed);
+        assert!(at >= before, "terminal instant is of the transition");
     }
 
     #[test]

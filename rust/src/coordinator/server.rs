@@ -147,6 +147,13 @@ pub struct PoolConfig {
     /// eviction and swap-in charging are pool-wide. `None`: each engine
     /// keeps a private manager and admission skips the KV bound.
     pub kv: Option<Arc<KvManager>>,
+    /// Per-request lifecycle ledger on the pooled metrics sink: every
+    /// admission is tracked to exactly one terminal (completed or shed),
+    /// auditable via [`ServerMetrics::ledger_audit`]. Off by default — the
+    /// ledger keeps one entry per request ever admitted, which is unbounded
+    /// memory under sustained traffic; the replay driver, the fuzzer, and
+    /// conservation tests turn it on.
+    pub lifecycle_ledger: bool,
     pub batcher: BatcherConfig,
 }
 
@@ -175,6 +182,7 @@ impl Default for PoolConfig {
             decode_priority: false,
             prefill_chunk: 0,
             kv: None,
+            lifecycle_ledger: false,
             batcher: BatcherConfig::default(),
         }
     }
@@ -502,9 +510,15 @@ impl Submitter {
                 }
             }
         }
+        // Ledger-admit BEFORE the send: a worker may complete the request
+        // before this thread runs again, and a terminal-before-admission
+        // would be a false conservation violation. A failed send below
+        // sheds the id right back, so the ledger still balances.
+        self.metrics.ledger_admit(req.id);
         if let Err(send_err) = self.tx.send(Msg::Req(req)) {
             self.inflight.fetch_sub(1, Ordering::AcqRel);
             let Msg::Req(req) = send_err.0 else { unreachable!("we sent a request") };
+            self.metrics.ledger_shed(req.id);
             if req.generate > 0 {
                 if let Some(kv) = &self.kv {
                     // Undo the arena reservation — the stream never ran.
@@ -549,6 +563,20 @@ impl ServerHandle {
     /// A cloneable submit-side handle for concurrent client threads.
     pub fn submitter(&self) -> Submitter {
         self.sub.clone()
+    }
+
+    /// Take ownership of the response/token receivers, leaving dead ones
+    /// behind. [`Self::shutdown`] consumes the handle, so a caller that
+    /// wants to keep draining events *through and after* shutdown (the
+    /// replay driver, the fuzzer's post-drain audit) detaches the streams
+    /// first. Call at most once: a second call returns the dead stubs.
+    pub fn detach_streams(&mut self) -> (Receiver<Response>, Receiver<TokenEvent>) {
+        let (_dead_resp_tx, dead_resp) = channel::<Response>();
+        let (_dead_tok_tx, dead_tok) = channel::<TokenEvent>();
+        (
+            std::mem::replace(&mut self.responses, dead_resp),
+            std::mem::replace(&mut self.tokens, dead_tok),
+        )
     }
 
     /// See [`Submitter::submit`].
@@ -694,6 +722,9 @@ impl Server {
         let (resp_tx, resp_rx) = channel::<Response>();
         let (tok_tx, tok_rx) = channel::<TokenEvent>();
         let pooled = Arc::new(ServerMetrics::new());
+        if cfg.lifecycle_ledger {
+            pooled.enable_ledger();
+        }
         let sim_cache = Arc::new(SimCache::new());
         let queue = Arc::new(WorkQueue::new(
             cfg.affinity,
@@ -815,6 +846,7 @@ fn ingest_loop(
             Ok(None) => {}
             Err(_) => {
                 metrics.record_rejected();
+                metrics.ledger_shed(id);
                 inflight.fetch_sub(1, Ordering::AcqRel);
                 if generate > 0 {
                     if let Some(kv) = &kv {
@@ -885,15 +917,19 @@ fn worker_loop(
     // slot, send. A dropped receiver is a client gone — not a pool error.
     let finish = |mut resp: Response| {
         resp.worker = ctx.worker;
+        pooled.ledger_complete(resp.id);
         pooled.record_response(&resp, resp.prefill_len);
         own.record_response(&resp, resp.prefill_len);
         inflight.fetch_sub(1, Ordering::AcqRel);
         let _ = resp_tx.send(resp);
     };
-    // Every shed (failed batch, group, or chunk) exits through here: count
-    // the error, free the in-flight slots, release the KV registrations /
-    // reservations, latch the first error. `engine` and `first_err` are
-    // arguments because both are mutably borrowed elsewhere in the loop.
+    // Every shed (failed batch, group, or chunk) exits through here with
+    // EVERY id in the failed unit: count the error, mark each id shed in
+    // the lifecycle ledger, free the in-flight slots, release the KV
+    // registrations/reservations (a no-op for ids the manager never saw —
+    // encode-only requests), latch the first error. `engine` and
+    // `first_err` are arguments because both are mutably borrowed
+    // elsewhere in the loop.
     let shed = |engine: &Engine,
                 n: usize,
                 ids: Vec<crate::coordinator::request::RequestId>,
@@ -903,6 +939,7 @@ fn worker_loop(
         own.record_execute_error();
         inflight.fetch_sub(n, Ordering::AcqRel);
         for id in ids {
+            pooled.ledger_shed(id);
             engine.kv_manager().release(id);
         }
         if first_err.is_none() {
@@ -918,18 +955,19 @@ fn worker_loop(
                 last_was_decode = false;
                 warm = Some(batch.class);
                 let n = batch.requests.len();
-                // Generate requests may hold kv-arena admission
-                // reservations; a shed batch must release them or the
-                // admission bound leaks shut (client-triggerable via a
-                // malformed payload).
-                let gen_ids: Vec<_> =
-                    batch.requests.iter().filter(|r| r.generate > 0).map(|r| r.id).collect();
+                // A shed batch must mark every member terminal in the
+                // ledger, and generate members may hold kv-arena admission
+                // reservations that must release or the admission bound
+                // leaks shut (client-triggerable via a malformed payload).
+                // `KvManager::release` skips ids it never saw, so passing
+                // all ids is safe.
+                let ids: Vec<_> = batch.requests.iter().map(|r| r.id).collect();
                 pooled.record_batch(batch.class, n);
                 own.record_batch(batch.class, n);
                 if prefill_chunk > 0 {
                     match engine.begin_prefill(batch, prefill_chunk) {
                         Ok(state) => chunk_to_run = Some(Box::new(state)),
-                        Err(e) => shed(&engine, n, gen_ids, e, &mut first_err),
+                        Err(e) => shed(&engine, n, ids, e, &mut first_err),
                     }
                 } else {
                     match engine.execute(batch) {
@@ -939,7 +977,7 @@ fn worker_loop(
                             // slot until their final response.
                             queue.push_decode(outcome.decoding);
                         }
-                        Err(e) => shed(&engine, n, gen_ids, e, &mut first_err),
+                        Err(e) => shed(&engine, n, ids, e, &mut first_err),
                     }
                 }
             }
@@ -995,7 +1033,7 @@ fn worker_loop(
             // shed path must release the first-chunk KV registrations and
             // the batch's in-flight slots.
             let n = state.n_requests();
-            let gen_ids = state.generate_ids();
+            let ids = state.request_ids();
             queue.chunk_started();
             let progress = engine.prefill_chunk(*state);
             // (The counter drops only after a Parked state is back in the
@@ -1014,7 +1052,7 @@ fn worker_loop(
                     queue.push_decode(outcome.decoding);
                 }
                 // Shed mid-prefill: the whole batch never answers.
-                Err(e) => shed(&engine, n, gen_ids, e, &mut first_err),
+                Err(e) => shed(&engine, n, ids, e, &mut first_err),
             }
             queue.chunk_finished();
         }

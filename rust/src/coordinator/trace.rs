@@ -1,6 +1,13 @@
 //! Workload trace generation: request streams with the length distributions
 //! that motivate dynamic batching (BERT-style NLU inputs are short; ViT is
 //! always full-length).
+//!
+//! This generator is **closed-loop** — callers submit, drain, and retry, so
+//! offered load self-throttles to pool capacity. For open-loop traffic
+//! (submission on a trace clock, rejections shed at the door, overload that
+//! actually overloads), see [`crate::workload`]: trace files, seeded
+//! arrival-shape generators, and the replay driver behind `serve --trace`
+//! and the `fig11_replay` bench.
 
 use crate::config::ModelConfig;
 use crate::coordinator::request::Request;

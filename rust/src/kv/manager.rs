@@ -111,6 +111,32 @@ pub struct KvStats {
     pub peak_used_pages: usize,
 }
 
+/// Point-in-time occupancy snapshot: what the manager still holds. After a
+/// pool drains (every admitted stream completed or shed), all four fields
+/// must be zero — any nonzero field is a leaked reservation, pinned group,
+/// or orphaned page. Checked by the scenario fuzzer after every drain.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct KvResidual {
+    /// Admitted, unreleased streams.
+    pub live_streams: usize,
+    /// Arena pages still backing resident streams.
+    pub resident_pages: usize,
+    /// Admission-projection bytes still reserved.
+    pub admitted_bytes: u64,
+    /// Streams pinned by an in-flight decode group.
+    pub pinned_streams: usize,
+}
+
+impl KvResidual {
+    /// Nothing held: the drained-pool leak-freedom invariant.
+    pub fn is_clean(&self) -> bool {
+        self.live_streams == 0
+            && self.resident_pages == 0
+            && self.admitted_bytes == 0
+            && self.pinned_streams == 0
+    }
+}
+
 /// What one decode step owes the EMA ledger before it runs.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct StepCharge {
@@ -431,6 +457,20 @@ impl KvManager {
         self.inner.lock().unwrap().streams.len()
     }
 
+    /// What the manager is still holding right now — the leak-freedom
+    /// invariant the fuzzer asserts after a full drain: a pool that
+    /// completed or shed every stream must leave the arena exactly as it
+    /// found it ([`KvResidual::is_clean`]).
+    pub fn residual(&self) -> KvResidual {
+        let g = self.inner.lock().unwrap();
+        KvResidual {
+            live_streams: g.streams.len(),
+            resident_pages: g.arena.used_pages(),
+            admitted_bytes: g.admitted_bytes,
+            pinned_streams: g.streams.values().filter(|e| e.pinned).count(),
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let g = self.inner.lock().unwrap();
         Json::obj(vec![
@@ -573,6 +613,27 @@ mod tests {
         assert!(mgr.used_pages() > 1);
         mgr.release(1);
         assert_eq!(mgr.used_pages(), 0);
+    }
+
+    #[test]
+    fn residual_tracks_holdings_and_is_clean_after_drain() {
+        let (mgr, _) = tiny_mgr(4, KvQuant::Fp16, 8.0);
+        assert!(mgr.residual().is_clean(), "fresh manager holds nothing");
+        assert!(mgr.try_admit(1, 4, 4, 1));
+        let r = mgr.residual();
+        assert_eq!(r.live_streams, 1);
+        assert!(r.admitted_bytes > 0, "admission reserves projection bytes");
+        assert!(!r.is_clean());
+        mgr.register(1, 8);
+        let _ = mgr.prepare_group(&[(1, 8)]);
+        let pinned = mgr.residual();
+        assert_eq!(pinned.pinned_streams, 1, "in-flight group pins its member");
+        assert!(pinned.resident_pages > 0);
+        mgr.finish_group(&[(1, 8)]);
+        assert_eq!(mgr.residual().pinned_streams, 0, "parked after the step");
+        assert!(mgr.residual().resident_pages > 0, "parked keeps pages");
+        mgr.release(1);
+        assert!(mgr.residual().is_clean(), "{:?}", mgr.residual());
     }
 
     #[test]

@@ -35,5 +35,5 @@ pub mod quant;
 pub const MAX_GROUP_STREAMS: usize = 4;
 
 pub use arena::KvArena;
-pub use manager::{KvArenaConfig, KvManager, KvStats, StepCharge};
+pub use manager::{KvArenaConfig, KvManager, KvResidual, KvStats, StepCharge};
 pub use quant::KvQuant;

@@ -19,9 +19,11 @@
 //!   global buffer, LPDDR3 DMA) with energy and utilization accounting, the
 //!   dense baseline accelerator used for the paper's comparisons, and the
 //!   paged KV-cache manager that governs decode residency in the GB.
-//! * **System** — [`coordinator`], [`runtime`]: a production-shaped serving
-//!   stack: dynamic batcher, engine, multi-threaded server, and a PJRT
-//!   runtime that executes the AOT-compiled JAX/Pallas numerics.
+//! * **System** — [`coordinator`], [`runtime`], [`workload`]: a
+//!   production-shaped serving stack: dynamic batcher, engine,
+//!   multi-threaded server, a PJRT runtime that executes the AOT-compiled
+//!   JAX/Pallas numerics, and trace-driven workload tooling (request-trace
+//!   files, open-loop replay, a seeded scenario fuzzer).
 //!
 //! See `DESIGN.md` for the paper→module map and `EXPERIMENTS.md` for the
 //! reproduced tables/figures.
@@ -38,5 +40,6 @@ pub mod model;
 pub mod runtime;
 pub mod sim;
 pub mod util;
+pub mod workload;
 
 pub use error::{Error, Result};

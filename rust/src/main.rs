@@ -9,6 +9,9 @@
 //!              [--prefill-chunk N]       # phases per prefill chunk (0 = whole pass)
 //!              [--decode-max-wait-us N]  # decode coalescing window
 //!              [--decode-priority]       # near-done streams drain first
+//!              [--trace FILE] [--speed F]  # open-loop replay of a request trace
+//!   trex fuzz  [--iters N] [--seed S] [--progress-every N]
+//!                                        # seeded scenario fuzzer (scheduler invariants)
 //!   trex report --model <preset>         # compression report (Fig 23.1.3)
 //!   trex selftest [--artifacts DIR]      # PJRT vs jax check vectors
 //!   trex workloads                       # list presets
@@ -25,6 +28,7 @@ use trex::kv::{KvArenaConfig, KvManager, KvQuant};
 use trex::model::build_program;
 use trex::runtime::{artifacts, ArtifactSet, PjrtRuntime};
 use trex::sim::{batch_class, simulate, SimOptions};
+use trex::workload::{replay, run_fuzz, FuzzConfig, ReplayConfig, Trace};
 
 type CliResult = Result<(), Box<dyn std::error::Error>>;
 
@@ -38,6 +42,7 @@ fn main() -> CliResult {
     match cmd {
         "sim" => cmd_sim(&args[1..]),
         "serve" => cmd_serve(&args[1..]),
+        "fuzz" => cmd_fuzz(&args[1..]),
         "report" => cmd_report(&args[1..]),
         "selftest" => cmd_selftest(&args[1..]),
         "workloads" => {
@@ -58,7 +63,7 @@ fn main() -> CliResult {
         }
         _ => {
             eprintln!(
-                "usage: trex <sim|serve|report|selftest|workloads> [options]\n\
+                "usage: trex <sim|serve|fuzz|report|selftest|workloads> [options]\n\
                  \n  sim      --model <preset> [--seq N] [--batch 1|2|4] [--vdd V] [--no-trf] [--no-prefetch]\
                  \n  serve    --requests N [--workers N] [--queue-depth N] [--max-inflight N]\
                  \n           [--no-affinity] [--artifacts DIR] [--perf-model <preset>]\
@@ -67,6 +72,12 @@ fn main() -> CliResult {
                  \n           [--kv-bucket N]  (depth-bucketed decode grouping, 0 = greedy)\
                  \n           [--prefill-chunk N]  (phases per prefill chunk, 0 = monolithic)\
                  \n           [--decode-max-wait-us N] [--decode-priority]  (coalescing / near-done-first)\
+                 \n           [--trace FILE] [--speed F]  (open-loop replay of a request-trace file;\
+                 \n            submits on the trace clock — rejections shed, no retry; --speed 2 = 2x faster)\
+                 \n  fuzz     [--iters N] [--seed S] [--progress-every N]\
+                 \n           (seeded scenario fuzzer: random pool configs x request schedules,\
+                 \n            checks conservation / kv-leak / token-ordering invariants;\
+                 \n            a failure prints the seed — replay: fuzz --seed S --iters 1)\
                  \n  report   --model <preset>\
                  \n  selftest [--artifacts DIR]"
             );
@@ -134,13 +145,27 @@ fn cmd_serve(args: &[String]) -> CliResult {
     let decode_max_wait_us: u64 =
         arg_value(args, "--decode-max-wait-us").map(|s| s.parse()).transpose()?.unwrap_or(0);
     let decode_priority = args.iter().any(|a| a == "--decode-priority");
+    // Open-loop trace replay: parse up front so a malformed file fails
+    // with its line-numbered error before any pool spins up.
+    let trace = match arg_value(args, "--trace") {
+        Some(path) => {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| format!("reading trace {path}: {e}"))?;
+            Some(Trace::parse(&text)?)
+        }
+        None => None,
+    };
+    let speed: f64 = arg_value(args, "--speed").map(|s| s.parse()).transpose()?.unwrap_or(1.0);
     let dir = arg_value(args, "--artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(artifacts::default_dir);
     // Decode mode defaults to the paper's autoregressive workload (fairseq-
     // S2T): the fat encoder-only presets can't keep a useful KV prefix
     // resident in the 4 MiB GB, so their decode caps clamp generation hard.
-    let default_perf = if generate > 0 { "s2t-small" } else { "bert-large" };
+    let trace_generates =
+        trace.as_ref().is_some_and(|t| t.records.iter().any(|r| r.gen_len > 0));
+    let default_perf =
+        if generate > 0 || trace_generates { "s2t-small" } else { "bert-large" };
     let perf_name = arg_value(args, "--perf-model").unwrap_or_else(|| default_perf.to_string());
     let perf_model = ModelConfig::preset(&perf_name)?;
 
@@ -148,7 +173,7 @@ fn cmd_serve(args: &[String]) -> CliResult {
     // the dependency-free deterministic reference backend on the tiny plane.
     let manifest = trex::util::json::Json::from_file(dir.join("manifest.json")).ok();
     let use_pjrt = manifest.is_some() && cfg!(feature = "pjrt");
-    if generate > 0 && use_pjrt {
+    if (generate > 0 || trace_generates) && use_pjrt {
         // Decode steps run 1–4-row planes; the AOT executables are
         // fixed-shape, so every step would fail and shed its group. Refuse
         // up front instead of timing out mid-run (AOT decode artifacts are
@@ -190,6 +215,9 @@ fn cmd_serve(args: &[String]) -> CliResult {
         decode_priority,
         prefill_chunk,
         kv: Some(Arc::clone(&kv_mgr)),
+        // Replays audit conservation after the drain; the steady closed-loop
+        // path keeps the ledger (unbounded per-request memory) off.
+        lifecycle_ledger: trace.is_some(),
         batcher: BatcherConfig { max_seq, max_wait: Duration::from_millis(2) },
     };
     let handle = Server::start_pool(
@@ -214,6 +242,35 @@ fn cmd_serve(args: &[String]) -> CliResult {
         },
         pool,
     );
+
+    if let Some(trace) = trace {
+        // Open-loop replay: submit on the trace clock, no retries — the
+        // pool's overload machinery (door shedding, bounded queues) is the
+        // thing under measurement.
+        println!(
+            "replaying {} requests over {:.1} ms of trace clock at {speed}x",
+            trace.len(),
+            trace.span_us() as f64 / 1e3
+        );
+        let stats = replay(&handle, &trace, &ReplayConfig::new(d_model).at_speed(speed));
+        println!("{}", stats.to_json().to_string_pretty());
+        // Audit AFTER shutdown: its drain finishes whatever the replay's
+        // settle window left in flight, so "open" means lost, not late.
+        let metrics = Arc::clone(&handle.metrics);
+        let report = handle.shutdown()?;
+        if let Some(audit) = metrics.ledger_audit() {
+            println!(
+                "conservation: admitted={} completed={} shed={} open={} conserved={}",
+                audit.admitted,
+                audit.completed,
+                audit.shed,
+                audit.open.len(),
+                audit.conserved()
+            );
+        }
+        println!("{}", report.json().to_string_pretty());
+        return Ok(());
+    }
 
     let mut gen =
         TraceGenerator::for_model(&perf_model, max_seq, d_model, 1).with_generate(generate);
@@ -250,6 +307,42 @@ fn cmd_serve(args: &[String]) -> CliResult {
     let report = handle.shutdown()?;
     println!("{}", report.json().to_string_pretty());
     Ok(())
+}
+
+/// Seeded scenario fuzzer (see `trex::workload::fuzz`). Exit code is the
+/// CI contract: 0 with every invariant held, nonzero with the failing
+/// scenario seed printed — locally reproducible with
+/// `cargo run --release -- fuzz --seed <seed> --iters 1`.
+fn cmd_fuzz(args: &[String]) -> CliResult {
+    let iters: u64 = arg_value(args, "--iters").map(|s| s.parse()).transpose()?.unwrap_or(200);
+    let seed: u64 =
+        arg_value(args, "--seed").map(|s| s.parse()).transpose()?.unwrap_or(0xC0FFEE);
+    let progress_every: u64 =
+        arg_value(args, "--progress-every").map(|s| s.parse()).transpose()?.unwrap_or(50);
+    let summary = run_fuzz(&FuzzConfig { seed, iters, progress_every });
+    match summary.failure {
+        None => {
+            println!(
+                "fuzz ok: {} scenarios from base seed {seed}, scheduler invariants held \
+                 (conservation, kv residual, token ordering)",
+                summary.iters_run
+            );
+            Ok(())
+        }
+        Some(f) => {
+            // GitHub Actions annotation: the failing seed lands on the run
+            // summary so any CI failure replays locally with one command.
+            if std::env::var_os("GITHUB_ACTIONS").is_some() {
+                println!(
+                    "::error::fuzz seed {} violated scheduler invariants — reproduce: \
+                     cargo run --release -- fuzz --seed {} --iters 1",
+                    f.seed, f.seed
+                );
+            }
+            eprint!("{}", f.render());
+            Err(format!("fuzz failed: scenario seed {}", f.seed).into())
+        }
+    }
 }
 
 fn cmd_report(args: &[String]) -> CliResult {

@@ -1,0 +1,486 @@
+//! Seeded scenario fuzzer: random pool configurations × random request
+//! schedules, property-checked against the scheduler invariants that every
+//! other test asserts only for its one hand-picked interleaving.
+//!
+//! Each iteration derives one [`Scenario`] from one seed — pool knobs
+//! (workers, backpressure bounds, chunking, coalescing, decode policy,
+//! KV quantization and arena size) plus a request schedule (arrival gaps,
+//! lengths, decode budgets, deliberately malformed payloads, oversized
+//! lengths, an optional mid-schedule shutdown) — runs it against a real
+//! pool over the deterministic reference backend, and checks:
+//!
+//! 1. **Conservation** — every admitted request reaches exactly one
+//!    terminal state (completed or shed), via the lifecycle ledger
+//!    ([`crate::coordinator::ServerMetrics::ledger_audit`]).
+//! 2. **Zero KV residual** — after the drain, the arena holds no live
+//!    streams, resident pages, reservations, or pins
+//!    ([`crate::kv::KvManager::residual`]).
+//! 3. **Token ordering** — no token event is emitted after its stream
+//!    sheds, and none belongs to a request that was never admitted.
+//! 4. **Fault attribution** — the pool only reports worker errors when the
+//!    schedule injected faults, and never reports a thread panic.
+//!
+//! Everything is deterministic in the seed *except thread interleaving* —
+//! which is the point: the same seed replays the same schedule against the
+//! same config, and the invariants must hold under every interleaving.
+//! A failure minimizes its schedule greedily (bounded re-runs) and renders
+//! the seed + a trace-format snippet, so one CI line reproduces locally:
+//! `cargo run --release -- fuzz --seed <seed> --iters 1`.
+
+use crate::config::{HwConfig, ModelConfig};
+use crate::coordinator::{
+    BatcherConfig, DecodePolicy, Engine, EngineConfig, Lifecycle, PoolConfig, Request, Server,
+};
+use crate::kv::{KvArenaConfig, KvManager, KvQuant};
+use crate::runtime::{artifacts, ArtifactSet};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One request in a scenario's schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReqSpec {
+    pub id: u64,
+    /// Gap slept before submitting this request, µs.
+    pub gap_us: u64,
+    pub len: usize,
+    pub generate: usize,
+    /// Payload one row short — the engine fails the batch at plane
+    /// assembly, exercising the shed path (and shedding batch mates).
+    pub malformed: bool,
+}
+
+/// One fuzz iteration: pool knobs + request schedule, derived from a seed.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub seed: u64,
+    workers: usize,
+    queue_depth: usize,
+    max_inflight: usize,
+    prefill_chunk: usize,
+    decode_max_wait_us: u64,
+    decode_priority: bool,
+    decode: DecodePolicy,
+    batcher_wait_us: u64,
+    kv_quant: KvQuant,
+    kv_pages: usize,
+    admit_oversub: f64,
+    /// Shut the pool down after half the schedule, then verify the closed
+    /// gate rejects the rest (drain-on-shutdown must still conserve).
+    early_shutdown: bool,
+    /// Drop the token receiver instead of auditing it (dropping must be
+    /// harmless; skips the token-ordering check).
+    drop_tokens: bool,
+    pub reqs: Vec<ReqSpec>,
+}
+
+impl Scenario {
+    /// Deterministic scenario from a seed.
+    pub fn from_seed(seed: u64) -> Scenario {
+        let max_seq = artifacts::TINY_MAX_SEQ;
+        let mut rng = Rng::new(seed);
+        let workers = 1 + rng.below(2);
+        let queue_depth = if rng.f64() < 0.3 { 0 } else { 2 + rng.below(5) };
+        let max_inflight = if rng.f64() < 0.3 { 0 } else { 3 + rng.below(14) };
+        let prefill_chunk = rng.below(4);
+        let decode_max_wait_us = [0, 0, 100, 500][rng.below(4)];
+        let decode_priority = rng.f64() < 0.5;
+        let decode = if rng.f64() < 0.5 {
+            DecodePolicy::Greedy
+        } else {
+            DecodePolicy::DepthBucketed { bucket: 4 << rng.below(2) }
+        };
+        let batcher_wait_us = [0, 200, 1000][rng.below(3)];
+        let kv_quant = [KvQuant::Fp16, KvQuant::Int8, KvQuant::Int4][rng.below(3)];
+        // Small arenas on purpose: eviction, swap-in, and overcommit fire.
+        let kv_pages = 2 + rng.below(15);
+        let admit_oversub = [1.0, 4.0, 8.0][rng.below(3)];
+        let early_shutdown = rng.f64() < 0.2;
+        let drop_tokens = rng.f64() < 0.3;
+        let n = 4 + rng.below(21);
+        let reqs = (0..n as u64)
+            .map(|id| {
+                let len = if rng.f64() < 0.05 {
+                    // Oversized: must reject synchronously at the door.
+                    max_seq + 1 + rng.below(max_seq)
+                } else {
+                    1 + rng.below(max_seq)
+                };
+                ReqSpec {
+                    id,
+                    gap_us: rng.below(400) as u64,
+                    len,
+                    generate: if rng.f64() < 0.5 { 0 } else { 1 + rng.below(6) },
+                    malformed: rng.f64() < 0.10,
+                }
+            })
+            .collect();
+        Scenario {
+            seed,
+            workers,
+            queue_depth,
+            max_inflight,
+            prefill_chunk,
+            decode_max_wait_us,
+            decode_priority,
+            decode,
+            batcher_wait_us,
+            kv_quant,
+            kv_pages,
+            admit_oversub,
+            early_shutdown,
+            drop_tokens,
+            reqs,
+        }
+    }
+
+    /// One-line pool-knob description for failure reports.
+    pub fn describe(&self) -> String {
+        format!(
+            "workers={} queue_depth={} max_inflight={} prefill_chunk={} \
+             decode={:?} wait_us={} priority={} batcher_wait_us={} \
+             kv={}x{}pages oversub={} early_shutdown={} drop_tokens={}",
+            self.workers,
+            self.queue_depth,
+            self.max_inflight,
+            self.prefill_chunk,
+            self.decode,
+            self.decode_max_wait_us,
+            self.decode_priority,
+            self.batcher_wait_us,
+            self.kv_quant.name(),
+            self.kv_pages,
+            self.admit_oversub,
+            self.early_shutdown,
+            self.drop_tokens,
+        )
+    }
+
+    /// Render a schedule as trace-format lines (malformed/oversized
+    /// entries annotated as comments — the format itself has no fault
+    /// fields).
+    pub fn snippet(reqs: &[ReqSpec]) -> String {
+        let mut out = String::from("# id arrival_us class prompt_len gen_len\n");
+        let mut t = 0u64;
+        for r in reqs {
+            t += r.gap_us;
+            if r.malformed {
+                out.push_str("# next request submits a malformed payload (one row short)\n");
+            }
+            let class = if r.generate > 0 { "chat" } else { "embed" };
+            out.push_str(&format!("{} {} {} {} {}\n", r.id, t, class, r.len, r.generate));
+        }
+        out
+    }
+}
+
+/// Fuzzer knobs.
+#[derive(Debug, Clone)]
+pub struct FuzzConfig {
+    /// Base seed: iteration 0 runs the base seed itself as its scenario
+    /// seed (so `--seed <failing> --iters 1` replays a failure exactly);
+    /// later iterations draw scenario seeds from a stream seeded by it.
+    pub seed: u64,
+    pub iters: u64,
+    /// Heartbeat to stderr every N iterations (0 = silent).
+    pub progress_every: u64,
+}
+
+/// One invariant failure, minimized and rendered for reproduction.
+#[derive(Debug, Clone)]
+pub struct FuzzFailure {
+    /// The *scenario* seed — replays with `fuzz --seed <seed> --iters 1`.
+    pub seed: u64,
+    pub iteration: u64,
+    pub violations: Vec<String>,
+    pub scenario: String,
+    /// Minimized schedule in trace format.
+    pub snippet: String,
+}
+
+impl FuzzFailure {
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "fuzz failure at iteration {} (scenario seed {}):\n",
+            self.iteration, self.seed
+        );
+        for v in &self.violations {
+            s.push_str(&format!("  violation: {v}\n"));
+        }
+        s.push_str(&format!("  scenario: {}\n", self.scenario));
+        s.push_str("  minimized schedule:\n");
+        for line in self.snippet.lines() {
+            s.push_str(&format!("    {line}\n"));
+        }
+        s.push_str(&format!(
+            "  reproduce: cargo run --release -- fuzz --seed {} --iters 1\n",
+            self.seed
+        ));
+        s
+    }
+}
+
+/// Outcome of a fuzz run: how far it got, and the first failure (if any).
+#[derive(Debug, Clone)]
+pub struct FuzzSummary {
+    pub iters_run: u64,
+    pub failure: Option<FuzzFailure>,
+}
+
+impl FuzzSummary {
+    pub fn ok(&self) -> bool {
+        self.failure.is_none()
+    }
+}
+
+/// Run `cfg.iters` seeded scenarios, stopping (after minimizing) at the
+/// first invariant violation.
+pub fn run_fuzz(cfg: &FuzzConfig) -> FuzzSummary {
+    let mut seed_stream = Rng::new(cfg.seed);
+    for i in 0..cfg.iters {
+        let scenario_seed = if i == 0 { cfg.seed } else { seed_stream.next_u64() };
+        let sc = Scenario::from_seed(scenario_seed);
+        let violations = exec(&sc, &sc.reqs);
+        if !violations.is_empty() {
+            let minimized = minimize(&sc);
+            return FuzzSummary {
+                iters_run: i + 1,
+                failure: Some(FuzzFailure {
+                    seed: scenario_seed,
+                    iteration: i,
+                    violations,
+                    scenario: sc.describe(),
+                    snippet: Scenario::snippet(&minimized),
+                }),
+            };
+        }
+        if cfg.progress_every > 0 && (i + 1) % cfg.progress_every == 0 {
+            eprintln!("fuzz: {}/{} scenarios ok", i + 1, cfg.iters);
+        }
+    }
+    FuzzSummary { iters_run: cfg.iters, failure: None }
+}
+
+/// Greedy schedule minimization: try dropping chunks (halves, then smaller)
+/// while the violation persists. Bounded re-runs — minimization is a
+/// convenience, not a search.
+fn minimize(sc: &Scenario) -> Vec<ReqSpec> {
+    let mut reqs = sc.reqs.clone();
+    let mut budget = 8u32;
+    let mut chunk = reqs.len().div_ceil(2);
+    while chunk >= 1 && budget > 0 && reqs.len() > 1 {
+        let mut i = 0;
+        let mut shrunk = false;
+        while i < reqs.len() && budget > 0 {
+            let mut candidate = reqs.clone();
+            candidate.drain(i..(i + chunk).min(candidate.len()));
+            if candidate.is_empty() {
+                break;
+            }
+            budget -= 1;
+            if exec(sc, &candidate).is_empty() {
+                i += chunk;
+            } else {
+                reqs = candidate;
+                shrunk = true;
+            }
+        }
+        if chunk == 1 && !shrunk {
+            break;
+        }
+        chunk = (chunk / 2).max(1);
+    }
+    reqs
+}
+
+/// Run one schedule against the scenario's pool and return every invariant
+/// violation observed (empty = the scenario passed).
+fn exec(sc: &Scenario, reqs: &[ReqSpec]) -> Vec<String> {
+    let d = artifacts::TINY_D_MODEL;
+    let max_seq = artifacts::TINY_MAX_SEQ;
+    let hw = HwConfig::default();
+    let pm = ModelConfig::tiny();
+    let mut arena = KvArenaConfig::for_pool(&hw, &pm, sc.kv_quant, Some(sc.kv_pages));
+    arena.admit_oversub = sc.admit_oversub;
+    let kv = Arc::new(KvManager::new(&hw, &pm, arena));
+    let pool = PoolConfig {
+        workers: sc.workers,
+        queue_depth: sc.queue_depth,
+        max_inflight: sc.max_inflight,
+        affinity: true,
+        decode: sc.decode,
+        decode_max_wait: Duration::from_micros(sc.decode_max_wait_us),
+        decode_priority: sc.decode_priority,
+        prefill_chunk: sc.prefill_chunk,
+        kv: Some(Arc::clone(&kv)),
+        lifecycle_ledger: true,
+        batcher: BatcherConfig {
+            max_seq,
+            max_wait: Duration::from_micros(sc.batcher_wait_us),
+        },
+    };
+    let (quant, pages) = (sc.kv_quant, sc.kv_pages);
+    let (hw2, pm2) = (hw.clone(), pm.clone());
+    let mut handle = Server::start_pool(
+        move |ctx| {
+            let set = ArtifactSet::reference(artifacts::TINY_MODEL, d, max_seq)?;
+            Engine::for_worker(
+                set,
+                EngineConfig {
+                    hw: hw2.clone(),
+                    perf_model: pm2.clone(),
+                    self_test: false,
+                    kv_quant: quant,
+                    kv_pages: Some(pages),
+                },
+                ctx,
+            )
+        },
+        pool,
+    );
+    let metrics = Arc::clone(&handle.metrics);
+    let (resp_rx, tok_rx) = handle.detach_streams();
+    let tok_rx = if sc.drop_tokens {
+        drop(tok_rx);
+        None
+    } else {
+        Some(tok_rx)
+    };
+    let submitter = handle.submitter();
+
+    let mut violations: Vec<String> = Vec::new();
+    let mut injected_faults = false;
+    let cutoff = if sc.early_shutdown { reqs.len() / 2 } else { reqs.len() };
+    let submit_one = |spec: &ReqSpec| {
+        if spec.gap_us > 0 {
+            std::thread::sleep(Duration::from_micros(spec.gap_us));
+        }
+        let rows = if spec.malformed { spec.len.saturating_sub(1) } else { spec.len };
+        let mut req = Request::new(spec.id, spec.len, vec![0.1; rows * d]);
+        if spec.generate > 0 {
+            req = req.with_generate(spec.generate);
+        }
+        submitter.try_submit(req).is_ok()
+    };
+    for spec in &reqs[..cutoff] {
+        if submit_one(spec) && spec.malformed {
+            injected_faults = true;
+        }
+    }
+
+    // Shutdown drains everything admitted, then joins every thread.
+    match handle.shutdown() {
+        Ok(_report) => {}
+        Err(e) => {
+            let msg = e.to_string();
+            if msg.contains("panicked") {
+                violations.push(format!("pool thread panicked: {msg}"));
+            } else if !injected_faults {
+                violations.push(format!(
+                    "pool latched a worker error with no injected faults: {msg}"
+                ));
+            }
+        }
+    }
+
+    // Closed-gate property: late submits must reject, never admit.
+    for spec in &reqs[cutoff..] {
+        if submit_one(spec) {
+            violations.push(format!(
+                "request {} admitted after shutdown (gate must be closed)",
+                spec.id
+            ));
+        }
+    }
+
+    // Invariant 1 — conservation via the ledger.
+    match metrics.ledger_audit() {
+        Some(audit) => {
+            if !audit.conserved() {
+                violations.push(format!(
+                    "conservation violated: admitted={} completed={} shed={} open={:?} \
+                     ledger_violations={:?}",
+                    audit.admitted, audit.completed, audit.shed, audit.open, audit.violations
+                ));
+            }
+            // The responses actually delivered must match the ledger.
+            let delivered = resp_rx.try_iter().count() as u64;
+            if delivered != audit.completed {
+                violations.push(format!(
+                    "response channel delivered {delivered} responses but the ledger \
+                     completed {}",
+                    audit.completed
+                ));
+            }
+        }
+        None => violations.push("lifecycle ledger unexpectedly disabled".to_string()),
+    }
+
+    // Invariant 2 — zero KV residual after drain.
+    let residual = kv.residual();
+    if !residual.is_clean() {
+        violations.push(format!("kv arena residual after drain: {residual:?}"));
+    }
+
+    // Invariant 3 — no token event after its stream shed (and none for a
+    // request the ledger never saw).
+    if let Some(tok_rx) = tok_rx {
+        for ev in tok_rx.try_iter() {
+            match metrics.ledger_state(ev.id) {
+                None => violations.push(format!(
+                    "token event for request {} the ledger never admitted",
+                    ev.id
+                )),
+                Some((Lifecycle::Shed, shed_at)) => {
+                    if ev.emitted > shed_at {
+                        violations.push(format!(
+                            "token event for request {} emitted {:?} after its shed",
+                            ev.id,
+                            ev.emitted.duration_since(shed_at)
+                        ));
+                    }
+                }
+                Some(_) => {}
+            }
+        }
+    }
+
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenarios_are_deterministic_in_the_seed() {
+        let a = Scenario::from_seed(42);
+        let b = Scenario::from_seed(42);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        assert_eq!(a.describe(), b.describe());
+        assert!(!a.reqs.is_empty());
+    }
+
+    #[test]
+    fn snippet_renders_trace_format_lines() {
+        let reqs = vec![
+            ReqSpec { id: 0, gap_us: 10, len: 4, generate: 2, malformed: false },
+            ReqSpec { id: 1, gap_us: 5, len: 8, generate: 0, malformed: true },
+        ];
+        let s = Scenario::snippet(&reqs);
+        assert!(s.contains("0 10 chat 4 2"), "{s}");
+        assert!(s.contains("1 15 embed 8 0"), "{s}");
+        assert!(s.contains("# next request submits a malformed payload"), "{s}");
+    }
+
+    #[test]
+    fn fuzz_smoke_holds_invariants_for_a_few_seeds() {
+        // A bounded in-tree smoke: the CI job runs hundreds of iterations;
+        // this keeps `cargo test` honest without the wall-clock bill.
+        let summary = run_fuzz(&FuzzConfig { seed: 0xF077, iters: 3, progress_every: 0 });
+        if let Some(f) = &summary.failure {
+            panic!("{}", f.render());
+        }
+        assert_eq!(summary.iters_run, 3);
+    }
+}

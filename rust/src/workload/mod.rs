@@ -1,0 +1,36 @@
+//! Trace-driven workloads: request-trace files, seeded synthetic arrival
+//! generators, an open-loop replay driver, and a scenario fuzzer.
+//!
+//! The serving benches drive the pool **closed-loop** (via
+//! [`crate::coordinator::TraceGenerator`]): a rejected submit retries after
+//! draining a response, so offered load self-throttles to pool capacity and
+//! overload behavior — admission, shedding, eviction — never actually
+//! fires. This module is the other half of the story, the half T-REX's
+//! utilization claims live or die on:
+//!
+//! * [`trace_file`] — a line-oriented request-trace format (`id arrival_us
+//!   class prompt_len gen_len [prefix_group]`) with a hand-rolled parser
+//!   that reports line-numbered errors. Traces are text so failures embed
+//!   them, CI artifacts diff them, and `trex serve --trace FILE` replays
+//!   them.
+//! * [`synth`] — seeded generators for steady / bursty / diurnal Poisson
+//!   arrivals over the benches' class mix; deterministic in the seed.
+//! * [`replay`] — the **open-loop** replay driver: submits on the trace
+//!   clock regardless of completions, so a 2× overload trace really
+//!   overloads the pool and goodput / shed rate / tail latency under
+//!   pressure become measurable (surfaced by the `fig11_replay` bench).
+//! * [`fuzz`] — the seeded scenario fuzzer: random pool configs × random
+//!   request schedules, property-checked against scheduler invariants
+//!   (request conservation via the lifecycle ledger, zero KV residual
+//!   after drain, no token events after a stream sheds). Failures print
+//!   the scenario seed + a minimized trace snippet.
+
+pub mod fuzz;
+pub mod replay;
+pub mod synth;
+pub mod trace_file;
+
+pub use fuzz::{run_fuzz, FuzzConfig, FuzzFailure, FuzzSummary};
+pub use replay::{replay, ReplayConfig, ReplayStats};
+pub use synth::{synth_trace, ArrivalShape, SynthSpec};
+pub use trace_file::{Trace, TraceError, TraceErrorKind, TraceRecord};

@@ -1,0 +1,234 @@
+//! Open-loop trace replay: submit on the trace clock, measure what the
+//! pool does under the load it was *offered*, not the load it accepted.
+//!
+//! The closed-loop client in `main.rs`/the benches retries a rejected
+//! submit after draining a response — offered load converges to pool
+//! capacity and overload never happens. The open-loop driver is the
+//! opposite contract: each trace record is submitted at its arrival time
+//! (scaled by [`ReplayConfig::speed`]) exactly once, whether or not
+//! anything has completed. A saturated pool must then actually exercise
+//! its overload machinery — shed at the door, bound its queues — and the
+//! driver measures the outcome: goodput, shed split (door vs
+//! post-admission), and client-observed tail latency for the work that was
+//! admitted. Graceful degradation means the door does the shedding while
+//! admitted work keeps a bounded tail; a pool that admits everything and
+//! lets queues grow shows up here as an unbounded p95.
+
+use crate::coordinator::{RequestId, ServerHandle};
+use crate::coordinator::request::Request;
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+use crate::workload::trace_file::Trace;
+use std::collections::HashMap;
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::{Duration, Instant};
+
+/// Replay knobs.
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// Trace-clock speedup: 2.0 replays a trace in half its span (the
+    /// standard way to turn a calibrated at-capacity trace into a 2×
+    /// overload without regenerating it).
+    pub speed: f64,
+    /// Model width of the payload rows submitted with each request.
+    pub d_model: usize,
+    /// How long to keep draining after the last submission before
+    /// declaring leftover in-flight work stalled.
+    pub drain_timeout: Duration,
+}
+
+impl ReplayConfig {
+    pub fn new(d_model: usize) -> Self {
+        ReplayConfig { speed: 1.0, d_model, drain_timeout: Duration::from_secs(30) }
+    }
+
+    pub fn at_speed(mut self, speed: f64) -> Self {
+        self.speed = speed.max(1e-6);
+        self
+    }
+}
+
+/// What one open-loop replay observed.
+#[derive(Debug, Clone, Default)]
+pub struct ReplayStats {
+    /// Records in the trace (every one was offered exactly once).
+    pub offered: usize,
+    /// Submits the pool accepted.
+    pub admitted: usize,
+    /// Submits rejected at the door (backpressure / kv bound / bad length).
+    pub shed_at_door: usize,
+    /// Admitted requests that answered.
+    pub completed: usize,
+    /// Admitted requests that never answered within the drain window
+    /// (shed post-admission, or stalled — [`ReplayStats::drained`] tells
+    /// which).
+    pub shed_after_admit: usize,
+    /// Token events streamed during the replay.
+    pub tokens_streamed: usize,
+    /// False when the drain window expired with work still in flight.
+    pub drained: bool,
+    /// Wall time from first submission to end of drain, seconds.
+    pub wall_seconds: f64,
+    /// Completed requests per wall second.
+    pub goodput_rps: f64,
+    /// Client-observed submit→response latency of completed work, µs.
+    pub latency_us_p50: f64,
+    pub latency_us_p95: f64,
+    pub latency_us_p99: f64,
+}
+
+impl ReplayStats {
+    /// Shed fraction of offered load (door + post-admission).
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            return 0.0;
+        }
+        (self.shed_at_door + self.shed_after_admit) as f64 / self.offered as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("offered", Json::num(self.offered as f64)),
+            ("admitted", Json::num(self.admitted as f64)),
+            ("shed_at_door", Json::num(self.shed_at_door as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("shed_after_admit", Json::num(self.shed_after_admit as f64)),
+            ("shed_rate", Json::num(self.shed_rate())),
+            ("tokens_streamed", Json::num(self.tokens_streamed as f64)),
+            ("drained", Json::num(if self.drained { 1.0 } else { 0.0 })),
+            ("wall_seconds", Json::num(self.wall_seconds)),
+            ("goodput_rps", Json::num(self.goodput_rps)),
+            ("latency_us_p50", Json::num(self.latency_us_p50)),
+            ("latency_us_p95", Json::num(self.latency_us_p95)),
+            ("latency_us_p99", Json::num(self.latency_us_p99)),
+        ])
+    }
+}
+
+/// Replay `trace` open-loop against a running pool. The caller keeps the
+/// handle (and shuts it down afterwards — a post-replay
+/// [`crate::coordinator::ServerMetrics::ledger_audit`] then checks
+/// conservation). The driver owns the handle's response/token receivers
+/// for the duration of the call; completions are drained concurrently
+/// with submission so channel buffers never become the bottleneck.
+pub fn replay(handle: &ServerHandle, trace: &Trace, cfg: &ReplayConfig) -> ReplayStats {
+    let mut stats = ReplayStats { offered: trace.len(), ..ReplayStats::default() };
+    let mut submitted_at: HashMap<RequestId, Instant> = HashMap::new();
+    let mut latencies: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    let mut disconnected = false;
+
+    let mut note = |resp: crate::coordinator::Response,
+                    submitted_at: &HashMap<RequestId, Instant>,
+                    latencies: &mut Vec<f64>| {
+        if let Some(t0) = submitted_at.get(&resp.id) {
+            latencies.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+    };
+
+    for rec in &trace.records {
+        let target =
+            start + Duration::from_micros((rec.arrival_us as f64 / cfg.speed) as u64);
+        // Open-loop discipline: until the trace clock reaches this record,
+        // do useful work — drain completions.
+        loop {
+            let now = Instant::now();
+            if now >= target || disconnected {
+                break;
+            }
+            match handle.responses.recv_timeout(target - now) {
+                Ok(resp) => {
+                    stats.completed += 1;
+                    note(resp, &submitted_at, &mut latencies);
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => disconnected = true,
+            }
+        }
+        // Exactly one submit per record — a rejection is the pool shedding
+        // at the door, not a cue to retry.
+        let mut req =
+            Request::new(rec.id, rec.prompt_len, vec![0.1; rec.prompt_len * cfg.d_model]);
+        if rec.gen_len > 0 {
+            req = req.with_generate(rec.gen_len);
+        }
+        match handle.try_submit(req) {
+            Ok(()) => {
+                stats.admitted += 1;
+                submitted_at.insert(rec.id, Instant::now());
+            }
+            Err(_) => stats.shed_at_door += 1,
+        }
+    }
+
+    // Drain: completions keep arriving until the pool has nothing in
+    // flight (sheds also free the in-flight slot, so inflight()==0 is the
+    // settle condition) or the drain window expires.
+    let deadline = Instant::now() + cfg.drain_timeout;
+    while !disconnected && stats.completed < stats.admitted {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        let wait = (deadline - now).min(Duration::from_millis(50));
+        match handle.responses.recv_timeout(wait) {
+            Ok(resp) => {
+                stats.completed += 1;
+                note(resp, &submitted_at, &mut latencies);
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if handle.inflight() == 0 {
+                    // Settled: anything still unanswered was shed.
+                    while let Ok(resp) = handle.responses.try_recv() {
+                        stats.completed += 1;
+                        note(resp, &submitted_at, &mut latencies);
+                    }
+                    break;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => disconnected = true,
+        }
+    }
+
+    stats.shed_after_admit = stats.admitted.saturating_sub(stats.completed);
+    stats.drained = disconnected || handle.inflight() == 0;
+    stats.tokens_streamed = handle.tokens.try_iter().count();
+    stats.wall_seconds = start.elapsed().as_secs_f64();
+    stats.goodput_rps = if stats.wall_seconds > 0.0 {
+        stats.completed as f64 / stats.wall_seconds
+    } else {
+        0.0
+    };
+    stats.latency_us_p50 = percentile(&latencies, 50.0);
+    stats.latency_us_p95 = percentile(&latencies, 95.0);
+    stats.latency_us_p99 = percentile(&latencies, 99.0);
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shed_rate_counts_both_shed_kinds() {
+        let s = ReplayStats {
+            offered: 10,
+            admitted: 8,
+            shed_at_door: 2,
+            completed: 7,
+            shed_after_admit: 1,
+            ..ReplayStats::default()
+        };
+        assert!((s.shed_rate() - 0.3).abs() < 1e-12);
+        let j = s.to_json();
+        assert_eq!(j.get("offered").unwrap().as_f64().unwrap(), 10.0);
+        assert_eq!(j.get("shed_rate").unwrap().as_f64().unwrap(), 0.3);
+    }
+
+    #[test]
+    fn empty_stats_are_finite() {
+        let s = ReplayStats::default();
+        assert_eq!(s.shed_rate(), 0.0);
+        assert_eq!(s.to_json().get("latency_us_p95").unwrap().as_f64().unwrap(), 0.0);
+    }
+}

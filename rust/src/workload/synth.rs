@@ -1,0 +1,204 @@
+//! Seeded synthetic trace generators: steady, bursty, and diurnal arrival
+//! processes over the mixed-class length distribution the pool benches
+//! drive.
+//!
+//! Arrivals are an inhomogeneous Poisson process: exponential gaps drawn
+//! at the instantaneous rate `rate(t)`, where the shape modulates the mean
+//! rate (constant, periodic multiplicative bursts, or a sinusoidal
+//! "diurnal" cycle compressed into `period_us`). Everything is
+//! deterministic in the seed — a failing replay names its seed and spec,
+//! and regenerating the exact trace is one call.
+
+use crate::util::rng::Rng;
+use crate::workload::trace_file::{Trace, TraceRecord};
+
+/// How the arrival rate varies over the trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalShape {
+    /// Constant-rate Poisson arrivals.
+    Steady,
+    /// Background rate with periodic bursts: for the first `burst_us` of
+    /// every `period_us`, the rate multiplies by `mult`. The background
+    /// rate is scaled down so the *mean* stays `mean_rps`.
+    Burst { mult: f64, period_us: u64, burst_us: u64 },
+    /// Sinusoidal rate: `mean × (1 + swing·sin(2πt/period))` — a diurnal
+    /// cycle compressed into `period_us`. `swing` ∈ [0, 1).
+    Diurnal { swing: f64, period_us: u64 },
+}
+
+/// Spec for one synthetic trace.
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    pub seed: u64,
+    /// Mean offered rate on the trace clock, requests/s.
+    pub mean_rps: f64,
+    /// Trace-clock length, µs (arrivals stop past this).
+    pub duration_us: u64,
+    pub shape: ArrivalShape,
+    /// Prompt lengths are class-mixed uniform in `[1, max_seq]` (equal
+    /// B1/B2/B4 traffic, like `TraceGenerator::mixed`).
+    pub max_seq: usize,
+    /// Fraction of requests that decode (`0.0` = all encode-only).
+    pub generate_share: f64,
+    /// Decode budget of a generate request.
+    pub gen_tokens: usize,
+    /// Distinct prefix-group tags sprinkled over generate requests
+    /// (0 = no prefix groups emitted).
+    pub prefix_groups: usize,
+}
+
+impl SynthSpec {
+    /// A steady trace at `mean_rps` for `duration_us` — the base spec the
+    /// benches then reshape.
+    pub fn steady(seed: u64, mean_rps: f64, duration_us: u64, max_seq: usize) -> SynthSpec {
+        SynthSpec {
+            seed,
+            mean_rps,
+            duration_us,
+            shape: ArrivalShape::Steady,
+            max_seq,
+            generate_share: 0.5,
+            gen_tokens: 4,
+            prefix_groups: 0,
+        }
+    }
+}
+
+/// Instantaneous rate (requests/s) at trace-clock `t_us`.
+fn rate_at(spec: &SynthSpec, t_us: u64) -> f64 {
+    match spec.shape {
+        ArrivalShape::Steady => spec.mean_rps,
+        ArrivalShape::Burst { mult, period_us, burst_us } => {
+            let period = period_us.max(1);
+            let duty = burst_us.min(period) as f64 / period as f64;
+            // Scale the background so the time-average equals mean_rps.
+            let base = spec.mean_rps / (1.0 + (mult - 1.0) * duty);
+            if t_us % period < burst_us {
+                base * mult
+            } else {
+                base
+            }
+        }
+        ArrivalShape::Diurnal { swing, period_us } => {
+            let phase = (t_us % period_us.max(1)) as f64 / period_us.max(1) as f64;
+            spec.mean_rps * (1.0 + swing * (2.0 * std::f64::consts::PI * phase).sin())
+        }
+    }
+}
+
+/// Generate a trace from a spec. Deterministic in `spec.seed`.
+pub fn synth_trace(spec: &SynthSpec) -> Trace {
+    let mut rng = Rng::new(spec.seed);
+    let mut records = Vec::new();
+    let mut t_us: f64 = 0.0;
+    let mut id: u64 = 0;
+    loop {
+        // Exponential gap at the instantaneous rate (floor the rate so a
+        // deep diurnal trough can't stall the clock forever).
+        let rps = rate_at(spec, t_us as u64).max(spec.mean_rps * 1e-3).max(1e-6);
+        let per_us = rps / 1e6;
+        let gap = -(1.0 - rng.f64()).max(1e-12).ln() / per_us;
+        t_us += gap;
+        if t_us as u64 > spec.duration_us {
+            break;
+        }
+        let prompt_len = class_mixed_len(&mut rng, spec.max_seq);
+        let generates = rng.f64() < spec.generate_share;
+        let gen_len = if generates { spec.gen_tokens } else { 0 };
+        let class = if generates { "chat" } else { "embed" };
+        let prefix_group = if generates && spec.prefix_groups > 0 {
+            Some(format!("g{}", rng.below(spec.prefix_groups)))
+        } else {
+            None
+        };
+        records.push(TraceRecord {
+            id,
+            arrival_us: t_us as u64,
+            class: class.to_string(),
+            prompt_len,
+            gen_len,
+            prefix_group,
+        });
+        id += 1;
+    }
+    Trace { records }
+}
+
+/// Equal-probability batch-class mix: pick B1/B2/B4 uniformly, then a
+/// length uniform within the class band (mirrors `TraceGenerator::mixed`).
+fn class_mixed_len(rng: &mut Rng, max_seq: usize) -> usize {
+    let quarter = (max_seq / 4).max(1);
+    match rng.below(3) {
+        0 => rng.range(1, quarter),
+        1 => rng.range(quarter + 1, (max_seq / 2).max(quarter + 1)),
+        _ => rng.range(max_seq / 2 + 1, max_seq.max(max_seq / 2 + 1)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(shape: ArrivalShape) -> SynthSpec {
+        SynthSpec { shape, ..SynthSpec::steady(0xBEEF, 2000.0, 500_000, 32) }
+    }
+
+    #[test]
+    fn deterministic_in_seed_and_parseable() {
+        let a = synth_trace(&spec(ArrivalShape::Steady));
+        let b = synth_trace(&spec(ArrivalShape::Steady));
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        // Round-trips through the trace-file format.
+        let parsed = Trace::parse(&a.to_text()).unwrap();
+        assert_eq!(parsed, a);
+    }
+
+    #[test]
+    fn steady_rate_close_to_mean() {
+        let t = synth_trace(&spec(ArrivalShape::Steady));
+        // 2000 rps × 0.5 s ⇒ ~1000 arrivals; Poisson σ ≈ 32.
+        let n = t.len() as f64;
+        assert!((850.0..1150.0).contains(&n), "n={n}");
+        assert!(t.span_us() <= 500_000);
+        // Arrivals are sorted and ids unique by construction.
+        assert!(t.records.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
+    }
+
+    #[test]
+    fn burst_concentrates_arrivals_but_keeps_the_mean() {
+        let s = spec(ArrivalShape::Burst { mult: 8.0, period_us: 100_000, burst_us: 10_000 });
+        let t = synth_trace(&s);
+        let n = t.len() as f64;
+        assert!((800.0..1200.0).contains(&n), "mean preserved, n={n}");
+        // The burst decile of each period holds well above its 10% share.
+        let in_burst =
+            t.records.iter().filter(|r| r.arrival_us % 100_000 < 10_000).count() as f64;
+        assert!(in_burst / n > 0.3, "burst share {}", in_burst / n);
+    }
+
+    #[test]
+    fn diurnal_peak_beats_trough() {
+        let s = spec(ArrivalShape::Diurnal { swing: 0.9, period_us: 500_000 });
+        let t = synth_trace(&s);
+        // sin > 0 over the first half-period (peak), < 0 over the second.
+        let first_half = t.records.iter().filter(|r| r.arrival_us < 250_000).count();
+        let second_half = t.len() - first_half;
+        assert!(
+            first_half > second_half * 2,
+            "peak {first_half} vs trough {second_half}"
+        );
+    }
+
+    #[test]
+    fn lengths_and_budgets_in_spec_bounds() {
+        let mut s = spec(ArrivalShape::Steady);
+        s.generate_share = 1.0;
+        s.gen_tokens = 7;
+        s.prefix_groups = 3;
+        let t = synth_trace(&s);
+        assert!(t.records.iter().all(|r| (1..=32).contains(&r.prompt_len)));
+        assert!(t.records.iter().all(|r| r.gen_len == 7 && r.class == "chat"));
+        assert!(t.records.iter().all(|r| r.prefix_group.is_some()));
+    }
+}

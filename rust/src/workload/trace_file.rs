@@ -1,0 +1,403 @@
+//! Line-oriented request-trace format + hand-rolled parser.
+//!
+//! A trace is the serving pool's replacement for closed-loop synthetic
+//! load: a list of requests with **trace-clock arrival times**, replayed
+//! open-loop (submission follows the clock regardless of completions) so
+//! overload actually overloads. The format is deliberately tiny — one
+//! record per line, whitespace-separated fields, `#` comments:
+//!
+//! ```text
+//! # id arrival_us class prompt_len gen_len [prefix_group]
+//! 0 0    chat  6 24 sys-a
+//! 1 150  embed 30 0
+//! 2 150  chat  7 24 sys-a
+//! ```
+//!
+//! Grammar (one record per non-blank, non-comment line):
+//!
+//! ```text
+//! record       := id ws arrival_us ws class ws prompt_len ws gen_len (ws prefix_group)?
+//! id           := uint            ; unique across the trace
+//! arrival_us   := uint            ; non-decreasing down the file
+//! class        := ident           ; workload tag, reporting key ("chat", "embed", …)
+//! prompt_len   := uint > 0        ; input tokens
+//! gen_len      := uint            ; decode budget (0 = encode-only)
+//! prefix_group := ident           ; optional shared-prompt-prefix tag
+//! ident        := [A-Za-z][A-Za-z0-9_-]*
+//! uint         := [0-9]+          ; 64-bit, overflow is an error
+//! ```
+//!
+//! The parser is hand-rolled (zero deps, the offline-crate rule) and
+//! rejects with **line-numbered, field-named errors** — a malformed trace
+//! must tell the operator exactly which line and field to fix, never
+//! panic, and never silently skip records. `prefix_group` is carried for
+//! the prefix-sharing radix-KV roadmap item; the replay driver does not
+//! exploit it yet.
+
+use std::collections::HashSet;
+use std::fmt;
+
+/// One request in a trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceRecord {
+    pub id: u64,
+    /// Arrival on the trace clock, µs from trace start (non-decreasing).
+    pub arrival_us: u64,
+    /// Workload tag ("chat", "embed", …) — a reporting key, not a batch
+    /// class: batch classes derive from `prompt_len` at admission.
+    pub class: String,
+    /// Input length in tokens (≥ 1).
+    pub prompt_len: usize,
+    /// Decode budget (0 = encode-only).
+    pub gen_len: usize,
+    /// Optional shared-prompt-prefix tag (reserved: radix-KV roadmap item).
+    pub prefix_group: Option<String>,
+}
+
+impl fmt::Display for TraceRecord {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} {} {} {} {}",
+            self.id, self.arrival_us, self.class, self.prompt_len, self.gen_len
+        )?;
+        if let Some(g) = &self.prefix_group {
+            write!(f, " {g}")?;
+        }
+        Ok(())
+    }
+}
+
+/// What went wrong, with enough structure for tests to pin each path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceErrorKind {
+    /// A record line ended before this field.
+    MissingField { field: &'static str },
+    /// Trailing token(s) after the last accepted field.
+    ExtraField { got: String },
+    /// A field failed its own grammar (`want` names the expected shape).
+    Malformed { field: &'static str, got: String, want: &'static str },
+    /// `arrival_us` went backwards relative to the previous record.
+    NonMonotoneArrival { prev: u64, got: u64 },
+    /// The same request id appeared twice.
+    DuplicateId { id: u64 },
+    /// `prompt_len` was zero — an empty prompt is unservable.
+    ZeroPromptLen,
+}
+
+/// A parse failure: 1-based line number + what was wrong on it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceError {
+    pub line: usize,
+    pub kind: TraceErrorKind,
+}
+
+impl fmt::Display for TraceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "trace line {}: ", self.line)?;
+        match &self.kind {
+            TraceErrorKind::MissingField { field } => {
+                write!(f, "missing field `{field}`")
+            }
+            TraceErrorKind::ExtraField { got } => {
+                write!(f, "unexpected trailing field `{got}`")
+            }
+            TraceErrorKind::Malformed { field, got, want } => {
+                write!(f, "field `{field}`: expected {want}, got `{got}`")
+            }
+            TraceErrorKind::NonMonotoneArrival { prev, got } => {
+                write!(f, "arrival_us went backwards: {got} after {prev} (traces are time-sorted)")
+            }
+            TraceErrorKind::DuplicateId { id } => {
+                write!(f, "duplicate request id {id}")
+            }
+            TraceErrorKind::ZeroPromptLen => {
+                write!(f, "prompt_len must be >= 1 (an empty prompt is unservable)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+/// A parsed trace: records in arrival order, ids unique.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Trace {
+    pub records: Vec<TraceRecord>,
+}
+
+impl Trace {
+    /// Parse trace text. Blank lines and `#` comments (whole-line or
+    /// trailing) are skipped; every record line must parse or the whole
+    /// trace is rejected with a line-numbered error.
+    pub fn parse(src: &str) -> Result<Trace, TraceError> {
+        let mut records = Vec::new();
+        let mut seen_ids: HashSet<u64> = HashSet::new();
+        let mut prev_arrival: u64 = 0;
+        for (idx, raw) in src.lines().enumerate() {
+            let line_no = idx + 1;
+            // Strip a trailing comment, then leading/trailing whitespace.
+            let line = match raw.find('#') {
+                Some(p) => &raw[..p],
+                None => raw,
+            };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let rec = parse_record(line, line_no)?;
+            if !records.is_empty() && rec.arrival_us < prev_arrival {
+                return Err(TraceError {
+                    line: line_no,
+                    kind: TraceErrorKind::NonMonotoneArrival {
+                        prev: prev_arrival,
+                        got: rec.arrival_us,
+                    },
+                });
+            }
+            if !seen_ids.insert(rec.id) {
+                return Err(TraceError {
+                    line: line_no,
+                    kind: TraceErrorKind::DuplicateId { id: rec.id },
+                });
+            }
+            prev_arrival = rec.arrival_us;
+            records.push(rec);
+        }
+        Ok(Trace { records })
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Trace-clock span: arrival of the last record, µs.
+    pub fn span_us(&self) -> u64 {
+        self.records.last().map(|r| r.arrival_us).unwrap_or(0)
+    }
+
+    /// Unique class tags, in first-seen order.
+    pub fn classes(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for r in &self.records {
+            if !out.iter().any(|c| c == &r.class) {
+                out.push(r.class.clone());
+            }
+        }
+        out
+    }
+
+    /// Serialize back to the line format (round-trips through [`parse`]).
+    ///
+    /// [`parse`]: Trace::parse
+    pub fn to_text(&self) -> String {
+        let mut s = String::from("# id arrival_us class prompt_len gen_len [prefix_group]\n");
+        for r in &self.records {
+            s.push_str(&r.to_string());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Field-by-field record parser. Hand-rolled scanners per field so every
+/// rejection names the field and what it expected.
+fn parse_record(line: &str, line_no: usize) -> Result<TraceRecord, TraceError> {
+    let mut fields = line.split_ascii_whitespace();
+    let mut next = |field: &'static str| -> Result<&str, TraceError> {
+        fields.next().ok_or(TraceError {
+            line: line_no,
+            kind: TraceErrorKind::MissingField { field },
+        })
+    };
+    let id = parse_uint("id", next("id")?, line_no)?;
+    let arrival_us = parse_uint("arrival_us", next("arrival_us")?, line_no)?;
+    let class = parse_ident("class", next("class")?, line_no)?;
+    let prompt_len = parse_uint("prompt_len", next("prompt_len")?, line_no)? as usize;
+    if prompt_len == 0 {
+        return Err(TraceError { line: line_no, kind: TraceErrorKind::ZeroPromptLen });
+    }
+    let gen_len = parse_uint("gen_len", next("gen_len")?, line_no)? as usize;
+    let prefix_group = match fields.next() {
+        Some(tok) => Some(parse_ident("prefix_group", tok, line_no)?),
+        None => None,
+    };
+    if let Some(extra) = fields.next() {
+        return Err(TraceError {
+            line: line_no,
+            kind: TraceErrorKind::ExtraField { got: extra.to_string() },
+        });
+    }
+    Ok(TraceRecord { id, arrival_us, class, prompt_len, gen_len, prefix_group })
+}
+
+/// `[0-9]+` with 64-bit overflow checking — a digit-wise accumulator, not
+/// `str::parse`, so the error text is ours and exact.
+fn parse_uint(field: &'static str, tok: &str, line: usize) -> Result<u64, TraceError> {
+    let malformed = |want: &'static str| TraceError {
+        line,
+        kind: TraceErrorKind::Malformed { field, got: tok.to_string(), want },
+    };
+    if tok.is_empty() {
+        return Err(malformed("an unsigned integer"));
+    }
+    let mut v: u64 = 0;
+    for b in tok.bytes() {
+        if !b.is_ascii_digit() {
+            return Err(malformed("an unsigned integer"));
+        }
+        v = v
+            .checked_mul(10)
+            .and_then(|v| v.checked_add((b - b'0') as u64))
+            .ok_or_else(|| malformed("an unsigned integer that fits in 64 bits"))?;
+    }
+    Ok(v)
+}
+
+/// `[A-Za-z][A-Za-z0-9_-]*` — class / prefix-group tags.
+fn parse_ident(field: &'static str, tok: &str, line: usize) -> Result<String, TraceError> {
+    let malformed = || TraceError {
+        line,
+        kind: TraceErrorKind::Malformed {
+            field,
+            got: tok.to_string(),
+            want: "an identifier ([A-Za-z][A-Za-z0-9_-]*)",
+        },
+    };
+    let mut bytes = tok.bytes();
+    match bytes.next() {
+        Some(b) if b.is_ascii_alphabetic() => {}
+        _ => return Err(malformed()),
+    }
+    for b in bytes {
+        if !(b.is_ascii_alphanumeric() || b == b'_' || b == b'-') {
+            return Err(malformed());
+        }
+    }
+    Ok(tok.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(line: &str) -> TraceRecord {
+        Trace::parse(line).expect("valid record").records.remove(0)
+    }
+
+    fn err(src: &str) -> TraceError {
+        Trace::parse(src).expect_err("must reject")
+    }
+
+    #[test]
+    fn parses_minimal_and_full_records() {
+        let r = rec("3 120 chat 7 24");
+        assert_eq!(r.id, 3);
+        assert_eq!(r.arrival_us, 120);
+        assert_eq!(r.class, "chat");
+        assert_eq!(r.prompt_len, 7);
+        assert_eq!(r.gen_len, 24);
+        assert_eq!(r.prefix_group, None);
+        let r = rec("0 0 embed 30 0 sys-a");
+        assert_eq!(r.prefix_group.as_deref(), Some("sys-a"));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_are_skipped() {
+        let t = Trace::parse(
+            "# a header comment\n\
+             \n\
+             0 0 chat 6 8   # trailing comment\n\
+             \t  \n\
+             1 10 chat 6 8\n",
+        )
+        .unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.span_us(), 10);
+        assert_eq!(t.classes(), vec!["chat".to_string()]);
+    }
+
+    #[test]
+    fn missing_fields_name_the_field_and_line() {
+        let e = err("0 0 chat 6");
+        assert_eq!(e.line, 1);
+        assert_eq!(e.kind, TraceErrorKind::MissingField { field: "gen_len" });
+        let e = err("7");
+        assert_eq!(e.kind, TraceErrorKind::MissingField { field: "arrival_us" });
+        // The error carries the right line number past valid records.
+        let e = err("0 0 chat 6 0\n1 5 chat\n");
+        assert_eq!(e.line, 2);
+        assert_eq!(e.kind, TraceErrorKind::MissingField { field: "prompt_len" });
+    }
+
+    #[test]
+    fn malformed_fields_are_errors_not_panics() {
+        let e = err("x 0 chat 6 0");
+        assert!(matches!(e.kind, TraceErrorKind::Malformed { field: "id", .. }), "{e}");
+        let e = err("0 12x chat 6 0");
+        assert!(matches!(e.kind, TraceErrorKind::Malformed { field: "arrival_us", .. }), "{e}");
+        let e = err("0 0 9bad 6 0");
+        assert!(matches!(e.kind, TraceErrorKind::Malformed { field: "class", .. }), "{e}");
+        let e = err("0 0 chat -6 0");
+        assert!(matches!(e.kind, TraceErrorKind::Malformed { field: "prompt_len", .. }), "{e}");
+        let e = err("0 0 chat 6 0 !grp");
+        assert!(matches!(e.kind, TraceErrorKind::Malformed { field: "prefix_group", .. }), "{e}");
+        // 2^64 overflows: rejected, not wrapped.
+        let e = err("18446744073709551616 0 chat 6 0");
+        assert!(matches!(e.kind, TraceErrorKind::Malformed { field: "id", .. }), "{e}");
+    }
+
+    #[test]
+    fn trailing_garbage_is_an_error() {
+        let e = err("0 0 chat 6 0 grp extra");
+        assert_eq!(e.kind, TraceErrorKind::ExtraField { got: "extra".to_string() });
+    }
+
+    #[test]
+    fn non_monotone_arrivals_rejected_with_line() {
+        let e = err("0 100 chat 6 0\n1 99 chat 6 0\n");
+        assert_eq!(e.line, 2);
+        assert_eq!(e.kind, TraceErrorKind::NonMonotoneArrival { prev: 100, got: 99 });
+        // Equal arrivals are fine (a burst lands together).
+        assert!(Trace::parse("0 100 chat 6 0\n1 100 chat 6 0\n").is_ok());
+    }
+
+    #[test]
+    fn duplicate_ids_rejected_with_line() {
+        let e = err("0 0 chat 6 0\n1 5 chat 6 0\n0 9 chat 6 0\n");
+        assert_eq!(e.line, 3);
+        assert_eq!(e.kind, TraceErrorKind::DuplicateId { id: 0 });
+    }
+
+    #[test]
+    fn zero_prompt_len_rejected() {
+        let e = err("0 0 chat 0 4");
+        assert_eq!(e.kind, TraceErrorKind::ZeroPromptLen);
+        assert_eq!(
+            e.to_string(),
+            "trace line 1: prompt_len must be >= 1 (an empty prompt is unservable)"
+        );
+    }
+
+    #[test]
+    fn round_trips_through_text() {
+        let src = "0 0 chat 6 24 sys-a\n1 150 embed 30 0\n2 150 chat 7 24 sys-a\n";
+        let t = Trace::parse(src).unwrap();
+        let t2 = Trace::parse(&t.to_text()).unwrap();
+        assert_eq!(t, t2);
+        assert_eq!(t2.classes(), vec!["chat".to_string(), "embed".to_string()]);
+    }
+
+    #[test]
+    fn error_display_is_line_numbered_and_field_named() {
+        let e = err("0 0 chat 6 0\n1 5 chat 6 zz\n");
+        assert_eq!(
+            e.to_string(),
+            "trace line 2: field `gen_len`: expected an unsigned integer, got `zz`"
+        );
+    }
+}
