@@ -17,9 +17,14 @@
 //! 3. **Grouping policies** — the serving pool decoding the same staggered
 //!    trace under greedy vs depth-bucketed regrouping, with the new
 //!    `pad_waste_tokens` metric making the bucketing win measurable.
+//! 4. **Prefix sharing** — N streams over K≪N shared prompts, with and
+//!    without `prefix_group` tags: the radix index keeps arena occupancy
+//!    near the K-unique-prefix ideal while the no-share baseline grows
+//!    O(N), warm-prefix rejoins skip the swap-in charge, and unaligned
+//!    prefixes COW-fork their tail page.
 //!
 //! `--test` (CI smoke): quick configuration of each part, with the
-//! deterministic section-2 invariants asserted.
+//! deterministic section-2 and section-4 invariants asserted.
 //! `--kv-quant MODE` restricts section 2; `--kv-pages N` overrides its
 //! arena size.
 
@@ -42,6 +47,7 @@ fn main() {
     residency_table();
     arena_pressure(smoke, only, pages);
     grouping_policies(smoke);
+    prefix_sharing(smoke);
 }
 
 fn residency_table() {
@@ -100,7 +106,7 @@ fn arena_pressure(smoke: bool, only: Option<KvQuant>, pages_override: Option<usi
         let opts = SimOptions { act_bits: m.act_bits, ..SimOptions::paper(&hw) };
         let mut stepper = Stepper::new(&hw, opts);
         for id in 0..streams {
-            mgr.register(id as u64, prefill);
+            mgr.register(id as u64, prefill, None);
         }
         let mut pasts = vec![prefill; streams];
         for _step in 0..steps {
@@ -236,5 +242,148 @@ fn grouping_policies(smoke: bool) {
         "\nPad waste is the token-slots a step burns padding shallow streams\n\
          to its deepest member (∝ max−min past_len); depth-bucketed grouping\n\
          bounds it at bucket−1 per stream at some cost in group occupancy."
+    );
+}
+
+fn prefix_sharing(smoke: bool) {
+    use trex::kv::prefix_id;
+    let hw = HwConfig::default();
+    let m = ModelConfig::tiny();
+    let k_groups = 4usize;
+    let decode = if smoke { 4usize } else { 16 };
+    banner("fig9-kv: prefix sharing (N streams over K=4 shared prompts)");
+    // One probe manager just for the geometry (per-token bytes, page size):
+    // a page-aligned prefill shares cleanly; an unaligned one must COW-fork.
+    let probe = KvManager::new(&hw, &m, KvArenaConfig::for_pool(&hw, &m, KvQuant::Fp16, Some(4)));
+    let ptb = probe.per_token_bytes();
+    let pb = probe.config().page_bytes;
+    let prefill = (1..=64)
+        .find(|&p| (p as u64 * ptb) % pb == 0)
+        .expect("some prefill under 64 tokens lands on a page line");
+    let prefix_pages = ((prefill as u64 * ptb).div_ceil(pb)) as usize;
+
+    let mut rows = Vec::new();
+    let ns: &[usize] = if smoke { &[8, 16] } else { &[8, 16, 32, 64] };
+    for &n in ns {
+        let mut shared_peak = 0usize;
+        let mut baseline_peak = 0usize;
+        let mut hits = 0u64;
+        let mut shared_gauge = 0usize;
+        for share in [true, false] {
+            // Generous arena: this section measures occupancy, not eviction.
+            let mut cfg = KvArenaConfig::for_pool(&hw, &m, KvQuant::Fp16, Some(1 << 20));
+            cfg.admit_oversub = 1e9;
+            let mgr = KvManager::new(&hw, &m, cfg);
+            for id in 0..n as u64 {
+                let prefix = if share {
+                    Some(prefix_id(&format!("sys-{}", id % k_groups as u64)))
+                } else {
+                    None
+                };
+                mgr.register(id, prefill, prefix);
+            }
+            let mut pasts = vec![prefill; n];
+            for _ in 0..decode {
+                for g in 0..n / 4 {
+                    let members: Vec<(u64, usize)> =
+                        (0..4).map(|k| ((g * 4 + k) as u64, pasts[g * 4 + k])).collect();
+                    mgr.prepare_group(&members);
+                    mgr.finish_group(&members);
+                    for k in 0..4 {
+                        pasts[g * 4 + k] += 1;
+                    }
+                }
+            }
+            let kv = mgr.stats();
+            if share {
+                shared_peak = kv.peak_used_pages;
+                hits = kv.prefix_hits;
+                shared_gauge = mgr.shared_pages();
+                // Page-aligned prefixes never need the tail duplicated.
+                assert_eq!(kv.cow_forks, 0, "aligned prefix must not fork: {kv:?}");
+                // Warm-prefix latecomer: its prefill is already resident in
+                // the chain, so registration + first step charge no swap-in.
+                let swaps_before = kv.swap_ins;
+                let late = n as u64 + 1;
+                mgr.register(late, prefill, Some(prefix_id("sys-0")));
+                let charge = mgr.prepare_group(&[(late, prefill)]);
+                assert_eq!(charge.swap_in_bytes, 0, "warm prefix charged a swap-in");
+                mgr.finish_group(&[(late, prefill)]);
+                assert_eq!(mgr.stats().swap_ins, swaps_before, "warm prefix swap-in counted");
+                mgr.release(late);
+            } else {
+                baseline_peak = kv.peak_used_pages;
+            }
+            for id in 0..n as u64 {
+                mgr.release(id);
+            }
+            let residual = mgr.residual();
+            assert!(residual.is_clean(), "leaked after drain: {residual:?}");
+        }
+        // K-unique-prefix ideal: K prefix chains + every stream's private
+        // decode tail (the arena floors a live stream at one page).
+        let priv_pages = ((decode as u64 * ptb).div_ceil(pb) as usize).max(1);
+        let ideal = k_groups * prefix_pages + n * priv_pages;
+        assert!(
+            shared_peak as f64 <= 1.5 * ideal as f64,
+            "shared arena {shared_peak} pages exceeds 1.5x the {ideal}-page ideal (n={n})"
+        );
+        assert!(
+            baseline_peak >= n * prefix_pages,
+            "no-share baseline {baseline_peak} pages is not O(N) in the prefix (n={n})"
+        );
+        assert!(shared_peak < baseline_peak, "sharing must beat the baseline (n={n})");
+        rows.push(vec![
+            format!("{n}"),
+            format!("{ideal}"),
+            format!("{shared_peak}"),
+            format!("{baseline_peak}"),
+            format!("{shared_gauge}"),
+            format!("{hits}"),
+            format!("{:.2}x", baseline_peak as f64 / shared_peak as f64),
+        ]);
+    }
+    table(
+        &[
+            "streams",
+            "ideal pages",
+            "shared peak",
+            "no-share peak",
+            "shared gauge",
+            "prefix hits",
+            "saving",
+        ],
+        &rows,
+    );
+
+    // COW check: an unaligned prefix (partial tail page) forks exactly once
+    // per stream that decodes past it, and never before.
+    if let Some(unaligned) = (1..prefill).find(|&p| (p as u64 * ptb) % pb != 0) {
+        let cfg = KvArenaConfig::for_pool(&hw, &m, KvQuant::Fp16, Some(1 << 20));
+        let mgr = KvManager::new(&hw, &m, cfg);
+        for id in 0..2u64 {
+            mgr.register(id, unaligned, Some(prefix_id("cow")));
+        }
+        let at_depth = [(0u64, unaligned), (1u64, unaligned)];
+        mgr.prepare_group(&at_depth);
+        mgr.finish_group(&at_depth);
+        assert_eq!(mgr.stats().cow_forks, 0, "no fork while inside the prefix");
+        let past_it = [(0u64, unaligned + 1), (1u64, unaligned + 1)];
+        mgr.prepare_group(&past_it);
+        mgr.finish_group(&past_it);
+        assert_eq!(mgr.stats().cow_forks, 2, "each stream forks the partial tail page once");
+        mgr.release(0);
+        mgr.release(1);
+        assert!(mgr.residual().is_clean());
+        println!(
+            "\nCOW: prefill {unaligned} straddles a page; both streams forked the\n\
+             partial tail exactly once on decoding past it."
+        );
+    }
+    println!(
+        "\nArena occupancy grows with unique prompt tokens, not stream count:\n\
+         K chains back every mate's prefill while each stream pays only its\n\
+         own decode tail (plus the COW'd tail page when the prefix is not\n\
+         page-aligned)."
     );
 }

@@ -598,7 +598,7 @@ impl Engine {
             if r.generate.min(cap.saturating_sub(r.len)) > 0 {
                 // The prefix becomes arena-resident as the first chunk
                 // starts writing it (no swap charge — written fresh).
-                self.kv.register(r.id, r.len);
+                self.kv.register(r.id, r.len, r.prefix_group);
             } else {
                 // Cap-clamped to zero: give back the admission reservation.
                 self.kv.release(r.id);
@@ -740,7 +740,7 @@ impl Engine {
                 if register_kv {
                     // The stream's prefill KV becomes arena-resident (no
                     // swap charge — prefill writes the planes fresh).
-                    self.kv.register(r.id, r.len);
+                    self.kv.register(r.id, r.len, r.prefix_group);
                 }
                 // The stream's next input is its last prefill output row.
                 let last = output[(r.len - 1) * d..r.len * d].to_vec();

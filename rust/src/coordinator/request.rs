@@ -19,17 +19,29 @@ pub struct Request {
     /// residency cap for the request's class — see
     /// [`crate::sim::GbBudget::max_decode_len`].
     pub generate: usize,
+    /// Hashed prompt-prefix identity ([`crate::kv::prefix_id`] of the
+    /// trace's `prefix_group` tag): requests sharing it attach to one
+    /// refcounted KV prefix in the arena instead of each paying a copy.
+    pub prefix_group: Option<u64>,
     pub arrival: Instant,
 }
 
 impl Request {
     pub fn new(id: RequestId, len: usize, payload: Vec<f32>) -> Self {
-        Request { id, len, payload, generate: 0, arrival: Instant::now() }
+        Request { id, len, payload, generate: 0, prefix_group: None, arrival: Instant::now() }
     }
 
     /// Ask for `n` decode tokens after prefill (builder-style).
     pub fn with_generate(mut self, n: usize) -> Self {
         self.generate = n;
+        self
+    }
+
+    /// Tag this request as sharing its prompt prefix with every other
+    /// request carrying the same identity (builder-style; hash a trace tag
+    /// with [`crate::kv::prefix_id`]).
+    pub fn with_prefix_group(mut self, group: u64) -> Self {
+        self.prefix_group = Some(group);
         self
     }
 

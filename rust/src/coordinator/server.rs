@@ -497,7 +497,7 @@ impl Submitter {
         // *aggregate* across concurrent streams.
         if req.generate > 0 {
             if let Some(kv) = &self.kv {
-                if !kv.try_admit(req.id, req.len, req.generate, class.batch()) {
+                if !kv.try_admit(req.id, req.len, req.generate, class.batch(), req.prefix_group) {
                     self.inflight.fetch_sub(1, Ordering::AcqRel);
                     self.metrics.record_rejected();
                     return Err((

@@ -11,16 +11,26 @@
 //! overcommit over deadlock (recorded in its stats).
 
 /// Page-granular occupancy counter for the KV arena.
+///
+/// Pages come in two flavors with one occupancy total: **private** pages
+/// back exactly one stream (alloc/free), **shared** pages back a
+/// refcounted prefix chain (`alloc_shared`/`free_shared`) and are tracked
+/// separately so the drained-pool invariant can demand both gauges hit
+/// zero. Refcounting itself lives in [`super::radix::RadixIndex`]; the
+/// arena only guards the counters — shared frees saturate and
+/// `debug_assert` rather than underflow when a shed races a prefix-mate's
+/// release.
 #[derive(Debug, Clone, Copy)]
 pub struct KvArena {
     page_bytes: u64,
     capacity_pages: usize,
     used_pages: usize,
+    shared_pages: usize,
 }
 
 impl KvArena {
     pub fn new(page_bytes: u64, capacity_pages: usize) -> KvArena {
-        KvArena { page_bytes: page_bytes.max(1), capacity_pages, used_pages: 0 }
+        KvArena { page_bytes: page_bytes.max(1), capacity_pages, used_pages: 0, shared_pages: 0 }
     }
 
     /// Pages needed to back `bytes` of KV (at least one for a live stream).
@@ -36,6 +46,32 @@ impl KvArena {
 
     pub fn free(&mut self, pages: usize) {
         self.used_pages = self.used_pages.saturating_sub(pages);
+    }
+
+    /// Claim `pages` for a refcounted prefix chain (counted in both the
+    /// occupancy total and the shared gauge).
+    pub fn alloc_shared(&mut self, pages: usize) {
+        self.used_pages += pages;
+        self.shared_pages += pages;
+    }
+
+    /// Return prefix-chain pages whose last reference dropped. Saturates
+    /// (and `debug_assert`s) instead of double-freeing: a mid-prefill shed
+    /// racing a prefix-mate's release must never drive either gauge
+    /// negative.
+    pub fn free_shared(&mut self, pages: usize) {
+        debug_assert!(
+            pages <= self.shared_pages,
+            "shared free of {pages} pages exceeds the {} shared-resident",
+            self.shared_pages
+        );
+        self.used_pages = self.used_pages.saturating_sub(pages);
+        self.shared_pages = self.shared_pages.saturating_sub(pages);
+    }
+
+    /// Pages currently backing refcounted prefix chains.
+    pub fn shared_pages(&self) -> usize {
+        self.shared_pages
     }
 
     pub fn free_pages(&self) -> usize {
@@ -91,6 +127,21 @@ mod tests {
         a.free(6);
         assert_eq!(a.used_pages(), 0);
         a.free(1); // saturates, never underflows
+        assert_eq!(a.used_pages(), 0);
+    }
+
+    #[test]
+    fn shared_pages_track_separately_and_saturate() {
+        let mut a = KvArena::new(2048, 8);
+        a.alloc(2);
+        a.alloc_shared(3);
+        assert_eq!(a.used_pages(), 5);
+        assert_eq!(a.shared_pages(), 3);
+        assert_eq!(a.free_pages(), 3);
+        a.free_shared(3);
+        assert_eq!(a.used_pages(), 2);
+        assert_eq!(a.shared_pages(), 0);
+        a.free(2);
         assert_eq!(a.used_pages(), 0);
     }
 }

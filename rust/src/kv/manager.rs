@@ -24,6 +24,21 @@
 //!   bytes the step must pay up front: every evicted member re-streams its
 //!   whole resident KV from DRAM before the step runs.
 //!
+//! * **Prefix sharing** — streams registered with a [`PrefixId`] attach
+//!   to their group's refcounted prefix chain in the
+//!   [`crate::kv::radix::RadixIndex`]: one physical copy of the shared
+//!   prompt KV serves every prefix-mate, admission and registration
+//!   project/allocate only the *non-shared* bytes when the prefix is warm,
+//!   eviction and swap-in apply to private pages only (the shared chain
+//!   stays pinned by its refcounts), and a stream decoding past an
+//!   unaligned prefix boundary forks **copy-on-write**: the prefix's
+//!   partial tail page is duplicated into its private region
+//!   ([`KvStats::cow_forks`]) so appends never touch a shared page.
+//! * **Compaction** — parked streams round their bytes up to whole pages;
+//!   [`KvManager::compact`] (run automatically before eviction) packs that
+//!   ceil-rounding slack so the fleet's parked total needs only
+//!   `ceil(Σ bytes / page)` pages.
+//!
 //! If even evicting every evictable stream can't make room (a single group
 //! larger than the arena, or concurrent workers' pinned in-flight groups
 //! that genuinely don't co-fit), the manager *overcommits* rather than
@@ -35,6 +50,7 @@ use crate::config::{HwConfig, ModelConfig};
 use crate::coordinator::request::RequestId;
 use crate::kv::arena::KvArena;
 use crate::kv::quant::KvQuant;
+use crate::kv::radix::{PrefixId, RadixIndex};
 use crate::kv::MAX_GROUP_STREAMS;
 use crate::sim::GbBudget;
 use crate::util::json::Json;
@@ -109,12 +125,24 @@ pub struct KvStats {
     pub forced_overcommit: u64,
     /// High-water mark of arena occupancy, pages.
     pub peak_used_pages: usize,
+    /// Registrations that found their prefix group already (partly)
+    /// resident — pages this stream shares instead of re-writing.
+    pub prefix_hits: u64,
+    /// Streams that forked copy-on-write at the divergence point (decode
+    /// outgrew an unaligned shared prefix; its partial tail page was
+    /// duplicated privately).
+    pub cow_forks: u64,
+    /// Compaction passes that reclaimed at least one page.
+    pub compactions: u64,
+    /// Ceil-rounding slack pages reclaimed by compaction.
+    pub compacted_pages: u64,
 }
 
 /// Point-in-time occupancy snapshot: what the manager still holds. After a
-/// pool drains (every admitted stream completed or shed), all four fields
+/// pool drains (every admitted stream completed or shed), every field
 /// must be zero — any nonzero field is a leaked reservation, pinned group,
-/// or orphaned page. Checked by the scenario fuzzer after every drain.
+/// orphaned page, or dangling prefix refcount. Checked by the scenario
+/// fuzzer after every drain.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct KvResidual {
     /// Admitted, unreleased streams.
@@ -125,15 +153,23 @@ pub struct KvResidual {
     pub admitted_bytes: u64,
     /// Streams pinned by an in-flight decode group.
     pub pinned_streams: usize,
+    /// Arena pages still backing shared prefix chains.
+    pub shared_pages: usize,
+    /// Stream references still held on prefix-chain spans.
+    pub prefix_refs: usize,
 }
 
 impl KvResidual {
-    /// Nothing held: the drained-pool leak-freedom invariant.
+    /// Nothing held: the drained-pool leak-freedom invariant. Shared pages
+    /// and prefix refcounts must both be zero too — a drained pool may not
+    /// keep a zero-stream prefix cache or a dangling refcount.
     pub fn is_clean(&self) -> bool {
         self.live_streams == 0
             && self.resident_pages == 0
             && self.admitted_bytes == 0
             && self.pinned_streams == 0
+            && self.shared_pages == 0
+            && self.prefix_refs == 0
     }
 }
 
@@ -146,10 +182,13 @@ pub struct StepCharge {
     pub swap_ins: u64,
 }
 
-/// Per-stream arena bookkeeping. `bytes` is the stream's logical quantized
-/// KV (self-attention prefix + cross-attention memory); `pages` backs it
-/// while resident and is 0 after eviction (the bytes are remembered — they
-/// are exactly what a rejoin must swap back in).
+/// Per-stream arena bookkeeping. `bytes` is the stream's **private**
+/// quantized KV — everything its own pages must back: cross-attention
+/// memory, decode tokens past the shared prefix, and (for streams with no
+/// prefix group) the whole self-attention prefix. `pages` backs it while
+/// resident and is 0 after eviction (the bytes are remembered — they are
+/// exactly what a rejoin must swap back in; shared-prefix pages never
+/// evict, so they are never part of the charge).
 #[derive(Debug, Clone, Copy)]
 struct StreamEntry {
     bytes: u64,
@@ -162,11 +201,39 @@ struct StreamEntry {
     last_used: u64,
     /// Projected lifetime bytes held against the admission bound.
     projected: u64,
+    /// Prefix group this stream shares its prompt KV with (admission
+    /// records it; registration attaches).
+    prefix: Option<PrefixId>,
+    /// Shared-prefix bytes attached in the radix chain (0 = detached;
+    /// exactly what release must detach).
+    shared_bytes: u64,
+    /// Decode outgrew an unaligned shared prefix: the prefix's partial
+    /// tail page is duplicated in this stream's private bytes.
+    cow_forked: bool,
+}
+
+impl StreamEntry {
+    fn fresh(clock: u64) -> StreamEntry {
+        StreamEntry {
+            bytes: 0,
+            pages: 0,
+            resident: false,
+            pinned: false,
+            last_used: clock,
+            projected: 0,
+            prefix: None,
+            shared_bytes: 0,
+            cow_forked: false,
+        }
+    }
 }
 
 #[derive(Debug)]
 struct Inner {
     arena: KvArena,
+    /// Refcounted shared-prefix chains (pages counted in `arena`'s shared
+    /// gauge, never in any stream's private pages).
+    radix: RadixIndex,
     streams: HashMap<RequestId, StreamEntry>,
     /// Sum of live streams' projected bytes (the admission ledger).
     admitted_bytes: u64,
@@ -176,11 +243,62 @@ struct Inner {
 }
 
 impl Inner {
+    /// Pack parked streams' ceil-rounding slack: each parked stream rounds
+    /// its private bytes up to whole pages, but laid end-to-end (coldest
+    /// first, so the LRU order eviction would use is the order tails move
+    /// in) the parked set needs only `ceil(Σ bytes / page)` pages. Runs
+    /// before eviction in [`Inner::make_room`] and on demand via
+    /// [`KvManager::compact`]; no background thread — the pass is O(parked)
+    /// under the same lock every step takes. Compacted streams stay
+    /// resident (no swap charge); the next step's `make_resident` re-grows
+    /// their page count in place.
+    fn compact_parked(&mut self, protect: &[RequestId]) -> usize {
+        let pb = self.arena.page_bytes();
+        let mut parked: Vec<(RequestId, u64, usize, u64)> = self
+            .streams
+            .iter()
+            .filter(|(id, e)| {
+                e.resident && !e.pinned && e.pages > 0 && !protect.contains(id)
+            })
+            .map(|(id, e)| (*id, e.bytes, e.pages, e.last_used))
+            .collect();
+        if parked.len() < 2 {
+            return 0; // a lone stream's ceil page is not reclaimable slack
+        }
+        parked.sort_by_key(|&(_, _, _, used)| used);
+        let mut carry = 0u64; // spare bytes open in the pack's last page
+        let mut freed = 0usize;
+        for (id, bytes, pages, _) in parked {
+            let packed = if bytes <= carry {
+                carry -= bytes;
+                0
+            } else {
+                let need = (bytes - carry).div_ceil(pb) as usize;
+                carry = need as u64 * pb - (bytes - carry);
+                need
+            };
+            if packed < pages {
+                self.arena.free(pages - packed);
+                freed += pages - packed;
+                self.streams.get_mut(&id).expect("parked id").pages = packed;
+            }
+        }
+        if freed > 0 {
+            self.stats.compactions += 1;
+            self.stats.compacted_pages += freed as u64;
+        }
+        freed
+    }
+
     /// Evict LRU parked streams until `pages` are free (never a `protect`
     /// member, never a pinned stream — some worker's in-flight step is
-    /// reading those pages). Returns false when room could not be made —
-    /// the caller proceeds overcommitted.
+    /// reading those pages). Compaction runs first — reclaiming rounding
+    /// slack is free, eviction costs a future swap-in. Returns false when
+    /// room could not be made — the caller proceeds overcommitted.
     fn make_room(&mut self, pages: usize, protect: &[RequestId]) -> bool {
+        if self.arena.free_pages() < pages {
+            self.compact_parked(protect);
+        }
         while self.arena.free_pages() < pages {
             let victim = self
                 .streams
@@ -204,8 +322,10 @@ impl Inner {
         true
     }
 
-    /// Make `id` resident with `bytes` of KV, growing/shrinking its pages;
-    /// evicts others as needed. Assumes the entry exists.
+    /// Make `id` resident with `bytes` of **private** KV (the shared
+    /// prefix, if any, lives in the radix chain and needs no pages here),
+    /// growing/shrinking its pages; evicts others as needed. Assumes the
+    /// entry exists.
     fn make_resident(&mut self, id: RequestId, bytes: u64, protect: &[RequestId]) {
         let entry = *self.streams.get(&id).expect("entry exists");
         let needed = self.arena.pages_for(bytes);
@@ -259,6 +379,7 @@ impl KvManager {
             caps: [cap(1), cap(2), cap(4)],
             inner: Mutex::new(Inner {
                 arena: KvArena::new(cfg.page_bytes, cfg.capacity_pages),
+                radix: RadixIndex::new(cfg.page_bytes),
                 streams: HashMap::new(),
                 admitted_bytes: 0,
                 clock: 0,
@@ -279,6 +400,32 @@ impl KvManager {
     /// Logical quantized KV bytes of one stream at `past_len`.
     pub fn stream_bytes(&self, past_len: usize) -> u64 {
         self.cross_bytes + past_len as u64 * self.per_token_bytes
+    }
+
+    /// Bytes one token of self-attention KV adds (the unit of the shared
+    /// prefix — cross-attention memory is per-stream and never shared).
+    pub fn per_token_bytes(&self) -> u64 {
+        self.per_token_bytes
+    }
+
+    /// The stream's **private** bytes at `past_len`: its full logical KV
+    /// minus the span its shared prefix chain backs. Before a COW fork the
+    /// whole attached prefix is discounted; after the fork the prefix's
+    /// partial tail page is duplicated privately, so only the page-aligned
+    /// floor stays discounted. Streams without a prefix own everything —
+    /// this degenerates to [`KvManager::stream_bytes`], the pre-sharing
+    /// behavior, bit for bit.
+    fn private_bytes(&self, past_len: usize, e: &StreamEntry) -> u64 {
+        let total = self.stream_bytes(past_len);
+        if e.shared_bytes == 0 {
+            return total;
+        }
+        let discount = if e.cow_forked {
+            e.shared_bytes - (e.shared_bytes % self.cfg.page_bytes)
+        } else {
+            e.shared_bytes
+        };
+        total.saturating_sub(discount)
     }
 
     /// Quantized bytes one layer's dequant pass touches for a `group`-wide
@@ -306,16 +453,21 @@ impl KvManager {
     /// already project past the oversubscription bound. A first stream is
     /// always admitted — a request bigger than the arena is the
     /// cap/overcommit paths' problem, not a deadlock.
+    ///
+    /// A `prefix` whose group chain is already resident projects only the
+    /// *non-shared* bytes: the warm span is a prefix-mate's cost, not this
+    /// stream's — N streams of one prompt admit like 1 prompt + N decode
+    /// tails.
     pub fn try_admit(
         &self,
         id: RequestId,
         prefill_len: usize,
         generate: usize,
         width: usize,
+        prefix: Option<PrefixId>,
     ) -> bool {
         let cap = self.cap_for_width(width);
         let depth = (prefill_len + generate).min(cap.max(prefill_len));
-        let projected = self.stream_bytes(depth);
         let limit = (self.cfg.capacity_bytes() as f64 * self.cfg.admit_oversub) as u64;
         let mut g = self.inner.lock().unwrap();
         if g.streams.contains_key(&id) {
@@ -326,6 +478,14 @@ impl KvManager {
             g.stats.admit_rejected += 1;
             return false;
         }
+        let warm = prefix
+            .map(|gid| {
+                g.radix
+                    .coverage_bytes(gid)
+                    .min(prefill_len as u64 * self.per_token_bytes)
+            })
+            .unwrap_or(0);
+        let projected = self.stream_bytes(depth).saturating_sub(warm);
         if g.admitted_bytes > 0 && g.admitted_bytes + projected > limit {
             g.stats.admit_rejected += 1;
             return false;
@@ -333,17 +493,7 @@ impl KvManager {
         g.admitted_bytes += projected;
         g.clock += 1;
         let clock = g.clock;
-        g.streams.insert(
-            id,
-            StreamEntry {
-                bytes: 0,
-                pages: 0,
-                resident: false,
-                pinned: false,
-                last_used: clock,
-                projected,
-            },
-        );
+        g.streams.insert(id, StreamEntry { projected, prefix, ..StreamEntry::fresh(clock) });
         g.stats.admitted += 1;
         true
     }
@@ -351,32 +501,60 @@ impl KvManager {
     /// A stream finished prefill: its KV becomes arena-resident (no swap
     /// charge — prefill writes the planes fresh). Auto-admits streams that
     /// skipped `try_admit` (single-engine setups without pool admission).
-    pub fn register(&self, id: RequestId, prefill_len: usize) {
-        let bytes = self.stream_bytes(prefill_len);
+    ///
+    /// With a `prefix`, the stream first attaches its prompt span in the
+    /// group's radix chain: pages a prefix-mate already faulted in are
+    /// referenced (a **prefix hit** — this stream never re-writes them),
+    /// only the chain extension allocates, and the stream's own pages back
+    /// just the private remainder (cross-attention memory, and later its
+    /// decode tail).
+    pub fn register(&self, id: RequestId, prefill_len: usize, prefix: Option<PrefixId>) {
+        let total = self.stream_bytes(prefill_len);
+        let shared = prefill_len as u64 * self.per_token_bytes;
         let mut g = self.inner.lock().unwrap();
         let inner = &mut *g;
         inner.clock += 1;
         let clock = inner.clock;
-        let e = inner.streams.entry(id).or_insert(StreamEntry {
-            bytes: 0,
-            pages: 0,
-            resident: false,
-            pinned: false,
-            last_used: clock,
-            projected: 0,
-        });
+        let e = inner.streams.entry(id).or_insert_with(|| StreamEntry::fresh(clock));
         e.last_used = clock;
         if e.projected == 0 {
-            e.projected = bytes;
-            inner.admitted_bytes += bytes;
+            e.projected = total;
+            inner.admitted_bytes += total;
             inner.stats.admitted += 1;
         }
-        inner.make_resident(id, bytes, &[id]);
+        let attach = match prefix {
+            // Re-registration of an already-attached stream must not
+            // double-reference its chain.
+            Some(gid) if e.shared_bytes == 0 && shared > 0 => {
+                e.prefix = Some(gid);
+                e.shared_bytes = shared;
+                Some(gid)
+            }
+            _ => None,
+        };
+        if let Some(gid) = attach {
+            let need = inner.radix.pages_needed(gid, shared);
+            if need > 0 && !inner.make_room(need, &[id]) {
+                inner.stats.forced_overcommit += 1;
+            }
+            let att = inner.radix.attach(gid, shared);
+            inner.arena.alloc_shared(att.new_pages);
+            if att.hit_pages > 0 {
+                inner.stats.prefix_hits += 1;
+            }
+            inner.stats.peak_used_pages =
+                inner.stats.peak_used_pages.max(inner.arena.used_pages());
+        }
+        let entry = *inner.streams.get(&id).expect("just inserted");
+        let private = self.private_bytes(prefill_len, &entry);
+        inner.make_resident(id, private, &[id]);
     }
 
     /// Bring every member of a decode group resident at its current depth
     /// and return the step's swap-in charge: each member that was evicted
-    /// re-streams its whole KV from DRAM before the step runs. Members are
+    /// re-streams its whole **private** KV from DRAM before the step runs
+    /// (shared prefix pages are refcount-pinned and never evicted, so a
+    /// warm prefix is never re-streamed). Members are
     /// protected from evicting each other AND pinned until
     /// [`KvManager::finish_group`] (or [`KvManager::release`]) — a
     /// concurrent worker's group must not evict pages an in-flight step is
@@ -388,30 +566,50 @@ impl KvManager {
         g.clock += 1;
         let clock = g.clock;
         for &(id, past_len) in members {
-            let bytes = self.stream_bytes(past_len);
-            let known = g.streams.get(&id).copied();
-            let entry = known.unwrap_or(StreamEntry {
-                bytes: 0,
-                pages: 0,
-                resident: false,
-                pinned: false,
-                last_used: clock,
-                projected: 0,
-            });
-            if known.is_none() {
+            if !g.streams.contains_key(&id) {
                 // Unregistered stream (defensive): admit + register silently.
+                let bytes = self.stream_bytes(past_len);
                 g.admitted_bytes += bytes;
                 g.stats.admitted += 1;
-                g.streams.insert(id, StreamEntry { projected: bytes, ..entry });
+                g.streams
+                    .insert(id, StreamEntry { projected: bytes, ..StreamEntry::fresh(clock) });
             }
+            // Copy-on-write at the divergence point: the first step whose
+            // depth outgrows an unaligned shared prefix duplicates the
+            // prefix's partial tail page into the private region (appends
+            // must never touch a page prefix-mates are reading). A
+            // page-aligned prefix appends in place and never forks.
+            let forked = {
+                let e = g.streams.get_mut(&id).expect("ensured above");
+                if e.shared_bytes > 0
+                    && !e.cow_forked
+                    && past_len as u64 * self.per_token_bytes > e.shared_bytes
+                    && e.shared_bytes % self.cfg.page_bytes != 0
+                {
+                    e.cow_forked = true;
+                    true
+                } else {
+                    false
+                }
+            };
+            if forked {
+                g.stats.cow_forks += 1;
+            }
+            let entry = *g.streams.get(&id).expect("ensured above");
+            // Only the private span needs this stream's pages; the shared
+            // prefix sits in its chain, pinned by refcounts and immune to
+            // eviction — which is also why a rejoining stream's swap-in
+            // charge covers private bytes alone: pages a prefix-mate
+            // faulted in are still resident and are never re-streamed.
+            let private = self.private_bytes(past_len, &entry);
             if !entry.resident && entry.bytes > 0 {
-                // Evicted stream rejoining: its resident KV swaps back in.
-                charge.swap_in_bytes += bytes;
+                // Evicted stream rejoining: its private KV swaps back in.
+                charge.swap_in_bytes += private;
                 charge.swap_ins += 1;
                 g.stats.swap_ins += 1;
-                g.stats.swap_in_bytes += bytes;
+                g.stats.swap_in_bytes += private;
             }
-            g.make_resident(id, bytes, &protect);
+            g.make_resident(id, private, &protect);
             if let Some(e) = g.streams.get_mut(&id) {
                 e.pinned = true;
             }
@@ -431,16 +629,42 @@ impl KvManager {
     }
 
     /// A stream is done (final token, cap-clamped to zero, or shed): free
-    /// its pages and release its admission reservation.
+    /// its private pages, detach from its prefix chain (chain spans free
+    /// only when *their last* reference drops — a prefix-mate keeps the
+    /// shared pages alive), and release its admission reservation.
+    ///
+    /// Idempotent by construction: the entry is removed first, so a
+    /// mid-prefill shed racing a prefix-mate's release (both paths call
+    /// this) can never double-free pages or double-detach the chain — the
+    /// second call finds nothing. Below that, the radix detach and the
+    /// arena's shared ledger saturate + `debug_assert` as a second line.
     pub fn release(&self, id: RequestId) {
         let mut g = self.inner.lock().unwrap();
         if let Some(e) = g.streams.remove(&id) {
             if e.resident {
                 g.arena.free(e.pages);
             }
+            if let Some(gid) = e.prefix {
+                if e.shared_bytes > 0 {
+                    let freed = g.radix.detach(gid, e.shared_bytes);
+                    g.arena.free_shared(freed);
+                }
+            }
             g.admitted_bytes = g.admitted_bytes.saturating_sub(e.projected);
             g.stats.released += 1;
         }
+    }
+
+    /// Pack parked streams' ceil-rounding page slack and return the pages
+    /// reclaimed ([`Inner::compact_parked`] — `make_room` also runs this
+    /// automatically before resorting to eviction).
+    pub fn compact(&self) -> usize {
+        self.inner.lock().unwrap().compact_parked(&[])
+    }
+
+    /// Arena pages currently backing shared prefix chains.
+    pub fn shared_pages(&self) -> usize {
+        self.inner.lock().unwrap().arena.shared_pages()
     }
 
     pub fn stats(&self) -> KvStats {
@@ -463,11 +687,18 @@ impl KvManager {
     /// found it ([`KvResidual::is_clean`]).
     pub fn residual(&self) -> KvResidual {
         let g = self.inner.lock().unwrap();
+        debug_assert_eq!(
+            g.arena.shared_pages(),
+            g.radix.shared_pages(),
+            "arena shared gauge diverged from the radix chains"
+        );
         KvResidual {
             live_streams: g.streams.len(),
             resident_pages: g.arena.used_pages(),
             admitted_bytes: g.admitted_bytes,
             pinned_streams: g.streams.values().filter(|e| e.pinned).count(),
+            shared_pages: g.arena.shared_pages(),
+            prefix_refs: g.radix.total_refs(),
         }
     }
 
@@ -487,6 +718,12 @@ impl KvManager {
             ("swap_in_bytes", Json::num(g.stats.swap_in_bytes as f64)),
             ("forced_overcommit", Json::num(g.stats.forced_overcommit as f64)),
             ("peak_used_pages", Json::num(g.stats.peak_used_pages as f64)),
+            // Prefix-sharing gauges/counters (ISSUE-named for report
+            // consumers; `kv_shared_pages` is current occupancy).
+            ("kv_prefix_hits", Json::num(g.stats.prefix_hits as f64)),
+            ("kv_shared_pages", Json::num(g.arena.shared_pages() as f64)),
+            ("kv_cow_forks", Json::num(g.stats.cow_forks as f64)),
+            ("compacted_pages", Json::num(g.stats.compacted_pages as f64)),
         ])
     }
 }
@@ -510,12 +747,12 @@ mod tests {
         // owns 2 pages and the arena fits exactly two streams.
         let (mgr, per_token) = tiny_mgr(4, KvQuant::Fp16, 8.0);
         assert_eq!(per_token, 512);
-        mgr.register(1, 8);
-        mgr.register(2, 8);
+        mgr.register(1, 8, None);
+        mgr.register(2, 8, None);
         assert_eq!(mgr.used_pages(), 4);
         // A third stream evicts the LRU (stream 1) — parked KV is never
         // free: it must be evicted, not forgotten.
-        mgr.register(3, 8);
+        mgr.register(3, 8, None);
         assert_eq!(mgr.used_pages(), 4);
         assert_eq!(mgr.stats().evictions, 1);
         // Stream 1 rejoins a step: swap-in charged for its whole KV, and
@@ -538,8 +775,8 @@ mod tests {
     #[test]
     fn group_members_protected_from_each_other() {
         let (mgr, _) = tiny_mgr(4, KvQuant::Fp16, 8.0);
-        mgr.register(1, 8);
-        mgr.register(2, 8); // arena exactly full with both
+        mgr.register(1, 8, None);
+        mgr.register(2, 8, None); // arena exactly full with both
         let c = mgr.prepare_group(&[(1, 8), (2, 8)]);
         assert_eq!(c.swap_ins, 0, "both resident, neither may evict the other");
         assert_eq!(mgr.stats().evictions, 0);
@@ -551,8 +788,8 @@ mod tests {
         // group's pages must survive another worker's room-making for the
         // whole step — overcommit is counted instead of a spurious evict.
         let (mgr, _) = tiny_mgr(4, KvQuant::Fp16, 8.0);
-        mgr.register(1, 8);
-        mgr.register(2, 8); // arena full
+        mgr.register(1, 8, None);
+        mgr.register(2, 8, None); // arena full
         let _ = mgr.prepare_group(&[(1, 8)]); // worker A: stream 1 in flight
         let _ = mgr.prepare_group(&[(3, 8)]); // worker B: evicts parked 2, not pinned 1
         assert_eq!(mgr.stats().evictions, 1);
@@ -573,22 +810,22 @@ mod tests {
         // 4 pages = 8 KiB at oversub 1.0; each stream projects 8 tokens
         // (4 prefill + 4 generate) × 512 B = 4 KiB.
         let (mgr, _) = tiny_mgr(4, KvQuant::Fp16, 1.0);
-        assert!(mgr.try_admit(1, 4, 4, 4));
-        assert!(mgr.try_admit(2, 4, 4, 4), "exactly at the bound still admits");
-        assert!(!mgr.try_admit(3, 4, 4, 4), "past the bound rejects");
+        assert!(mgr.try_admit(1, 4, 4, 4, None));
+        assert!(mgr.try_admit(2, 4, 4, 4, None), "exactly at the bound still admits");
+        assert!(!mgr.try_admit(3, 4, 4, 4, None), "past the bound rejects");
         assert_eq!(mgr.stats().admit_rejected, 1);
         mgr.release(1);
-        assert!(mgr.try_admit(3, 4, 4, 4), "released reservations free the bound");
+        assert!(mgr.try_admit(3, 4, 4, 4, None), "released reservations free the bound");
         // A live id can't be admitted twice — overwriting would orphan the
         // first stream's pages and reservation forever.
-        assert!(!mgr.try_admit(3, 4, 4, 4), "duplicate live id refused");
+        assert!(!mgr.try_admit(3, 4, 4, 4, None), "duplicate live id refused");
         mgr.release(3);
-        assert!(mgr.try_admit(3, 4, 4, 4), "released id is reusable");
+        assert!(mgr.try_admit(3, 4, 4, 4, None), "released id is reusable");
         // Projections clamp at the *class's* residency cap: an absurd ask
         // does not project bytes the engine will never allow, and a wide
         // class clamps tighter than a solo stream.
         let (mgr2, per_token) = tiny_mgr(1 << 16, KvQuant::Fp16, 1.0);
-        assert!(mgr2.try_admit(7, 4, usize::MAX / 2, 1));
+        assert!(mgr2.try_admit(7, 4, usize::MAX / 2, 1, None));
         let hw = HwConfig::default();
         let m = ModelConfig::tiny();
         let cap_b1 = GbBudget::max_decode_len_quant(&hw, &m, 1, KvQuant::Fp16);
@@ -600,7 +837,7 @@ mod tests {
             let g = mgr2.inner.lock().unwrap();
             assert_eq!(g.admitted_bytes, cap_b1 as u64 * per_token);
         }
-        assert!(mgr2.try_admit(8, 4, usize::MAX / 2, 4));
+        assert!(mgr2.try_admit(8, 4, usize::MAX / 2, 4, None));
         let g = mgr2.inner.lock().unwrap();
         assert_eq!(g.admitted_bytes, (cap_b1 + cap_b4) as u64 * per_token);
     }
@@ -608,7 +845,7 @@ mod tests {
     #[test]
     fn oversized_group_overcommits_instead_of_deadlocking() {
         let (mgr, _) = tiny_mgr(1, KvQuant::Fp16, 8.0);
-        mgr.register(1, 100); // 50 KiB into a 2 KiB arena
+        mgr.register(1, 100, None); // 50 KiB into a 2 KiB arena
         assert!(mgr.stats().forced_overcommit >= 1);
         assert!(mgr.used_pages() > 1);
         mgr.release(1);
@@ -619,12 +856,12 @@ mod tests {
     fn residual_tracks_holdings_and_is_clean_after_drain() {
         let (mgr, _) = tiny_mgr(4, KvQuant::Fp16, 8.0);
         assert!(mgr.residual().is_clean(), "fresh manager holds nothing");
-        assert!(mgr.try_admit(1, 4, 4, 1));
+        assert!(mgr.try_admit(1, 4, 4, 1, None));
         let r = mgr.residual();
         assert_eq!(r.live_streams, 1);
         assert!(r.admitted_bytes > 0, "admission reserves projection bytes");
         assert!(!r.is_clean());
-        mgr.register(1, 8);
+        mgr.register(1, 8, None);
         let _ = mgr.prepare_group(&[(1, 8)]);
         let pinned = mgr.residual();
         assert_eq!(pinned.pinned_streams, 1, "in-flight group pins its member");
@@ -633,6 +870,161 @@ mod tests {
         assert_eq!(mgr.residual().pinned_streams, 0, "parked after the step");
         assert!(mgr.residual().resident_pages > 0, "parked keeps pages");
         mgr.release(1);
+        assert!(mgr.residual().is_clean(), "{:?}", mgr.residual());
+    }
+
+    #[test]
+    fn prefix_mates_share_one_physical_prefix() {
+        use crate::kv::radix::prefix_id;
+        // tiny @ fp16: 512 B/token, 2 KiB pages, no cross-attention. An
+        // 8-token prefix is exactly 2 pages.
+        let (mgr, _) = tiny_mgr(64, KvQuant::Fp16, 8.0);
+        let g = prefix_id("sys");
+        for id in 0..8 {
+            mgr.register(id, 8, Some(g));
+        }
+        // One shared copy + 8 one-page private floors: ~O(unique tokens),
+        // not O(streams).
+        assert_eq!(mgr.shared_pages(), 2);
+        assert_eq!(mgr.used_pages(), 2 + 8);
+        assert_eq!(mgr.stats().prefix_hits, 7, "every mate after the first is warm");
+        // No-share baseline: the same fleet pays 8 full copies.
+        let (base, _) = tiny_mgr(64, KvQuant::Fp16, 8.0);
+        for id in 0..8 {
+            base.register(id, 8, None);
+        }
+        assert_eq!(base.used_pages(), 16);
+        // Shared pages free only when the LAST mate releases.
+        for id in 0..7 {
+            mgr.release(id);
+        }
+        assert_eq!(mgr.shared_pages(), 2, "one mate still pins the chain");
+        mgr.release(7);
+        assert!(mgr.residual().is_clean(), "{:?}", mgr.residual());
+    }
+
+    #[test]
+    fn cow_forks_only_past_an_unaligned_prefix() {
+        use crate::kv::radix::prefix_id;
+        let (mgr, per_token) = tiny_mgr(64, KvQuant::Fp16, 8.0);
+        let g = prefix_id("sys");
+        // 5-token prefix = 2560 B: 1.25 pages — the boundary is unaligned.
+        mgr.register(1, 5, Some(g));
+        mgr.register(2, 5, Some(g));
+        assert_eq!(mgr.shared_pages(), 2);
+        // Depth 5 hasn't outgrown the prefix: no fork yet.
+        let c = mgr.prepare_group(&[(1, 5)]);
+        assert_eq!(c.swap_ins, 0);
+        mgr.finish_group(&[(1, 5)]);
+        assert_eq!(mgr.stats().cow_forks, 0);
+        // Depth 6 outgrows it: stream 1 forks; its private bytes cover the
+        // duplicated fragment + the new token (6×512 − floor_page(2560)).
+        let _ = mgr.prepare_group(&[(1, 6)]);
+        mgr.finish_group(&[(1, 6)]);
+        assert_eq!(mgr.stats().cow_forks, 1);
+        let fragment_and_token = 6 * per_token - 2048;
+        assert_eq!(fragment_and_token, 1024);
+        // Stream 2 hasn't diverged; the chain is untouched by the fork.
+        assert_eq!(mgr.shared_pages(), 2);
+        // A page-aligned prefix appends in place and never forks.
+        let (mgr2, _) = tiny_mgr(64, KvQuant::Fp16, 8.0);
+        mgr2.register(3, 8, Some(prefix_id("aligned"))); // 4096 B = 2 pages
+        let _ = mgr2.prepare_group(&[(3, 12)]);
+        mgr2.finish_group(&[(3, 12)]);
+        assert_eq!(mgr2.stats().cow_forks, 0);
+    }
+
+    #[test]
+    fn evicted_prefix_mate_swaps_in_private_bytes_only() {
+        use crate::kv::radix::prefix_id;
+        // 8 pages: shared prefix (2) + both mates' tails can't all fit
+        // once the tails grow — the tails churn, the chain never does.
+        let (mgr, per_token) = tiny_mgr(8, KvQuant::Fp16, 16.0);
+        let g = prefix_id("sys");
+        mgr.register(1, 8, Some(g)); // 2 shared pages + 1 private floor
+        mgr.register(2, 8, Some(g)); // + 1 private floor
+        assert_eq!(mgr.used_pages(), 4);
+        // Stream 2 decodes to depth 16: its private tail is (16−8)×512 =
+        // 2 pages. Then stream 1's tail grows until stream 2 is evicted.
+        let _ = mgr.prepare_group(&[(2, 16)]);
+        mgr.finish_group(&[(2, 16)]);
+        let _ = mgr.prepare_group(&[(1, 24)]);
+        mgr.finish_group(&[(1, 24)]);
+        let _ = mgr.prepare_group(&[(1, 26)]);
+        mgr.finish_group(&[(1, 26)]);
+        assert!(mgr.stats().evictions >= 1, "{:?}", mgr.stats());
+        // Stream 2 rejoins at its parked depth: swap-in covers its PRIVATE
+        // tail only — the 8-token shared prefix stayed resident throughout.
+        let c = mgr.prepare_group(&[(2, 16)]);
+        assert_eq!(c.swap_ins, 1);
+        assert_eq!(c.swap_in_bytes, (16 - 8) * per_token);
+        assert_eq!(mgr.shared_pages(), 2, "the chain never evicts");
+        mgr.finish_group(&[(2, 16)]);
+        mgr.release(1);
+        mgr.release(2);
+        assert!(mgr.residual().is_clean(), "{:?}", mgr.residual());
+    }
+
+    #[test]
+    fn warm_prefix_admission_projects_private_bytes_only() {
+        use crate::kv::radix::prefix_id;
+        // 4 pages = 8 KiB at oversub 1.0; a full stream projects 8 tokens
+        // (4 prefill + 4 generate) × 512 B = 4 KiB, so only 2 cold streams
+        // fit — but warm prefix-mates discount the resident 2 KiB prompt.
+        let (mgr, _) = tiny_mgr(4, KvQuant::Fp16, 1.0);
+        let g = prefix_id("sys");
+        assert!(mgr.try_admit(1, 4, 4, 4, Some(g)), "cold: projects full bytes");
+        mgr.register(1, 4, Some(g));
+        assert!(mgr.try_admit(2, 4, 4, 4, Some(g)));
+        assert!(mgr.try_admit(3, 4, 4, 4, Some(g)), "warm mates project tails only");
+        assert!(!mgr.try_admit(4, 4, 4, 4, Some(g)), "the bound still binds");
+        // Without the prefix the third stream would have been refused
+        // (`admission_bounds_projected_bytes` pins that baseline).
+        for id in 1..=3 {
+            mgr.release(id);
+        }
+        assert!(mgr.residual().is_clean(), "{:?}", mgr.residual());
+    }
+
+    #[test]
+    fn compactor_reclaims_ceil_rounding_slack() {
+        let (mgr, _) = tiny_mgr(64, KvQuant::Fp16, 8.0);
+        // Three parked 5-token streams: 2560 B each rounds to 2 pages (6
+        // total), but packed end-to-end 7680 B needs only 4.
+        for id in 0..3 {
+            mgr.register(id, 5, None);
+        }
+        assert_eq!(mgr.used_pages(), 6);
+        assert_eq!(mgr.compact(), 2);
+        assert_eq!(mgr.used_pages(), 4);
+        assert_eq!(mgr.stats().compacted_pages, 2);
+        // A compacted stream is still resident: rejoining charges no
+        // swap-in and re-grows its page count in place.
+        let c = mgr.prepare_group(&[(0, 5)]);
+        assert_eq!(c.swap_ins, 0);
+        mgr.finish_group(&[(0, 5)]);
+        for id in 0..3 {
+            mgr.release(id);
+        }
+        assert!(mgr.residual().is_clean(), "{:?}", mgr.residual());
+    }
+
+    #[test]
+    fn double_release_of_a_prefix_mate_is_harmless() {
+        use crate::kv::radix::prefix_id;
+        // A mid-prefill shed racing the normal release path calls
+        // `release` twice for one id; the second must be a no-op, never a
+        // double-free of the shared chain.
+        let (mgr, _) = tiny_mgr(16, KvQuant::Fp16, 8.0);
+        let g = prefix_id("sys");
+        mgr.register(1, 8, Some(g));
+        mgr.register(2, 8, Some(g));
+        mgr.release(1);
+        mgr.release(1);
+        assert_eq!(mgr.shared_pages(), 2, "mate 2 still pins the chain");
+        assert_eq!(mgr.stats().released, 1, "second release found nothing");
+        mgr.release(2);
+        mgr.release(2);
         assert!(mgr.residual().is_clean(), "{:?}", mgr.residual());
     }
 

@@ -16,7 +16,13 @@
 //!   concurrent generate streams by projected arena bytes, parked streams
 //!   keep their pages (never free), LRU eviction makes room, and an evicted
 //!   stream rejoining a step is charged swap-in EMA for its whole resident
-//!   KV before the step runs.
+//!   **private** KV before the step runs.
+//! * [`radix::RadixIndex`] — the prefix-sharing layer: streams carrying a
+//!   `prefix_group` identity attach to a refcounted chain of page spans, so
+//!   N streams of one prompt keep ONE physical prefix copy (arena bytes
+//!   grow ~O(unique tokens), not O(streams)), fork copy-on-write when
+//!   decode outgrows an unaligned prefix, and free shared pages only when
+//!   the last reference drops.
 //!
 //! The serving integration: `Engine` registers streams at prefill, calls
 //! [`manager::KvManager::prepare_group`] before every decode step, and
@@ -28,6 +34,7 @@
 pub mod arena;
 pub mod manager;
 pub mod quant;
+pub mod radix;
 
 /// Most streams one decode step batches — the chip's four-up plane slicing.
 /// `coordinator::engine::MAX_DECODE_GROUP` re-exports this; the arena sizes
@@ -37,3 +44,4 @@ pub const MAX_GROUP_STREAMS: usize = 4;
 pub use arena::KvArena;
 pub use manager::{KvArenaConfig, KvManager, KvResidual, KvStats, StepCharge};
 pub use quant::KvQuant;
+pub use radix::{prefix_id, PrefixId, RadixIndex};

@@ -1,0 +1,286 @@
+//! Radix prefix index over resident KV: refcounted page spans shared by
+//! every stream of one prefix group.
+//!
+//! Streams that share a prompt prefix (the trace format's `prefix_group`
+//! tag) write byte-identical self-attention KV for the shared tokens. The
+//! index keys that identity the way `PassKey{past_len}` keys the
+//! `SimCache`: a [`PrefixId`] (FNV-1a of the tag) names the group, and the
+//! group's resident prefix is a **chain of page spans** ordered from token
+//! 0 outward — the radix structure degenerates to a chain because every
+//! member shares from the root, but spans still split at page boundaries
+//! when members attach at different prefill depths, so a group holds one
+//! physical copy of its longest resident prefix and each member refcounts
+//! exactly the pages its own prefill covers.
+//!
+//! Invariant the chain maintains: refcounts are **monotone non-increasing
+//! from the root outward** (every attachment spans `[0, bytes)`), so a
+//! span can only hit zero references at the tail — frees are tail-first
+//! and a zero-ref interior span is structurally impossible. Decrements
+//! saturate and `debug_assert` instead of underflowing: a shed racing a
+//! prefix-mate's release must never double-free a shared page.
+//!
+//! The index counts pages; the [`super::arena::KvArena`] owns the
+//! occupancy ledger (the manager moves `Attach::new_pages` /
+//! [`RadixIndex::detach`] results through `alloc_shared` / `free_shared`).
+
+use std::collections::HashMap;
+
+/// Hashed prefix-group identity (FNV-1a of the trace tag).
+pub type PrefixId = u64;
+
+/// FNV-1a hash of a prefix-group tag — the stable, dependency-free way a
+/// trace tag (or any prompt identity string) becomes a [`PrefixId`].
+pub fn prefix_id(tag: &str) -> PrefixId {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in tag.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One refcounted page span of a group's prefix chain: pages
+/// `[start_page, end_page)` counted from the prefix root, pinned by
+/// `refs` attached streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Span {
+    start_page: usize,
+    end_page: usize,
+    refs: usize,
+}
+
+impl Span {
+    fn pages(&self) -> usize {
+        self.end_page - self.start_page
+    }
+}
+
+/// One group's resident prefix: spans ordered root-outward, contiguous
+/// from page 0 to the chain's coverage.
+#[derive(Debug, Default)]
+struct Chain {
+    spans: Vec<Span>,
+}
+
+impl Chain {
+    /// Pages the chain currently keeps resident.
+    fn covered_pages(&self) -> usize {
+        self.spans.last().map_or(0, |s| s.end_page)
+    }
+}
+
+/// What one attachment found and claimed.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Attach {
+    /// Pages newly allocated for this stream (the chain extension past
+    /// what was already resident) — the arena must have room for these.
+    pub new_pages: usize,
+    /// Pages that were already resident and are now additionally
+    /// referenced — the prefix-hit bytes this stream never re-writes.
+    pub hit_pages: usize,
+}
+
+/// Prefix-sharing index over the KV arena (see module docs).
+#[derive(Debug)]
+pub struct RadixIndex {
+    page_bytes: u64,
+    groups: HashMap<PrefixId, Chain>,
+}
+
+impl RadixIndex {
+    pub fn new(page_bytes: u64) -> RadixIndex {
+        RadixIndex { page_bytes: page_bytes.max(1), groups: HashMap::new() }
+    }
+
+    /// Pages `[0, bytes)` of a prefix touches (no minimum — a zero-byte
+    /// prefix shares nothing, unlike a live stream's one-page floor).
+    fn pages_spanned(&self, bytes: u64) -> usize {
+        bytes.div_ceil(self.page_bytes) as usize
+    }
+
+    /// Pages an `attach(group, bytes)` would need to newly allocate —
+    /// the manager makes arena room for exactly this before attaching.
+    pub fn pages_needed(&self, group: PrefixId, bytes: u64) -> usize {
+        let want = self.pages_spanned(bytes);
+        let covered = self.groups.get(&group).map_or(0, |c| c.covered_pages());
+        want.saturating_sub(covered)
+    }
+
+    /// Resident prefix bytes of a group (page-granular) — what a warm
+    /// admission projection may discount.
+    pub fn coverage_bytes(&self, group: PrefixId) -> u64 {
+        self.groups.get(&group).map_or(0, |c| c.covered_pages() as u64 * self.page_bytes)
+    }
+
+    /// Attach a stream to its group's prefix for `[0, bytes)`: reference
+    /// every covered span (splitting the span straddling the boundary at
+    /// the page line), extend the chain for pages past coverage. Returns
+    /// what was claimed; the caller owns moving `new_pages` through the
+    /// arena's shared ledger.
+    pub fn attach(&mut self, group: PrefixId, bytes: u64) -> Attach {
+        let want = self.pages_spanned(bytes);
+        if want == 0 {
+            return Attach::default();
+        }
+        let chain = self.groups.entry(group).or_default();
+        let covered = chain.covered_pages();
+        let hit = want.min(covered);
+        // Reference (and split if straddled) the covered part.
+        let mut i = 0;
+        while i < chain.spans.len() {
+            let s = chain.spans[i];
+            if s.end_page <= want {
+                chain.spans[i].refs += 1;
+            } else if s.start_page < want {
+                // Straddles the boundary: split at the page line so the
+                // tail keeps its original refs and only `[start, want)`
+                // gains this stream.
+                chain.spans[i] = Span { start_page: s.start_page, end_page: want, refs: s.refs + 1 };
+                chain.spans.insert(i + 1, Span { start_page: want, end_page: s.end_page, refs: s.refs });
+                break;
+            } else {
+                break;
+            }
+            i += 1;
+        }
+        // Extend past coverage: the new tail belongs to this stream alone.
+        let new_pages = want.saturating_sub(covered);
+        if new_pages > 0 {
+            chain.spans.push(Span { start_page: covered, end_page: want, refs: 1 });
+        }
+        Attach { new_pages, hit_pages: hit }
+    }
+
+    /// Detach a stream from `[0, bytes)` of its group's prefix: decrement
+    /// every covered span (saturating — a double-detach racing a
+    /// prefix-mate's release must not underflow a live span's count) and
+    /// free zero-ref tail spans. Returns the pages freed; the caller
+    /// gives them back to the arena's shared ledger.
+    pub fn detach(&mut self, group: PrefixId, bytes: u64) -> usize {
+        let want = self.pages_spanned(bytes);
+        let Some(chain) = self.groups.get_mut(&group) else {
+            debug_assert!(want == 0, "detach from an unknown prefix group");
+            return 0;
+        };
+        for s in chain.spans.iter_mut() {
+            if s.end_page <= want {
+                debug_assert!(s.refs > 0, "detach underflow: shared span already at zero refs");
+                s.refs = s.refs.saturating_sub(1);
+            }
+        }
+        // Root-monotone refcounts mean zero-ref spans pool at the tail.
+        let mut freed = 0;
+        while chain.spans.last().is_some_and(|s| s.refs == 0) {
+            freed += chain.spans.pop().expect("checked last").pages();
+        }
+        debug_assert!(
+            chain.spans.iter().all(|s| s.refs > 0),
+            "zero-ref interior span survived a detach: {:?}",
+            chain.spans
+        );
+        if chain.spans.is_empty() {
+            self.groups.remove(&group);
+        }
+        freed
+    }
+
+    /// Pages currently pinned by any prefix chain (the arena's shared
+    /// gauge must agree with this).
+    pub fn shared_pages(&self) -> usize {
+        self.groups.values().map(|c| c.spans.iter().map(Span::pages).sum::<usize>()).sum()
+    }
+
+    /// Total stream references across every span — zero after a full
+    /// drain, or somebody leaked an attachment.
+    pub fn total_refs(&self) -> usize {
+        self.groups.values().flat_map(|c| c.spans.iter()).map(|s| s.refs).sum()
+    }
+
+    /// Live prefix groups holding resident pages.
+    pub fn groups(&self) -> usize {
+        self.groups.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_id_is_stable_and_distinguishes_tags() {
+        assert_eq!(prefix_id("sys-a"), prefix_id("sys-a"));
+        assert_ne!(prefix_id("sys-a"), prefix_id("sys-b"));
+        assert_ne!(prefix_id(""), prefix_id("g0"));
+    }
+
+    #[test]
+    fn attach_shares_pages_and_extends_tail() {
+        let mut idx = RadixIndex::new(2048);
+        let g = prefix_id("g0");
+        // First stream: 3 pages, all new.
+        let a = idx.attach(g, 3 * 2048);
+        assert_eq!((a.new_pages, a.hit_pages), (3, 0));
+        assert_eq!(idx.shared_pages(), 3);
+        // Prefix-mate at the same depth: pure hit.
+        let b = idx.attach(g, 3 * 2048);
+        assert_eq!((b.new_pages, b.hit_pages), (0, 3));
+        assert_eq!(idx.shared_pages(), 3, "one physical copy");
+        // Deeper mate extends the chain by the uncovered tail only.
+        let c = idx.attach(g, 5 * 2048);
+        assert_eq!((c.new_pages, c.hit_pages), (2, 3));
+        assert_eq!(idx.shared_pages(), 5);
+        assert_eq!(idx.total_refs(), 4, "[0,3) holds 3 refs, the [3,5) tail 1");
+        assert_eq!(idx.coverage_bytes(g), 5 * 2048);
+    }
+
+    #[test]
+    fn shallow_attach_splits_at_the_page_line() {
+        let mut idx = RadixIndex::new(2048);
+        let g = prefix_id("g0");
+        idx.attach(g, 4 * 2048);
+        // A mate covering only 1.5 pages references the 2 pages its bytes
+        // touch; the untouched tail keeps a single owner.
+        let a = idx.attach(g, 3 * 1024);
+        assert_eq!((a.new_pages, a.hit_pages), (0, 2));
+        idx.detach(g, 4 * 2048);
+        // First stream gone: only the shallow mate's 2 pages stay pinned.
+        assert_eq!(idx.shared_pages(), 2);
+        idx.detach(g, 3 * 1024);
+        assert_eq!(idx.shared_pages(), 0);
+        assert_eq!(idx.total_refs(), 0);
+        assert_eq!(idx.groups(), 0, "drained group leaves no chain behind");
+    }
+
+    #[test]
+    fn detach_frees_only_at_zero_and_saturates() {
+        let mut idx = RadixIndex::new(2048);
+        let g = prefix_id("shared");
+        idx.attach(g, 2 * 2048);
+        idx.attach(g, 2 * 2048);
+        assert_eq!(idx.detach(g, 2 * 2048), 0, "mate still pinned");
+        assert_eq!(idx.detach(g, 2 * 2048), 2, "last ref frees the pages");
+        // Detaching from a drained group is a harmless no-op.
+        assert_eq!(idx.detach(g, 0), 0);
+        assert_eq!(idx.shared_pages(), 0);
+    }
+
+    #[test]
+    fn zero_bytes_attach_nothing() {
+        let mut idx = RadixIndex::new(2048);
+        let a = idx.attach(prefix_id("g"), 0);
+        assert_eq!((a.new_pages, a.hit_pages), (0, 0));
+        assert_eq!(idx.groups(), 0);
+    }
+
+    #[test]
+    fn groups_are_independent() {
+        let mut idx = RadixIndex::new(2048);
+        idx.attach(prefix_id("a"), 2 * 2048);
+        idx.attach(prefix_id("b"), 3 * 2048);
+        assert_eq!(idx.shared_pages(), 5);
+        assert_eq!(idx.pages_needed(prefix_id("a"), 4 * 2048), 2);
+        assert_eq!(idx.pages_needed(prefix_id("b"), 2 * 2048), 0);
+        assert_eq!(idx.detach(prefix_id("a"), 2 * 2048), 2);
+        assert_eq!(idx.shared_pages(), 3);
+    }
+}

@@ -13,8 +13,11 @@
 //!    terminal state (completed or shed), via the lifecycle ledger
 //!    ([`crate::coordinator::ServerMetrics::ledger_audit`]).
 //! 2. **Zero KV residual** — after the drain, the arena holds no live
-//!    streams, resident pages, reservations, or pins
-//!    ([`crate::kv::KvManager::residual`]).
+//!    streams, resident pages, reservations, pins, shared prefix pages,
+//!    or dangling prefix refcounts ([`crate::kv::KvManager::residual`]).
+//!    Schedules mix `prefix_group` tags into their requests, so the
+//!    refcount-conservation of the radix prefix chains is checked under
+//!    every interleaving — sheds racing prefix-mates' releases included.
 //! 3. **Token ordering** — no token event is emitted after its stream
 //!    sheds, and none belongs to a request that was never admitted.
 //! 4. **Fault attribution** — the pool only reports worker errors when the
@@ -48,6 +51,11 @@ pub struct ReqSpec {
     /// Payload one row short — the engine fails the batch at plane
     /// assembly, exercising the shed path (and shedding batch mates).
     pub malformed: bool,
+    /// Shared-prompt tag index (`g0`, `g1`, …): requests sharing it attach
+    /// to one refcounted KV prefix — the refcount-conservation invariant
+    /// (zero shared pages / refs after drain) only bites when schedules
+    /// actually share.
+    pub prefix_group: Option<u8>,
 }
 
 /// One fuzz iteration: pool knobs + request schedule, derived from a seed.
@@ -97,6 +105,10 @@ impl Scenario {
         let admit_oversub = [1.0, 4.0, 8.0][rng.below(3)];
         let early_shutdown = rng.f64() < 0.2;
         let drop_tokens = rng.f64() < 0.3;
+        // 0 disables sharing for this scenario; otherwise requests draw
+        // from a small tag pool so prefix-mates actually collide (sheds
+        // racing a mate's release is the refcount path worth fuzzing).
+        let prefix_groups = rng.below(4) as u8;
         let n = 4 + rng.below(21);
         let reqs = (0..n as u64)
             .map(|id| {
@@ -106,12 +118,18 @@ impl Scenario {
                 } else {
                     1 + rng.below(max_seq)
                 };
+                let prefix_group = if prefix_groups > 0 && rng.f64() < 0.5 {
+                    Some(rng.below(prefix_groups as usize) as u8)
+                } else {
+                    None
+                };
                 ReqSpec {
                     id,
                     gap_us: rng.below(400) as u64,
                     len,
                     generate: if rng.f64() < 0.5 { 0 } else { 1 + rng.below(6) },
                     malformed: rng.f64() < 0.10,
+                    prefix_group,
                 }
             })
             .collect();
@@ -160,7 +178,7 @@ impl Scenario {
     /// entries annotated as comments — the format itself has no fault
     /// fields).
     pub fn snippet(reqs: &[ReqSpec]) -> String {
-        let mut out = String::from("# id arrival_us class prompt_len gen_len\n");
+        let mut out = String::from("# id arrival_us class prompt_len gen_len [prefix_group]\n");
         let mut t = 0u64;
         for r in reqs {
             t += r.gap_us;
@@ -168,7 +186,11 @@ impl Scenario {
                 out.push_str("# next request submits a malformed payload (one row short)\n");
             }
             let class = if r.generate > 0 { "chat" } else { "embed" };
-            out.push_str(&format!("{} {} {} {} {}\n", r.id, t, class, r.len, r.generate));
+            out.push_str(&format!("{} {} {} {} {}", r.id, t, class, r.len, r.generate));
+            if let Some(g) = r.prefix_group {
+                out.push_str(&format!(" g{g}"));
+            }
+            out.push('\n');
         }
         out
     }
@@ -360,6 +382,9 @@ fn exec(sc: &Scenario, reqs: &[ReqSpec]) -> Vec<String> {
         if spec.generate > 0 {
             req = req.with_generate(spec.generate);
         }
+        if let Some(g) = spec.prefix_group {
+            req = req.with_prefix_group(crate::kv::prefix_id(&format!("g{g}")));
+        }
         submitter.try_submit(req).is_ok()
     };
     for spec in &reqs[..cutoff] {
@@ -464,13 +489,39 @@ mod tests {
     #[test]
     fn snippet_renders_trace_format_lines() {
         let reqs = vec![
-            ReqSpec { id: 0, gap_us: 10, len: 4, generate: 2, malformed: false },
-            ReqSpec { id: 1, gap_us: 5, len: 8, generate: 0, malformed: true },
+            ReqSpec {
+                id: 0,
+                gap_us: 10,
+                len: 4,
+                generate: 2,
+                malformed: false,
+                prefix_group: Some(1),
+            },
+            ReqSpec { id: 1, gap_us: 5, len: 8, generate: 0, malformed: true, prefix_group: None },
         ];
         let s = Scenario::snippet(&reqs);
-        assert!(s.contains("0 10 chat 4 2"), "{s}");
-        assert!(s.contains("1 15 embed 8 0"), "{s}");
+        assert!(s.contains("0 10 chat 4 2 g1"), "{s}");
+        assert!(s.contains("1 15 embed 8 0\n"), "{s}");
         assert!(s.contains("# next request submits a malformed payload"), "{s}");
+    }
+
+    #[test]
+    fn schedules_actually_mix_prefix_groups() {
+        // The refcount invariant is vacuous if no scenario ever shares a
+        // prefix; make sure the generator produces collisions somewhere in
+        // a small seed range.
+        let mut shared = 0usize;
+        for seed in 0..32u64 {
+            let sc = Scenario::from_seed(seed);
+            let mut tags: Vec<u8> = sc.reqs.iter().filter_map(|r| r.prefix_group).collect();
+            tags.sort_unstable();
+            let before = tags.len();
+            tags.dedup();
+            if before > tags.len() {
+                shared += 1;
+            }
+        }
+        assert!(shared > 0, "no seed in 0..32 produced prefix-mates");
     }
 
     #[test]

@@ -20,10 +20,12 @@
 //!   overloads the pool and goodput / shed rate / tail latency under
 //!   pressure become measurable (surfaced by the `fig11_replay` bench).
 //! * [`fuzz`] — the seeded scenario fuzzer: random pool configs × random
-//!   request schedules, property-checked against scheduler invariants
-//!   (request conservation via the lifecycle ledger, zero KV residual
-//!   after drain, no token events after a stream sheds). Failures print
-//!   the scenario seed + a minimized trace snippet.
+//!   request schedules (including shared `prefix_group` tags, so the radix
+//!   prefix index's refcounts are exercised under every interleaving),
+//!   property-checked against scheduler invariants (request conservation
+//!   via the lifecycle ledger, zero KV residual after drain, no token
+//!   events after a stream sheds). Failures print the scenario seed + a
+//!   minimized trace snippet.
 
 pub mod fuzz;
 pub mod replay;

@@ -16,6 +16,7 @@
 
 use crate::coordinator::{RequestId, ServerHandle};
 use crate::coordinator::request::Request;
+use crate::kv::prefix_id;
 use crate::util::json::Json;
 use crate::util::stats::percentile;
 use crate::workload::trace_file::Trace;
@@ -151,6 +152,11 @@ pub fn replay(handle: &ServerHandle, trace: &Trace, cfg: &ReplayConfig) -> Repla
             Request::new(rec.id, rec.prompt_len, vec![0.1; rec.prompt_len * cfg.d_model]);
         if rec.gen_len > 0 {
             req = req.with_generate(rec.gen_len);
+        }
+        if let Some(tag) = &rec.prefix_group {
+            // Records sharing a tag share one physical KV prefix in the
+            // arena — trace replays exercise the radix index for real.
+            req = req.with_prefix_group(prefix_id(tag));
         }
         match handle.try_submit(req) {
             Ok(()) => {

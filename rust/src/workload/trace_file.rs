@@ -30,9 +30,11 @@
 //! The parser is hand-rolled (zero deps, the offline-crate rule) and
 //! rejects with **line-numbered, field-named errors** — a malformed trace
 //! must tell the operator exactly which line and field to fix, never
-//! panic, and never silently skip records. `prefix_group` is carried for
-//! the prefix-sharing radix-KV roadmap item; the replay driver does not
-//! exploit it yet.
+//! panic, and never silently skip records. `prefix_group` names the
+//! shared-prompt identity the replay driver hashes
+//! ([`crate::kv::prefix_id`]) and submits with each request, so records
+//! sharing a tag attach to ONE physical KV prefix in the arena's radix
+//! index instead of each paying a copy.
 
 use std::collections::HashSet;
 use std::fmt;
@@ -50,7 +52,9 @@ pub struct TraceRecord {
     pub prompt_len: usize,
     /// Decode budget (0 = encode-only).
     pub gen_len: usize,
-    /// Optional shared-prompt-prefix tag (reserved: radix-KV roadmap item).
+    /// Optional shared-prompt-prefix tag: records sharing it share one
+    /// refcounted KV prefix (hashed into the submitted request's
+    /// `prefix_group` by the replay driver).
     pub prefix_group: Option<String>,
 }
 

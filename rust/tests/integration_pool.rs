@@ -458,6 +458,56 @@ fn kv_arena_evicts_and_charges_swap_in_across_concurrent_streams() {
     assert_eq!(kv.live_streams(), 0, "all streams released on completion");
 }
 
+#[test]
+fn prefix_shared_pool_outputs_match_private_and_use_fewer_pages() {
+    // Tentpole acceptance: prefix sharing is accounting-only. The same
+    // generate workload run with and without a shared `prefix_group` tag
+    // must produce byte-identical per-request outputs (COW forks never
+    // touch numerics), while the shared run's arena peak stays well below
+    // the no-share run's O(N) footprint.
+    let hw = HwConfig::default();
+    let pm = ModelConfig::tiny();
+    let n = 8u64;
+    let gen = 6usize;
+    // 6 tokens of fp16 KV straddle a page on the tiny geometry, so every
+    // stream decoding past the prefix COW-forks the partial tail page.
+    let len = 6usize;
+    let run = |share: bool| {
+        let cfg = KvArenaConfig::for_pool(&hw, &pm, KvQuant::Fp16, Some(256));
+        let kv = Arc::new(KvManager::new(&hw, &pm, cfg));
+        let handle = start_kv(1, Arc::clone(&kv), Duration::from_millis(1));
+        for i in 0..n {
+            let mut req = Request::new(i, len, vec![0.3; len * D]).with_generate(gen);
+            if share {
+                req = req.with_prefix_group(trex::kv::prefix_id("shared-sys-prompt"));
+            }
+            handle.submit(req).unwrap();
+        }
+        let mut out = BTreeMap::new();
+        for _ in 0..n {
+            let r = handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+            out.insert(r.id, (r.output, r.tokens_generated));
+        }
+        handle.shutdown().unwrap();
+        let residual = kv.residual();
+        assert!(residual.is_clean(), "leak after drain: {residual:?}");
+        (out, kv.stats())
+    };
+    let (shared_out, shared_kv) = run(true);
+    let (private_out, private_kv) = run(false);
+    assert_eq!(shared_out, private_out, "sharing must not change any stream's results");
+    assert!(
+        shared_kv.peak_used_pages < private_kv.peak_used_pages,
+        "shared peak {} must undercut the no-share {} pages",
+        shared_kv.peak_used_pages,
+        private_kv.peak_used_pages
+    );
+    assert_eq!(shared_kv.prefix_hits, n - 1, "every mate after the first hits the chain");
+    assert!(shared_kv.cow_forks > 0, "unaligned prefix must fork on decode: {shared_kv:?}");
+    assert_eq!(private_kv.prefix_hits, 0);
+    assert_eq!(private_kv.cow_forks, 0);
+}
+
 /// Pool with the scheduler knobs set (1 worker unless stated — the
 /// single-worker pop sequence is what makes these tests deterministic).
 fn sched_pool(
