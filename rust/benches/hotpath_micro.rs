@@ -3,18 +3,28 @@
 //! plus the decode-step **plan-vs-rebuild** comparison (BENCH_5.json): the
 //! per-token harness cost of the compiled `StepPlan` path against the
 //! rebuild-and-rewalk path it replaces, with heap-allocation counts from a
-//! counting global allocator. `--test` runs the plan section only and
-//! asserts the plan path is ≥ 5× faster with zero steady-state allocations.
+//! counting global allocator — and the **span-tracing overhead gate**: the
+//! same pool served with the flight recorder off vs on. `--test` runs the
+//! plan + tracing sections only and asserts the plan path is ≥ 5× faster
+//! with zero steady-state allocations, the disabled-tracing record site
+//! adds zero allocations, warm-ring recording is allocation-free, and
+//! enabled tracing stays within 5% us/token of the untraced pool.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 use trex::bench_util::{bench, banner, si, table};
 use trex::compress::{DeltaCodec, NonUniformQuant, UniformQuant};
 use trex::config::{HwConfig, ModelConfig};
-use trex::coordinator::{BatcherConfig, DynamicBatcher, Request};
+use trex::coordinator::{
+    BatcherConfig, DynamicBatcher, Engine, EngineConfig, PoolConfig, Request, Server,
+};
 use trex::factorize::CscFixed;
 use trex::kv::{KvArenaConfig, KvManager, KvQuant};
 use trex::model::{build_decode_step, build_program};
+use trex::obs::{FlightRecorder, SpanEvent, SpanKind, SpanWriter};
+use trex::runtime::{artifacts, ArtifactSet};
 use trex::sim::{simulate, GbBudget, SimOptions, StepPlan, Stepper};
 use trex::util::json::Json;
 use trex::util::mat::Mat;
@@ -175,10 +185,164 @@ fn decode_step_plan_section(smoke: bool) {
     }
 }
 
+/// One closed-loop serve run over the reference backend: N generate
+/// requests on a single worker, returning client-observed µs per decoded
+/// token. `recorder` present = span tracing on (the engine, door, and KV
+/// arena all record); absent = the production default.
+fn serve_us_per_token(recorder: Option<Arc<FlightRecorder>>) -> f64 {
+    let d = artifacts::TINY_D_MODEL;
+    let max_seq = artifacts::TINY_MAX_SEQ;
+    let hw = HwConfig::default();
+    let pm = ModelConfig::tiny();
+    let pool = PoolConfig {
+        workers: 1,
+        recorder,
+        batcher: BatcherConfig { max_seq, max_wait: Duration::ZERO },
+        ..PoolConfig::default()
+    };
+    let (hw2, pm2) = (hw.clone(), pm.clone());
+    let handle = Server::start_pool(
+        move |ctx| {
+            let set = ArtifactSet::reference(artifacts::TINY_MODEL, d, max_seq)?;
+            Engine::for_worker(
+                set,
+                EngineConfig {
+                    hw: hw2.clone(),
+                    perf_model: pm2.clone(),
+                    self_test: false,
+                    kv_quant: KvQuant::Fp16,
+                    kv_pages: None,
+                },
+                ctx,
+            )
+        },
+        pool,
+    );
+    let (n_req, len, n_gen) = (12usize, 8usize, 16usize);
+    let t0 = Instant::now();
+    for i in 0..n_req {
+        let req = Request::new(i as u64, len, vec![0.1; len * d]).with_generate(n_gen);
+        handle.submit(req).expect("submit");
+    }
+    let mut got = 0;
+    while got < n_req {
+        handle.responses.recv().expect("pool response");
+        got += 1;
+    }
+    let wall_us = t0.elapsed().as_secs_f64() * 1e6;
+    let tokens = handle.tokens.try_iter().count().max(1);
+    handle.shutdown().expect("shutdown");
+    wall_us / tokens as f64
+}
+
+/// Span-tracing overhead gate: (1) the disabled record site — the
+/// engine's exact `Option<SpanWriter>` branch shape — performs zero
+/// allocations; (2) recording into a warm ring is allocation-free; (3)
+/// end-to-end, serving with tracing enabled stays within 5% us/token of
+/// the untraced pool (plus a small absolute slack for timer noise).
+fn tracing_overhead_section(smoke: bool) {
+    banner("span tracing overhead (flight recorder off vs on)");
+
+    // (1) Disabled path: the branch every record site takes when
+    // `PoolConfig::recorder` is None. Must not touch the heap.
+    let obs: Option<SpanWriter> = None;
+    let before = alloc_count();
+    for i in 0..4096u64 {
+        if let Some(w) = &obs {
+            w.record(SpanEvent::marker(SpanKind::DecodeStep, i, 0.0));
+        }
+        std::hint::black_box(i);
+    }
+    let disabled_allocs = alloc_count() - before;
+
+    // (2) Enabled path, warm ring: a record is a clock read + one short
+    // lane mutex + a struct store into a preallocated slot.
+    let rec = Arc::new(FlightRecorder::new(1, 1024));
+    let w = SpanWriter::new(Arc::clone(&rec), 0);
+    for i in 0..2048u64 {
+        w.record(SpanEvent::marker(SpanKind::DecodeStep, i, w.now_us()));
+    }
+    let before = alloc_count();
+    for i in 0..1024u64 {
+        w.record(SpanEvent::marker(SpanKind::DecodeStep, i, w.now_us()));
+    }
+    let warm_ring_allocs = alloc_count() - before;
+
+    // (3) End-to-end: same pool, same schedule, recorder off vs on. Best
+    // of 3 damps scheduler noise; the serving step (numerics + pricing +
+    // arena charge) dwarfs one struct store per token.
+    let best = |on: bool| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let rec = on.then(|| Arc::new(FlightRecorder::for_pool(1, 16 * 1024)));
+            best = best.min(serve_us_per_token(rec));
+        }
+        best
+    };
+    let us_off = best(false);
+    let us_on = best(true);
+    let overhead_pct = (us_on / us_off - 1.0) * 100.0;
+
+    table(
+        &["configuration", "µs/token", "allocs"],
+        &[
+            vec![
+                "tracing disabled".to_string(),
+                format!("{us_off:.2}"),
+                disabled_allocs.to_string(),
+            ],
+            vec!["tracing enabled".to_string(), format!("{us_on:.2}"), "-".to_string()],
+            vec![
+                "overhead".to_string(),
+                format!("{overhead_pct:+.1}%"),
+                format!("warm ring: {warm_ring_allocs}"),
+            ],
+        ],
+    );
+
+    // Fold the gate's numbers into BENCH_5.json (written by the plan
+    // section that runs just before this one).
+    if let Ok(mut j) = Json::from_file("BENCH_5.json") {
+        if let Json::Obj(m) = &mut j {
+            m.insert("tracing_us_per_token_off".to_string(), Json::num(us_off));
+            m.insert("tracing_us_per_token_on".to_string(), Json::num(us_on));
+            m.insert("tracing_overhead_pct".to_string(), Json::num(overhead_pct));
+            m.insert(
+                "tracing_disabled_allocs".to_string(),
+                Json::num(disabled_allocs as f64),
+            );
+            m.insert(
+                "tracing_warm_ring_allocs".to_string(),
+                Json::num(warm_ring_allocs as f64),
+            );
+        }
+        j.to_file("BENCH_5.json").expect("rewrite BENCH_5.json");
+    }
+
+    if smoke {
+        assert_eq!(
+            disabled_allocs, 0,
+            "disabled tracing must add zero steady-state allocations"
+        );
+        assert_eq!(warm_ring_allocs, 0, "warm-ring recording must be allocation-free");
+        // 5% relative plus 2 µs/token absolute: the relative bar is the
+        // contract; the absolute floor keeps a sub-40 µs/token tiny-model
+        // run from failing on scheduler jitter alone.
+        assert!(
+            us_on <= us_off * 1.05 + 2.0,
+            "tracing overhead over budget: {us_off:.2} -> {us_on:.2} us/token ({overhead_pct:+.1}%)"
+        );
+        println!(
+            "[ci-smoke] tracing gate OK: {us_off:.2} -> {us_on:.2} us/token ({overhead_pct:+.1}%)"
+        );
+    }
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--test");
     if smoke {
         decode_step_plan_section(true);
+        tracing_overhead_section(true);
         return;
     }
     let hw = HwConfig::default();
@@ -295,4 +459,5 @@ fn main() {
     table(&["benchmark", "mean", "throughput"], &rows);
 
     decode_step_plan_section(false);
+    tracing_overhead_section(false);
 }

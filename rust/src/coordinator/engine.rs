@@ -49,6 +49,7 @@ use crate::coordinator::sim_cache::{CachedPass, ChunkClaim, PassKey, SimCache};
 use crate::error::{Error, Result};
 use crate::kv::{KvArenaConfig, KvManager, KvQuant};
 use crate::model::{build_decode_step, build_program, Program};
+use crate::obs::{SpanEvent, SpanKind, SpanWriter};
 use crate::runtime::ArtifactSet;
 use crate::sim::{
     simulate, BatchClass, GbBudget, PlanRegistry, SimOptions, StepPlan, Stepper, StepperParts,
@@ -100,6 +101,11 @@ pub struct DecodeState {
     chip_us: f64,
     chip_uj: f64,
     ema_bytes: u64,
+    /// Where this stream's last recorded span ended (µs on the flight
+    /// recorder's clock). Each decode step records a span from here to its
+    /// own completion, so a stream's spans tile its whole lifetime — they
+    /// sum to its e2e latency. 0 when tracing is off (never read).
+    span_cursor_us: f64,
 }
 
 impl DecodeState {
@@ -303,6 +309,10 @@ pub struct Engine {
     plan_memo: [PlanMemoSlot; PLAN_MEMO_SLOTS],
     /// Reused decode-step buffers.
     scratch: DecodeScratch,
+    /// Flight-recorder handle bound to this worker's lane (`None`: tracing
+    /// off — every record site below is a branch on this option, so the
+    /// disabled hot path allocates and locks nothing).
+    obs: Option<SpanWriter>,
 }
 
 impl Engine {
@@ -361,6 +371,7 @@ impl Engine {
             plan_scratch: None,
             plan_memo: [PlanMemoSlot::default(); PLAN_MEMO_SLOTS],
             scratch: DecodeScratch::default(),
+            obs: None,
         })
     }
 
@@ -381,7 +392,16 @@ impl Engine {
                 ))
             })),
         };
-        Self::with_parts(artifacts, cfg, Arc::clone(&ctx.sim_cache), kv, Arc::clone(&ctx.plans))
+        let mut engine =
+            Self::with_parts(artifacts, cfg, Arc::clone(&ctx.sim_cache), kv, Arc::clone(&ctx.plans))?;
+        engine.obs = ctx.obs.clone();
+        Ok(engine)
+    }
+
+    /// Attach (or detach) a flight-recorder writer. Pool engines inherit
+    /// theirs from [`WorkerCtx::obs`]; standalone engines can opt in here.
+    pub fn set_span_writer(&mut self, obs: Option<SpanWriter>) {
+        self.obs = obs;
     }
 
     pub fn model_name(&self) -> &str {
@@ -431,6 +451,7 @@ impl Engine {
             chip_us: stats.seconds() * 1e6,
             chip_uj: stats.energy.total_uj(),
             ema_bytes: stats.ema_bytes(),
+            ema_kv_bytes: stats.ema_kv_bytes(),
             utilization: stats.utilization(&self.cfg.hw),
         }
     }
@@ -468,6 +489,7 @@ impl Engine {
                 chip_us: stats.seconds() * 1e6,
                 chip_uj: stats.energy.total_uj(),
                 ema_bytes: stats.ema_bytes(),
+                ema_kv_bytes: stats.ema_kv_bytes(),
                 utilization: stats.utilization(&self.cfg.hw),
             }
         })
@@ -514,6 +536,7 @@ impl Engine {
             chip_us: s.seconds() * 1e6,
             chip_uj: s.energy.total_uj(),
             ema_bytes: s.ema_bytes,
+            ema_kv_bytes: s.ema_kv_bytes,
             utilization: s.utilization(&self.cfg.hw),
         };
         self.plan_scratch = Some(stepper.suspend());
@@ -643,6 +666,7 @@ impl Engine {
     /// [`Engine::execute`].
     pub fn prefill_chunk(&mut self, mut st: PrefillState) -> Result<PrefillProgress> {
         let key = PassKey::prefill(st.class, st.prog.seq);
+        let chunk_t0 = self.obs.as_ref().map(|w| w.now_us());
         let mut published: Option<CachedPass> = None;
         if st.cached.is_none() {
             if let Some(parts) = st.parts.take() {
@@ -653,6 +677,16 @@ impl Engine {
                 stepper.run_phases(&st.prog, st.next_phase..end);
                 st.next_phase = end;
                 st.chunks_done += 1;
+                if let Some(w) = &self.obs {
+                    // Batch-scoped worker-lane detail (id 0): the stream
+                    // view carries one tiling Prefill span instead.
+                    let mut ev =
+                        SpanEvent::marker(SpanKind::PrefillChunk, 0, chunk_t0.unwrap_or(0.0));
+                    ev.t_end_us = w.now_us();
+                    ev.past_len = st.prog.seq as u32;
+                    ev.group = st.chunks_done as u32;
+                    w.record(ev);
+                }
                 if end < total {
                     st.parts = Some(stepper.suspend());
                     return Ok(PrefillProgress::Parked(Box::new(st)));
@@ -663,6 +697,7 @@ impl Engine {
                     chip_us: stats.seconds() * 1e6,
                     chip_uj: stats.energy.total_uj(),
                     ema_bytes: stats.ema_bytes(),
+                    ema_kv_bytes: stats.ema_kv_bytes(),
                     utilization: stats.utilization(&self.cfg.hw),
                 };
                 // Publish BEFORE the fallible numerics below: the simulated
@@ -725,8 +760,12 @@ impl Engine {
         let n_req = requests.len();
         let per_req_uj = perf.chip_uj / n_req as f64;
         let per_req_ema = perf.ema_bytes / n_req as u64;
+        let per_req_kv_ema = perf.ema_kv_bytes / n_req as u64;
         let host_us = t0.elapsed().as_nanos() as f64 / 1e3;
         let cap = self.decode_cap(class);
+        // Tracing: one timestamp for the whole batch — spans are derived
+        // from the latencies already measured, not re-measured per span.
+        let obs_now = self.obs.as_ref().map(|w| w.now_us());
 
         let mut outcome = ExecOutcome::default();
         for (i, r) in requests.iter().enumerate() {
@@ -736,6 +775,24 @@ impl Engine {
             // Clamp the decode budget so prefill + generated never outgrows
             // the resident KV prefix — capped, not rejected.
             let generate = r.generate.min(cap.saturating_sub(r.len));
+            let now_us = obs_now.unwrap_or(0.0);
+            if let Some(w) = &self.obs {
+                // Queue and prefill spans tile arrival → now exactly:
+                // [arrival, t0] + [t0, now] with t0 = now − host_us.
+                let t0_us = now_us - host_us;
+                let mut q = SpanEvent::marker(SpanKind::Queue, r.id, (t0_us - queue_us).max(0.0));
+                q.t_end_us = t0_us;
+                w.record(q);
+                let mut pf = SpanEvent::marker(SpanKind::Prefill, r.id, t0_us);
+                pf.t_end_us = now_us;
+                pf.chip_us = perf.chip_us;
+                pf.chip_uj = per_req_uj;
+                pf.ema_bytes = per_req_ema;
+                pf.ema_kv_bytes = per_req_kv_ema;
+                pf.past_len = r.len as u32;
+                pf.group = n_req as u32;
+                w.record(pf);
+            }
             if generate > 0 {
                 if register_kv {
                     // The stream's prefill KV becomes arena-resident (no
@@ -759,6 +816,7 @@ impl Engine {
                     chip_us: perf.chip_us,
                     chip_uj: per_req_uj,
                     ema_bytes: per_req_ema,
+                    span_cursor_us: now_us,
                 });
             } else {
                 if r.generate > 0 && register_kv {
@@ -780,6 +838,9 @@ impl Engine {
                     tokens_generated: 0,
                     worker: 0,
                 });
+                if let Some(w) = &self.obs {
+                    w.record(SpanEvent::marker(SpanKind::Complete, r.id, now_us));
+                }
             }
         }
         outcome
@@ -852,6 +913,9 @@ impl Engine {
         let per_uj = (perf.chip_uj + swap_uj) / n as f64;
         let per_ema = (perf.ema_bytes + charge.swap_in_bytes) / n as u64;
 
+        let per_kv_ema = (perf.ema_kv_bytes + charge.swap_in_bytes) / n as u64;
+        let obs_now = self.obs.as_ref().map(|w| w.now_us());
+
         let mut outcome = DecodeOutcome {
             pad_waste_tokens: self.scratch.past_lens.iter().map(|&p| (max_past - p) as u64).sum(),
             kv_swap_ins: charge.swap_ins,
@@ -870,6 +934,26 @@ impl Engine {
             s.chip_us += step_us;
             s.chip_uj += per_uj;
             s.ema_bytes += per_ema;
+            if let Some(w) = &self.obs {
+                // The span runs from the stream's previous span end (not
+                // this step's dispatch): between-step queue residency is
+                // real latency the request experienced, and charging it
+                // here makes a stream's spans tile its e2e exactly.
+                let now_us = obs_now.unwrap_or(0.0);
+                let mut ev = SpanEvent::marker(SpanKind::DecodeStep, s.id, s.span_cursor_us);
+                ev.t_end_us = now_us;
+                ev.chip_us = per_us;
+                ev.chip_uj = per_uj;
+                ev.ema_bytes = per_ema;
+                ev.ema_kv_bytes = per_kv_ema;
+                ev.past_len = step_past as u32;
+                ev.group = n as u32;
+                w.record(ev);
+                s.span_cursor_us = now_us;
+                if s.remaining == 0 {
+                    w.record(SpanEvent::marker(SpanKind::Complete, s.id, now_us));
+                }
+            }
             outcome.tokens.push(TokenEvent {
                 id: s.id,
                 index,
@@ -939,6 +1023,7 @@ impl DecodeState {
             utilization: 0.0,
             chip_us: 0.0,
             chip_uj: 0.0,
+            span_cursor_us: 0.0,
             ema_bytes: 0,
         }
     }

@@ -19,6 +19,15 @@ use std::time::Instant;
 /// verify decode tokens interleave *between* a prefill's chunks).
 const CHUNK_MARKS_CAP: usize = 1024;
 
+/// Version stamped into every machine-readable report this crate emits
+/// (`ServerReport`, `ReplayStats`, telemetry snapshots, span JSONL, the
+/// Chrome trace's `otherData`). Bump when a key is renamed, removed, or
+/// changes meaning; pure additions keep the version. Consumers can also
+/// rely on stable key *order*: all JSON objects serialize through
+/// `util::json::Json::Obj` (a `BTreeMap`), so keys are always emitted in
+/// sorted order regardless of insertion order.
+pub const REPORT_SCHEMA_VERSION: u64 = 1;
+
 #[derive(Debug, Default)]
 struct Inner {
     completed: u64,
@@ -63,6 +72,25 @@ struct Inner {
     latencies: Reservoir,
     /// Modeled per-token decode latency samples (bounded).
     us_per_token: Reservoir,
+    /// Modeled per-token decode energy samples (bounded).
+    uj_per_token: Reservoir,
+}
+
+/// The counter snapshot the telemetry sampler reads each interval —
+/// cheap (one lock, reservoir percentiles over ≤ cap samples) relative to
+/// the full JSON [`ServerMetrics::report`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MetricsSample {
+    pub completed: u64,
+    pub rejected: u64,
+    pub execute_errors: u64,
+    pub tokens_decoded: u64,
+    pub interleave_ratio: f64,
+    pub coalesce_wait_us_mean: f64,
+    pub us_per_token_p50: f64,
+    pub us_per_token_p95: f64,
+    pub uj_per_token_p50: f64,
+    pub uj_per_token_p95: f64,
 }
 
 /// Where one admitted request currently is in its lifecycle. Terminal
@@ -268,6 +296,7 @@ impl ServerMetrics {
         let mut m = self.inner.lock().unwrap();
         m.tokens_decoded += 1;
         m.us_per_token.push(ev.us_per_token);
+        m.uj_per_token.push(ev.chip_uj);
     }
 
     /// One decode step executed (any group size), with the step's padding
@@ -360,6 +389,29 @@ impl ServerMetrics {
         self.inner.lock().unwrap().execute_errors
     }
 
+    /// One cheap snapshot of the counters the telemetry sampler emits
+    /// per interval — a single lock acquisition, no JSON.
+    pub fn sample(&self) -> MetricsSample {
+        let m = self.inner.lock().unwrap();
+        let interleave = if m.decode_steps > 0 {
+            m.interleaved_decode_steps as f64 / m.decode_steps as f64
+        } else {
+            0.0
+        };
+        MetricsSample {
+            completed: m.completed,
+            rejected: m.rejected,
+            execute_errors: m.execute_errors,
+            tokens_decoded: m.tokens_decoded,
+            interleave_ratio: interleave,
+            coalesce_wait_us_mean: m.coalesce_wait_us.mean(),
+            us_per_token_p50: m.us_per_token.percentile(50.0),
+            us_per_token_p95: m.us_per_token.percentile(95.0),
+            uj_per_token_p50: m.uj_per_token.percentile(50.0),
+            uj_per_token_p95: m.uj_per_token.percentile(95.0),
+        }
+    }
+
     /// Snapshot as JSON (also the report printed by examples).
     pub fn report(&self, wall_seconds: f64) -> Json {
         let m = self.inner.lock().unwrap();
@@ -378,6 +430,7 @@ impl ServerMetrics {
             0.0
         };
         Json::obj(vec![
+            ("schema_version", Json::num(REPORT_SCHEMA_VERSION as f64)),
             ("completed", Json::num(m.completed as f64)),
             ("batches", Json::num(m.batches as f64)),
             ("tokens", Json::num(m.tokens as f64)),
@@ -400,6 +453,8 @@ impl ServerMetrics {
             ("e2e_latency_us_p99", pct(99.0)),
             ("us_per_token_p50", tok_pct(50.0)),
             ("us_per_token_p95", tok_pct(95.0)),
+            ("uj_per_token_p50", Json::num(m.uj_per_token.percentile(50.0))),
+            ("uj_per_token_p95", Json::num(m.uj_per_token.percentile(95.0))),
             ("queue_us_mean", Json::num(m.queue_us.mean())),
             // Per *request*: for generate requests this is prefill + every
             // decode step the request joined, not a single pass.

@@ -122,6 +122,15 @@ pub struct Response {
     pub worker: usize,
 }
 
+impl Response {
+    /// End-to-end latency, µs: waiting plus host execution. This is the
+    /// quantity a request's flight-recorder lifecycle spans tile — the
+    /// `integration_obs` test pins span-sum == `e2e_us()`.
+    pub fn e2e_us(&self) -> f64 {
+        self.queue_us + self.host_latency_us
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -67,10 +67,14 @@ use crate::coordinator::request::{Request, Response, TokenEvent};
 use crate::coordinator::sim_cache::{CacheStats, SimCache};
 use crate::error::{Error, Result};
 use crate::kv::KvManager;
+use crate::obs::{
+    dump_anomaly, FlightRecorder, Snapshot, SpanEvent, SpanKind, SpanWriter, Telemetry,
+    TelemetryConfig,
+};
 use crate::sim::{batch_class, BatchClass, PlanRegistry};
 use crate::util::json::Json;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 use std::thread::JoinHandle;
@@ -154,6 +158,17 @@ pub struct PoolConfig {
     /// memory under sustained traffic; the replay driver, the fuzzer, and
     /// conservation tests turn it on.
     pub lifecycle_ledger: bool,
+    /// Flight recorder for span tracing: when set, the door, every worker
+    /// engine, and the KV arena record lifecycle spans into its lanes
+    /// (see [`crate::obs`]). `None` (default): tracing off — every record
+    /// site reduces to a branch on `None`, no locks, no allocation (gated
+    /// by the `hotpath_micro` bench).
+    pub recorder: Option<Arc<FlightRecorder>>,
+    /// Time-series sampler: when set, a sampler thread captures one
+    /// [`Snapshot`] per interval into a [`Telemetry`] ring (and optional
+    /// JSONL stream), and watches for shed storms (see
+    /// [`TelemetryConfig`]).
+    pub telemetry: Option<TelemetryConfig>,
     pub batcher: BatcherConfig,
 }
 
@@ -183,6 +198,8 @@ impl Default for PoolConfig {
             prefill_chunk: 0,
             kv: None,
             lifecycle_ledger: false,
+            recorder: None,
+            telemetry: None,
             batcher: BatcherConfig::default(),
         }
     }
@@ -206,6 +223,9 @@ pub struct WorkerCtx {
     /// queue, so per-worker private arenas would leak entries and miss
     /// eviction/swap charges. One pool, one arena.
     pub kv_shared: Arc<OnceLock<Arc<KvManager>>>,
+    /// Span writer bound to this worker's flight-recorder lane (`None`
+    /// when tracing is off). [`Engine::for_worker`] adopts it.
+    pub obs: Option<SpanWriter>,
 }
 
 // ---------------------------------------------------------------- work queue
@@ -429,6 +449,8 @@ pub struct Submitter {
     inflight: Arc<AtomicUsize>,
     /// KV-arena admission for generate requests (None = unbounded).
     kv: Option<Arc<KvManager>>,
+    /// Admission-door span writer (admit/door-shed markers).
+    obs: Option<SpanWriter>,
     /// Send gate: submits hold the read side across the closed-check +
     /// send, shutdown takes the write side to flip it — so no send can be
     /// in flight when the pool closes, and a submit that returned `Ok` is
@@ -458,6 +480,7 @@ impl Submitter {
             Ok(class) => class,
             Err(e) => {
                 self.metrics.record_rejected();
+                self.mark_door_shed(req.id);
                 return Err((req, e));
             }
         };
@@ -471,6 +494,7 @@ impl Submitter {
         if self.max_inflight > 0 && inflight >= self.max_inflight {
             self.inflight.fetch_sub(1, Ordering::AcqRel);
             self.metrics.record_rejected();
+            self.mark_door_shed(req.id);
             return Err((
                 req,
                 Error::serve(format!(
@@ -482,6 +506,7 @@ impl Submitter {
         if self.queue_depth > 0 && self.queue.len() >= self.queue_depth {
             self.inflight.fetch_sub(1, Ordering::AcqRel);
             self.metrics.record_rejected();
+            self.mark_door_shed(req.id);
             return Err((
                 req,
                 Error::serve(format!(
@@ -500,6 +525,7 @@ impl Submitter {
                 if !kv.try_admit(req.id, req.len, req.generate, class.batch(), req.prefix_group) {
                     self.inflight.fetch_sub(1, Ordering::AcqRel);
                     self.metrics.record_rejected();
+                    self.mark_door_shed(req.id);
                     return Err((
                         req,
                         Error::serve(format!(
@@ -515,6 +541,9 @@ impl Submitter {
         // would be a false conservation violation. A failed send below
         // sheds the id right back, so the ledger still balances.
         self.metrics.ledger_admit(req.id);
+        if let Some(w) = &self.obs {
+            w.record(SpanEvent::marker(SpanKind::Admit, req.id, w.now_us()));
+        }
         if let Err(send_err) = self.tx.send(Msg::Req(req)) {
             self.inflight.fetch_sub(1, Ordering::AcqRel);
             let Msg::Req(req) = send_err.0 else { unreachable!("we sent a request") };
@@ -539,6 +568,12 @@ impl Submitter {
     pub fn pending_batches(&self) -> usize {
         self.queue.len()
     }
+
+    fn mark_door_shed(&self, id: crate::coordinator::request::RequestId) {
+        if let Some(w) = &self.obs {
+            w.record(SpanEvent::marker(SpanKind::DoorShed, id, w.now_us()));
+        }
+    }
 }
 
 /// Handle a client uses to talk to a running server pool.
@@ -554,6 +589,10 @@ pub struct ServerHandle {
     worker_metrics: Vec<Arc<ServerMetrics>>,
     sim_cache: Arc<SimCache>,
     kv: Option<Arc<KvManager>>,
+    recorder: Option<Arc<FlightRecorder>>,
+    telemetry: Option<Arc<Telemetry>>,
+    sampler: Option<JoinHandle<()>>,
+    sampler_stop: Arc<AtomicBool>,
     ingest: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<Result<()>>>,
     started: Instant,
@@ -604,6 +643,16 @@ impl ServerHandle {
         self.sim_cache.stats()
     }
 
+    /// The pool's flight recorder, when tracing is on.
+    pub fn recorder(&self) -> Option<&Arc<FlightRecorder>> {
+        self.recorder.as_ref()
+    }
+
+    /// The sampler's in-memory snapshot ring, when telemetry is on.
+    pub fn telemetry(&self) -> Option<&Arc<Telemetry>> {
+        self.telemetry.as_ref()
+    }
+
     /// Stop the pool: the ingest thread drains the batcher into the work
     /// queue and closes it, every worker drains the queue dry, then all
     /// threads join. In-flight batches are never dropped.
@@ -633,6 +682,12 @@ impl ServerHandle {
                 }
             }
         }
+        // Stop the sampler last so it records the drain; it takes one
+        // closing snapshot on the way out.
+        self.sampler_stop.store(true, Ordering::Release);
+        if let Some(j) = self.sampler.take() {
+            j.join().map_err(|_| Error::serve("sampler thread panicked".to_string()))?;
+        }
         if let Some(e) = first_err {
             return Err(e);
         }
@@ -642,6 +697,8 @@ impl ServerHandle {
             workers: self.worker_metrics.clone(),
             cache: self.sim_cache.stats(),
             kv: self.kv.clone(),
+            recorder: self.recorder.clone(),
+            telemetry: self.telemetry.clone(),
         })
     }
 
@@ -661,6 +718,11 @@ pub struct ServerReport {
     pub cache: CacheStats,
     /// The pool's shared KV manager (when one was configured).
     pub kv: Option<Arc<KvManager>>,
+    /// The flight recorder (when tracing was on) — export its snapshot
+    /// with [`crate::obs::chrome_trace`] / [`crate::obs::spans_jsonl`].
+    pub recorder: Option<Arc<FlightRecorder>>,
+    /// The sampler's snapshot ring (when telemetry was on).
+    pub telemetry: Option<Arc<Telemetry>>,
 }
 
 impl ServerReport {
@@ -678,6 +740,15 @@ impl ServerReport {
             );
             if let Some(kv) = &self.kv {
                 m.insert("kv_arena".to_string(), kv.to_json());
+            }
+            if let Some(rec) = &self.recorder {
+                m.insert(
+                    "trace_events_recorded".to_string(),
+                    Json::num(rec.total_recorded() as f64),
+                );
+            }
+            if let Some(t) = &self.telemetry {
+                m.insert("telemetry_snapshots".to_string(), Json::num(t.taken() as f64));
             }
             m.insert(
                 "workers".to_string(),
@@ -737,6 +808,7 @@ impl Server {
         let prefill_chunk = cfg.prefill_chunk;
 
         let n_workers = cfg.workers.max(1);
+        let recorder = cfg.recorder.clone();
         let kv_shared: Arc<OnceLock<Arc<KvManager>>> = Arc::new(OnceLock::new());
         let plans = Arc::new(PlanRegistry::new());
         let mut worker_metrics = Vec::with_capacity(n_workers);
@@ -750,6 +822,7 @@ impl Server {
                 plans: Arc::clone(&plans),
                 kv: cfg.kv.clone(),
                 kv_shared: Arc::clone(&kv_shared),
+                obs: recorder.as_ref().map(|r| SpanWriter::new(Arc::clone(r), worker)),
             };
             let factory = Arc::clone(&factory);
             let queue = Arc::clone(&queue);
@@ -798,6 +871,29 @@ impl Server {
             })
             .expect("spawn ingest thread");
 
+        let sampler_stop = Arc::new(AtomicBool::new(false));
+        let mut telemetry: Option<Arc<Telemetry>> = None;
+        let mut sampler: Option<JoinHandle<()>> = None;
+        if let Some(tcfg) = cfg.telemetry.clone() {
+            let ring = Arc::new(Telemetry::new(tcfg.capacity));
+            telemetry = Some(Arc::clone(&ring));
+            let stop = Arc::clone(&sampler_stop);
+            let metrics = Arc::clone(&pooled);
+            let queue = Arc::clone(&queue);
+            let inflight = Arc::clone(&inflight);
+            let kv = cfg.kv.clone();
+            let kv_shared = Arc::clone(&kv_shared);
+            let rec = recorder.clone();
+            sampler = Some(
+                std::thread::Builder::new()
+                    .name("trex-sampler".to_string())
+                    .spawn(move || {
+                        sampler_loop(tcfg, ring, stop, metrics, queue, inflight, kv, kv_shared, rec)
+                    })
+                    .expect("spawn sampler thread"),
+            );
+        }
+
         ServerHandle {
             sub: Submitter {
                 tx,
@@ -805,6 +901,9 @@ impl Server {
                 queue,
                 inflight,
                 kv: cfg.kv.clone(),
+                obs: recorder
+                    .as_ref()
+                    .map(|r| SpanWriter::new(Arc::clone(r), r.admit_lane())),
                 closed: Arc::new(RwLock::new(false)),
                 queue_depth: cfg.queue_depth,
                 max_inflight: cfg.max_inflight,
@@ -816,10 +915,94 @@ impl Server {
             worker_metrics,
             sim_cache,
             kv: cfg.kv,
+            recorder,
+            telemetry,
+            sampler,
+            sampler_stop,
             ingest: Some(ingest),
             workers,
             started: Instant::now(),
         }
+    }
+}
+
+/// Telemetry sampler thread: one [`Snapshot`] per interval into the ring
+/// (and optional JSONL stream), plus shed-storm detection — a spike of
+/// door-sheds + execute-errors within one interval at or above the
+/// configured threshold drains the flight recorder to the anomaly-dump
+/// path, exactly once per run. Takes one closing snapshot at shutdown so
+/// even sub-interval runs record the final state.
+#[allow(clippy::too_many_arguments)]
+fn sampler_loop(
+    cfg: TelemetryConfig,
+    ring: Arc<Telemetry>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<ServerMetrics>,
+    queue: Arc<WorkQueue>,
+    inflight: Arc<AtomicUsize>,
+    kv: Option<Arc<KvManager>>,
+    kv_shared: Arc<OnceLock<Arc<KvManager>>>,
+    recorder: Option<Arc<FlightRecorder>>,
+) {
+    use std::io::Write;
+    let started = Instant::now();
+    let mut out = cfg.out.as_ref().and_then(|p| {
+        std::fs::OpenOptions::new().create(true).append(true).open(p).ok()
+    });
+    let dump_once = crate::obs::DumpOnce::new();
+    let mut last_shed: u64 = 0;
+    let interval = cfg.interval.max(Duration::from_micros(100));
+    loop {
+        let stopping = stop.load(Ordering::Acquire);
+        let m = metrics.sample();
+        // The pool's arena is either the configured one or the engines'
+        // shared fallback (installed by the first worker).
+        let arena = kv.as_ref().or_else(|| kv_shared.get());
+        let snap = Snapshot {
+            t_us: started.elapsed().as_secs_f64() * 1e6,
+            queue_depth: queue.len(),
+            inflight: inflight.load(Ordering::Acquire),
+            kv_used_pages: arena.map(|k| k.used_pages()).unwrap_or(0),
+            kv_shared_pages: arena.map(|k| k.shared_pages()).unwrap_or(0),
+            kv_live_streams: arena.map(|k| k.live_streams()).unwrap_or(0),
+            completed: m.completed,
+            rejected: m.rejected,
+            execute_errors: m.execute_errors,
+            tokens_decoded: m.tokens_decoded,
+            interleave_ratio: m.interleave_ratio,
+            coalesce_wait_us_mean: m.coalesce_wait_us_mean,
+            us_per_token_p50: m.us_per_token_p50,
+            us_per_token_p95: m.us_per_token_p95,
+            uj_per_token_p50: m.uj_per_token_p50,
+            uj_per_token_p95: m.uj_per_token_p95,
+        };
+        ring.push(snap);
+        if let Some(f) = &mut out {
+            let _ = f.write_all(snap.to_json().to_string().as_bytes());
+            let _ = f.write_all(b"\n");
+        }
+        // Shed storm: too many new rejections/errors within one interval.
+        let shed_now = m.rejected + m.execute_errors;
+        if cfg.shed_storm_threshold > 0
+            && shed_now.saturating_sub(last_shed) >= cfg.shed_storm_threshold
+            && dump_once.arm()
+        {
+            if let (Some(rec), Some(path)) = (&recorder, &cfg.anomaly_dump) {
+                let detail = format!(
+                    "shed storm: {} door-sheds/errors within one {}us sampling interval \
+                     (threshold {})",
+                    shed_now - last_shed,
+                    interval.as_micros(),
+                    cfg.shed_storm_threshold
+                );
+                let _ = dump_anomaly(rec, path, &[detail]);
+            }
+        }
+        last_shed = shed_now;
+        if stopping {
+            break;
+        }
+        std::thread::sleep(interval);
     }
 }
 
@@ -907,6 +1090,15 @@ fn worker_loop(
     prefill_chunk: usize,
 ) -> Result<()> {
     let mut engine = make_engine(ctx)?;
+    if let Some(w) = &ctx.obs {
+        // Bind the recorder's KV lane to whichever arena this pool ended
+        // up with (configured or shared-fallback); first worker wins,
+        // attach is idempotent.
+        let rec = w.recorder();
+        engine
+            .kv_manager()
+            .attach_span_writer(SpanWriter::new(Arc::clone(rec), rec.kv_lane()));
+    }
     let mut warm: Option<BatchClass> = None;
     let mut first_err: Option<Error> = None;
     let mut last_was_decode = false;
@@ -938,9 +1130,13 @@ fn worker_loop(
         pooled.record_execute_error();
         own.record_execute_error();
         inflight.fetch_sub(n, Ordering::AcqRel);
+        let shed_t = ctx.obs.as_ref().map(|w| w.now_us());
         for id in ids {
             pooled.ledger_shed(id);
             engine.kv_manager().release(id);
+            if let Some(w) = &ctx.obs {
+                w.record(SpanEvent::marker(SpanKind::Shed, id, shed_t.unwrap_or(0.0)));
+            }
         }
         if first_err.is_none() {
             *first_err = Some(e);

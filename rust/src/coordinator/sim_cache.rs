@@ -64,6 +64,9 @@ pub struct CachedPass {
     pub chip_us: f64,
     pub chip_uj: f64,
     pub ema_bytes: u64,
+    /// KV share of `ema_bytes` (dequant re-streams; swap-ins are charged
+    /// per occurrence by the engine, not cached here).
+    pub ema_kv_bytes: u64,
     pub utilization: f64,
 }
 
@@ -261,7 +264,7 @@ mod tests {
     use std::sync::Arc;
 
     fn pass(v: f64) -> CachedPass {
-        CachedPass { chip_us: v, chip_uj: v, ema_bytes: v as u64, utilization: v }
+        CachedPass { chip_us: v, chip_uj: v, ema_bytes: v as u64, ema_kv_bytes: 0, utilization: v }
     }
 
     #[test]

@@ -52,10 +52,11 @@ use crate::kv::arena::KvArena;
 use crate::kv::quant::KvQuant;
 use crate::kv::radix::{PrefixId, RadixIndex};
 use crate::kv::MAX_GROUP_STREAMS;
+use crate::obs::{SpanEvent, SpanKind, SpanWriter};
 use crate::sim::GbBudget;
 use crate::util::json::Json;
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
 /// Arena geometry + policy knobs.
 #[derive(Debug, Clone, Copy)]
@@ -240,6 +241,10 @@ struct Inner {
     /// LRU clock (incremented per step / registration).
     clock: u64,
     stats: KvStats,
+    /// Victims evicted since the last public-entry drain — the flight
+    /// recorder's KvEvict markers name the victim streams. Drained (and
+    /// dropped when tracing is off) by every entry point that can evict.
+    evicted: Vec<RequestId>,
 }
 
 impl Inner {
@@ -315,6 +320,7 @@ impl Inner {
                     e.pages = 0;
                     e.resident = false;
                     self.stats.evictions += 1;
+                    self.evicted.push(id);
                 }
                 None => return false,
             }
@@ -365,6 +371,9 @@ pub struct KvManager {
     /// will never let it grow to.
     caps: [usize; 3],
     inner: Mutex<Inner>,
+    /// Flight-recorder writer on the pool's KV lane (set once by the pool
+    /// when tracing is on; `None` costs one branch per arena event).
+    obs: OnceLock<SpanWriter>,
 }
 
 impl KvManager {
@@ -384,9 +393,18 @@ impl KvManager {
                 admitted_bytes: 0,
                 clock: 0,
                 stats: KvStats::default(),
+                evicted: Vec::new(),
             }),
+            obs: OnceLock::new(),
             cfg,
         }
+    }
+
+    /// Bind the recorder's KV-arena lane to this manager. First caller
+    /// wins (workers race to attach the shared fallback manager); callable
+    /// any number of times.
+    pub fn attach_span_writer(&self, w: SpanWriter) {
+        let _ = self.obs.set(w);
     }
 
     pub fn quant(&self) -> KvQuant {
@@ -548,6 +566,14 @@ impl KvManager {
         let entry = *inner.streams.get(&id).expect("just inserted");
         let private = self.private_bytes(prefill_len, &entry);
         inner.make_resident(id, private, &[id]);
+        let evicted = std::mem::take(&mut inner.evicted);
+        drop(g);
+        if let Some(w) = self.obs.get() {
+            let t = w.now_us();
+            for victim in evicted {
+                w.record(SpanEvent::marker(SpanKind::KvEvict, victim, t));
+            }
+        }
     }
 
     /// Bring every member of a decode group resident at its current depth
@@ -562,6 +588,12 @@ impl KvManager {
     pub fn prepare_group(&self, members: &[(RequestId, usize)]) -> StepCharge {
         let mut charge = StepCharge::default();
         let protect: Vec<RequestId> = members.iter().map(|&(id, _)| id).collect();
+        // (id, private bytes, depth) per swap-in and forked ids, recorded
+        // after the lock drops; empty Vecs never allocate when tracing is
+        // off and nothing swaps/forks.
+        let mut swapped: Vec<(RequestId, u64, usize)> = Vec::new();
+        let mut forked_ids: Vec<RequestId> = Vec::new();
+        let trace = self.obs.get().is_some();
         let mut g = self.inner.lock().unwrap();
         g.clock += 1;
         let clock = g.clock;
@@ -594,6 +626,9 @@ impl KvManager {
             };
             if forked {
                 g.stats.cow_forks += 1;
+                if trace {
+                    forked_ids.push(id);
+                }
             }
             let entry = *g.streams.get(&id).expect("ensured above");
             // Only the private span needs this stream's pages; the shared
@@ -608,10 +643,31 @@ impl KvManager {
                 charge.swap_ins += 1;
                 g.stats.swap_ins += 1;
                 g.stats.swap_in_bytes += private;
+                if trace {
+                    swapped.push((id, private, past_len));
+                }
             }
             g.make_resident(id, private, &protect);
             if let Some(e) = g.streams.get_mut(&id) {
                 e.pinned = true;
+            }
+        }
+        let evicted = std::mem::take(&mut g.evicted);
+        drop(g);
+        if let Some(w) = self.obs.get() {
+            let t = w.now_us();
+            for victim in evicted {
+                w.record(SpanEvent::marker(SpanKind::KvEvict, victim, t));
+            }
+            for (id, bytes, depth) in swapped {
+                let mut ev = SpanEvent::marker(SpanKind::KvSwap, id, t);
+                ev.ema_kv_bytes = bytes;
+                ev.ema_bytes = bytes;
+                ev.past_len = depth as u32;
+                w.record(ev);
+            }
+            for id in forked_ids {
+                w.record(SpanEvent::marker(SpanKind::KvCowFork, id, t));
             }
         }
         charge

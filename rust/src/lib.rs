@@ -19,11 +19,13 @@
 //!   global buffer, LPDDR3 DMA) with energy and utilization accounting, the
 //!   dense baseline accelerator used for the paper's comparisons, and the
 //!   paged KV-cache manager that governs decode residency in the GB.
-//! * **System** — [`coordinator`], [`runtime`], [`workload`]: a
+//! * **System** — [`coordinator`], [`runtime`], [`workload`], [`obs`]: a
 //!   production-shaped serving stack: dynamic batcher, engine,
 //!   multi-threaded server, a PJRT runtime that executes the AOT-compiled
-//!   JAX/Pallas numerics, and trace-driven workload tooling (request-trace
-//!   files, open-loop replay, a seeded scenario fuzzer).
+//!   JAX/Pallas numerics, trace-driven workload tooling (request-trace
+//!   files, open-loop replay, a seeded scenario fuzzer), and the
+//!   observability plane (flight-recorder span tracing, Perfetto/JSONL
+//!   exporters, time-series telemetry).
 //!
 //! See `DESIGN.md` for the paper→module map and `EXPERIMENTS.md` for the
 //! reproduced tables/figures.
@@ -37,6 +39,7 @@ pub mod error;
 pub mod factorize;
 pub mod kv;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod util;

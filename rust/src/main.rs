@@ -10,8 +10,14 @@
 //!              [--decode-max-wait-us N]  # decode coalescing window
 //!              [--decode-priority]       # near-done streams drain first
 //!              [--trace FILE] [--speed F]  # open-loop replay of a request trace
-//!   trex fuzz  [--iters N] [--seed S] [--progress-every N]
+//!              [--trace-out FILE]        # Chrome trace_event export (Perfetto)
+//!              [--spans-out FILE]        # span JSONL export
+//!              [--telemetry-out FILE]    # time-series snapshot JSONL
+//!              [--shed-storm-threshold N] # anomaly-dump on shed storms
+//!   trex fuzz  [--iters N] [--seed S] [--progress-every N] [--dump-dir DIR]
 //!                                        # seeded scenario fuzzer (scheduler invariants)
+//!   trex inspect --trace FILE [--top N] [--json]
+//!                                        # per-phase µs/µJ breakdown of an exported trace
 //!   trex report --model <preset>         # compression report (Fig 23.1.3)
 //!   trex selftest [--artifacts DIR]      # PJRT vs jax check vectors
 //!   trex workloads                       # list presets
@@ -26,6 +32,10 @@ use trex::coordinator::{
 };
 use trex::kv::{KvArenaConfig, KvManager, KvQuant};
 use trex::model::build_program;
+use trex::obs::{
+    chrome_trace, dump_anomaly, parse_trace, render_summary, spans_jsonl, summarize,
+    FlightRecorder, TelemetryConfig, DEFAULT_LANE_CAPACITY,
+};
 use trex::runtime::{artifacts, ArtifactSet, PjrtRuntime};
 use trex::sim::{batch_class, simulate, SimOptions};
 use trex::workload::{replay, run_fuzz, FuzzConfig, ReplayConfig, Trace};
@@ -43,6 +53,7 @@ fn main() -> CliResult {
         "sim" => cmd_sim(&args[1..]),
         "serve" => cmd_serve(&args[1..]),
         "fuzz" => cmd_fuzz(&args[1..]),
+        "inspect" => cmd_inspect(&args[1..]),
         "report" => cmd_report(&args[1..]),
         "selftest" => cmd_selftest(&args[1..]),
         "workloads" => {
@@ -63,7 +74,7 @@ fn main() -> CliResult {
         }
         _ => {
             eprintln!(
-                "usage: trex <sim|serve|fuzz|report|selftest|workloads> [options]\n\
+                "usage: trex <sim|serve|fuzz|inspect|report|selftest|workloads> [options]\n\
                  \n  sim      --model <preset> [--seq N] [--batch 1|2|4] [--vdd V] [--no-trf] [--no-prefetch]\
                  \n  serve    --requests N [--workers N] [--queue-depth N] [--max-inflight N]\
                  \n           [--no-affinity] [--artifacts DIR] [--perf-model <preset>]\
@@ -74,10 +85,18 @@ fn main() -> CliResult {
                  \n           [--decode-max-wait-us N] [--decode-priority]  (coalescing / near-done-first)\
                  \n           [--trace FILE] [--speed F]  (open-loop replay of a request-trace file;\
                  \n            submits on the trace clock — rejections shed, no retry; --speed 2 = 2x faster)\
-                 \n  fuzz     [--iters N] [--seed S] [--progress-every N]\
+                 \n           [--trace-out FILE]  (flight-recorder export, Chrome trace_event / Perfetto)\
+                 \n           [--spans-out FILE]  (flight-recorder export, span JSONL)\
+                 \n           [--telemetry-out FILE]  (time-series snapshot JSONL, 10ms sampling)\
+                 \n           [--shed-storm-threshold N]  (dump the recorder when N sheds hit one interval)\
+                 \n  fuzz     [--iters N] [--seed S] [--progress-every N] [--dump-dir DIR]\
                  \n           (seeded scenario fuzzer: random pool configs x request schedules,\
                  \n            checks conservation / kv-leak / token-ordering invariants;\
-                 \n            a failure prints the seed — replay: fuzz --seed S --iters 1)\
+                 \n            a failure prints the seed — replay: fuzz --seed S --iters 1 —\
+                 \n            and writes a flight-recorder dump next to it)\
+                 \n  inspect  --trace FILE [--top N] [--json]\
+                 \n           (summarize an exported trace: per-phase µs/µJ/EMA breakdown,\
+                 \n            top-K slowest requests, shed timeline)\
                  \n  report   --model <preset>\
                  \n  selftest [--artifacts DIR]"
             );
@@ -156,6 +175,16 @@ fn cmd_serve(args: &[String]) -> CliResult {
         None => None,
     };
     let speed: f64 = arg_value(args, "--speed").map(|s| s.parse()).transpose()?.unwrap_or(1.0);
+    // Observability: span tracing (flight recorder + exporters) and the
+    // time-series sampler. Both off unless asked for — the disabled hot
+    // path is a branch on `None` (gated by the hotpath_micro bench).
+    let trace_out = arg_value(args, "--trace-out").map(std::path::PathBuf::from);
+    let spans_out = arg_value(args, "--spans-out").map(std::path::PathBuf::from);
+    let telemetry_out = arg_value(args, "--telemetry-out").map(std::path::PathBuf::from);
+    let shed_storm: u64 = arg_value(args, "--shed-storm-threshold")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0);
     let dir = arg_value(args, "--artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(artifacts::default_dir);
@@ -205,6 +234,26 @@ fn cmd_serve(args: &[String]) -> CliResult {
         &perf_model,
         KvArenaConfig::for_pool(&hw, &perf_model, kv_quant, kv_pages),
     ));
+    let recorder = if trace_out.is_some() || spans_out.is_some() {
+        Some(Arc::new(FlightRecorder::for_pool(workers, DEFAULT_LANE_CAPACITY)))
+    } else {
+        None
+    };
+    // Anomaly dumps land next to whichever export the run asked for.
+    let anomaly_dump = trace_out
+        .as_ref()
+        .or(spans_out.as_ref())
+        .map(|p| p.with_extension("anomaly.jsonl"));
+    let telemetry_cfg = if telemetry_out.is_some() || shed_storm > 0 {
+        Some(TelemetryConfig {
+            out: telemetry_out.clone(),
+            shed_storm_threshold: shed_storm,
+            anomaly_dump: anomaly_dump.clone(),
+            ..TelemetryConfig::default()
+        })
+    } else {
+        None
+    };
     let pool = PoolConfig {
         workers,
         queue_depth,
@@ -218,6 +267,8 @@ fn cmd_serve(args: &[String]) -> CliResult {
         // Replays audit conservation after the drain; the steady closed-loop
         // path keeps the ledger (unbounded per-request memory) off.
         lifecycle_ledger: trace.is_some(),
+        recorder: recorder.clone(),
+        telemetry: telemetry_cfg,
         batcher: BatcherConfig { max_seq, max_wait: Duration::from_millis(2) },
     };
     let handle = Server::start_pool(
@@ -254,6 +305,17 @@ fn cmd_serve(args: &[String]) -> CliResult {
         );
         let stats = replay(&handle, &trace, &ReplayConfig::new(d_model).at_speed(speed));
         println!("{}", stats.to_json().to_string_pretty());
+        // WHEN the sheds happened, not just how many: door sheds bucketed
+        // over the run next to the post-admission ones.
+        let timeline = stats.shed_timeline(20);
+        if !timeline.is_empty() {
+            println!(
+                "shed timeline ({} at the door, {} post-admission):",
+                timeline.total_door(),
+                timeline.total_late()
+            );
+            print!("{}", timeline.render());
+        }
         // Audit AFTER shutdown: its drain finishes whatever the replay's
         // settle window left in flight, so "open" means lost, not late.
         let metrics = Arc::clone(&handle.metrics);
@@ -267,8 +329,22 @@ fn cmd_serve(args: &[String]) -> CliResult {
                 audit.open.len(),
                 audit.conserved()
             );
+            if !audit.conserved() {
+                // A conservation violation is exactly what the flight
+                // recorder exists for: dump its final events next to the
+                // trace export.
+                if let (Some(rec), Some(path)) = (&recorder, &anomaly_dump) {
+                    let mut details = audit.violations.clone();
+                    if !audit.open.is_empty() {
+                        details.push(format!("open (never-terminal) requests: {:?}", audit.open));
+                    }
+                    let n = dump_anomaly(rec, path, &details)?;
+                    println!("anomaly dump: {n} events -> {}", path.display());
+                }
+            }
         }
         println!("{}", report.json().to_string_pretty());
+        export_traces(&recorder, workers, &trace_out, &spans_out)?;
         return Ok(());
     }
 
@@ -306,6 +382,34 @@ fn cmd_serve(args: &[String]) -> CliResult {
     }
     let report = handle.shutdown()?;
     println!("{}", report.json().to_string_pretty());
+    export_traces(&recorder, workers, &trace_out, &spans_out)?;
+    Ok(())
+}
+
+/// Write the flight recorder's snapshot to whichever export formats the
+/// run asked for (no-op when tracing was off).
+fn export_traces(
+    recorder: &Option<Arc<FlightRecorder>>,
+    workers: usize,
+    trace_out: &Option<std::path::PathBuf>,
+    spans_out: &Option<std::path::PathBuf>,
+) -> CliResult {
+    let Some(rec) = recorder else {
+        return Ok(());
+    };
+    let events = rec.snapshot();
+    if let Some(p) = trace_out {
+        chrome_trace(&events, workers).to_file(p)?;
+        println!(
+            "wrote Chrome trace ({} events, open in Perfetto / chrome://tracing): {}",
+            events.len(),
+            p.display()
+        );
+    }
+    if let Some(p) = spans_out {
+        std::fs::write(p, spans_jsonl(&events))?;
+        println!("wrote span JSONL ({} events): {}", events.len(), p.display());
+    }
     Ok(())
 }
 
@@ -319,7 +423,8 @@ fn cmd_fuzz(args: &[String]) -> CliResult {
         arg_value(args, "--seed").map(|s| s.parse()).transpose()?.unwrap_or(0xC0FFEE);
     let progress_every: u64 =
         arg_value(args, "--progress-every").map(|s| s.parse()).transpose()?.unwrap_or(50);
-    let summary = run_fuzz(&FuzzConfig { seed, iters, progress_every });
+    let dump_dir = arg_value(args, "--dump-dir").map(std::path::PathBuf::from);
+    let summary = run_fuzz(&FuzzConfig { seed, iters, progress_every, dump_dir });
     match summary.failure {
         None => {
             println!(
@@ -343,6 +448,24 @@ fn cmd_fuzz(args: &[String]) -> CliResult {
             Err(format!("fuzz failed: scenario seed {}", f.seed).into())
         }
     }
+}
+
+/// Summarize an exported trace (Chrome trace_event or span JSONL):
+/// per-phase µs/µJ/EMA breakdown, top-K slowest requests by e2e latency,
+/// and the shed timeline.
+fn cmd_inspect(args: &[String]) -> CliResult {
+    let path = arg_value(args, "--trace")
+        .ok_or("inspect requires --trace FILE (a --trace-out or --spans-out export)")?;
+    let topk: usize = arg_value(args, "--top").map(|s| s.parse()).transpose()?.unwrap_or(5);
+    let text = std::fs::read_to_string(&path).map_err(|e| format!("reading {path}: {e}"))?;
+    let events = parse_trace(&text).map_err(|e| format!("parsing {path}: {e}"))?;
+    let summary = summarize(&events, topk);
+    if args.iter().any(|a| a == "--json") {
+        println!("{}", summary.to_string_pretty());
+    } else {
+        print!("{}", render_summary(&summary));
+    }
+    Ok(())
 }
 
 fn cmd_report(args: &[String]) -> CliResult {

@@ -1,0 +1,226 @@
+//! Span exporters: Chrome `trace_event` JSON (loadable in Perfetto /
+//! `chrome://tracing`) and a line-oriented JSONL stream, plus the anomaly
+//! dump format the fuzzer and the ledger audit write on failure.
+//!
+//! The Chrome export lays the same spans out on two process tracks:
+//!
+//! * **pid 1 "pool workers"** — one thread track per recorder lane
+//!   (worker 0..N, then the admission and KV service lanes): the
+//!   execution view, where interleaving and idle gaps are visible.
+//! * **pid 2 "streams"** — one thread track per request id, carrying only
+//!   the lifecycle spans (queue → prefill → decode steps → terminal
+//!   marker): the per-request view, where each stream's spans tile its
+//!   e2e latency end to end.
+//!
+//! Durations use the complete-event form (`"ph": "X"`), timestamps are µs
+//! from the recorder epoch (the unit Perfetto expects), and per-span
+//! attribution (sim-clock µs, µJ, EMA byte split) rides in `args`.
+
+use super::span::{FlightRecorder, SpanEvent, SpanKind};
+use crate::coordinator::REPORT_SCHEMA_VERSION;
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::Path;
+
+fn args_json(ev: &SpanEvent) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(ev.id as f64)),
+        ("chip_us", Json::num(ev.chip_us)),
+        ("chip_uj", Json::num(ev.chip_uj)),
+        ("ema_bytes", Json::num(ev.ema_bytes as f64)),
+        ("ema_kv_bytes", Json::num(ev.ema_kv_bytes as f64)),
+        ("past_len", Json::num(ev.past_len as f64)),
+        ("group", Json::num(ev.group as f64)),
+    ])
+}
+
+fn complete_event(ev: &SpanEvent, pid: u64, tid: u64) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(ev.kind.name())),
+        ("cat", Json::str("serving")),
+        ("ph", Json::str("X")),
+        ("ts", Json::num(ev.t_start_us)),
+        ("dur", Json::num(ev.dur_us())),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("args", args_json(ev)),
+    ])
+}
+
+fn thread_name(pid: u64, tid: u64, name: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::str("thread_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
+fn process_name(pid: u64, name: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::str("process_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
+/// Render `events` as a Chrome `trace_event` JSON document. `n_workers`
+/// names the worker lanes; lanes beyond it get the service-lane names from
+/// the [`FlightRecorder::for_pool`] convention.
+pub fn chrome_trace(events: &[SpanEvent], n_workers: usize) -> Json {
+    let mut out: Vec<Json> = Vec::with_capacity(events.len() + 16);
+    out.push(process_name(1, "pool workers"));
+    out.push(process_name(2, "streams"));
+    let mut named_lanes: Vec<u32> = Vec::new();
+    let mut named_streams: Vec<u64> = Vec::new();
+    for ev in events {
+        // Execution view: everything lands on its writer's lane.
+        if !named_lanes.contains(&ev.lane) {
+            named_lanes.push(ev.lane);
+            let name = match (ev.lane as usize) < n_workers {
+                true => format!("worker-{}", ev.lane),
+                false if ev.lane as usize == n_workers => "admit".to_string(),
+                false => "kv-arena".to_string(),
+            };
+            out.push(thread_name(1, ev.lane as u64, &name));
+        }
+        out.push(complete_event(ev, 1, ev.lane as u64));
+        // Stream view: lifecycle spans only, one track per request.
+        if ev.id != 0 && (ev.kind.is_lifecycle() || ev.kind == SpanKind::Shed) {
+            if !named_streams.contains(&ev.id) {
+                named_streams.push(ev.id);
+                out.push(thread_name(2, ev.id, &format!("req-{}", ev.id)));
+            }
+            out.push(complete_event(ev, 2, ev.id));
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::str("ms")),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("schema_version", Json::num(REPORT_SCHEMA_VERSION as f64)),
+                ("producer", Json::str("trex")),
+            ]),
+        ),
+    ])
+}
+
+/// Render `events` as JSONL: one span object per line, in input order.
+pub fn spans_jsonl(events: &[SpanEvent]) -> String {
+    let mut s = String::new();
+    for ev in events {
+        s.push_str(&ev.to_json().to_string());
+        s.push('\n');
+    }
+    s
+}
+
+/// Drain the recorder's retained events to `path` as an anomaly dump:
+/// the spans as JSONL, then one `{"kind": "violation", ...}` line per
+/// entry of `violations` — the dump's **final lines restate the violation
+/// it was taken for**, so a dump file is self-describing. Returns the
+/// number of span events written.
+pub fn dump_anomaly(
+    rec: &FlightRecorder,
+    path: &Path,
+    violations: &[String],
+) -> std::io::Result<usize> {
+    let events = rec.snapshot();
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(spans_jsonl(&events).as_bytes())?;
+    for v in violations {
+        let line = Json::obj(vec![
+            ("kind", Json::str("violation")),
+            ("detail", Json::str(v)),
+            ("ts_us", Json::num(rec.now_us())),
+        ]);
+        f.write_all(line.to_string().as_bytes())?;
+        f.write_all(b"\n")?;
+    }
+    f.flush()?;
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::SpanKind;
+
+    fn span(id: u64, kind: SpanKind, lane: u32, t0: f64, t1: f64) -> SpanEvent {
+        let mut ev = SpanEvent::marker(kind, id, t0);
+        ev.t_end_us = t1;
+        ev.lane = lane;
+        ev
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_both_views() {
+        let events = vec![
+            span(5, SpanKind::Queue, 0, 0.0, 10.0),
+            span(5, SpanKind::Prefill, 0, 10.0, 30.0),
+            span(5, SpanKind::DecodeStep, 1, 30.0, 45.0),
+            span(5, SpanKind::Complete, 1, 45.0, 45.0),
+            span(0, SpanKind::KvEvict, 3, 20.0, 20.0),
+        ];
+        let doc = chrome_trace(&events, 2);
+        // Round-trips through the parser: structurally valid JSON.
+        let parsed = Json::parse(&doc.to_string()).expect("valid JSON");
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap().to_vec();
+        // Lifecycle spans appear twice (worker view + stream view), the
+        // arena marker once; metadata events name both processes.
+        let complete: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.opt("ph").and_then(|p| p.as_str().ok()) == Some("X"))
+            .collect();
+        assert_eq!(complete.len(), 4 * 2 + 1);
+        let stream_view: Vec<&Json> = complete
+            .iter()
+            .copied()
+            .filter(|e| e.opt("pid").and_then(|p| p.as_f64().ok()) == Some(2.0))
+            .collect();
+        assert_eq!(stream_view.len(), 4, "all four lifecycle spans on the stream track");
+        assert!(stream_view.iter().all(|e| e.opt("tid").and_then(|t| t.as_f64().ok()) == Some(5.0)));
+        // Durations tile 0 → 45.
+        let total: f64 = stream_view
+            .iter()
+            .map(|e| e.opt("dur").unwrap().as_f64().unwrap())
+            .sum();
+        assert!((total - 45.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jsonl_one_line_per_event_each_parseable() {
+        let events =
+            vec![span(1, SpanKind::Admit, 2, 1.0, 1.0), span(1, SpanKind::Queue, 0, 1.0, 8.0)];
+        let text = spans_jsonl(&events);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let j = Json::parse(line).expect("each line parses");
+            assert!(j.opt("kind").is_some());
+            assert!(j.opt("dur_us").is_some());
+        }
+    }
+
+    #[test]
+    fn anomaly_dump_ends_with_the_violations() {
+        let rec = FlightRecorder::new(1, 64);
+        for i in 0..5u64 {
+            rec.record(0, SpanEvent::marker(SpanKind::DecodeStep, i, i as f64));
+        }
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("trex-test-anomaly-{}.jsonl", std::process::id()));
+        let n = dump_anomaly(&rec, &path, &["req 3: completed twice".to_string()]).unwrap();
+        assert_eq!(n, 5);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let last = text.lines().last().unwrap();
+        let j = Json::parse(last).unwrap();
+        assert_eq!(j.opt("kind").and_then(|k| k.as_str().ok()), Some("violation"));
+        assert_eq!(j.opt("detail").and_then(|d| d.as_str().ok()), Some("req 3: completed twice"));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,316 @@
+//! `trex inspect` — summarize an exported trace offline: per-phase µs/µJ
+//! breakdown, top-k slowest requests, and the shed timeline.
+//!
+//! Accepts either exporter format ([`crate::obs::export`]): a Chrome
+//! `trace_event` JSON document (spans are read from the worker-view
+//! track, so nothing is double-counted) or a JSONL span stream.
+
+use super::span::{SpanEvent, SpanKind};
+use super::timeseries::ShedTimeline;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+fn span_from_chrome(ev: &Json) -> Option<SpanEvent> {
+    if ev.opt("ph").and_then(|p| p.as_str().ok()) != Some("X") {
+        return None;
+    }
+    // Worker view only — every span appears there exactly once.
+    if ev.opt("pid").and_then(|p| p.as_f64().ok()) != Some(1.0) {
+        return None;
+    }
+    let kind = SpanKind::from_name(ev.opt("name")?.as_str().ok()?)?;
+    let ts = ev.opt("ts")?.as_f64().ok()?;
+    let dur = ev.opt("dur").and_then(|d| d.as_f64().ok()).unwrap_or(0.0);
+    let args = ev.opt("args");
+    let f = |key: &str| args.and_then(|a| a.opt(key)).and_then(|v| v.as_f64().ok());
+    Some(SpanEvent {
+        id: f("id").unwrap_or(0.0) as u64,
+        kind,
+        lane: ev.opt("tid").and_then(|t| t.as_f64().ok()).unwrap_or(0.0) as u32,
+        t_start_us: ts,
+        t_end_us: ts + dur,
+        chip_us: f("chip_us").unwrap_or(0.0),
+        chip_uj: f("chip_uj").unwrap_or(0.0),
+        ema_bytes: f("ema_bytes").unwrap_or(0.0) as u64,
+        ema_kv_bytes: f("ema_kv_bytes").unwrap_or(0.0) as u64,
+        past_len: f("past_len").unwrap_or(0.0) as u32,
+        group: f("group").unwrap_or(0.0) as u32,
+    })
+}
+
+fn span_from_jsonl(line: &Json) -> Option<SpanEvent> {
+    let kind = SpanKind::from_name(line.opt("kind")?.as_str().ok()?)?;
+    let ts = line.opt("ts_us")?.as_f64().ok()?;
+    let f = |key: &str| line.opt(key).and_then(|v| v.as_f64().ok());
+    Some(SpanEvent {
+        id: f("id").unwrap_or(0.0) as u64,
+        kind,
+        lane: f("lane").unwrap_or(0.0) as u32,
+        t_start_us: ts,
+        t_end_us: ts + f("dur_us").unwrap_or(0.0),
+        chip_us: f("chip_us").unwrap_or(0.0),
+        chip_uj: f("chip_uj").unwrap_or(0.0),
+        ema_bytes: f("ema_bytes").unwrap_or(0.0) as u64,
+        ema_kv_bytes: f("ema_kv_bytes").unwrap_or(0.0) as u64,
+        past_len: f("past_len").unwrap_or(0.0) as u32,
+        group: f("group").unwrap_or(0.0) as u32,
+    })
+}
+
+/// Parse spans out of either exporter format. Chrome documents are
+/// detected by their `traceEvents` key; anything else is treated as JSONL
+/// (lines that aren't spans — violation markers, telemetry — are skipped).
+pub fn parse_trace(text: &str) -> Result<Vec<SpanEvent>, String> {
+    if let Ok(doc) = Json::parse(text) {
+        if let Some(evs) = doc.opt("traceEvents") {
+            let evs = evs.as_arr().map_err(|e| e.to_string())?;
+            return Ok(evs.iter().filter_map(span_from_chrome).collect());
+        }
+    }
+    let mut out = Vec::new();
+    let mut parsed_any = false;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("bad JSONL line: {e}"))?;
+        parsed_any = true;
+        if let Some(ev) = span_from_jsonl(&j) {
+            out.push(ev);
+        }
+    }
+    if !parsed_any {
+        return Err("empty trace".to_string());
+    }
+    Ok(out)
+}
+
+/// Per-phase aggregate.
+#[derive(Debug, Clone, Copy, Default)]
+struct PhaseAgg {
+    count: u64,
+    wall_us: f64,
+    chip_us: f64,
+    chip_uj: f64,
+    ema_bytes: u64,
+    ema_kv_bytes: u64,
+}
+
+/// Summarize a trace: per-phase breakdown, `topk` slowest requests (by
+/// summed lifecycle-span wall time, i.e. e2e latency), shed timeline.
+pub fn summarize(events: &[SpanEvent], topk: usize) -> Json {
+    let mut phases: BTreeMap<&'static str, PhaseAgg> = BTreeMap::new();
+    let mut per_req: BTreeMap<u64, (f64, u64, f64, f64)> = BTreeMap::new(); // e2e, steps, chip_us, chip_uj
+    let mut door_sheds: Vec<f64> = Vec::new();
+    let mut late_sheds: Vec<f64> = Vec::new();
+    for ev in events {
+        let agg = phases.entry(ev.kind.name()).or_default();
+        agg.count += 1;
+        agg.wall_us += ev.dur_us();
+        agg.chip_us += ev.chip_us;
+        agg.chip_uj += ev.chip_uj;
+        agg.ema_bytes += ev.ema_bytes;
+        agg.ema_kv_bytes += ev.ema_kv_bytes;
+        match ev.kind {
+            SpanKind::DoorShed => door_sheds.push(ev.t_start_us),
+            SpanKind::Shed => late_sheds.push(ev.t_start_us),
+            _ => {}
+        }
+        if ev.id != 0 && ev.kind.is_lifecycle() {
+            let r = per_req.entry(ev.id).or_insert((0.0, 0, 0.0, 0.0));
+            r.0 += ev.dur_us();
+            if ev.kind == SpanKind::DecodeStep {
+                r.1 += 1;
+                // chip_us/chip_uj are per token on decode steps.
+                r.2 += ev.chip_us;
+                r.3 += ev.chip_uj;
+            } else {
+                r.2 += ev.chip_us;
+                r.3 += ev.chip_uj;
+            }
+        }
+    }
+
+    let phase_json = Json::Obj(
+        phases
+            .iter()
+            .map(|(name, a)| {
+                (
+                    name.to_string(),
+                    Json::obj(vec![
+                        ("count", Json::num(a.count as f64)),
+                        ("wall_us", Json::num(a.wall_us)),
+                        ("chip_us", Json::num(a.chip_us)),
+                        ("chip_uj", Json::num(a.chip_uj)),
+                        ("ema_bytes", Json::num(a.ema_bytes as f64)),
+                        ("ema_kv_bytes", Json::num(a.ema_kv_bytes as f64)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+
+    let mut slowest: Vec<(u64, (f64, u64, f64, f64))> = per_req.into_iter().collect();
+    slowest.sort_by(|a, b| b.1 .0.total_cmp(&a.1 .0).then(a.0.cmp(&b.0)));
+    slowest.truncate(topk.max(1));
+    let slowest_json = Json::Arr(
+        slowest
+            .iter()
+            .map(|(id, (e2e, steps, chip_us, chip_uj))| {
+                Json::obj(vec![
+                    ("id", Json::num(*id as f64)),
+                    ("e2e_us", Json::num(*e2e)),
+                    ("decode_steps", Json::num(*steps as f64)),
+                    ("chip_us", Json::num(*chip_us)),
+                    ("chip_uj", Json::num(*chip_uj)),
+                ])
+            })
+            .collect(),
+    );
+
+    let timeline = ShedTimeline::from_instants(&door_sheds, &late_sheds, 20);
+    Json::obj(vec![
+        ("events", Json::num(events.len() as f64)),
+        ("phases", phase_json),
+        ("slowest", slowest_json),
+        ("shed_timeline", timeline.to_json()),
+    ])
+}
+
+/// Human-readable rendering of a [`summarize`] document.
+pub fn render_summary(summary: &Json) -> String {
+    let mut s = String::new();
+    let n = summary.opt("events").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+    s.push_str(&format!("trace: {n:.0} span events\n\nper-phase breakdown:\n"));
+    s.push_str(&format!(
+        "  {:<14} {:>8} {:>14} {:>12} {:>12} {:>14}\n",
+        "phase", "count", "wall_us", "chip_us", "chip_uj", "ema_bytes"
+    ));
+    if let Some(Ok(phases)) = summary.opt("phases").map(|p| p.as_obj()) {
+        for (name, a) in phases {
+            let f = |key: &str| a.opt(key).and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+            s.push_str(&format!(
+                "  {:<14} {:>8.0} {:>14.1} {:>12.2} {:>12.3} {:>14.0}\n",
+                name,
+                f("count"),
+                f("wall_us"),
+                f("chip_us"),
+                f("chip_uj"),
+                f("ema_bytes"),
+            ));
+        }
+    }
+    s.push_str("\nslowest requests (by e2e):\n");
+    if let Some(Ok(slow)) = summary.opt("slowest").map(|v| v.as_arr()) {
+        for r in slow {
+            let f = |key: &str| r.opt(key).and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+            s.push_str(&format!(
+                "  req {:<6.0} e2e {:>12.1}us  decode_steps {:<5.0} chip {:>10.2}us {:>8.3}uJ\n",
+                f("id"),
+                f("e2e_us"),
+                f("decode_steps"),
+                f("chip_us"),
+                f("chip_uj"),
+            ));
+        }
+    }
+    let tl = summary.opt("shed_timeline");
+    let door: f64 = tl
+        .and_then(|t| t.opt("door"))
+        .and_then(|d| d.as_arr().ok())
+        .map(|a| a.iter().filter_map(|v| v.as_f64().ok()).sum())
+        .unwrap_or(0.0);
+    let late: f64 = tl
+        .and_then(|t| t.opt("late"))
+        .and_then(|d| d.as_arr().ok())
+        .map(|a| a.iter().filter_map(|v| v.as_f64().ok()).sum())
+        .unwrap_or(0.0);
+    if door + late > 0.0 {
+        s.push_str(&format!("\nshed timeline (door {door:.0}, late {late:.0}):\n"));
+        if let (Some(t), Some(Ok(d)), Some(Ok(l))) = (
+            tl,
+            tl.and_then(|t| t.opt("door")).map(|d| d.as_arr()),
+            tl.and_then(|t| t.opt("late")).map(|l| l.as_arr()),
+        ) {
+            let bucket = t.opt("bucket_us").and_then(|b| b.as_f64().ok()).unwrap_or(1.0);
+            let mut timeline = ShedTimeline::new(bucket * d.len() as f64, d.len());
+            timeline.door = d.iter().filter_map(|v| v.as_f64().ok()).map(|v| v as u64).collect();
+            timeline.late = l.iter().filter_map(|v| v.as_f64().ok()).map(|v| v as u64).collect();
+            timeline.bucket_us = bucket;
+            s.push_str(&timeline.render());
+        }
+    } else {
+        s.push_str("\nno sheds recorded\n");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::export::{chrome_trace, spans_jsonl};
+
+    fn span(id: u64, kind: SpanKind, t0: f64, t1: f64, chip_us: f64) -> SpanEvent {
+        let mut ev = SpanEvent::marker(kind, id, t0);
+        ev.t_end_us = t1;
+        ev.chip_us = chip_us;
+        ev
+    }
+
+    fn sample_events() -> Vec<SpanEvent> {
+        vec![
+            span(1, SpanKind::Queue, 0.0, 10.0, 0.0),
+            span(1, SpanKind::Prefill, 10.0, 40.0, 25.0),
+            span(1, SpanKind::DecodeStep, 40.0, 55.0, 11.0),
+            span(1, SpanKind::DecodeStep, 55.0, 70.0, 12.0),
+            span(1, SpanKind::Complete, 70.0, 70.0, 0.0),
+            span(2, SpanKind::DoorShed, 30.0, 30.0, 0.0),
+            span(3, SpanKind::Queue, 5.0, 20.0, 0.0),
+            span(3, SpanKind::Shed, 20.0, 20.0, 0.0),
+        ]
+    }
+
+    #[test]
+    fn both_exporter_formats_parse_back_identically() {
+        let events = sample_events();
+        let from_chrome = parse_trace(&chrome_trace(&events, 1).to_string()).unwrap();
+        let from_jsonl = parse_trace(&spans_jsonl(&events)).unwrap();
+        assert_eq!(from_chrome.len(), events.len());
+        assert_eq!(from_jsonl.len(), events.len());
+        for (a, b) in from_chrome.iter().zip(from_jsonl.iter()) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.id, b.id);
+            assert!((a.t_start_us - b.t_start_us).abs() < 1e-9);
+            assert!((a.dur_us() - b.dur_us()).abs() < 1e-9);
+        }
+        assert!(parse_trace("").is_err());
+        assert!(parse_trace("not json").is_err());
+    }
+
+    #[test]
+    fn summary_breaks_down_phases_and_ranks_requests() {
+        let events = sample_events();
+        let s = summarize(&events, 5);
+        let decode = s.get("phases").unwrap().get("decode_step").unwrap();
+        assert_eq!(decode.get("count").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(decode.get("wall_us").unwrap().as_f64().unwrap(), 30.0);
+        assert_eq!(decode.get("chip_us").unwrap().as_f64().unwrap(), 23.0);
+        let slow = s.get("slowest").unwrap().as_arr().unwrap();
+        assert_eq!(slow[0].get("id").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(slow[0].get("e2e_us").unwrap().as_f64().unwrap(), 70.0);
+        assert_eq!(slow[1].get("id").unwrap().as_u64().unwrap(), 3);
+        // Sheds land in the timeline.
+        let tl = s.get("shed_timeline").unwrap();
+        let door: f64 =
+            tl.get("door").unwrap().as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).sum();
+        let late: f64 =
+            tl.get("late").unwrap().as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).sum();
+        assert_eq!(door, 1.0);
+        assert_eq!(late, 1.0);
+        // Renders without panicking and names the phases.
+        let text = render_summary(&s);
+        assert!(text.contains("decode_step"));
+        assert!(text.contains("shed timeline"));
+    }
+}

@@ -1,0 +1,30 @@
+//! Observability: flight-recorder span tracing + time-series telemetry.
+//!
+//! The serving pool's end-of-run aggregates say *what* happened; this
+//! module records *where the microseconds and bytes went*. Three pieces:
+//!
+//! * [`span`] — the flight recorder: per-request lifecycle spans
+//!   (admit → queue → prefill chunks → decode steps → KV events →
+//!   complete/shed) in fixed-capacity per-worker ring buffers. Off by
+//!   default; the disabled hot path is a branch on `None`.
+//! * [`export`] — Chrome `trace_event` JSON (Perfetto-loadable, one track
+//!   per worker + one per stream) and JSONL, plus the anomaly-dump format
+//!   written on ledger violations, fuzz failures, and shed storms.
+//! * [`timeseries`] — the sampler's periodic pool snapshots and the
+//!   bucketed shed timeline; [`inspect`] summarizes exported traces for
+//!   `trex inspect`.
+//!
+//! Span durations are defined to **tile**: each lifecycle span starts
+//! where the request's previous one ended, so one request's spans sum to
+//! its reported e2e latency exactly (the `integration_obs` test pins
+//! this against `Response::e2e_us`).
+
+pub mod export;
+pub mod inspect;
+pub mod span;
+pub mod timeseries;
+
+pub use export::{chrome_trace, dump_anomaly, spans_jsonl};
+pub use inspect::{parse_trace, render_summary, summarize};
+pub use span::{DumpOnce, FlightRecorder, SpanEvent, SpanKind, SpanWriter, DEFAULT_LANE_CAPACITY};
+pub use timeseries::{ShedTimeline, Snapshot, Telemetry, TelemetryConfig};

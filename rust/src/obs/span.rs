@@ -1,0 +1,404 @@
+//! The flight recorder: a fixed-capacity, lock-minimal ring of lifecycle
+//! span events.
+//!
+//! Every stage a request passes through — admit, queue residency, prefill
+//! (chunk by chunk), each decode step, KV swap/evict/COW-fork, completion
+//! or shed — is one fixed-size [`SpanEvent`], written into a per-lane ring
+//! buffer that keeps the **last** `capacity` events per lane (old events
+//! are overwritten, never reallocated: steady-state recording allocates
+//! nothing). Each worker thread writes its own lane, so the only
+//! contention is a short per-lane mutex shared with the occasional
+//! snapshot; nothing in the pool ever blocks on another writer's lane.
+//!
+//! Tracing is **off by default**: the pool carries an
+//! `Option<Arc<FlightRecorder>>` and every record site is a branch on
+//! `None` — the disabled hot path adds no locks and no allocations (the
+//! `hotpath_micro` bench gates this in CI).
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// What a span covers. Duration spans (`Queue`/`Prefill`/`PrefillChunk`/
+/// `DecodeStep`) tile a request's lifetime — per request they sum to the
+/// reported e2e latency; marker spans (`Admit`, the KV events,
+/// `Complete`/`Shed`/`DoorShed`) are zero-duration instants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Request accepted at the door (marker, admit lane).
+    Admit,
+    /// Request rejected at the door (marker, admit lane).
+    DoorShed,
+    /// Arrival → the instant an engine began serving the request's batch
+    /// (batcher + work-queue residency).
+    Queue,
+    /// Serve start → prefill finished (covers every chunk and any parked
+    /// gaps; `group` = chunks executed).
+    Prefill,
+    /// One executed prefill chunk (worker-lane detail, batch-scoped:
+    /// `id` = 0, `group` = chunk index).
+    PrefillChunk,
+    /// End of the stream's previous span → this decode step's completion
+    /// (includes the between-step queue residency, so steps tile).
+    DecodeStep,
+    /// KV pages for a stream re-streamed into the arena (marker).
+    KvSwap,
+    /// A victim stream's KV pages evicted (marker; `id` = victim).
+    KvEvict,
+    /// A shared KV prefix copy-on-write-forked at divergence (marker).
+    KvCowFork,
+    /// Response built (marker; terminal).
+    Complete,
+    /// Admitted request shed post-admission (marker; terminal).
+    Shed,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Admit => "admit",
+            SpanKind::DoorShed => "door_shed",
+            SpanKind::Queue => "queue",
+            SpanKind::Prefill => "prefill",
+            SpanKind::PrefillChunk => "prefill_chunk",
+            SpanKind::DecodeStep => "decode_step",
+            SpanKind::KvSwap => "kv_swap",
+            SpanKind::KvEvict => "kv_evict",
+            SpanKind::KvCowFork => "kv_cow_fork",
+            SpanKind::Complete => "complete",
+            SpanKind::Shed => "shed",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<SpanKind> {
+        Some(match name {
+            "admit" => SpanKind::Admit,
+            "door_shed" => SpanKind::DoorShed,
+            "queue" => SpanKind::Queue,
+            "prefill" => SpanKind::Prefill,
+            "prefill_chunk" => SpanKind::PrefillChunk,
+            "decode_step" => SpanKind::DecodeStep,
+            "kv_swap" => SpanKind::KvSwap,
+            "kv_evict" => SpanKind::KvEvict,
+            "kv_cow_fork" => SpanKind::KvCowFork,
+            "complete" => SpanKind::Complete,
+            "shed" => SpanKind::Shed,
+            _ => return None,
+        })
+    }
+
+    /// True for the per-request lifecycle spans that appear on a stream's
+    /// track and participate in the spans-sum-to-e2e invariant.
+    pub fn is_lifecycle(self) -> bool {
+        matches!(
+            self,
+            SpanKind::Queue | SpanKind::Prefill | SpanKind::DecodeStep | SpanKind::Complete
+        )
+    }
+}
+
+/// One recorded event. Fixed-size and `Copy` — recording is a struct store
+/// into a preallocated ring slot, never an allocation.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanEvent {
+    /// Request id (0 for batch- or arena-scoped events).
+    pub id: u64,
+    pub kind: SpanKind,
+    /// Writer lane (worker index; service lanes above the workers).
+    pub lane: u32,
+    /// Wall-clock µs since the recorder's epoch.
+    pub t_start_us: f64,
+    pub t_end_us: f64,
+    /// Sim-clock µs attributed to this span (per token for decode steps).
+    pub chip_us: f64,
+    /// Energy attributed to this span, µJ (per token for decode steps).
+    pub chip_uj: f64,
+    /// External-memory bytes the span moved (per token for decode steps).
+    pub ema_bytes: u64,
+    /// KV share of `ema_bytes` (swap-in re-streams + dequant passes).
+    pub ema_kv_bytes: u64,
+    /// KV depth at the span (decode) or prompt length (prefill).
+    pub past_len: u32,
+    /// Group width (decode), chunk count/index (prefill), or 0.
+    pub group: u32,
+}
+
+impl SpanEvent {
+    /// A zero-duration marker at `t_us`.
+    pub fn marker(kind: SpanKind, id: u64, t_us: f64) -> SpanEvent {
+        SpanEvent {
+            id,
+            kind,
+            lane: 0,
+            t_start_us: t_us,
+            t_end_us: t_us,
+            chip_us: 0.0,
+            chip_uj: 0.0,
+            ema_bytes: 0,
+            ema_kv_bytes: 0,
+            past_len: 0,
+            group: 0,
+        }
+    }
+
+    pub fn dur_us(&self) -> f64 {
+        (self.t_end_us - self.t_start_us).max(0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("kind", Json::str(self.kind.name())),
+            ("lane", Json::num(self.lane as f64)),
+            ("ts_us", Json::num(self.t_start_us)),
+            ("dur_us", Json::num(self.dur_us())),
+            ("chip_us", Json::num(self.chip_us)),
+            ("chip_uj", Json::num(self.chip_uj)),
+            ("ema_bytes", Json::num(self.ema_bytes as f64)),
+            ("ema_kv_bytes", Json::num(self.ema_kv_bytes as f64)),
+            ("past_len", Json::num(self.past_len as f64)),
+            ("group", Json::num(self.group as f64)),
+        ])
+    }
+}
+
+/// One writer's ring: keeps the last `cap` events in arrival order.
+#[derive(Debug)]
+struct Lane {
+    buf: Vec<SpanEvent>,
+    /// Next slot to overwrite once the ring is full.
+    next: usize,
+    /// Total events ever written to this lane.
+    written: u64,
+}
+
+impl Lane {
+    fn push(&mut self, ev: SpanEvent, cap: usize) {
+        if self.buf.len() < cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.next] = ev;
+            self.next = (self.next + 1) % cap;
+        }
+        self.written += 1;
+    }
+
+    fn snapshot_into(&self, out: &mut Vec<SpanEvent>) {
+        out.extend_from_slice(&self.buf[self.next..]);
+        out.extend_from_slice(&self.buf[..self.next]);
+    }
+}
+
+/// Fixed-capacity multi-lane span ring — the flight recorder.
+///
+/// Lane convention for a serving pool ([`FlightRecorder::for_pool`]):
+/// lanes `0..workers` belong to the engine workers, lane `workers` to the
+/// admission door, lane `workers + 1` to the KV arena. Any lane index is
+/// accepted (clamped by modulo), so writers never have to bounds-check.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    epoch: Instant,
+    cap: usize,
+    lanes: Vec<Mutex<Lane>>,
+}
+
+/// Default events retained per lane ("last N-thousand events").
+pub const DEFAULT_LANE_CAPACITY: usize = 16 * 1024;
+
+impl FlightRecorder {
+    pub fn new(lanes: usize, capacity_per_lane: usize) -> FlightRecorder {
+        let cap = capacity_per_lane.max(16);
+        FlightRecorder {
+            epoch: Instant::now(),
+            cap,
+            lanes: (0..lanes.max(1))
+                .map(|_| Mutex::new(Lane { buf: Vec::with_capacity(cap), next: 0, written: 0 }))
+                .collect(),
+        }
+    }
+
+    /// Recorder shaped for an `n_workers`-worker pool: one lane per worker
+    /// plus the admission and KV service lanes.
+    pub fn for_pool(n_workers: usize, capacity_per_lane: usize) -> FlightRecorder {
+        FlightRecorder::new(n_workers.max(1) + 2, capacity_per_lane)
+    }
+
+    /// Admission-door lane index (second to last).
+    pub fn admit_lane(&self) -> usize {
+        self.lanes.len() - 2
+    }
+
+    /// KV-arena lane index (last).
+    pub fn kv_lane(&self) -> usize {
+        self.lanes.len() - 1
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn capacity_per_lane(&self) -> usize {
+        self.cap
+    }
+
+    /// Wall-clock µs since the recorder epoch.
+    pub fn now_us(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// Record `ev` on `lane` (clamped). One short mutex on the writer's own
+    /// lane, one struct store — no allocation once the ring is warm.
+    pub fn record(&self, lane: usize, mut ev: SpanEvent) {
+        let idx = lane % self.lanes.len();
+        ev.lane = idx as u32;
+        self.lanes[idx].lock().unwrap().push(ev, self.cap);
+    }
+
+    /// Total events ever recorded (including ones the rings have since
+    /// overwritten).
+    pub fn total_recorded(&self) -> u64 {
+        self.lanes.iter().map(|l| l.lock().unwrap().written).sum()
+    }
+
+    /// Copy out every retained event, ordered by start time. Non-draining:
+    /// the rings keep recording.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let mut out = Vec::new();
+        for lane in &self.lanes {
+            lane.lock().unwrap().snapshot_into(&mut out);
+        }
+        out.sort_by(|a, b| {
+            a.t_start_us.total_cmp(&b.t_start_us).then(a.t_end_us.total_cmp(&b.t_end_us))
+        });
+        out
+    }
+}
+
+/// A cloneable handle binding a recorder to one writer's lane. `None`-able
+/// at every call site: the pool stores `Option<SpanWriter>` and skips the
+/// whole body when tracing is off.
+#[derive(Debug, Clone)]
+pub struct SpanWriter {
+    rec: Arc<FlightRecorder>,
+    lane: usize,
+}
+
+impl SpanWriter {
+    pub fn new(rec: Arc<FlightRecorder>, lane: usize) -> SpanWriter {
+        SpanWriter { rec, lane }
+    }
+
+    pub fn now_us(&self) -> f64 {
+        self.rec.now_us()
+    }
+
+    pub fn record(&self, ev: SpanEvent) {
+        self.rec.record(self.lane, ev);
+    }
+
+    pub fn lane(&self) -> usize {
+        self.lane
+    }
+
+    pub fn recorder(&self) -> &Arc<FlightRecorder> {
+        &self.rec
+    }
+}
+
+/// Latch used by anomaly detectors (shed-storm sampler, ledger audit) so a
+/// sustained anomaly dumps the recorder exactly once.
+#[derive(Debug, Default)]
+pub struct DumpOnce {
+    fired: AtomicU64,
+}
+
+impl DumpOnce {
+    pub fn new() -> DumpOnce {
+        DumpOnce::default()
+    }
+
+    /// True exactly once.
+    pub fn arm(&self) -> bool {
+        self.fired.fetch_add(1, Ordering::Relaxed) == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: u64, t: f64) -> SpanEvent {
+        SpanEvent::marker(SpanKind::Admit, id, t)
+    }
+
+    #[test]
+    fn ring_keeps_the_last_n_events_per_lane() {
+        let rec = FlightRecorder::new(1, 16);
+        for i in 0..100u64 {
+            rec.record(0, ev(i, i as f64));
+        }
+        let snap = rec.snapshot();
+        assert_eq!(snap.len(), 16, "ring holds exactly its capacity");
+        assert_eq!(rec.total_recorded(), 100);
+        let ids: Vec<u64> = snap.iter().map(|e| e.id).collect();
+        let want: Vec<u64> = (84..100).collect();
+        assert_eq!(ids, want, "the LAST events survive, in order");
+    }
+
+    #[test]
+    fn snapshot_merges_lanes_in_time_order() {
+        let rec = FlightRecorder::for_pool(2, 64);
+        assert_eq!(rec.lanes(), 4);
+        assert_eq!(rec.admit_lane(), 2);
+        assert_eq!(rec.kv_lane(), 3);
+        rec.record(1, ev(10, 5.0));
+        rec.record(0, ev(11, 1.0));
+        rec.record(rec.admit_lane(), ev(12, 3.0));
+        let snap = rec.snapshot();
+        let ts: Vec<f64> = snap.iter().map(|e| e.t_start_us).collect();
+        assert_eq!(ts, vec![1.0, 3.0, 5.0]);
+        assert_eq!(snap[1].lane, 2, "record stamps the clamped lane index");
+    }
+
+    #[test]
+    fn writer_binds_a_lane_and_markers_are_zero_duration() {
+        let rec = Arc::new(FlightRecorder::new(3, 32));
+        let w = SpanWriter::new(Arc::clone(&rec), 2);
+        let t = w.now_us();
+        w.record(SpanEvent::marker(SpanKind::Complete, 7, t));
+        let snap = rec.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].lane, 2);
+        assert_eq!(snap[0].dur_us(), 0.0);
+        assert_eq!(snap[0].kind, SpanKind::Complete);
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        for k in [
+            SpanKind::Admit,
+            SpanKind::DoorShed,
+            SpanKind::Queue,
+            SpanKind::Prefill,
+            SpanKind::PrefillChunk,
+            SpanKind::DecodeStep,
+            SpanKind::KvSwap,
+            SpanKind::KvEvict,
+            SpanKind::KvCowFork,
+            SpanKind::Complete,
+            SpanKind::Shed,
+        ] {
+            assert_eq!(SpanKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(SpanKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn dump_once_latches() {
+        let d = DumpOnce::new();
+        assert!(d.arm());
+        assert!(!d.arm());
+        assert!(!d.arm());
+    }
+}

@@ -1,0 +1,298 @@
+//! Time-series telemetry: periodic pool snapshots and the bucketed shed
+//! timeline.
+//!
+//! A sampler thread (spawned by the pool when
+//! [`crate::coordinator::PoolConfig::telemetry`] is set) captures one
+//! [`Snapshot`] per interval — queue depth, in-flight count, KV occupancy
+//! and sharing, interleave ratio, coalesce wait, us/µJ-per-token
+//! percentiles — into a bounded in-memory ring ([`Telemetry`]) and,
+//! optionally, an append-only JSONL stream. The same thread watches for
+//! **shed storms** (door rejections + execute errors crossing a threshold
+//! within one interval) and drains the flight recorder to an anomaly dump
+//! when one hits.
+
+use crate::coordinator::REPORT_SCHEMA_VERSION;
+use crate::util::json::Json;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Sampler knobs. `Default` samples every 10 ms, retains the last 4096
+/// snapshots, and never dumps (storm detection off).
+#[derive(Debug, Clone)]
+pub struct TelemetryConfig {
+    /// Sampling period.
+    pub interval: Duration,
+    /// Snapshots retained in memory (ring; the JSONL stream keeps all).
+    pub capacity: usize,
+    /// Append every snapshot to this JSONL file.
+    pub out: Option<PathBuf>,
+    /// Door-sheds + execute-errors within one interval at or above this
+    /// count is a shed storm (0 disables detection).
+    pub shed_storm_threshold: u64,
+    /// Where a shed-storm anomaly dump goes (requires a recorder).
+    pub anomaly_dump: Option<PathBuf>,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            interval: Duration::from_millis(10),
+            capacity: 4096,
+            out: None,
+            shed_storm_threshold: 0,
+            anomaly_dump: None,
+        }
+    }
+}
+
+/// One periodic observation of the pool.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Snapshot {
+    /// Wall-clock µs since the pool started.
+    pub t_us: f64,
+    /// Work items queued (decode pool + parked chunks + fresh batches).
+    pub queue_depth: usize,
+    /// Admitted requests not yet answered.
+    pub inflight: usize,
+    pub kv_used_pages: usize,
+    pub kv_shared_pages: usize,
+    pub kv_live_streams: usize,
+    pub completed: u64,
+    pub rejected: u64,
+    pub execute_errors: u64,
+    pub tokens_decoded: u64,
+    /// Decode steps that ran between prefill chunks / total decode steps.
+    pub interleave_ratio: f64,
+    pub coalesce_wait_us_mean: f64,
+    pub us_per_token_p50: f64,
+    pub us_per_token_p95: f64,
+    pub uj_per_token_p50: f64,
+    pub uj_per_token_p95: f64,
+}
+
+impl Snapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::num(REPORT_SCHEMA_VERSION as f64)),
+            ("t_us", Json::num(self.t_us)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("inflight", Json::num(self.inflight as f64)),
+            ("kv_used_pages", Json::num(self.kv_used_pages as f64)),
+            ("kv_shared_pages", Json::num(self.kv_shared_pages as f64)),
+            ("kv_live_streams", Json::num(self.kv_live_streams as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("execute_errors", Json::num(self.execute_errors as f64)),
+            ("tokens_decoded", Json::num(self.tokens_decoded as f64)),
+            ("interleave_ratio", Json::num(self.interleave_ratio)),
+            ("coalesce_wait_us_mean", Json::num(self.coalesce_wait_us_mean)),
+            ("us_per_token_p50", Json::num(self.us_per_token_p50)),
+            ("us_per_token_p95", Json::num(self.us_per_token_p95)),
+            ("uj_per_token_p50", Json::num(self.uj_per_token_p50)),
+            ("uj_per_token_p95", Json::num(self.uj_per_token_p95)),
+        ])
+    }
+}
+
+/// Bounded in-memory snapshot ring the sampler fills and reports read.
+#[derive(Debug)]
+pub struct Telemetry {
+    cap: usize,
+    inner: Mutex<TelemetryInner>,
+}
+
+#[derive(Debug, Default)]
+struct TelemetryInner {
+    snaps: Vec<Snapshot>,
+    next: usize,
+    taken: u64,
+}
+
+impl Telemetry {
+    pub fn new(capacity: usize) -> Telemetry {
+        Telemetry { cap: capacity.max(4), inner: Mutex::new(TelemetryInner::default()) }
+    }
+
+    pub fn push(&self, s: Snapshot) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.snaps.len() < self.cap {
+            inner.snaps.push(s);
+        } else {
+            let slot = inner.next;
+            inner.snaps[slot] = s;
+            inner.next = (slot + 1) % self.cap;
+        }
+        inner.taken += 1;
+    }
+
+    /// Snapshots taken over the sampler's lifetime (not retained).
+    pub fn taken(&self) -> u64 {
+        self.inner.lock().unwrap().taken
+    }
+
+    /// Retained snapshots in capture order.
+    pub fn snapshots(&self) -> Vec<Snapshot> {
+        let inner = self.inner.lock().unwrap();
+        let mut out = Vec::with_capacity(inner.snaps.len());
+        out.extend_from_slice(&inner.snaps[inner.next..]);
+        out.extend_from_slice(&inner.snaps[..inner.next]);
+        out
+    }
+
+    /// The most recent snapshot, if any.
+    pub fn last(&self) -> Option<Snapshot> {
+        let inner = self.inner.lock().unwrap();
+        if inner.snaps.is_empty() {
+            return None;
+        }
+        let idx = (inner.next + self.cap - 1) % self.cap;
+        Some(if inner.snaps.len() < self.cap {
+            *inner.snaps.last().unwrap()
+        } else {
+            inner.snaps[idx]
+        })
+    }
+}
+
+/// Door- and late-shed counts bucketed over a run's wall span — the shape
+/// both the replay summary and `trex inspect` print. Buckets are
+/// fixed-width; the last bucket absorbs the closing edge.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShedTimeline {
+    /// Bucket width, µs.
+    pub bucket_us: f64,
+    pub door: Vec<u64>,
+    pub late: Vec<u64>,
+}
+
+impl ShedTimeline {
+    /// Timeline spanning `span_us` with `buckets` fixed-width buckets.
+    pub fn new(span_us: f64, buckets: usize) -> ShedTimeline {
+        let n = buckets.max(1);
+        ShedTimeline {
+            bucket_us: (span_us.max(1.0)) / n as f64,
+            door: vec![0; n],
+            late: vec![0; n],
+        }
+    }
+
+    /// Bucket both series of shed timestamps (µs from run start) over the
+    /// maximum observed time.
+    pub fn from_instants(door_us: &[f64], late_us: &[f64], buckets: usize) -> ShedTimeline {
+        let span = door_us
+            .iter()
+            .chain(late_us.iter())
+            .copied()
+            .filter(|t| t.is_finite())
+            .fold(0.0f64, f64::max);
+        let mut tl = ShedTimeline::new(span, buckets);
+        for &t in door_us {
+            tl.add_door(t);
+        }
+        for &t in late_us {
+            tl.add_late(t);
+        }
+        tl
+    }
+
+    fn bucket(&self, t_us: f64) -> Option<usize> {
+        if !t_us.is_finite() || t_us < 0.0 {
+            return None;
+        }
+        Some(((t_us / self.bucket_us) as usize).min(self.door.len() - 1))
+    }
+
+    pub fn add_door(&mut self, t_us: f64) {
+        if let Some(i) = self.bucket(t_us) {
+            self.door[i] += 1;
+        }
+    }
+
+    pub fn add_late(&mut self, t_us: f64) {
+        if let Some(i) = self.bucket(t_us) {
+            self.late[i] += 1;
+        }
+    }
+
+    pub fn total_door(&self) -> u64 {
+        self.door.iter().sum()
+    }
+
+    pub fn total_late(&self) -> u64 {
+        self.late.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_door() == 0 && self.total_late() == 0
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bucket_us", Json::num(self.bucket_us)),
+            ("door", Json::Arr(self.door.iter().map(|&c| Json::num(c as f64)).collect())),
+            ("late", Json::Arr(self.late.iter().map(|&c| Json::num(c as f64)).collect())),
+        ])
+    }
+
+    /// Human-readable timeline, one line per non-empty bucket:
+    /// `  [  12.0ms ..   24.0ms)  door 17  late 2`.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for (i, (&d, &l)) in self.door.iter().zip(self.late.iter()).enumerate() {
+            if d == 0 && l == 0 {
+                continue;
+            }
+            let lo = self.bucket_us * i as f64 / 1e3;
+            let hi = self.bucket_us * (i + 1) as f64 / 1e3;
+            s.push_str(&format!("  [{lo:8.1}ms .. {hi:8.1}ms)  door {d:<6} late {l}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn telemetry_ring_keeps_last_snapshots_in_order() {
+        let t = Telemetry::new(4);
+        for i in 0..10 {
+            t.push(Snapshot { t_us: i as f64, ..Snapshot::default() });
+        }
+        assert_eq!(t.taken(), 10);
+        let snaps = t.snapshots();
+        let ts: Vec<f64> = snaps.iter().map(|s| s.t_us).collect();
+        assert_eq!(ts, vec![6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(t.last().unwrap().t_us, 9.0);
+    }
+
+    #[test]
+    fn snapshot_json_has_schema_version() {
+        let j = Snapshot::default().to_json();
+        assert_eq!(
+            j.get("schema_version").unwrap().as_u64().unwrap(),
+            REPORT_SCHEMA_VERSION
+        );
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn shed_timeline_buckets_both_series() {
+        let door = [0.0, 10.0, 95.0, 99.0];
+        let late = [50.0];
+        let tl = ShedTimeline::from_instants(&door, &late, 10);
+        assert_eq!(tl.total_door(), 4);
+        assert_eq!(tl.total_late(), 1);
+        assert!((tl.bucket_us - 9.9).abs() < 1e-9);
+        assert_eq!(tl.door[0], 2, "0 and 10µs land in the first bucket");
+        assert_eq!(tl.door[9], 2, "the closing edge lands in the last bucket");
+        assert_eq!(tl.late[5], 1);
+        let rendered = tl.render();
+        assert!(rendered.contains("door 2"), "render shows counts: {rendered}");
+        // Empty timelines render to nothing and know they're empty.
+        assert!(ShedTimeline::new(100.0, 4).is_empty());
+        assert_eq!(ShedTimeline::new(100.0, 4).render(), "");
+    }
+}

@@ -122,6 +122,12 @@ impl RunStats {
     pub fn ema_bytes(&self) -> u64 {
         self.ema.total()
     }
+    /// KV-cache share of the EMA traffic (swap-in re-streams + quantized
+    /// dequant passes) — the split the tracing spans carry so a trace can
+    /// attribute a step's bytes to weights vs KV.
+    pub fn ema_kv_bytes(&self) -> u64 {
+        self.ema.get(EmaCategory::KvSwap) + self.ema.get(EmaCategory::KvDequant)
+    }
     pub fn to_json(&self, hw: &HwConfig) -> Json {
         Json::obj(vec![
             ("cycles", Json::num(self.cycles as f64)),
@@ -150,6 +156,8 @@ pub struct SettledStats {
     pub smm_busy: u64,
     pub energy: EnergyBreakdown,
     pub ema_bytes: u64,
+    /// KV share of `ema_bytes` ([`RunStats::ema_kv_bytes`] semantics).
+    pub ema_kv_bytes: u64,
     pub tokens: u64,
     pub point: OperatingPoint,
 }
@@ -539,6 +547,8 @@ impl<'a> Stepper<'a> {
             smm_busy: self.st.smm_busy,
             energy: self.em.breakdown,
             ema_bytes: self.ema.total(),
+            ema_kv_bytes: self.ema.get(EmaCategory::KvSwap)
+                + self.ema.get(EmaCategory::KvDequant),
             tokens: self.st.tokens,
             point: self.opts.point,
         }

@@ -189,6 +189,14 @@ pub struct StepPlan {
 }
 
 impl StepPlan {
+    /// `past_len`-invariant EMA bytes one step charges to `cat` (the
+    /// depth-dependent dequant/spill charges resolve at run time and are
+    /// NOT included). Lets trace consumers attribute a compiled step's
+    /// fixed traffic by category without re-running the stepper.
+    pub fn ledger_bytes(&self, cat: EmaCategory) -> u64 {
+        self.ledger.iter().filter(|(c, _)| *c == cat).map(|(_, b)| *b).sum()
+    }
+
     /// Compile the decode step for `batch` streams of `m`, pricing `opts`
     /// verbatim (fixed prefetch/spill/dequant — the twin of
     /// `simulate(&hw, &build_decode_step(m, past, batch), &opts)` at every

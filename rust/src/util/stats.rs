@@ -1,31 +1,46 @@
 //! Summary statistics used by the bench harness and the metrics plane.
+//!
+//! Every summary here drops non-finite samples (NaN and ±∞) before
+//! aggregating: one poisoned latency observation must never turn a whole
+//! report's mean/min/max into NaN or `inf` — both serialize as invalid
+//! JSON. All-non-finite (or empty) inputs clamp to 0.
 
-/// Mean of a slice (0 for empty).
-pub fn mean(xs: &[f64]) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
-    }
-    xs.iter().sum::<f64>() / xs.len() as f64
+fn finite(xs: &[f64]) -> impl Iterator<Item = f64> + '_ {
+    xs.iter().copied().filter(|x| x.is_finite())
 }
 
-/// Sample standard deviation (0 for n < 2).
+/// Mean over the finite samples (0 when none).
+pub fn mean(xs: &[f64]) -> f64 {
+    let (mut n, mut sum) = (0u64, 0.0);
+    for x in finite(xs) {
+        n += 1;
+        sum += x;
+    }
+    if n == 0 {
+        return 0.0;
+    }
+    sum / n as f64
+}
+
+/// Sample standard deviation over the finite samples (0 for n < 2).
 pub fn stddev(xs: &[f64]) -> f64 {
-    if xs.len() < 2 {
+    let n = finite(xs).count();
+    if n < 2 {
         return 0.0;
     }
     let m = mean(xs);
-    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+    (finite(xs).map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
 }
 
 /// Percentile by linear interpolation on the sorted data, `p` in [0, 100].
 ///
-/// NaN-tolerant twice over: samples sort by `f64::total_cmp` (no
+/// Robust twice over: samples sort by `f64::total_cmp` (no
 /// `partial_cmp().unwrap()` panic — a single bad latency sample must never
-/// take the metrics thread down), and NaN samples are dropped before
-/// ranking so the result itself stays finite (a NaN percentile would
+/// take the metrics thread down), and non-finite samples are dropped before
+/// ranking so the result itself stays finite (a NaN or ±∞ percentile would
 /// serialize as invalid JSON in reports).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    let mut v: Vec<f64> = finite(xs).collect();
     if v.is_empty() {
         return 0.0;
     }
@@ -40,29 +55,39 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
-/// Minimum (0 for empty — ±∞ from the fold identity would serialize as
-/// invalid JSON in reports).
+/// Minimum of the finite samples (0 when none — ±∞ from the fold identity
+/// would serialize as invalid JSON in reports).
 pub fn min(xs: &[f64]) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
+    let m = finite(xs).fold(f64::INFINITY, f64::min);
+    if m.is_finite() {
+        m
+    } else {
+        0.0
     }
-    xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
 
-/// Maximum (0 for empty; see [`min`]).
+/// Maximum of the finite samples (0 when none; see [`min`]).
 pub fn max(xs: &[f64]) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
+    let m = finite(xs).fold(f64::NEG_INFINITY, f64::max);
+    if m.is_finite() {
+        m
+    } else {
+        0.0
     }
-    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
-/// Geometric mean (for speedup aggregation across workloads).
+/// Geometric mean of the finite samples (for speedup aggregation across
+/// workloads; 0 when none).
 pub fn geomean(xs: &[f64]) -> f64 {
-    if xs.is_empty() {
+    let (mut n, mut lnsum) = (0u64, 0.0);
+    for x in finite(xs) {
+        n += 1;
+        lnsum += x.ln();
+    }
+    if n == 0 {
         return 0.0;
     }
-    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+    (lnsum / n as f64).exp()
 }
 
 /// Running-summary accumulator used in the serving metrics hot path —
@@ -80,7 +105,13 @@ impl Running {
     pub fn new() -> Self {
         Running { n: 0, sum: 0.0, sum2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
+    /// Fold one observation in. Non-finite samples are dropped (same
+    /// contract as the batch [`mean`]/[`min`]/[`max`] above): one NaN
+    /// would otherwise poison `sum` for the lifetime of the accumulator.
     pub fn push(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
         self.n += 1;
         self.sum += x;
         self.sum2 += x * x;
@@ -213,6 +244,38 @@ mod tests {
         assert!(p100.is_finite(), "top percentile must not surface the NaN: {p100}");
         assert_eq!(p100, 3.0);
         assert_eq!(percentile(&[f64::NAN], 50.0), 0.0, "all-NaN input clamps to 0");
+    }
+
+    #[test]
+    fn non_finite_samples_are_dropped_consistently() {
+        // Regression: percentile filtered NaN but mean/stddev/min/max did
+        // not — one poisoned sample turned every other summary in a report
+        // into NaN (invalid JSON) while the percentiles looked healthy.
+        let xs = [3.0, f64::NAN, 1.0, f64::INFINITY, 2.0, f64::NEG_INFINITY];
+        assert_eq!(mean(&xs), 2.0);
+        assert!((stddev(&xs) - 1.0).abs() < 1e-12);
+        assert_eq!(min(&xs), 1.0, "min must not surface -inf");
+        assert_eq!(max(&xs), 3.0, "max must not surface +inf");
+        assert_eq!(percentile(&xs, 100.0), 3.0, "percentile must drop +inf, not just NaN");
+        assert_eq!(geomean(&[2.0, f64::NAN, 8.0]), geomean(&[2.0, 8.0]));
+
+        // All-non-finite behaves exactly like empty: everything clamps to 0.
+        let bad = [f64::NAN, f64::INFINITY];
+        assert_eq!(mean(&bad), 0.0);
+        assert_eq!(stddev(&bad), 0.0);
+        assert_eq!(min(&bad), 0.0);
+        assert_eq!(max(&bad), 0.0);
+        assert_eq!(percentile(&bad, 50.0), 0.0);
+
+        // The O(1) running accumulator applies the same filter.
+        let mut run = Running::new();
+        for &x in &xs {
+            run.push(x);
+        }
+        assert_eq!(run.n, 3);
+        assert_eq!(run.mean(), 2.0);
+        assert_eq!(run.min, 1.0);
+        assert_eq!(run.max, 3.0);
     }
 
     #[test]

@@ -35,8 +35,10 @@ use crate::coordinator::{
     BatcherConfig, DecodePolicy, Engine, EngineConfig, Lifecycle, PoolConfig, Request, Server,
 };
 use crate::kv::{KvArenaConfig, KvManager, KvQuant};
+use crate::obs::{dump_anomaly, FlightRecorder};
 use crate::runtime::{artifacts, ArtifactSet};
 use crate::util::rng::Rng;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -206,6 +208,17 @@ pub struct FuzzConfig {
     pub iters: u64,
     /// Heartbeat to stderr every N iterations (0 = silent).
     pub progress_every: u64,
+    /// Where a failing scenario's flight-recorder anomaly dump goes
+    /// (`None` = the OS temp dir). The dump holds the recorder's final
+    /// events from the FIRST failing run — before minimization re-runs
+    /// perturb the interleaving.
+    pub dump_dir: Option<PathBuf>,
+}
+
+impl Default for FuzzConfig {
+    fn default() -> Self {
+        FuzzConfig { seed: 0, iters: 1, progress_every: 0, dump_dir: None }
+    }
 }
 
 /// One invariant failure, minimized and rendered for reproduction.
@@ -218,6 +231,9 @@ pub struct FuzzFailure {
     pub scenario: String,
     /// Minimized schedule in trace format.
     pub snippet: String,
+    /// Flight-recorder anomaly dump from the failing run (JSONL; final
+    /// lines restate the violations), when the dump could be written.
+    pub dump_path: Option<String>,
 }
 
 impl FuzzFailure {
@@ -234,10 +250,17 @@ impl FuzzFailure {
         for line in self.snippet.lines() {
             s.push_str(&format!("    {line}\n"));
         }
-        s.push_str(&format!(
-            "  reproduce: cargo run --release -- fuzz --seed {} --iters 1\n",
-            self.seed
-        ));
+        match &self.dump_path {
+            Some(p) => s.push_str(&format!(
+                "  reproduce: cargo run --release -- fuzz --seed {} --iters 1  \
+                 (flight-recorder dump: {p})\n",
+                self.seed
+            )),
+            None => s.push_str(&format!(
+                "  reproduce: cargo run --release -- fuzz --seed {} --iters 1\n",
+                self.seed
+            )),
+        }
         s
     }
 }
@@ -262,7 +285,12 @@ pub fn run_fuzz(cfg: &FuzzConfig) -> FuzzSummary {
     for i in 0..cfg.iters {
         let scenario_seed = if i == 0 { cfg.seed } else { seed_stream.next_u64() };
         let sc = Scenario::from_seed(scenario_seed);
-        let violations = exec(&sc, &sc.reqs);
+        let dump_to = cfg
+            .dump_dir
+            .clone()
+            .unwrap_or_else(std::env::temp_dir)
+            .join(format!("trex-fuzz-dump-{scenario_seed}.jsonl"));
+        let (violations, dump_path) = exec(&sc, &sc.reqs, Some(&dump_to));
         if !violations.is_empty() {
             let minimized = minimize(&sc);
             return FuzzSummary {
@@ -273,6 +301,7 @@ pub fn run_fuzz(cfg: &FuzzConfig) -> FuzzSummary {
                     violations,
                     scenario: sc.describe(),
                     snippet: Scenario::snippet(&minimized),
+                    dump_path,
                 }),
             };
         }
@@ -300,7 +329,7 @@ fn minimize(sc: &Scenario) -> Vec<ReqSpec> {
                 break;
             }
             budget -= 1;
-            if exec(sc, &candidate).is_empty() {
+            if exec(sc, &candidate, None).0.is_empty() {
                 i += chunk;
             } else {
                 reqs = candidate;
@@ -316,8 +345,12 @@ fn minimize(sc: &Scenario) -> Vec<ReqSpec> {
 }
 
 /// Run one schedule against the scenario's pool and return every invariant
-/// violation observed (empty = the scenario passed).
-fn exec(sc: &Scenario, reqs: &[ReqSpec]) -> Vec<String> {
+/// violation observed (empty = the scenario passed) plus the path of the
+/// flight-recorder anomaly dump written when there were violations and
+/// `dump_to` was given. The pool always runs with a recorder attached —
+/// fuzz scenarios are tiny, and a failing interleaving's span history is
+/// exactly what a reproduction needs.
+fn exec(sc: &Scenario, reqs: &[ReqSpec], dump_to: Option<&Path>) -> (Vec<String>, Option<String>) {
     let d = artifacts::TINY_D_MODEL;
     let max_seq = artifacts::TINY_MAX_SEQ;
     let hw = HwConfig::default();
@@ -325,6 +358,7 @@ fn exec(sc: &Scenario, reqs: &[ReqSpec]) -> Vec<String> {
     let mut arena = KvArenaConfig::for_pool(&hw, &pm, sc.kv_quant, Some(sc.kv_pages));
     arena.admit_oversub = sc.admit_oversub;
     let kv = Arc::new(KvManager::new(&hw, &pm, arena));
+    let recorder = Arc::new(FlightRecorder::for_pool(sc.workers, 4096));
     let pool = PoolConfig {
         workers: sc.workers,
         queue_depth: sc.queue_depth,
@@ -336,6 +370,8 @@ fn exec(sc: &Scenario, reqs: &[ReqSpec]) -> Vec<String> {
         prefill_chunk: sc.prefill_chunk,
         kv: Some(Arc::clone(&kv)),
         lifecycle_ledger: true,
+        recorder: Some(Arc::clone(&recorder)),
+        telemetry: None,
         batcher: BatcherConfig {
             max_seq,
             max_wait: Duration::from_micros(sc.batcher_wait_us),
@@ -470,7 +506,15 @@ fn exec(sc: &Scenario, reqs: &[ReqSpec]) -> Vec<String> {
         }
     }
 
-    violations
+    let mut dump_path = None;
+    if !violations.is_empty() {
+        if let Some(path) = dump_to {
+            if dump_anomaly(&recorder, path, &violations).is_ok() {
+                dump_path = Some(path.display().to_string());
+            }
+        }
+    }
+    (violations, dump_path)
 }
 
 #[cfg(test)]
@@ -528,7 +572,8 @@ mod tests {
     fn fuzz_smoke_holds_invariants_for_a_few_seeds() {
         // A bounded in-tree smoke: the CI job runs hundreds of iterations;
         // this keeps `cargo test` honest without the wall-clock bill.
-        let summary = run_fuzz(&FuzzConfig { seed: 0xF077, iters: 3, progress_every: 0 });
+        let summary =
+            run_fuzz(&FuzzConfig { seed: 0xF077, iters: 3, ..FuzzConfig::default() });
         if let Some(f) = &summary.failure {
             panic!("{}", f.render());
         }

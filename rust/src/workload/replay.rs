@@ -14,13 +14,14 @@
 //! admitted work keeps a bounded tail; a pool that admits everything and
 //! lets queues grow shows up here as an unbounded p95.
 
-use crate::coordinator::{RequestId, ServerHandle};
+use crate::coordinator::{Lifecycle, RequestId, ServerHandle, REPORT_SCHEMA_VERSION};
 use crate::coordinator::request::Request;
 use crate::kv::prefix_id;
+use crate::obs::ShedTimeline;
 use crate::util::json::Json;
 use crate::util::stats::percentile;
 use crate::workload::trace_file::Trace;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::RecvTimeoutError;
 use std::time::{Duration, Instant};
 
@@ -76,6 +77,13 @@ pub struct ReplayStats {
     pub latency_us_p50: f64,
     pub latency_us_p95: f64,
     pub latency_us_p99: f64,
+    /// When each door shed happened, µs from replay start — the raw
+    /// series behind [`ReplayStats::shed_timeline`].
+    pub shed_door_us: Vec<f64>,
+    /// When each post-admission shed happened, µs from replay start
+    /// (recovered from the lifecycle ledger after the drain; empty when
+    /// the pool ran without the ledger).
+    pub shed_late_us: Vec<f64>,
 }
 
 impl ReplayStats {
@@ -87,8 +95,15 @@ impl ReplayStats {
         (self.shed_at_door + self.shed_after_admit) as f64 / self.offered as f64
     }
 
+    /// Door/late sheds bucketed over the run (the shape `serve --trace`
+    /// prints and `to_json` embeds).
+    pub fn shed_timeline(&self, buckets: usize) -> ShedTimeline {
+        ShedTimeline::from_instants(&self.shed_door_us, &self.shed_late_us, buckets)
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("schema_version", Json::num(REPORT_SCHEMA_VERSION as f64)),
             ("offered", Json::num(self.offered as f64)),
             ("admitted", Json::num(self.admitted as f64)),
             ("shed_at_door", Json::num(self.shed_at_door as f64)),
@@ -102,6 +117,7 @@ impl ReplayStats {
             ("latency_us_p50", Json::num(self.latency_us_p50)),
             ("latency_us_p95", Json::num(self.latency_us_p95)),
             ("latency_us_p99", Json::num(self.latency_us_p99)),
+            ("shed_timeline", self.shed_timeline(20).to_json()),
         ])
     }
 }
@@ -115,13 +131,16 @@ impl ReplayStats {
 pub fn replay(handle: &ServerHandle, trace: &Trace, cfg: &ReplayConfig) -> ReplayStats {
     let mut stats = ReplayStats { offered: trace.len(), ..ReplayStats::default() };
     let mut submitted_at: HashMap<RequestId, Instant> = HashMap::new();
+    let mut completed_ids: HashSet<RequestId> = HashSet::new();
     let mut latencies: Vec<f64> = Vec::new();
     let start = Instant::now();
     let mut disconnected = false;
 
     let mut note = |resp: crate::coordinator::Response,
                     submitted_at: &HashMap<RequestId, Instant>,
+                    completed_ids: &mut HashSet<RequestId>,
                     latencies: &mut Vec<f64>| {
+        completed_ids.insert(resp.id);
         if let Some(t0) = submitted_at.get(&resp.id) {
             latencies.push(t0.elapsed().as_secs_f64() * 1e6);
         }
@@ -140,7 +159,7 @@ pub fn replay(handle: &ServerHandle, trace: &Trace, cfg: &ReplayConfig) -> Repla
             match handle.responses.recv_timeout(target - now) {
                 Ok(resp) => {
                     stats.completed += 1;
-                    note(resp, &submitted_at, &mut latencies);
+                    note(resp, &submitted_at, &mut completed_ids, &mut latencies);
                 }
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => disconnected = true,
@@ -163,7 +182,10 @@ pub fn replay(handle: &ServerHandle, trace: &Trace, cfg: &ReplayConfig) -> Repla
                 stats.admitted += 1;
                 submitted_at.insert(rec.id, Instant::now());
             }
-            Err(_) => stats.shed_at_door += 1,
+            Err(_) => {
+                stats.shed_at_door += 1;
+                stats.shed_door_us.push(start.elapsed().as_secs_f64() * 1e6);
+            }
         }
     }
 
@@ -180,14 +202,14 @@ pub fn replay(handle: &ServerHandle, trace: &Trace, cfg: &ReplayConfig) -> Repla
         match handle.responses.recv_timeout(wait) {
             Ok(resp) => {
                 stats.completed += 1;
-                note(resp, &submitted_at, &mut latencies);
+                note(resp, &submitted_at, &mut completed_ids, &mut latencies);
             }
             Err(RecvTimeoutError::Timeout) => {
                 if handle.inflight() == 0 {
                     // Settled: anything still unanswered was shed.
                     while let Ok(resp) = handle.responses.try_recv() {
                         stats.completed += 1;
-                        note(resp, &submitted_at, &mut latencies);
+                        note(resp, &submitted_at, &mut completed_ids, &mut latencies);
                     }
                     break;
                 }
@@ -197,6 +219,17 @@ pub fn replay(handle: &ServerHandle, trace: &Trace, cfg: &ReplayConfig) -> Repla
     }
 
     stats.shed_after_admit = stats.admitted.saturating_sub(stats.completed);
+    // Recover WHEN each post-admission shed happened from the lifecycle
+    // ledger (the shed executed on a worker thread; the ledger stamped
+    // it). Without the ledger the timeline just lacks the late series.
+    for id in submitted_at.keys() {
+        if completed_ids.contains(id) {
+            continue;
+        }
+        if let Some((Lifecycle::Shed, at)) = handle.metrics.ledger_state(*id) {
+            stats.shed_late_us.push(at.saturating_duration_since(start).as_secs_f64() * 1e6);
+        }
+    }
     stats.drained = disconnected || handle.inflight() == 0;
     stats.tokens_streamed = handle.tokens.try_iter().count();
     stats.wall_seconds = start.elapsed().as_secs_f64();

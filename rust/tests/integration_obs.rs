@@ -1,0 +1,280 @@
+//! Observability integration over the deterministic reference backend:
+//! the flight recorder's lifecycle spans tile a generate request's true
+//! end-to-end latency, the Chrome trace export round-trips through the
+//! inspect parser, the time-series sampler records snapshots, and anomaly
+//! dumps (ledger violations, fuzz failures) restate their violations in
+//! their final lines.
+
+use std::sync::Arc;
+use std::time::Duration;
+use trex::config::{HwConfig, ModelConfig};
+use trex::coordinator::{
+    BatcherConfig, Engine, EngineConfig, PoolConfig, Request, Server, ServerHandle,
+};
+use trex::kv::KvQuant;
+use trex::obs::{
+    chrome_trace, dump_anomaly, parse_trace, spans_jsonl, FlightRecorder, SpanKind, SpanWriter,
+    TelemetryConfig,
+};
+use trex::runtime::ArtifactSet;
+use trex::util::json::Json;
+use trex::workload::FuzzFailure;
+
+const MAX_SEQ: usize = 32;
+const D: usize = 64;
+
+fn start(pool: PoolConfig) -> ServerHandle {
+    let hw = HwConfig::default();
+    let pm = ModelConfig::tiny();
+    Server::start_pool(
+        move |ctx| {
+            let set = ArtifactSet::reference("tiny", D, MAX_SEQ)?;
+            Engine::for_worker(
+                set,
+                EngineConfig {
+                    hw: hw.clone(),
+                    perf_model: pm.clone(),
+                    self_test: false,
+                    kv_quant: KvQuant::Fp16,
+                    kv_pages: None,
+                },
+                ctx,
+            )
+        },
+        pool,
+    )
+}
+
+/// The acceptance criterion: one generate request's lifecycle spans
+/// (queue → prefill → every decode step → complete) are present, ordered,
+/// tile exactly (each starts where the previous ended), and sum to the
+/// reported end-to-end latency.
+#[test]
+fn lifecycle_spans_tile_and_sum_to_e2e_latency() {
+    let recorder = Arc::new(FlightRecorder::for_pool(1, 4096));
+    let handle = start(PoolConfig {
+        workers: 1,
+        recorder: Some(Arc::clone(&recorder)),
+        batcher: BatcherConfig { max_seq: MAX_SEQ, max_wait: Duration::ZERO },
+        ..PoolConfig::default()
+    });
+    let n_gen = 8;
+    let req = Request::new(7, 6, vec![0.1; 6 * D]).with_generate(n_gen);
+    handle.submit(req).unwrap();
+    let resp = handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(resp.id, 7);
+    assert_eq!(resp.tokens_generated, n_gen);
+    handle.shutdown().unwrap();
+
+    let events = recorder.snapshot();
+    let life: Vec<_> =
+        events.iter().filter(|e| e.id == 7 && e.kind.is_lifecycle()).copied().collect();
+
+    // Present and ordered: queue, prefill, one span per decode token, then
+    // the zero-duration completion marker.
+    assert_eq!(life.len(), 2 + n_gen + 1, "queue + prefill + {n_gen} steps + complete");
+    assert_eq!(life[0].kind, SpanKind::Queue);
+    assert_eq!(life[1].kind, SpanKind::Prefill);
+    for ev in &life[2..2 + n_gen] {
+        assert_eq!(ev.kind, SpanKind::DecodeStep);
+    }
+    let last = life.last().unwrap();
+    assert_eq!(last.kind, SpanKind::Complete);
+    assert_eq!(last.t_start_us, last.t_end_us, "complete is a marker");
+
+    // Tiling: each lifecycle span starts exactly where the previous ended
+    // (the cursors are copied, not re-measured — the diff is 0.0).
+    for w in life.windows(2) {
+        assert!(
+            (w[1].t_start_us - w[0].t_end_us).abs() < 1e-6,
+            "span gap: {:?} ends {} but {:?} starts {}",
+            w[0].kind,
+            w[0].t_end_us,
+            w[1].kind,
+            w[1].t_start_us
+        );
+    }
+
+    // Sum == reported e2e, within clock-read skew: the span endpoints and
+    // the response latency are measured by adjacent-but-distinct clock
+    // reads, so allow a scheduler-hiccup-sized absolute slack.
+    let span_sum: f64 = life.iter().map(|e| e.t_end_us - e.t_start_us).sum();
+    let e2e = resp.e2e_us();
+    assert!(
+        (span_sum - e2e).abs() <= 500.0 + 0.05 * e2e,
+        "lifecycle spans sum to {span_sum:.1}µs but e2e is {e2e:.1}µs"
+    );
+
+    // Decode spans carry the per-token attribution the summary feeds on.
+    for ev in &life[2..2 + n_gen] {
+        assert!(ev.chip_us > 0.0, "decode span carries chip time");
+        assert!(ev.chip_uj > 0.0, "decode span carries energy");
+    }
+}
+
+/// The Chrome trace_event export is valid JSON with both views (workers =
+/// pid 1, per-request streams = pid 2) and round-trips through the
+/// inspect parser: every exported duration event in the worker view comes
+/// back as a span.
+#[test]
+fn chrome_trace_round_trips_through_inspect_parser() {
+    let recorder = Arc::new(FlightRecorder::for_pool(1, 4096));
+    let handle = start(PoolConfig {
+        workers: 1,
+        recorder: Some(Arc::clone(&recorder)),
+        batcher: BatcherConfig { max_seq: MAX_SEQ, max_wait: Duration::ZERO },
+        ..PoolConfig::default()
+    });
+    for i in 0..3u64 {
+        handle.submit(Request::new(i, 4, vec![0.1; 4 * D]).with_generate(4)).unwrap();
+    }
+    for _ in 0..3 {
+        handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    handle.shutdown().unwrap();
+
+    let events = recorder.snapshot();
+    assert!(!events.is_empty());
+    let trace = chrome_trace(&events, 1);
+    let text = trace.to_string();
+    let parsed = Json::parse(&text).expect("chrome trace is valid JSON");
+    let arr = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    let pids: Vec<f64> = arr
+        .iter()
+        .filter_map(|e| e.opt("pid").and_then(|p| p.as_f64().ok()))
+        .collect();
+    assert!(pids.contains(&1.0), "worker view present");
+    assert!(pids.contains(&2.0), "stream view present");
+
+    // Round-trip: the inspect parser recovers the worker view, where every
+    // recorded event (spans and markers alike) appears exactly once.
+    let back = parse_trace(&text).expect("inspect parses its own export");
+    assert_eq!(back.len(), events.len(), "every event round-trips via the worker view");
+
+    // The JSONL export parses line-by-line and keeps every event.
+    let jsonl = spans_jsonl(&events);
+    let back_jsonl = parse_trace(&jsonl).expect("inspect parses span JSONL");
+    assert_eq!(back_jsonl.len(), events.len());
+}
+
+/// The time-series sampler records snapshots into the bounded ring and to
+/// JSONL, each carrying the report schema version.
+#[test]
+fn sampler_records_snapshots_and_jsonl() {
+    let out = std::env::temp_dir().join("trex-test-telemetry.jsonl");
+    let _ = std::fs::remove_file(&out);
+    let handle = start(PoolConfig {
+        workers: 1,
+        telemetry: Some(TelemetryConfig {
+            interval: Duration::from_micros(500),
+            capacity: 64,
+            out: Some(out.clone()),
+            ..TelemetryConfig::default()
+        }),
+        batcher: BatcherConfig { max_seq: MAX_SEQ, max_wait: Duration::ZERO },
+        ..PoolConfig::default()
+    });
+    for i in 0..4u64 {
+        handle.submit(Request::new(i, 4, vec![0.1; 4 * D]).with_generate(6)).unwrap();
+    }
+    for _ in 0..4 {
+        handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let report = handle.shutdown().unwrap();
+
+    let ring = report.telemetry.as_ref().expect("telemetry ring in report");
+    assert!(ring.taken() >= 1, "sampler took at least one snapshot");
+    let last = ring.last().unwrap();
+    assert_eq!(last.completed, 4);
+
+    let text = std::fs::read_to_string(&out).unwrap();
+    let lines: Vec<&str> = text.lines().filter(|l| !l.is_empty()).collect();
+    assert!(!lines.is_empty());
+    for line in &lines {
+        let j = Json::parse(line).expect("telemetry line is valid JSON");
+        assert!(j.get("schema_version").unwrap().as_u64().unwrap() >= 1);
+    }
+    let _ = std::fs::remove_file(&out);
+}
+
+/// A forced lifecycle-ledger violation produces an anomaly dump whose
+/// final lines restate exactly the violations it was taken for, after the
+/// recorder's retained spans.
+#[test]
+fn ledger_violation_anomaly_dump_ends_with_the_violation() {
+    let recorder = Arc::new(FlightRecorder::for_pool(1, 256));
+    let handle = start(PoolConfig {
+        workers: 1,
+        lifecycle_ledger: true,
+        recorder: Some(Arc::clone(&recorder)),
+        batcher: BatcherConfig { max_seq: MAX_SEQ, max_wait: Duration::ZERO },
+        ..PoolConfig::default()
+    });
+    handle.submit(Request::new(1, 4, vec![0.1; 4 * D])).unwrap();
+    handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    // Force the violation: an admission the pool never resolves.
+    handle.metrics.ledger_admit(999);
+    let report = handle.shutdown().unwrap();
+
+    let audit = report.metrics.ledger_audit().expect("ledger was on");
+    assert!(!audit.conserved(), "unresolved admission must fail the audit");
+    assert!(!audit.violations.is_empty());
+
+    let path = std::env::temp_dir().join("trex-test-ledger-anomaly.jsonl");
+    let written = dump_anomaly(&recorder, &path, &audit.violations).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), written + audit.violations.len());
+
+    // Final lines: one violation record per audit violation, verbatim.
+    let tail = &lines[written..];
+    for (line, v) in tail.iter().zip(&audit.violations) {
+        let j = Json::parse(line).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str().unwrap(), "violation");
+        assert_eq!(j.get("detail").unwrap().as_str().unwrap(), v.as_str());
+    }
+    // And the span lines before them are the recorder's events.
+    for line in &lines[..written] {
+        let j = Json::parse(line).unwrap();
+        assert!(j.opt("kind").is_some() && j.opt("ts_us").is_some());
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The fuzz-failure path writes the same dump format and its reproduce
+/// line names the dump, so one CI line carries seed + span history.
+#[test]
+fn fuzz_failure_dump_matches_violations_and_render_names_it() {
+    // The dump exactly as `workload::fuzz::exec` writes it on a failing
+    // interleaving: the run's recorder drained, violations appended last.
+    let recorder = Arc::new(FlightRecorder::for_pool(2, 64));
+    let w = SpanWriter::new(Arc::clone(&recorder), 0);
+    w.record(trex::obs::SpanEvent::marker(SpanKind::Admit, 3, w.now_us()));
+    w.record(trex::obs::SpanEvent::marker(SpanKind::Shed, 3, w.now_us()));
+    let violations =
+        vec!["conservation: admitted 3 != completed 1 + shed 1".to_string()];
+    let path = std::env::temp_dir().join("trex-test-fuzz-anomaly.jsonl");
+    let written = dump_anomaly(&recorder, &path, &violations).unwrap();
+    assert_eq!(written, 2);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let last = text.lines().last().unwrap();
+    let j = Json::parse(last).unwrap();
+    assert_eq!(j.get("kind").unwrap().as_str().unwrap(), "violation");
+    assert_eq!(j.get("detail").unwrap().as_str().unwrap(), violations[0]);
+
+    let failure = FuzzFailure {
+        seed: 0xBEEF,
+        iteration: 4,
+        violations,
+        scenario: "workers=2 queue=8".to_string(),
+        snippet: "0 0 chat 4 2".to_string(),
+        dump_path: Some(path.display().to_string()),
+    };
+    let rendered = failure.render();
+    assert!(
+        rendered.contains(&format!("flight-recorder dump: {}", path.display())),
+        "reproduce line names the dump: {rendered}"
+    );
+    assert!(rendered.contains("--seed 48879"), "reproduce line carries the seed");
+    let _ = std::fs::remove_file(&path);
+}

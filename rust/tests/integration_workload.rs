@@ -195,7 +195,7 @@ fn fuzzer_holds_invariants_across_seeds() {
     // A broader sweep than the unit smoke: 6 scenarios end-to-end. The CI
     // fuzz job runs 200 with a run-unique seed; this pins determinism and
     // the invariant plumbing into `cargo test`.
-    let summary = run_fuzz(&FuzzConfig { seed: 0x7E57ED, iters: 6, progress_every: 0 });
+    let summary = run_fuzz(&FuzzConfig { seed: 0x7E57ED, iters: 6, ..FuzzConfig::default() });
     assert_eq!(summary.iters_run, 6);
     assert!(
         summary.ok(),
