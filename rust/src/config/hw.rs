@@ -220,6 +220,19 @@ impl HwConfig {
         unreachable!()
     }
 
+    /// A copy of this config pinned to the single operating point at `vdd`
+    /// (interpolated/clamped like [`HwConfig::point_at_vdd`]). With a
+    /// one-point table, `max_point()`/`min_point()`/`point_at_vdd(..)` all
+    /// resolve to the pinned point, so pricing everywhere — the simulator,
+    /// plan compilation, DRAM adders — runs the chip at exactly that point.
+    /// This is how a fleet chip binds its VDD/frequency operating point
+    /// without any simulator changes.
+    pub fn pinned_at_vdd(&self, vdd: f64) -> HwConfig {
+        let mut hw = self.clone();
+        hw.points = vec![self.point_at_vdd(vdd)];
+        hw
+    }
+
     /// Derive the per-event energy table at an operating point.
     ///
     /// Peak power is decomposed as: 62% MAC arrays, 18% on-chip SRAM/RF
@@ -395,6 +408,21 @@ mod tests {
         // Clamp behaviour
         assert_eq!(hw.point_at_vdd(0.1).freq_mhz, 60.0);
         assert_eq!(hw.point_at_vdd(2.0).freq_mhz, 450.0);
+    }
+
+    #[test]
+    fn pinned_config_prices_everything_at_one_point() {
+        let hw = HwConfig::default();
+        let pinned = hw.pinned_at_vdd(0.60);
+        pinned.validate().unwrap();
+        assert_eq!(pinned.points.len(), 1);
+        let want = hw.point_at_vdd(0.60);
+        assert_eq!(pinned.max_point(), want);
+        assert_eq!(pinned.min_point(), want);
+        assert_eq!(pinned.point_at_vdd(0.85), want, "one-point table clamps");
+        // Geometry and the DRAM model are untouched.
+        assert_eq!(pinned.dmm_macs(), hw.dmm_macs());
+        assert_eq!(pinned.dram_ns(64), hw.dram_ns(64));
     }
 
     #[test]

@@ -91,6 +91,11 @@ pub struct DecodeState {
     /// Tokens still to generate (> 0; already clamped to the residency cap).
     pub remaining: usize,
     pub generated: usize,
+    /// Prefix-sharing group the request declared (`Request::prefix_group`)
+    /// — the fleet router's placement-affinity key: every mate of one
+    /// group decodes on the same chip, so the shared radix chain migrates
+    /// there once.
+    pub prefix_group: Option<u64>,
     pub arrival: Instant,
     /// Current token embedding (`d_model` wide) — next step's input row.
     last: Vec<f32>,
@@ -109,6 +114,16 @@ pub struct DecodeState {
 }
 
 impl DecodeState {
+    /// Charge a chip-to-chip KV migration to this stream (fleet mode):
+    /// the transfer's DRAM wall-stall and energy land on the stream's own
+    /// ledger — like a `KvSwap`, priced at the source chip's operating
+    /// point by the caller — before its first decode step on the target.
+    pub fn charge_migration(&mut self, us: f64, uj: f64, bytes: u64) {
+        self.chip_us += us;
+        self.chip_uj += uj;
+        self.ema_bytes += bytes;
+    }
+
     fn into_response(self) -> Response {
         // The decode phase's wall time (between-steps queue residency plus
         // per-step host time) counts toward end-to-end latency: the host
@@ -313,6 +328,11 @@ pub struct Engine {
     /// off — every record site below is a branch on this option, so the
     /// disabled hot path allocates and locks nothing).
     obs: Option<SpanWriter>,
+    /// Plan-registry namespace ([`PlanRegistry::get_or_compile_scoped`]):
+    /// 0 for the single-chip pool (all workers share plans), `chip + 1`
+    /// for a fleet worker — chips at different operating points compile
+    /// different step timings for the same `(model, group, quant)` key.
+    plan_scope: u64,
 }
 
 impl Engine {
@@ -372,6 +392,7 @@ impl Engine {
             plan_memo: [PlanMemoSlot::default(); PLAN_MEMO_SLOTS],
             scratch: DecodeScratch::default(),
             obs: None,
+            plan_scope: 0,
         })
     }
 
@@ -381,7 +402,18 @@ impl Engine {
     /// [`WorkerCtx::kv_shared`] (decode streams hop workers through the
     /// shared queue, so per-worker private arenas would leak entries and
     /// miss eviction/swap charges).
-    pub fn for_worker(artifacts: ArtifactSet, cfg: EngineConfig, ctx: &WorkerCtx) -> Result<Self> {
+    pub fn for_worker(
+        artifacts: ArtifactSet,
+        mut cfg: EngineConfig,
+        ctx: &WorkerCtx,
+    ) -> Result<Self> {
+        // Fleet worker: the factory's HwConfig is the catalog's *base*;
+        // this worker runs its bound chip — pinned operating point, GB
+        // override, and a per-chip plan-registry scope (plans compiled at
+        // one chip's frequency must not serve another's).
+        if let Some(fleet) = &ctx.fleet {
+            cfg.hw = fleet.chip(ctx.worker).hw.clone();
+        }
         let kv = match &ctx.kv {
             Some(kv) => Arc::clone(kv),
             None => Arc::clone(ctx.kv_shared.get_or_init(|| {
@@ -395,6 +427,7 @@ impl Engine {
         let mut engine =
             Self::with_parts(artifacts, cfg, Arc::clone(&ctx.sim_cache), kv, Arc::clone(&ctx.plans))?;
         engine.obs = ctx.obs.clone();
+        engine.plan_scope = if ctx.fleet.is_some() { ctx.worker as u64 + 1 } else { 0 };
         Ok(engine)
     }
 
@@ -511,7 +544,7 @@ impl Engine {
             let plan = {
                 let hw = &self.cfg.hw;
                 let m = &self.cfg.perf_model;
-                self.plans.get_or_compile(&m.name, group, quant, || {
+                self.plans.get_or_compile_scoped(self.plan_scope, &m.name, group, quant, || {
                     StepPlan::compile_budgeted(hw, m, group, quant)
                 })
             };
@@ -808,6 +841,7 @@ impl Engine {
                     past_len: r.len,
                     remaining: generate,
                     generated: 0,
+                    prefix_group: r.prefix_group,
                     arrival: r.arrival,
                     last,
                     output,
@@ -1016,6 +1050,7 @@ impl DecodeState {
             past_len,
             remaining: 1,
             generated: 0,
+            prefix_group: None,
             arrival: Instant::now(),
             last: Vec::new(),
             output: Vec::new(),

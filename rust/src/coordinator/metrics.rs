@@ -26,7 +26,11 @@ const CHUNK_MARKS_CAP: usize = 1024;
 /// rely on stable key *order*: all JSON objects serialize through
 /// `util::json::Json::Obj` (a `BTreeMap`), so keys are always emitted in
 /// sorted order regardless of insertion order.
-pub const REPORT_SCHEMA_VERSION: u64 = 1;
+///
+/// v2: fleet-aware reports — every `workers[]` entry carries `chip_id`,
+/// fleet pools add `kv_arena_per_chip`, and Chrome traces group worker
+/// lanes one process per chip.
+pub const REPORT_SCHEMA_VERSION: u64 = 2;
 
 #[derive(Debug, Default)]
 struct Inner {

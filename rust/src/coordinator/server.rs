@@ -66,6 +66,7 @@ use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::request::{Request, Response, TokenEvent};
 use crate::coordinator::sim_cache::{CacheStats, SimCache};
 use crate::error::{Error, Result};
+use crate::fleet::Fleet;
 use crate::kv::KvManager;
 use crate::obs::{
     dump_anomaly, FlightRecorder, Snapshot, SpanEvent, SpanKind, SpanWriter, Telemetry,
@@ -151,6 +152,17 @@ pub struct PoolConfig {
     /// eviction and swap-in charging are pool-wide. `None`: each engine
     /// keeps a private manager and admission skips the KV bound.
     pub kv: Option<Arc<KvManager>>,
+    /// Disaggregated heterogeneous fleet ([`crate::fleet`]): when set, the
+    /// pool binds worker *i* to chip *i* (forcing `workers ==
+    /// fleet.n_chips()`), the work queue keeps per-chip lanes, prefill
+    /// batches round-robin over prefill-capable chips, decode streams hash
+    /// to decode-capable chips by prefix group, admission projects KV
+    /// bytes against the *decode-target* chip's arena, and a stream that
+    /// prefills on one chip and decodes on another pays a priced KV
+    /// migration. Overrides `workers` and `kv` (each chip carries its own
+    /// manager). `None` (default): the single-chip pool, byte-identical to
+    /// the pre-fleet behavior.
+    pub fleet: Option<Arc<Fleet>>,
     /// Per-request lifecycle ledger on the pooled metrics sink: every
     /// admission is tracked to exactly one terminal (completed or shed),
     /// auditable via [`ServerMetrics::ledger_audit`]. Off by default — the
@@ -197,6 +209,7 @@ impl Default for PoolConfig {
             decode_priority: false,
             prefill_chunk: 0,
             kv: None,
+            fleet: None,
             lifecycle_ledger: false,
             recorder: None,
             telemetry: None,
@@ -226,12 +239,23 @@ pub struct WorkerCtx {
     /// Span writer bound to this worker's flight-recorder lane (`None`
     /// when tracing is off). [`Engine::for_worker`] adopts it.
     pub obs: Option<SpanWriter>,
+    /// The pool's fleet ([`PoolConfig::fleet`]), if any. This worker is
+    /// bound to chip `worker`: [`Engine::for_worker`] adopts that chip's
+    /// pinned [`crate::config::HwConfig`] (overriding the factory's) and
+    /// compiles its step plans under a per-chip registry scope; `kv` is
+    /// already that chip's manager.
+    pub fleet: Option<Arc<Fleet>>,
 }
 
 // ---------------------------------------------------------------- work queue
 
+/// One chip's work lanes. A single-chip pool has exactly one (index 0,
+/// shared by every worker — the pre-fleet shape); a fleet pool has one per
+/// chip, and worker *i* only ever pops lane *i* — placement is decided at
+/// push time (ingest routes prefill, `route_decode` routes streams), not
+/// by whichever worker wakes first.
 #[derive(Default)]
-struct QueueState {
+struct ChipQueues {
     /// Per-class FIFO of `(admission seq, batch)`.
     queues: [VecDeque<(u64, FormedBatch)>; 3],
     /// Chunked prefills parked between chunks, FIFO.
@@ -239,7 +263,19 @@ struct QueueState {
     /// Decode streams waiting between steps — regrouped on every pop, so
     /// batch membership is continuous, not fixed at prefill time.
     decode: DecodePool,
+}
+
+impl ChipQueues {
+    fn prefill_len(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+}
+
+struct QueueState {
+    /// Per-chip lanes (always at least one).
+    chips: Vec<ChipQueues>,
     next_seq: u64,
+    /// Total queued prefill batches across all chips (admission bound).
     len: usize,
     closed: bool,
 }
@@ -264,17 +300,28 @@ struct WorkQueue {
     decode_max_wait: Duration,
     /// Near-done-first decode ordering.
     decode_priority: bool,
+    /// Chip lanes (1 without a fleet). With more than one, pushes wake
+    /// every waiter — a single `notify_one` could land on a worker bound
+    /// to a different chip and strand the work.
+    n_chips: usize,
 }
 
 impl WorkQueue {
     fn new(
+        n_chips: usize,
         affinity: bool,
         decode: DecodePolicy,
         decode_max_wait: Duration,
         decode_priority: bool,
     ) -> Self {
+        let n_chips = n_chips.max(1);
         WorkQueue {
-            state: Mutex::new(QueueState::default()),
+            state: Mutex::new(QueueState {
+                chips: (0..n_chips).map(|_| ChipQueues::default()).collect(),
+                next_seq: 0,
+                len: 0,
+                closed: false,
+            }),
             ready: Condvar::new(),
             len_hint: AtomicUsize::new(0),
             chunks_executing: AtomicUsize::new(0),
@@ -282,6 +329,18 @@ impl WorkQueue {
             decode,
             decode_max_wait,
             decode_priority,
+            n_chips,
+        }
+    }
+
+    /// Wake waiters after a push: one suffices when every worker serves
+    /// the same (only) lane; with per-chip lanes the push must reach the
+    /// one worker bound to that chip, so wake everyone.
+    fn notify_push(&self) {
+        if self.n_chips > 1 {
+            self.ready.notify_all();
+        } else {
+            self.ready.notify_one();
         }
     }
 
@@ -295,32 +354,33 @@ impl WorkQueue {
         self.chunks_executing.fetch_sub(1, Ordering::AcqRel);
     }
 
-    fn push(&self, batch: FormedBatch) {
+    fn push(&self, chip: usize, batch: FormedBatch) {
         let mut s = self.state.lock().unwrap();
         let seq = s.next_seq;
         s.next_seq += 1;
-        s.queues[batch.class.index()].push_back((seq, batch));
+        s.chips[chip].queues[batch.class.index()].push_back((seq, batch));
         s.len += 1;
         self.len_hint.store(s.len, Ordering::Relaxed);
-        self.ready.notify_one();
+        self.notify_push();
     }
 
-    /// Park a chunked prefill between chunks — any worker may resume it.
-    fn push_parked(&self, state: Box<PrefillState>) {
+    /// Park a chunked prefill between chunks — any worker of its chip may
+    /// resume it.
+    fn push_parked(&self, chip: usize, state: Box<PrefillState>) {
         let mut s = self.state.lock().unwrap();
-        s.parked.push_back(state);
-        self.ready.notify_one();
+        s.chips[chip].parked.push_back(state);
+        self.notify_push();
     }
 
-    /// Return decode streams to the between-steps pool. Called after every
-    /// step (and after prefill for streams entering decode) — the next pop
-    /// regroups whatever is waiting.
-    fn push_decode(&self, states: Vec<DecodeState>) {
+    /// Return decode streams to the between-steps pool of `chip`. Called
+    /// after every step (and after prefill for streams entering decode) —
+    /// the next pop regroups whatever is waiting.
+    fn push_decode(&self, chip: usize, states: Vec<DecodeState>) {
         if states.is_empty() {
             return;
         }
         let mut s = self.state.lock().unwrap();
-        s.decode.push(Instant::now(), states);
+        s.chips[chip].decode.push(Instant::now(), states);
         // One push can seed more than one group — wake everyone waiting.
         self.ready.notify_all();
     }
@@ -352,6 +412,7 @@ impl WorkQueue {
     /// closed, momentarily-empty queue never strands work.
     fn pop(
         &self,
+        chip: usize,
         warm: Option<BatchClass>,
         prefer_prefill: bool,
         group_buf: &mut Vec<DecodeState>,
@@ -360,41 +421,46 @@ impl WorkQueue {
         let mut s = self.state.lock().unwrap();
         loop {
             let now = Instant::now();
-            let has_prefill = s.len > 0 || !s.parked.is_empty();
-            if !(prefer_prefill && has_prefill) {
-                // A closed queue voids coalescing windows: drain everything.
-                let max_wait = if s.closed { Duration::ZERO } else { self.decode_max_wait };
-                let popped = s.decode.try_pop_into(
-                    now,
-                    self.decode,
-                    max_wait,
-                    self.decode_priority,
-                    group_buf,
-                );
-                if let Some(coalesce_wait_us) = popped {
-                    // A prefill is mid-flight: parked here, or a chunk
-                    // executing on another worker right now.
-                    let interleaved = !s.parked.is_empty()
-                        || self.chunks_executing.load(Ordering::Relaxed) > 0;
-                    return Some(WorkItem::Decode { interleaved, coalesce_wait_us });
+            // A closed queue voids coalescing windows: drain everything.
+            let max_wait = if s.closed { Duration::ZERO } else { self.decode_max_wait };
+            let chunks_executing = self.chunks_executing.load(Ordering::Relaxed);
+            {
+                // Scoped: the chip-lane borrow must end before `choose`
+                // and the condvar waits below re-borrow the whole state.
+                let c = &mut s.chips[chip];
+                let has_prefill = c.prefill_len() > 0 || !c.parked.is_empty();
+                if !(prefer_prefill && has_prefill) {
+                    let popped = c.decode.try_pop_into(
+                        now,
+                        self.decode,
+                        max_wait,
+                        self.decode_priority,
+                        group_buf,
+                    );
+                    if let Some(coalesce_wait_us) = popped {
+                        // A prefill is mid-flight: parked here, or a chunk
+                        // executing on another worker right now.
+                        let interleaved = !c.parked.is_empty() || chunks_executing > 0;
+                        return Some(WorkItem::Decode { interleaved, coalesce_wait_us });
+                    }
+                }
+                // Parked chunks resume before fresh batches start:
+                // in-flight passes finish first, bounding parked state.
+                if let Some(st) = c.parked.pop_front() {
+                    return Some(WorkItem::PrefillChunk(st));
                 }
             }
-            // Parked chunks resume before fresh batches start: in-flight
-            // passes finish first, bounding parked state.
-            if let Some(st) = s.parked.pop_front() {
-                return Some(WorkItem::PrefillChunk(st));
-            }
-            if s.len > 0 {
-                let batch = self.choose(&mut s, warm);
+            if s.chips[chip].prefill_len() > 0 {
+                let batch = self.choose(&mut s, chip, warm);
                 self.len_hint.store(s.len, Ordering::Relaxed);
                 return Some(WorkItem::Prefill(batch));
             }
-            if !s.decode.is_empty() {
+            if !s.chips[chip].decode.is_empty() {
                 // Only still-coalescing streams remain: sleep until the
                 // would-be group's window expires (or new work notifies).
                 // pop_deadline is consistent with try_pop's gate, so the
                 // wake is guaranteed a dispatch — no spin.
-                let deadline = s
+                let deadline = s.chips[chip]
                     .decode
                     .pop_deadline(self.decode, self.decode_max_wait, self.decode_priority)
                     .expect("non-empty decode pool plans a group");
@@ -407,22 +473,25 @@ impl WorkQueue {
                 continue;
             }
             if s.closed {
+                // This chip's lanes are dry; other chips' lanes drain
+                // through their own bound workers.
                 return None;
             }
             s = self.ready.wait(s).unwrap();
         }
     }
 
-    fn choose(&self, s: &mut QueueState, warm: Option<BatchClass>) -> FormedBatch {
+    fn choose(&self, s: &mut QueueState, chip: usize, warm: Option<BatchClass>) -> FormedBatch {
+        let queues = &mut s.chips[chip].queues;
         let oldest_idx = (0..3)
-            .filter(|&i| !s.queues[i].is_empty())
-            .min_by_key(|&i| s.queues[i].front().map(|(seq, _)| *seq).unwrap_or(u64::MAX))
+            .filter(|&i| !queues[i].is_empty())
+            .min_by_key(|&i| queues[i].front().map(|(seq, _)| *seq).unwrap_or(u64::MAX))
             .expect("choose called on non-empty queue");
-        let oldest_seq = s.queues[oldest_idx].front().expect("non-empty").0;
+        let oldest_seq = queues[oldest_idx].front().expect("non-empty").0;
         let take = match warm {
             Some(class) if self.affinity => {
                 let wi = class.index();
-                match s.queues[wi].front() {
+                match queues[wi].front() {
                     // Warm jump allowed only within the aging window.
                     Some(&(seq, _)) if seq <= oldest_seq + AFFINITY_WINDOW => wi,
                     _ => oldest_idx,
@@ -430,7 +499,7 @@ impl WorkQueue {
             }
             _ => oldest_idx,
         };
-        let (_, batch) = s.queues[take].pop_front().expect("selected queue non-empty");
+        let (_, batch) = queues[take].pop_front().expect("selected queue non-empty");
         s.len -= 1;
         batch
     }
@@ -449,6 +518,11 @@ pub struct Submitter {
     inflight: Arc<AtomicUsize>,
     /// KV-arena admission for generate requests (None = unbounded).
     kv: Option<Arc<KvManager>>,
+    /// Fleet placement: when set, a generate request's KV projection is
+    /// charged against its *decode-target* chip's arena (the chip the
+    /// prefix-group hash will decode it on), so each chip sheds at its own
+    /// budget instead of one global bound.
+    fleet: Option<Arc<Fleet>>,
     /// Admission-door span writer (admit/door-shed markers).
     obs: Option<SpanWriter>,
     /// Send gate: submits hold the read side across the closed-check +
@@ -521,7 +595,16 @@ impl Submitter {
         // oversubscription bound — per-class caps alone don't see the
         // *aggregate* across concurrent streams.
         if req.generate > 0 {
-            if let Some(kv) = &self.kv {
+            // In a fleet, the budget that matters is the decode-target
+            // chip's: that arena holds the stream's KV for its whole
+            // decode life (the prefill chip only stages it briefly).
+            let target_kv: Option<&Arc<KvManager>> = match &self.fleet {
+                Some(fleet) => {
+                    Some(&fleet.chips[fleet.decode_chip_index(req.prefix_group, req.id)].kv)
+                }
+                None => self.kv.as_ref(),
+            };
+            if let Some(kv) = target_kv {
                 if !kv.try_admit(req.id, req.len, req.generate, class.batch(), req.prefix_group) {
                     self.inflight.fetch_sub(1, Ordering::AcqRel);
                     self.metrics.record_rejected();
@@ -549,9 +632,14 @@ impl Submitter {
             let Msg::Req(req) = send_err.0 else { unreachable!("we sent a request") };
             self.metrics.ledger_shed(req.id);
             if req.generate > 0 {
-                if let Some(kv) = &self.kv {
-                    // Undo the arena reservation — the stream never ran.
-                    kv.release(req.id);
+                // Undo the arena reservation — the stream never ran.
+                match &self.fleet {
+                    Some(fleet) => fleet.release_stream(req.id),
+                    None => {
+                        if let Some(kv) = &self.kv {
+                            kv.release(req.id);
+                        }
+                    }
                 }
             }
             return Err((req, Error::serve("server is down".to_string())));
@@ -587,8 +675,13 @@ pub struct ServerHandle {
     /// Pooled metrics (every worker records into this sink too).
     pub metrics: Arc<ServerMetrics>,
     worker_metrics: Vec<Arc<ServerMetrics>>,
-    sim_cache: Arc<SimCache>,
+    /// One simulation cache per chip (exactly one without a fleet — the
+    /// pool-wide shared cache). Per-chip because a `PassKey` does not
+    /// carry the operating point: two chips at different frequencies
+    /// produce different timings for the same key.
+    sim_caches: Vec<Arc<SimCache>>,
     kv: Option<Arc<KvManager>>,
+    fleet: Option<Arc<Fleet>>,
     recorder: Option<Arc<FlightRecorder>>,
     telemetry: Option<Arc<Telemetry>>,
     sampler: Option<JoinHandle<()>>,
@@ -638,9 +731,10 @@ impl ServerHandle {
         self.sub.pending_batches()
     }
 
-    /// Live view of the shared simulation cache.
+    /// Live view of the shared simulation cache(s) — summed across chips
+    /// in a fleet.
     pub fn cache_stats(&self) -> CacheStats {
-        self.sim_cache.stats()
+        sum_cache_stats(&self.sim_caches)
     }
 
     /// The pool's flight recorder, when tracing is on.
@@ -695,8 +789,9 @@ impl ServerHandle {
             wall_seconds: self.started.elapsed().as_secs_f64(),
             metrics: Arc::clone(&self.metrics),
             workers: self.worker_metrics.clone(),
-            cache: self.sim_cache.stats(),
+            cache: sum_cache_stats(&self.sim_caches),
             kv: self.kv.clone(),
+            fleet: self.fleet.clone(),
             recorder: self.recorder.clone(),
             telemetry: self.telemetry.clone(),
         })
@@ -718,6 +813,9 @@ pub struct ServerReport {
     pub cache: CacheStats,
     /// The pool's shared KV manager (when one was configured).
     pub kv: Option<Arc<KvManager>>,
+    /// The fleet (when one was configured) — per-chip KV arenas and chip
+    /// identity for the report's worker attribution.
+    pub fleet: Option<Arc<Fleet>>,
     /// The flight recorder (when tracing was on) — export its snapshot
     /// with [`crate::obs::chrome_trace`] / [`crate::obs::spans_jsonl`].
     pub recorder: Option<Arc<FlightRecorder>>,
@@ -741,6 +839,25 @@ impl ServerReport {
             if let Some(kv) = &self.kv {
                 m.insert("kv_arena".to_string(), kv.to_json());
             }
+            if let Some(fleet) = &self.fleet {
+                m.insert(
+                    "kv_arena_per_chip".to_string(),
+                    Json::Arr(
+                        fleet
+                            .chips
+                            .iter()
+                            .map(|c| {
+                                let mut cj = c.kv.to_json();
+                                if let Json::Obj(cm) = &mut cj {
+                                    cm.insert("chip_id".to_string(), Json::str(&*c.spec.id));
+                                    cm.insert("chip_role".to_string(), Json::str(c.spec.role.name()));
+                                }
+                                cj
+                            })
+                            .collect(),
+                    ),
+                );
+            }
             if let Some(rec) = &self.recorder {
                 m.insert(
                     "trace_events_recorded".to_string(),
@@ -755,13 +872,40 @@ impl ServerReport {
                 Json::Arr(
                     self.workers
                         .iter()
-                        .map(|w| w.report(self.wall_seconds))
+                        .enumerate()
+                        .map(|(i, w)| {
+                            let mut wj = w.report(self.wall_seconds);
+                            if let Json::Obj(wm) = &mut wj {
+                                // Worker→chip attribution (worker i is
+                                // bound to chip i; a single-chip pool is
+                                // all "chip0").
+                                let chip_id = match &self.fleet {
+                                    Some(f) => f.chips[i].spec.id.clone(),
+                                    None => "chip0".to_string(),
+                                };
+                                wm.insert("chip_id".to_string(), Json::Str(chip_id));
+                            }
+                            wj
+                        })
                         .collect(),
                 ),
             );
         }
         j
     }
+}
+
+/// Sum per-chip cache counters into one pool-wide view (identity for the
+/// single-cache pool).
+fn sum_cache_stats(caches: &[Arc<SimCache>]) -> CacheStats {
+    let mut total = CacheStats { hits: 0, misses: 0, entries: 0 };
+    for c in caches {
+        let s = c.stats();
+        total.hits += s.hits;
+        total.misses += s.misses;
+        total.entries += s.entries;
+    }
+    total
 }
 
 // -------------------------------------------------------------------- server
@@ -796,8 +940,21 @@ impl Server {
         if cfg.lifecycle_ledger {
             pooled.enable_ledger();
         }
-        let sim_cache = Arc::new(SimCache::new());
+        // A fleet binds worker i to chip i: the pool runs exactly one
+        // worker per chip (placement decides where work goes, not worker
+        // count), and each chip gets its own simulation cache — a PassKey
+        // doesn't carry the operating point, so chips at different
+        // frequencies must not share simulated timings.
+        let fleet = cfg.fleet.clone();
+        let n_chips = fleet.as_ref().map(|f| f.n_chips()).unwrap_or(1);
+        let n_workers = match &fleet {
+            Some(f) => f.n_chips(),
+            None => cfg.workers.max(1),
+        };
+        let sim_caches: Vec<Arc<SimCache>> =
+            (0..n_chips).map(|_| Arc::new(SimCache::new())).collect();
         let queue = Arc::new(WorkQueue::new(
+            n_chips,
             cfg.affinity,
             cfg.decode,
             cfg.decode_max_wait,
@@ -807,7 +964,6 @@ impl Server {
         let factory = Arc::new(make_engine);
         let prefill_chunk = cfg.prefill_chunk;
 
-        let n_workers = cfg.workers.max(1);
         let recorder = cfg.recorder.clone();
         let kv_shared: Arc<OnceLock<Arc<KvManager>>> = Arc::new(OnceLock::new());
         let plans = Arc::new(PlanRegistry::new());
@@ -818,11 +974,17 @@ impl Server {
             worker_metrics.push(Arc::clone(&own));
             let ctx = WorkerCtx {
                 worker,
-                sim_cache: Arc::clone(&sim_cache),
+                // Worker i serves chip i in a fleet; all workers share
+                // cache 0 (the one chip) otherwise.
+                sim_cache: Arc::clone(&sim_caches[if fleet.is_some() { worker } else { 0 }]),
                 plans: Arc::clone(&plans),
-                kv: cfg.kv.clone(),
+                kv: match &fleet {
+                    Some(f) => Some(Arc::clone(&f.chips[worker].kv)),
+                    None => cfg.kv.clone(),
+                },
                 kv_shared: Arc::clone(&kv_shared),
                 obs: recorder.as_ref().map(|r| SpanWriter::new(Arc::clone(r), worker)),
+                fleet: fleet.clone(),
             };
             let factory = Arc::clone(&factory);
             let queue = Arc::clone(&queue);
@@ -856,6 +1018,7 @@ impl Server {
         let ingest_queue = Arc::clone(&queue);
         let ingest_inflight = Arc::clone(&inflight);
         let ingest_kv = cfg.kv.clone();
+        let ingest_fleet = fleet.clone();
         let batcher_cfg = cfg.batcher;
         let ingest = std::thread::Builder::new()
             .name("trex-ingest".to_string())
@@ -867,6 +1030,7 @@ impl Server {
                     ingest_metrics,
                     ingest_inflight,
                     ingest_kv,
+                    ingest_fleet,
                 )
             })
             .expect("spawn ingest thread");
@@ -883,12 +1047,24 @@ impl Server {
             let inflight = Arc::clone(&inflight);
             let kv = cfg.kv.clone();
             let kv_shared = Arc::clone(&kv_shared);
+            let sampler_fleet = fleet.clone();
             let rec = recorder.clone();
             sampler = Some(
                 std::thread::Builder::new()
                     .name("trex-sampler".to_string())
                     .spawn(move || {
-                        sampler_loop(tcfg, ring, stop, metrics, queue, inflight, kv, kv_shared, rec)
+                        sampler_loop(
+                            tcfg,
+                            ring,
+                            stop,
+                            metrics,
+                            queue,
+                            inflight,
+                            kv,
+                            kv_shared,
+                            sampler_fleet,
+                            rec,
+                        )
                     })
                     .expect("spawn sampler thread"),
             );
@@ -901,6 +1077,7 @@ impl Server {
                 queue,
                 inflight,
                 kv: cfg.kv.clone(),
+                fleet: fleet.clone(),
                 obs: recorder
                     .as_ref()
                     .map(|r| SpanWriter::new(Arc::clone(r), r.admit_lane())),
@@ -913,8 +1090,9 @@ impl Server {
             tokens: tok_rx,
             metrics: pooled,
             worker_metrics,
-            sim_cache,
+            sim_caches,
             kv: cfg.kv,
+            fleet,
             recorder,
             telemetry,
             sampler,
@@ -942,6 +1120,7 @@ fn sampler_loop(
     inflight: Arc<AtomicUsize>,
     kv: Option<Arc<KvManager>>,
     kv_shared: Arc<OnceLock<Arc<KvManager>>>,
+    fleet: Option<Arc<Fleet>>,
     recorder: Option<Arc<FlightRecorder>>,
 ) {
     use std::io::Write;
@@ -956,15 +1135,32 @@ fn sampler_loop(
         let stopping = stop.load(Ordering::Acquire);
         let m = metrics.sample();
         // The pool's arena is either the configured one or the engines'
-        // shared fallback (installed by the first worker).
-        let arena = kv.as_ref().or_else(|| kv_shared.get());
+        // shared fallback (installed by the first worker); a fleet sums
+        // its per-chip arenas into the pool-wide gauges.
+        let (kv_used, kv_sh, kv_live) = match &fleet {
+            Some(f) => f.chips.iter().fold((0, 0, 0), |a, c| {
+                (
+                    a.0 + c.kv.used_pages(),
+                    a.1 + c.kv.shared_pages(),
+                    a.2 + c.kv.live_streams(),
+                )
+            }),
+            None => {
+                let arena = kv.as_ref().or_else(|| kv_shared.get());
+                (
+                    arena.map(|k| k.used_pages()).unwrap_or(0),
+                    arena.map(|k| k.shared_pages()).unwrap_or(0),
+                    arena.map(|k| k.live_streams()).unwrap_or(0),
+                )
+            }
+        };
         let snap = Snapshot {
             t_us: started.elapsed().as_secs_f64() * 1e6,
             queue_depth: queue.len(),
             inflight: inflight.load(Ordering::Acquire),
-            kv_used_pages: arena.map(|k| k.used_pages()).unwrap_or(0),
-            kv_shared_pages: arena.map(|k| k.shared_pages()).unwrap_or(0),
-            kv_live_streams: arena.map(|k| k.live_streams()).unwrap_or(0),
+            kv_used_pages: kv_used,
+            kv_shared_pages: kv_sh,
+            kv_live_streams: kv_live,
             completed: m.completed,
             rejected: m.rejected,
             execute_errors: m.execute_errors,
@@ -1009,6 +1205,7 @@ fn sampler_loop(
 /// Admission thread: classify + batch requests, feed the work queue, flush
 /// deadlines. On shutdown it drains the batcher (partial batches included)
 /// into the queue and closes it, so workers finish everything admitted.
+#[allow(clippy::too_many_arguments)]
 fn ingest_loop(
     batcher_cfg: BatcherConfig,
     rx: Receiver<Msg>,
@@ -1016,24 +1213,44 @@ fn ingest_loop(
     metrics: Arc<ServerMetrics>,
     inflight: Arc<AtomicUsize>,
     kv: Option<Arc<KvManager>>,
+    fleet: Option<Arc<Fleet>>,
 ) {
     let mut batcher = DynamicBatcher::new(batcher_cfg);
+    // Formed batches land on a chip lane: round-robin over the fleet's
+    // prefill-capable chips (chip 0 without a fleet).
+    let mut prefill_rr: u64 = 0;
+    fn prefill_target(fleet: Option<&Fleet>, rr: &mut u64) -> usize {
+        match fleet {
+            Some(f) => {
+                let chip = f.prefill_chip_index(*rr);
+                *rr += 1;
+                chip
+            }
+            None => 0,
+        }
+    }
     // Admit one request into the batcher, forwarding any formed batch.
     // Unservable lengths are normally rejected at submit; this is the
     // defense-in-depth path (shed, never poison the pool — and a shed
-    // generate request must give back its kv-arena reservation).
-    let admit = |batcher: &mut DynamicBatcher, req: Request| {
+    // generate request must give back its kv-arena reservation, on every
+    // chip in a fleet: the door projected it on the decode target).
+    let admit = |batcher: &mut DynamicBatcher, rr: &mut u64, req: Request| {
         let (id, generate) = (req.id, req.generate);
         match batcher.push(req) {
-            Ok(Some(batch)) => queue.push(batch),
+            Ok(Some(batch)) => queue.push(prefill_target(fleet.as_deref(), rr), batch),
             Ok(None) => {}
             Err(_) => {
                 metrics.record_rejected();
                 metrics.ledger_shed(id);
                 inflight.fetch_sub(1, Ordering::AcqRel);
                 if generate > 0 {
-                    if let Some(kv) = &kv {
-                        kv.release(id);
+                    match &fleet {
+                        Some(f) => f.release_stream(id),
+                        None => {
+                            if let Some(kv) = &kv {
+                                kv.release(id);
+                            }
+                        }
                     }
                 }
             }
@@ -1046,13 +1263,13 @@ fn ingest_loop(
             .map(|d| d.saturating_duration_since(Instant::now()))
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
-            Ok(Msg::Req(req)) => admit(&mut batcher, req),
+            Ok(Msg::Req(req)) => admit(&mut batcher, &mut prefill_rr, req),
             Ok(Msg::Shutdown) => {
                 // Drain requests that were already sent when shutdown was
                 // signalled — a submit that returned Ok is never dropped.
                 while let Ok(msg) = rx.try_recv() {
                     if let Msg::Req(req) = msg {
-                        admit(&mut batcher, req);
+                        admit(&mut batcher, &mut prefill_rr, req);
                     }
                 }
                 break;
@@ -1061,11 +1278,11 @@ fn ingest_loop(
             Err(RecvTimeoutError::Disconnected) => break,
         }
         for batch in batcher.poll_deadline(Instant::now()) {
-            queue.push(batch);
+            queue.push(prefill_target(fleet.as_deref(), &mut prefill_rr), batch);
         }
     }
     for batch in batcher.drain() {
-        queue.push(batch);
+        queue.push(prefill_target(fleet.as_deref(), &mut prefill_rr), batch);
     }
     queue.close();
 }
@@ -1093,12 +1310,16 @@ fn worker_loop(
     if let Some(w) = &ctx.obs {
         // Bind the recorder's KV lane to whichever arena this pool ended
         // up with (configured or shared-fallback); first worker wins,
-        // attach is idempotent.
+        // attach is idempotent. (In a fleet each chip's manager binds the
+        // same lane — per-chip attribution rides on the worker lanes.)
         let rec = w.recorder();
         engine
             .kv_manager()
             .attach_span_writer(SpanWriter::new(Arc::clone(rec), rec.kv_lane()));
     }
+    // The chip lane this worker serves: its own index in a fleet (worker
+    // i ↔ chip i), the single shared lane 0 otherwise.
+    let chip = if ctx.fleet.is_some() { ctx.worker } else { 0 };
     let mut warm: Option<BatchClass> = None;
     let mut first_err: Option<Error> = None;
     let mut last_was_decode = false;
@@ -1109,6 +1330,13 @@ fn worker_loop(
     // slot, send. A dropped receiver is a client gone — not a pool error.
     let finish = |mut resp: Response| {
         resp.worker = ctx.worker;
+        if let Some(fleet) = &ctx.fleet {
+            // Terminal sweep: a generate stream clamped to zero tokens at
+            // prefill was released by the engine on THIS chip, but its
+            // door projection lives on its decode-target chip. Release
+            // everywhere — a no-op on arenas that never saw the id.
+            fleet.release_stream(resp.id);
+        }
         pooled.ledger_complete(resp.id);
         pooled.record_response(&resp, resp.prefill_len);
         own.record_response(&resp, resp.prefill_len);
@@ -1133,7 +1361,13 @@ fn worker_loop(
         let shed_t = ctx.obs.as_ref().map(|w| w.now_us());
         for id in ids {
             pooled.ledger_shed(id);
-            engine.kv_manager().release(id);
+            // A fleet stream can hold state on two chips at once (KV on
+            // its prefill chip, projection on its decode target — or
+            // mid-migration on both): sweep every arena.
+            match &ctx.fleet {
+                Some(fleet) => fleet.release_stream(id),
+                None => engine.kv_manager().release(id),
+            }
             if let Some(w) = &ctx.obs {
                 w.record(SpanEvent::marker(SpanKind::Shed, id, shed_t.unwrap_or(0.0)));
             }
@@ -1142,7 +1376,43 @@ fn worker_loop(
             *first_err = Some(e);
         }
     };
-    while let Some(item) = queue.pop(warm, last_was_decode, &mut group_buf) {
+    // Streams entering (or continuing) decode go to their decode chip's
+    // lane. Without a fleet that's lane 0 — the pre-fleet behavior. With
+    // one, the target is the deterministic prefix-group hash, and a
+    // stream whose KV sits on this chip but decodes elsewhere pays a
+    // priced migration: its pages move arena-to-arena (a shared radix
+    // chain physically moves once — mates attach warm), and the
+    // transfer's DRAM wall-stall and energy — priced at the SOURCE
+    // chip's operating point, like a KvSwap — land on the stream's own
+    // ledger before its first decode step there.
+    let route_decode = |states: Vec<DecodeState>| match &ctx.fleet {
+        None => queue.push_decode(0, states),
+        Some(fleet) => {
+            let mut per: Vec<Vec<DecodeState>> =
+                (0..fleet.n_chips()).map(|_| Vec::new()).collect();
+            for mut st in states {
+                let target = fleet.decode_chip_index(st.prefix_group, st.id);
+                if target != chip {
+                    if let Some(m) = fleet.chips[chip].kv.migrate_out(st.id) {
+                        let moved = fleet.chips[target].kv.migrate_in(st.id, &m);
+                        if moved > 0 {
+                            let hw = &fleet.chips[chip].hw;
+                            st.charge_migration(
+                                hw.dram_ns(moved as usize) * 1e-3,
+                                hw.dram_pj(moved as usize) * 1e-6,
+                                moved,
+                            );
+                        }
+                    }
+                }
+                per[target].push(st);
+            }
+            for (target, group) in per.into_iter().enumerate() {
+                queue.push_decode(target, group);
+            }
+        }
+    };
+    while let Some(item) = queue.pop(chip, warm, last_was_decode, &mut group_buf) {
         // A prefill to advance by one chunk this iteration (fresh from a
         // batch, or resumed from the parked pool).
         let mut chunk_to_run: Option<Box<PrefillState>> = None;
@@ -1171,7 +1441,7 @@ fn worker_loop(
                             outcome.responses.into_iter().for_each(&finish);
                             // Streams entering decode keep their in-flight
                             // slot until their final response.
-                            queue.push_decode(outcome.decoding);
+                            route_decode(outcome.decoding);
                         }
                         Err(e) => shed(&engine, n, ids, e, &mut first_err),
                     }
@@ -1209,7 +1479,7 @@ fn worker_loop(
                             own.record_token(&ev);
                             let _ = tok_tx.send(ev);
                         }
-                        queue.push_decode(outcome.active);
+                        route_decode(outcome.active);
                         outcome.responses.into_iter().for_each(&finish);
                     }
                     // Shed the whole group: their requests never answer, so
@@ -1239,13 +1509,13 @@ fn worker_loop(
                 Ok(PrefillProgress::Parked(st)) => {
                     pooled.record_prefill_chunk();
                     own.record_prefill_chunk();
-                    queue.push_parked(st);
+                    queue.push_parked(chip, st);
                 }
                 Ok(PrefillProgress::Done(outcome)) => {
                     pooled.record_prefill_chunk();
                     own.record_prefill_chunk();
                     outcome.responses.into_iter().for_each(&finish);
-                    queue.push_decode(outcome.decoding);
+                    route_decode(outcome.decoding);
                 }
                 // Shed mid-prefill: the whole batch never answers.
                 Err(e) => shed(&engine, n, ids, e, &mut first_err),

@@ -1,0 +1,387 @@
+//! Disaggregated heterogeneous fleet: N workers over N modeled *chips*.
+//!
+//! The pool originally modeled N workers over ONE chip. The paper's whole
+//! 68–567 µs / 0.41–3.95 µJ per-token range is a per-chip operating-point
+//! trade (the fig7 VDD/frequency sweep) — a deployment serving real
+//! traffic runs a *fleet* of chips at different points and splits
+//! prefill-heavy from decode-heavy roles. This module is the catalog +
+//! placement layer of that refactor:
+//!
+//! * [`ChipSpec`] — one catalog entry: id, [`ChipRole`], VDD operating
+//!   point, optional GB-size and KV-page overrides. Parsed from a JSON
+//!   catalog (`serve --fleet FILE`) with chip/field-contextual errors,
+//!   mirroring the trace parser's line-contextual ones.
+//! * [`Chip`] — a built chip: its [`HwConfig`] pinned to the spec's
+//!   operating point ([`HwConfig::pinned_at_vdd`] — pricing everywhere
+//!   runs at exactly that point) and its own [`KvManager`] arena. KV
+//!   admission, residency and eviction are **per-chip** in a fleet.
+//! * [`Fleet`] — the built catalog plus placement: prefill batches
+//!   round-robin over prefill-capable chips
+//!   ([`Fleet::prefill_chip_index`]); decode streams hash their prefix
+//!   group (falling back to the request id) over decode-capable chips
+//!   ([`Fleet::decode_chip_index`]) — deterministic, so every mate of a
+//!   shared prefix decodes on ONE chip and its radix chain migrates
+//!   exactly once ([`KvManager::migrate_in`]).
+//!
+//! The serving integration lives in `coordinator::server`: worker *i*
+//! binds to chip *i* (a fleet pool forces `workers == chips`), the work
+//! queue keeps per-chip lanes, the admission door projects KV bytes
+//! against the *decode-target* chip's budget, and a stream that prefills
+//! on chip A and decodes on chip B pays a priced KV migration (DRAM
+//! wall-stall + EMA energy at A's operating point, modeled like `KvSwap`).
+
+use crate::config::{HwConfig, ModelConfig};
+use crate::coordinator::request::RequestId;
+use crate::error::{Error, Result};
+use crate::kv::{KvArenaConfig, KvManager, KvQuant};
+use crate::util::json::Json;
+use std::sync::Arc;
+
+/// What phase of the workload a chip is provisioned for. Placement only —
+/// a `Prefill` chip still *can* run decode (and does when the fleet has no
+/// decode-capable chip at all); the role gates where the router sends work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChipRole {
+    /// Prefill-optimized (typically max-VDD: prompt passes are
+    /// throughput-bound). Receives prefill batches only.
+    Prefill,
+    /// Decode-optimized (typically low-VDD: single-token steps trade
+    /// latency for µJ/token). Receives decode streams only.
+    Decode,
+    /// Takes both kinds of work — the homogeneous-pool role.
+    General,
+}
+
+impl ChipRole {
+    pub fn name(self) -> &'static str {
+        match self {
+            ChipRole::Prefill => "prefill",
+            ChipRole::Decode => "decode",
+            ChipRole::General => "general",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<ChipRole> {
+        Some(match name {
+            "prefill" => ChipRole::Prefill,
+            "decode" => ChipRole::Decode,
+            "general" => ChipRole::General,
+            _ => return None,
+        })
+    }
+
+    pub fn takes_prefill(self) -> bool {
+        matches!(self, ChipRole::Prefill | ChipRole::General)
+    }
+
+    pub fn takes_decode(self) -> bool {
+        matches!(self, ChipRole::Decode | ChipRole::General)
+    }
+}
+
+/// One chip catalog entry (the `--fleet` JSON format; see README "Fleet").
+#[derive(Debug, Clone)]
+pub struct ChipSpec {
+    /// Unique name (report attribution, trace process groups).
+    pub id: String,
+    pub role: ChipRole,
+    /// Operating point the chip is pinned at, volts (interpolated/clamped
+    /// over the base config's fig7 table — [`HwConfig::pinned_at_vdd`]).
+    pub vdd: f64,
+    /// Global-buffer size override, bytes (`None`: the base config's).
+    pub gb_bytes: Option<usize>,
+    /// KV-arena page-count override (`None`: derived from the GB budget).
+    pub kv_pages: Option<usize>,
+}
+
+impl ChipSpec {
+    /// A general-role chip at `vdd` with no overrides (bench/fuzz helper).
+    pub fn general(id: impl Into<String>, vdd: f64) -> ChipSpec {
+        ChipSpec { id: id.into(), role: ChipRole::General, vdd, gb_bytes: None, kv_pages: None }
+    }
+
+    /// A role-bound chip at `vdd` with no overrides.
+    pub fn with_role(id: impl Into<String>, role: ChipRole, vdd: f64) -> ChipSpec {
+        ChipSpec { id: id.into(), role, vdd, gb_bytes: None, kv_pages: None }
+    }
+
+    /// Parse a chip catalog: `{"chips": [{"id", "role", "vdd",
+    /// "gb_bytes"?, "kv_pages"?}, ...]}`. Every error names the chip it
+    /// came from (`fleet catalog: chip 2 ('d0'): ...`) the way the trace
+    /// parser's errors carry line numbers; duplicate ids and zero-chip
+    /// fleets are rejected here, never panicked on downstream.
+    pub fn catalog_from_json(j: &Json) -> Result<Vec<ChipSpec>> {
+        let chips = j
+            .get("chips")
+            .and_then(|c| c.as_arr())
+            .map_err(|e| Error::config(format!("fleet catalog: {e}")))?;
+        if chips.is_empty() {
+            return Err(Error::config(
+                "fleet catalog: `chips` is empty — a fleet needs at least one chip".to_string(),
+            ));
+        }
+        let mut specs: Vec<ChipSpec> = Vec::with_capacity(chips.len());
+        for (i, c) in chips.iter().enumerate() {
+            let ctx = |field: &str, e: &dyn std::fmt::Display| {
+                let who = c
+                    .opt("id")
+                    .and_then(|v| v.as_str().ok())
+                    .map(|id| format!("chip {i} ('{id}')"))
+                    .unwrap_or_else(|| format!("chip {i}"));
+                Error::config(format!("fleet catalog: {who}: field `{field}`: {e}"))
+            };
+            let id = c
+                .get("id")
+                .and_then(|v| v.as_str())
+                .map_err(|e| ctx("id", &e))?
+                .to_string();
+            if id.is_empty() {
+                return Err(ctx("id", &"must be non-empty"));
+            }
+            let role_name = c.get("role").and_then(|v| v.as_str()).map_err(|e| ctx("role", &e))?;
+            let role = ChipRole::from_name(role_name).ok_or_else(|| {
+                ctx("role", &format!("expected prefill|decode|general, got `{role_name}`"))
+            })?;
+            let vdd = c.get("vdd").and_then(|v| v.as_f64()).map_err(|e| ctx("vdd", &e))?;
+            if !vdd.is_finite() || vdd <= 0.0 {
+                return Err(ctx("vdd", &format!("expected a positive voltage, got {vdd}")));
+            }
+            let gb_bytes = match c.opt("gb_bytes") {
+                Some(v) => Some(v.as_usize().map_err(|e| ctx("gb_bytes", &e))?),
+                None => None,
+            };
+            let kv_pages = match c.opt("kv_pages") {
+                Some(v) => Some(v.as_usize().map_err(|e| ctx("kv_pages", &e))?),
+                None => None,
+            };
+            if let Some(dup) = specs.iter().position(|s| s.id == id) {
+                return Err(Error::config(format!(
+                    "fleet catalog: chip {i} ('{id}') duplicates chip {dup}'s id — \
+                     chip ids must be unique"
+                )));
+            }
+            specs.push(ChipSpec { id, role, vdd, gb_bytes, kv_pages });
+        }
+        Ok(specs)
+    }
+
+    /// Load and parse a catalog file (the `serve --fleet FILE` path).
+    pub fn catalog_from_file(path: impl AsRef<std::path::Path>) -> Result<Vec<ChipSpec>> {
+        let j = Json::from_file(path.as_ref()).map_err(|e| {
+            Error::config(format!("fleet catalog {}: {e}", path.as_ref().display()))
+        })?;
+        Self::catalog_from_json(&j)
+    }
+}
+
+/// A built fleet chip: spec + pinned hardware + its own KV arena.
+#[derive(Debug)]
+pub struct Chip {
+    pub spec: ChipSpec,
+    /// The base config pinned at the spec's operating point, GB override
+    /// applied. Plans, the simulator and DRAM pricing on this chip's
+    /// worker all run through this.
+    pub hw: HwConfig,
+    /// This chip's KV arena: admission projects against it, residency and
+    /// eviction are local to it, migrations move bytes between arenas.
+    pub kv: Arc<KvManager>,
+}
+
+/// The built catalog plus deterministic placement. Construct with
+/// [`Fleet::build`]; hand to the pool via `PoolConfig::fleet` (the pool
+/// then binds worker *i* to chip *i* and forces `workers == n_chips`).
+#[derive(Debug)]
+pub struct Fleet {
+    pub chips: Vec<Chip>,
+    /// Chip indices that take prefill work (role Prefill|General; all
+    /// chips when no chip declares a prefill-capable role).
+    prefill_capable: Vec<usize>,
+    /// Chip indices that take decode work (role Decode|General; all chips
+    /// when none qualifies).
+    decode_capable: Vec<usize>,
+}
+
+impl Fleet {
+    /// Build chips from specs: pin each chip's operating point, apply its
+    /// GB override, and carve its own KV arena (per-chip pages override,
+    /// else derived from that chip's GB budget). Catalog-shape errors
+    /// (zero chips, duplicate ids) are reported here too so
+    /// programmatically-built fleets get the same guarantees as parsed
+    /// ones.
+    pub fn build(
+        specs: Vec<ChipSpec>,
+        base_hw: &HwConfig,
+        model: &ModelConfig,
+        quant: KvQuant,
+    ) -> Result<Fleet> {
+        if specs.is_empty() {
+            return Err(Error::config("fleet: zero chips".to_string()));
+        }
+        for (i, s) in specs.iter().enumerate() {
+            if let Some(dup) = specs[..i].iter().position(|p| p.id == s.id) {
+                return Err(Error::config(format!(
+                    "fleet: chip {i} ('{}') duplicates chip {dup}'s id",
+                    s.id
+                )));
+            }
+        }
+        let mut chips = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let mut hw = base_hw.pinned_at_vdd(spec.vdd);
+            if let Some(gb) = spec.gb_bytes {
+                hw.gb_bytes = gb;
+            }
+            hw.validate()?;
+            let kv = Arc::new(KvManager::new(
+                &hw,
+                model,
+                KvArenaConfig::for_pool(&hw, model, quant, spec.kv_pages),
+            ));
+            chips.push(Chip { spec, hw, kv });
+        }
+        let takes = |f: fn(ChipRole) -> bool| {
+            let list: Vec<usize> =
+                chips.iter().enumerate().filter(|(_, c)| f(c.spec.role)).map(|(i, _)| i).collect();
+            if list.is_empty() {
+                (0..chips.len()).collect()
+            } else {
+                list
+            }
+        };
+        let prefill_capable = takes(ChipRole::takes_prefill);
+        let decode_capable = takes(ChipRole::takes_decode);
+        Ok(Fleet { chips, prefill_capable, decode_capable })
+    }
+
+    pub fn n_chips(&self) -> usize {
+        self.chips.len()
+    }
+
+    pub fn chip(&self, idx: usize) -> &Chip {
+        &self.chips[idx]
+    }
+
+    /// Where the `seq`-th formed prefill batch runs: round-robin over the
+    /// prefill-capable chips.
+    pub fn prefill_chip_index(&self, seq: u64) -> usize {
+        self.prefill_capable[(seq % self.prefill_capable.len() as u64) as usize]
+    }
+
+    /// Where a decode stream lives: a deterministic hash of its prefix
+    /// group (or its id when it shares nothing) over the decode-capable
+    /// chips. Keying by prefix group is the placement-affinity argument:
+    /// every mate of a shared prompt decodes on ONE chip, so the chain
+    /// physically migrates there once and every follower attaches warm.
+    pub fn decode_chip_index(&self, prefix_group: Option<u64>, id: RequestId) -> usize {
+        let mut x = prefix_group.unwrap_or(id).wrapping_add(0x9E37_79B9_7F4A_7C15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+        self.decode_capable[(x % self.decode_capable.len() as u64) as usize]
+    }
+
+    /// Release a stream's KV on EVERY chip — the shed/terminal safety net.
+    /// A stream can hold state on two chips at once (registered on its
+    /// prefill chip, door-projected on its decode target), and a shed
+    /// mid-migration must free both sides; `KvManager::release` is a no-op
+    /// on chips that never saw the id.
+    pub fn release_stream(&self, id: RequestId) {
+        for c in &self.chips {
+            c.kv.release(id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn build_fleet(specs: Vec<ChipSpec>) -> Fleet {
+        Fleet::build(specs, &HwConfig::default(), &ModelConfig::tiny(), KvQuant::Fp16)
+            .expect("valid fleet")
+    }
+
+    #[test]
+    fn catalog_parses_and_reports_contextual_errors() {
+        let ok = Json::parse(
+            r#"{"chips": [
+                {"id": "p0", "role": "prefill", "vdd": 0.85},
+                {"id": "d0", "role": "decode", "vdd": 0.45, "kv_pages": 64},
+                {"id": "g0", "role": "general", "vdd": 0.65, "gb_bytes": 2097152}
+            ]}"#,
+        )
+        .unwrap();
+        let specs = ChipSpec::catalog_from_json(&ok).unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0].role, ChipRole::Prefill);
+        assert_eq!(specs[1].kv_pages, Some(64));
+        assert_eq!(specs[2].gb_bytes, Some(2 << 20));
+
+        // Errors carry the chip index (and id when present) + field.
+        let bad_role =
+            Json::parse(r#"{"chips": [{"id": "x", "role": "turbo", "vdd": 0.6}]}"#).unwrap();
+        let e = ChipSpec::catalog_from_json(&bad_role).unwrap_err().to_string();
+        assert!(e.contains("chip 0 ('x')") && e.contains("`role`") && e.contains("turbo"), "{e}");
+
+        let missing_vdd = Json::parse(r#"{"chips": [{"id": "x", "role": "general"}]}"#).unwrap();
+        let e = ChipSpec::catalog_from_json(&missing_vdd).unwrap_err().to_string();
+        assert!(e.contains("chip 0 ('x')") && e.contains("`vdd`"), "{e}");
+
+        // Duplicate ids and zero-chip fleets reject without panicking.
+        let dup = Json::parse(
+            r#"{"chips": [{"id": "a", "role": "general", "vdd": 0.6},
+                          {"id": "a", "role": "general", "vdd": 0.7}]}"#,
+        )
+        .unwrap();
+        let e = ChipSpec::catalog_from_json(&dup).unwrap_err().to_string();
+        assert!(e.contains("chip 1 ('a')") && e.contains("duplicates chip 0"), "{e}");
+
+        let empty = Json::parse(r#"{"chips": []}"#).unwrap();
+        assert!(ChipSpec::catalog_from_json(&empty).is_err());
+    }
+
+    #[test]
+    fn build_pins_operating_points_and_partitions_roles() {
+        let fleet = build_fleet(vec![
+            ChipSpec::with_role("p0", ChipRole::Prefill, 0.85),
+            ChipSpec::with_role("p1", ChipRole::Prefill, 0.85),
+            ChipSpec::with_role("d0", ChipRole::Decode, 0.45),
+            ChipSpec::with_role("d1", ChipRole::Decode, 0.45),
+        ]);
+        assert_eq!(fleet.n_chips(), 4);
+        // Each chip runs a one-point table pinned at its VDD.
+        assert_eq!(fleet.chip(0).hw.points.len(), 1);
+        assert!((fleet.chip(0).hw.max_point().vdd - 0.85).abs() < 1e-12);
+        assert!((fleet.chip(2).hw.max_point().vdd - 0.45).abs() < 1e-12);
+        // Prefill routes round-robin over prefill-capable chips only.
+        for seq in 0..8u64 {
+            assert!(fleet.prefill_chip_index(seq) < 2);
+        }
+        assert_ne!(fleet.prefill_chip_index(0), fleet.prefill_chip_index(1));
+        // Decode lands on decode-capable chips only, deterministically,
+        // and all mates of one prefix group land on ONE chip.
+        let g = Some(42u64);
+        let target = fleet.decode_chip_index(g, 1);
+        assert!(target >= 2);
+        for id in 0..16u64 {
+            assert_eq!(fleet.decode_chip_index(g, id), target);
+        }
+        // Ungrouped streams spread by id (still decode-capable).
+        for id in 0..16u64 {
+            assert!(fleet.decode_chip_index(None, id) >= 2);
+        }
+    }
+
+    #[test]
+    fn role_fallback_keeps_every_fleet_servable() {
+        // An all-decode fleet must still take prefill work (and vice
+        // versa): an unroutable phase would strand every request.
+        let fleet = build_fleet(vec![
+            ChipSpec::with_role("d0", ChipRole::Decode, 0.45),
+            ChipSpec::with_role("d1", ChipRole::Decode, 0.55),
+        ]);
+        assert!(fleet.prefill_chip_index(0) < 2);
+        let fleet = build_fleet(vec![ChipSpec::with_role("p0", ChipRole::Prefill, 0.85)]);
+        assert_eq!(fleet.decode_chip_index(None, 7), 0);
+    }
+}

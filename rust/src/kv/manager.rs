@@ -137,6 +137,17 @@ pub struct KvStats {
     pub compactions: u64,
     /// Ceil-rounding slack pages reclaimed by compaction.
     pub compacted_pages: u64,
+    /// Streams migrated **into** this arena from another chip's
+    /// ([`KvManager::migrate_in`] — fleet mode only).
+    pub migrations: u64,
+    /// Total bytes chip-to-chip migrations streamed into this arena
+    /// (private KV always; a shared prefix chain once per chain).
+    pub migrated_bytes: u64,
+    /// Shared prefix chains physically moved here by a migration — each
+    /// chain is charged exactly once; follower mates attach warm.
+    pub chain_migrations: u64,
+    /// Cold (zero-ref) chain pages reclaimed under pressure or drain.
+    pub cold_reclaimed_pages: u64,
 }
 
 /// Point-in-time occupancy snapshot: what the manager still holds. After a
@@ -181,6 +192,25 @@ pub struct StepCharge {
     pub swap_in_bytes: u64,
     /// How many members were swapped in.
     pub swap_ins: u64,
+}
+
+/// What travels when a stream moves between chips' arenas (fleet mode:
+/// prefill finishes on chip A, decode runs on chip B). Produced by
+/// [`KvManager::migrate_out`] on the source, consumed by
+/// [`KvManager::migrate_in`] on the target — the target returns the bytes
+/// that physically streamed, which the caller prices like a `KvSwap`.
+#[derive(Debug, Clone, Copy)]
+pub struct KvMigration {
+    /// The stream's private quantized KV — always streams.
+    pub private_bytes: u64,
+    /// Shared-prefix bytes the stream had attached — streams **once per
+    /// chain**; follower mates find it resident and attach warm.
+    pub shared_bytes: u64,
+    /// Prefix group the shared bytes belong to.
+    pub prefix: Option<PrefixId>,
+    /// Admission projection to carry to the target (re-reserved there if
+    /// the stream wasn't already admitted against the target's budget).
+    pub projected: u64,
 }
 
 /// Per-stream arena bookkeeping. `bytes` is the stream's **private**
@@ -248,6 +278,21 @@ struct Inner {
 }
 
 impl Inner {
+    /// Free up to `max_pages` of cold-chain pages (zero-ref prefix tails
+    /// retained by release for warm re-attachment), coldest chain first,
+    /// and return them to the arena's shared ledger. Runs before
+    /// compaction and eviction in [`Inner::make_room`]: reclaiming a cold
+    /// chain costs a future prefix-mate a re-prefill, which is cheaper
+    /// than the swap-in an evicted *live* stream is guaranteed to pay.
+    fn reclaim_cold(&mut self, max_pages: usize) -> usize {
+        let freed = self.radix.reclaim_cold(max_pages);
+        if freed > 0 {
+            self.arena.free_shared(freed);
+            self.stats.cold_reclaimed_pages += freed as u64;
+        }
+        freed
+    }
+
     /// Pack parked streams' ceil-rounding slack: each parked stream rounds
     /// its private bytes up to whole pages, but laid end-to-end (coldest
     /// first, so the LRU order eviction would use is the order tails move
@@ -297,10 +342,16 @@ impl Inner {
 
     /// Evict LRU parked streams until `pages` are free (never a `protect`
     /// member, never a pinned stream — some worker's in-flight step is
-    /// reading those pages). Compaction runs first — reclaiming rounding
-    /// slack is free, eviction costs a future swap-in. Returns false when
-    /// room could not be made — the caller proceeds overcommitted.
+    /// reading those pages). Cold-chain reclamation and compaction run
+    /// first — a cold chain nobody references and rounding slack are both
+    /// cheaper than an eviction, which costs a future swap-in. Returns
+    /// false when room could not be made — the caller proceeds
+    /// overcommitted.
     fn make_room(&mut self, pages: usize, protect: &[RequestId]) -> bool {
+        if self.arena.free_pages() < pages {
+            let want = pages - self.arena.free_pages();
+            self.reclaim_cold(want);
+        }
         if self.arena.free_pages() < pages {
             self.compact_parked(protect);
         }
@@ -685,9 +736,13 @@ impl KvManager {
     }
 
     /// A stream is done (final token, cap-clamped to zero, or shed): free
-    /// its private pages, detach from its prefix chain (chain spans free
-    /// only when *their last* reference drops — a prefix-mate keeps the
-    /// shared pages alive), and release its admission reservation.
+    /// its private pages, detach from its prefix chain, and release its
+    /// admission reservation. A chain whose **last** reference drops is
+    /// kept resident as a *cold chain* ([`RadixIndex::detach_retain`]):
+    /// the next prefix-mate re-attaches warm, and the pages return to the
+    /// arena LRU-first under allocation pressure (`make_room`), via
+    /// [`KvManager::compact`], or — so a drained pool holds nothing —
+    /// when the last live stream leaves.
     ///
     /// Idempotent by construction: the entry is removed first, so a
     /// mid-prefill shed racing a prefix-mate's release (both paths call
@@ -702,20 +757,134 @@ impl KvManager {
             }
             if let Some(gid) = e.prefix {
                 if e.shared_bytes > 0 {
-                    let freed = g.radix.detach(gid, e.shared_bytes);
-                    g.arena.free_shared(freed);
+                    g.clock += 1;
+                    let stamp = g.clock;
+                    g.radix.detach_retain(gid, e.shared_bytes, stamp);
                 }
             }
             g.admitted_bytes = g.admitted_bytes.saturating_sub(e.projected);
             g.stats.released += 1;
+            if g.streams.is_empty() {
+                g.reclaim_cold(usize::MAX);
+            }
         }
     }
 
-    /// Pack parked streams' ceil-rounding page slack and return the pages
-    /// reclaimed ([`Inner::compact_parked`] — `make_room` also runs this
-    /// automatically before resorting to eviction).
+    /// Move a stream **off** this chip's arena: its entry leaves (private
+    /// pages freed, projection released) and its shared prefix span, if
+    /// any, detaches into a cold chain — a later mate prefilling here
+    /// re-attaches warm. Returns what must travel to the target chip
+    /// (consumed by [`KvManager::migrate_in`] there); `None` if the
+    /// stream isn't held here (already released — e.g. shed mid-flight).
+    pub fn migrate_out(&self, id: RequestId) -> Option<KvMigration> {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.streams.remove(&id)?;
+        if e.resident {
+            g.arena.free(e.pages);
+        }
+        if let Some(gid) = e.prefix {
+            if e.shared_bytes > 0 {
+                g.clock += 1;
+                let stamp = g.clock;
+                g.radix.detach_retain(gid, e.shared_bytes, stamp);
+            }
+        }
+        g.admitted_bytes = g.admitted_bytes.saturating_sub(e.projected);
+        if g.streams.is_empty() {
+            g.reclaim_cold(usize::MAX);
+        }
+        Some(KvMigration {
+            private_bytes: e.bytes,
+            shared_bytes: e.shared_bytes,
+            prefix: e.prefix,
+            projected: e.projected,
+        })
+    }
+
+    /// Land a migrating stream ([`KvManager::migrate_out`] on the source)
+    /// in this chip's arena and return the bytes the transfer actually
+    /// streamed chip-to-chip — what the caller prices like a `KvSwap`
+    /// (DRAM wall-stall + EMA energy at the source's operating point):
+    ///
+    /// * the stream's **private** KV always moves;
+    /// * its shared prefix chain moves **once per chain**: the first mate
+    ///   to land pays the chain pages it physically copies
+    ///   ([`KvStats::chain_migrations`]); every follower finds the chain
+    ///   resident and attaches warm, paying nothing for it.
+    ///
+    /// The stream may already hold an admission entry here (the door
+    /// admits against the **decode-target** chip in fleet mode); a stream
+    /// that doesn't is auto-admitted with the source's projection.
+    pub fn migrate_in(&self, id: RequestId, m: &KvMigration) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        let inner = &mut *g;
+        inner.clock += 1;
+        let clock = inner.clock;
+        let e = inner.streams.entry(id).or_insert_with(|| StreamEntry::fresh(clock));
+        e.last_used = clock;
+        if e.projected == 0 {
+            e.projected = m.projected.max(m.private_bytes + m.shared_bytes);
+            inner.admitted_bytes += e.projected;
+            inner.stats.admitted += 1;
+        }
+        let attach = match m.prefix {
+            Some(gid) if e.shared_bytes == 0 && m.shared_bytes > 0 => {
+                e.prefix = Some(gid);
+                e.shared_bytes = m.shared_bytes;
+                Some(gid)
+            }
+            _ => None,
+        };
+        let mut moved = m.private_bytes;
+        let mut chain_moved = false;
+        if let Some(gid) = attach {
+            let need = inner.radix.pages_needed(gid, m.shared_bytes);
+            if need > 0 && !inner.make_room(need, &[id]) {
+                inner.stats.forced_overcommit += 1;
+            }
+            let att = inner.radix.attach(gid, m.shared_bytes);
+            inner.arena.alloc_shared(att.new_pages);
+            if att.hit_pages > 0 {
+                // An earlier mate (or a local prefill) already faulted the
+                // chain in here: warm attach, nothing streams for it.
+                inner.stats.prefix_hits += 1;
+            }
+            if att.new_pages > 0 {
+                moved += att.new_pages as u64 * self.cfg.page_bytes;
+                chain_moved = att.hit_pages == 0;
+            }
+            inner.stats.peak_used_pages =
+                inner.stats.peak_used_pages.max(inner.arena.used_pages());
+        }
+        inner.make_resident(id, m.private_bytes, &[id]);
+        inner.stats.migrations += 1;
+        inner.stats.migrated_bytes += moved;
+        if chain_moved {
+            inner.stats.chain_migrations += 1;
+        }
+        let evicted = std::mem::take(&mut inner.evicted);
+        drop(g);
+        if let Some(w) = self.obs.get() {
+            let t = w.now_us();
+            for victim in evicted {
+                w.record(SpanEvent::marker(SpanKind::KvEvict, victim, t));
+            }
+            let mut ev = SpanEvent::marker(SpanKind::KvMigrate, id, t);
+            ev.ema_bytes = moved;
+            ev.ema_kv_bytes = moved;
+            w.record(ev);
+        }
+        moved
+    }
+
+    /// Pack parked streams' ceil-rounding page slack — after returning
+    /// every cold chain's pages to the arena — and report the pages
+    /// reclaimed (`make_room` also runs both automatically before
+    /// resorting to eviction).
     pub fn compact(&self) -> usize {
-        self.inner.lock().unwrap().compact_parked(&[])
+        let mut g = self.inner.lock().unwrap();
+        let cold = g.reclaim_cold(usize::MAX);
+        cold + g.compact_parked(&[])
     }
 
     /// Arena pages currently backing shared prefix chains.
@@ -780,6 +949,11 @@ impl KvManager {
             ("kv_shared_pages", Json::num(g.arena.shared_pages() as f64)),
             ("kv_cow_forks", Json::num(g.stats.cow_forks as f64)),
             ("compacted_pages", Json::num(g.stats.compacted_pages as f64)),
+            // Fleet-mode migration + cold-chain gauges (zero off-fleet).
+            ("kv_migrations", Json::num(g.stats.migrations as f64)),
+            ("kv_migrated_bytes", Json::num(g.stats.migrated_bytes as f64)),
+            ("kv_chain_migrations", Json::num(g.stats.chain_migrations as f64)),
+            ("kv_cold_pages", Json::num(g.radix.cold_pages() as f64)),
         ])
     }
 }
@@ -1082,6 +1256,75 @@ mod tests {
         mgr.release(2);
         mgr.release(2);
         assert!(mgr.residual().is_clean(), "{:?}", mgr.residual());
+    }
+
+    #[test]
+    fn cold_chain_reclaims_before_evicting_live_streams() {
+        use crate::kv::radix::prefix_id;
+        // 6 pages. Mates 1,2 share a 2-page chain (8-token prompt = 4 KiB)
+        // plus a 1-page private floor each; stream 3 owns 1 page. Releasing
+        // both mates leaves the chain *cold* (2 pages, zero refs) — a new
+        // 4-page stream must reclaim it instead of evicting stream 3.
+        let (mgr, _) = tiny_mgr(6, KvQuant::Fp16, 16.0);
+        let g = prefix_id("sys");
+        mgr.register(1, 8, Some(g));
+        mgr.register(2, 8, Some(g));
+        mgr.register(3, 4, None);
+        assert_eq!(mgr.used_pages(), 5);
+        mgr.release(1);
+        mgr.release(2);
+        // The chain is cold but retained (stream 3 keeps the pool live).
+        assert_eq!(mgr.shared_pages(), 2, "cold chain still resident");
+        mgr.register(4, 16, None); // needs 4 pages; only 3 are free
+        assert_eq!(mgr.stats().evictions, 0, "cold pages covered the shortfall");
+        assert_eq!(mgr.stats().cold_reclaimed_pages, 2);
+        assert_eq!(mgr.shared_pages(), 0);
+        let c = mgr.prepare_group(&[(3, 4)]);
+        assert_eq!(c.swap_ins, 0, "live stream 3 was never touched");
+        mgr.finish_group(&[(3, 4)]);
+        mgr.release(3);
+        mgr.release(4);
+        assert!(mgr.residual().is_clean(), "{:?}", mgr.residual());
+    }
+
+    #[test]
+    fn migration_moves_private_and_chain_once() {
+        use crate::kv::radix::prefix_id;
+        // Two chips. Mates 1,2 prefill an 8-token shared prompt on chip A
+        // (2 KiB pages → the 4 KiB chain spans 2 pages; private bytes 0).
+        let (src, per_token) = tiny_mgr(16, KvQuant::Fp16, 8.0);
+        let (dst, _) = tiny_mgr(16, KvQuant::Fp16, 8.0);
+        let g = prefix_id("sys");
+        src.register(1, 8, Some(g));
+        src.register(2, 8, Some(g));
+
+        // First mate lands on chip B: its private KV plus the whole chain
+        // stream over — exactly one chain charge.
+        let m1 = src.migrate_out(1).expect("stream 1 held on src");
+        assert_eq!(m1.shared_bytes, 8 * per_token);
+        let moved1 = dst.migrate_in(1, &m1);
+        assert_eq!(moved1, m1.private_bytes + 8 * per_token);
+        assert_eq!(dst.stats().chain_migrations, 1);
+
+        // Second mate follows: the chain is already resident on B, so only
+        // its private bytes move — the chain is charged once per chain,
+        // not once per mate.
+        let m2 = src.migrate_out(2).expect("stream 2 held on src");
+        let moved2 = dst.migrate_in(2, &m2);
+        assert_eq!(moved2, m2.private_bytes);
+        assert_eq!(dst.stats().chain_migrations, 1, "chain charged exactly once");
+        assert_eq!(dst.stats().prefix_hits, 1, "mate 2 attached warm");
+        assert_eq!(dst.stats().migrations, 2);
+        assert_eq!(dst.shared_pages(), 2);
+
+        // Chip A drained with the last mate: its cold chain was purged.
+        assert!(src.residual().is_clean(), "{:?}", src.residual());
+        // Migrating a stream nobody holds (already shed) is a no-op.
+        assert!(src.migrate_out(1).is_none());
+
+        dst.release(1);
+        dst.release(2);
+        assert!(dst.residual().is_clean(), "{:?}", dst.residual());
     }
 
     #[test]

@@ -42,6 +42,6 @@ pub mod radix;
 pub const MAX_GROUP_STREAMS: usize = 4;
 
 pub use arena::KvArena;
-pub use manager::{KvArenaConfig, KvManager, KvResidual, KvStats, StepCharge};
+pub use manager::{KvArenaConfig, KvManager, KvMigration, KvResidual, KvStats, StepCharge};
 pub use quant::KvQuant;
 pub use radix::{prefix_id, PrefixId, RadixIndex};

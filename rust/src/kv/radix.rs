@@ -60,12 +60,22 @@ impl Span {
 #[derive(Debug, Default)]
 struct Chain {
     spans: Vec<Span>,
+    /// Logical-clock stamp of the detach that last left this chain with
+    /// zero-ref tail pages (see [`RadixIndex::detach_retain`]) — the LRU
+    /// key cold-chain reclamation orders by.
+    cold_since: u64,
 }
 
 impl Chain {
     /// Pages the chain currently keeps resident.
     fn covered_pages(&self) -> usize {
         self.spans.last().map_or(0, |s| s.end_page)
+    }
+
+    /// Trailing pages no live stream references (retained by
+    /// [`RadixIndex::detach_retain`], reclaimable LRU-first).
+    fn cold_tail_pages(&self) -> usize {
+        self.spans.iter().rev().take_while(|s| s.refs == 0).map(Span::pages).sum()
     }
 }
 
@@ -184,6 +194,69 @@ impl RadixIndex {
         freed
     }
 
+    /// Detach a stream from `[0, bytes)` of its group's prefix like
+    /// [`RadixIndex::detach`], but **retain** zero-ref tail spans as a
+    /// *cold chain*: the pages stay resident (still counted in
+    /// [`RadixIndex::shared_pages`]) so a future prefix-mate re-attaches
+    /// warm, and [`RadixIndex::reclaim_cold`] returns them to the arena
+    /// LRU-first when pressure demands. `stamp` is the caller's logical
+    /// clock (the LRU key). Returns nothing freed — cold pages are freed
+    /// only by reclamation.
+    pub fn detach_retain(&mut self, group: PrefixId, bytes: u64, stamp: u64) {
+        let want = self.pages_spanned(bytes);
+        let Some(chain) = self.groups.get_mut(&group) else {
+            debug_assert!(want == 0, "detach from an unknown prefix group");
+            return;
+        };
+        for s in chain.spans.iter_mut() {
+            if s.end_page <= want {
+                debug_assert!(s.refs > 0, "detach underflow: shared span already at zero refs");
+                s.refs = s.refs.saturating_sub(1);
+            }
+        }
+        if chain.spans.last().is_some_and(|s| s.refs == 0) {
+            chain.cold_since = stamp;
+        }
+    }
+
+    /// Free up to `max_pages` cold pages (zero-ref tail spans retained by
+    /// [`RadixIndex::detach_retain`]), reclaiming whole chains coldest
+    /// (LRU) first; fully-emptied chains leave the index. Returns the
+    /// pages freed — the caller gives them back to the arena's shared
+    /// ledger.
+    pub fn reclaim_cold(&mut self, max_pages: usize) -> usize {
+        if max_pages == 0 {
+            return 0;
+        }
+        let mut cold: Vec<(u64, PrefixId)> = self
+            .groups
+            .iter()
+            .filter(|(_, c)| c.cold_tail_pages() > 0)
+            .map(|(g, c)| (c.cold_since, *g))
+            .collect();
+        cold.sort_unstable();
+        let mut freed = 0;
+        for (_, g) in cold {
+            if freed >= max_pages {
+                break;
+            }
+            let chain = self.groups.get_mut(&g).expect("cold chain present");
+            while freed < max_pages && chain.spans.last().is_some_and(|s| s.refs == 0) {
+                freed += chain.spans.pop().expect("checked last").pages();
+            }
+            if chain.spans.is_empty() {
+                self.groups.remove(&g);
+            }
+        }
+        freed
+    }
+
+    /// Pages currently retained by cold (zero-ref tail) chain segments —
+    /// resident-but-reclaimable shared capacity.
+    pub fn cold_pages(&self) -> usize {
+        self.groups.values().map(Chain::cold_tail_pages).sum()
+    }
+
     /// Pages currently pinned by any prefix chain (the arena's shared
     /// gauge must agree with this).
     pub fn shared_pages(&self) -> usize {
@@ -270,6 +343,45 @@ mod tests {
         let a = idx.attach(prefix_id("g"), 0);
         assert_eq!((a.new_pages, a.hit_pages), (0, 0));
         assert_eq!(idx.groups(), 0);
+    }
+
+    #[test]
+    fn detach_retain_keeps_cold_pages_until_reclaimed_lru_first() {
+        let mut idx = RadixIndex::new(2048);
+        let (a, b) = (prefix_id("a"), prefix_id("b"));
+        idx.attach(a, 3 * 2048);
+        idx.attach(b, 2 * 2048);
+        // Both groups' last mates leave; the chains go cold but stay
+        // resident — a returning mate would re-attach warm.
+        idx.detach_retain(a, 3 * 2048, 10);
+        idx.detach_retain(b, 2 * 2048, 20);
+        assert_eq!(idx.shared_pages(), 5, "cold pages stay resident");
+        assert_eq!(idx.cold_pages(), 5);
+        assert_eq!(idx.total_refs(), 0);
+        // A mate re-attaching to a cold chain is a pure warm hit.
+        let warm = idx.attach(a, 3 * 2048);
+        assert_eq!((warm.new_pages, warm.hit_pages), (0, 3));
+        assert_eq!(idx.cold_pages(), 2, "only b stays cold");
+        idx.detach_retain(a, 3 * 2048, 30);
+        // Reclaim under pressure: b (stamp 20) goes before a (stamp 30).
+        assert_eq!(idx.reclaim_cold(2), 2);
+        assert_eq!(idx.groups(), 1, "b fully reclaimed, a still cold");
+        assert_eq!(idx.reclaim_cold(usize::MAX), 3);
+        assert_eq!((idx.shared_pages(), idx.cold_pages(), idx.groups()), (0, 0, 0));
+    }
+
+    #[test]
+    fn reclaim_cold_spares_referenced_spans() {
+        let mut idx = RadixIndex::new(2048);
+        let g = prefix_id("g");
+        idx.attach(g, 4 * 2048); // deep mate
+        idx.attach(g, 2 * 2048); // shallow mate
+        idx.detach_retain(g, 4 * 2048, 5); // deep mate leaves; [2,4) goes cold
+        assert_eq!(idx.cold_pages(), 2);
+        assert_eq!(idx.reclaim_cold(usize::MAX), 2);
+        assert_eq!(idx.shared_pages(), 2, "the shallow mate's pages survive");
+        assert_eq!(idx.total_refs(), 1);
+        assert_eq!(idx.reclaim_cold(usize::MAX), 0, "nothing cold left");
     }
 
     #[test]

@@ -37,6 +37,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod factorize;
+pub mod fleet;
 pub mod kv;
 pub mod model;
 pub mod obs;

@@ -4,6 +4,7 @@
 //!   trex sim   --model <preset> [--seq N] [--batch N] [--vdd V] [--no-trf]
 //!   trex serve --requests N [--workers N] [--queue-depth N] [--max-inflight N]
 //!              [--no-affinity] [--artifacts DIR] [--perf-model <preset>]
+//!              [--fleet FILE]            # heterogeneous chip catalog (JSON); one worker per chip
 //!              [--generate N]            # decode N tokens per request
 //!              [--kv-quant fp16|int8|int4] [--kv-pages N] [--kv-bucket N]
 //!              [--prefill-chunk N]       # phases per prefill chunk (0 = whole pass)
@@ -30,6 +31,7 @@ use trex::coordinator::{
     default_workers, BatcherConfig, DecodePolicy, Engine, EngineConfig, PoolConfig, Server,
     TraceGenerator,
 };
+use trex::fleet::{ChipSpec, Fleet};
 use trex::kv::{KvArenaConfig, KvManager, KvQuant};
 use trex::model::build_program;
 use trex::obs::{
@@ -78,6 +80,9 @@ fn main() -> CliResult {
                  \n  sim      --model <preset> [--seq N] [--batch 1|2|4] [--vdd V] [--no-trf] [--no-prefetch]\
                  \n  serve    --requests N [--workers N] [--queue-depth N] [--max-inflight N]\
                  \n           [--no-affinity] [--artifacts DIR] [--perf-model <preset>]\
+                 \n           [--fleet FILE]  (heterogeneous chip catalog, JSON:\
+                 \n            {{\"chips\":[{{\"id\":\"d0\",\"role\":\"decode\",\"vdd\":0.45}},...]}};\
+                 \n            binds one worker per chip, per-chip KV arenas + placement)\
                  \n           [--generate N]  (decode N tokens per request; perf-model defaults to s2t-small)\
                  \n           [--kv-quant fp16|int8|int4] [--kv-pages N]  (KV arena precision / page budget)\
                  \n           [--kv-bucket N]  (depth-bucketed decode grouping, 0 = greedy)\
@@ -202,6 +207,23 @@ fn cmd_serve(args: &[String]) -> CliResult {
     // the dependency-free deterministic reference backend on the tiny plane.
     let manifest = trex::util::json::Json::from_file(dir.join("manifest.json")).ok();
     let use_pjrt = manifest.is_some() && cfg!(feature = "pjrt");
+    let hw = HwConfig::default();
+    // Heterogeneous fleet: a JSON chip catalog binds each worker to its own
+    // modeled chip (role + operating point + GB/KV budget). Parsed up front
+    // so a malformed catalog fails with its chip-indexed error before any
+    // pool spins up; the fleet overrides --workers (one worker per chip)
+    // and the pool-wide KV arena (one arena per chip).
+    let fleet = match arg_value(args, "--fleet") {
+        Some(path) => {
+            let specs = ChipSpec::catalog_from_file(&path)?;
+            Some(Arc::new(Fleet::build(specs, &hw, &perf_model, kv_quant)?))
+        }
+        None => None,
+    };
+    let workers = match &fleet {
+        Some(f) => f.n_chips(),
+        None => workers,
+    };
     if (generate > 0 || trace_generates) && use_pjrt {
         // Decode steps run 1–4-row planes; the AOT executables are
         // fixed-shape, so every step would fail and shed its group. Refuse
@@ -222,18 +244,29 @@ fn cmd_serve(args: &[String]) -> CliResult {
         "serving with {workers} workers over the {} backend (plane {max_seq}×{d_model})",
         if use_pjrt { "PJRT" } else { "reference" }
     );
+    if let Some(f) = &fleet {
+        let chips: Vec<String> = f
+            .chips
+            .iter()
+            .map(|c| format!("{}:{}@{:.2}V", c.spec.id, c.spec.role.name(), c.spec.vdd))
+            .collect();
+        println!("fleet: {} chips [{}]", f.n_chips(), chips.join(", "));
+    }
 
-    let hw = HwConfig::default();
     let dir2 = dir.clone();
     let pm = perf_model.clone();
     // Pool-wide KV arena: admission bounds concurrent generate streams by
     // projected arena bytes, and every worker's engine shares the manager
-    // (residency, eviction and swap-in charging are aggregate).
-    let kv_mgr = Arc::new(KvManager::new(
-        &hw,
-        &perf_model,
-        KvArenaConfig::for_pool(&hw, &perf_model, kv_quant, kv_pages),
-    ));
+    // (residency, eviction and swap-in charging are aggregate). A fleet
+    // run carries one arena per chip instead (built inside the Fleet).
+    let kv_mgr = match &fleet {
+        Some(_) => None,
+        None => Some(Arc::new(KvManager::new(
+            &hw,
+            &perf_model,
+            KvArenaConfig::for_pool(&hw, &perf_model, kv_quant, kv_pages),
+        ))),
+    };
     let recorder = if trace_out.is_some() || spans_out.is_some() {
         Some(Arc::new(FlightRecorder::for_pool(workers, DEFAULT_LANE_CAPACITY)))
     } else {
@@ -263,7 +296,8 @@ fn cmd_serve(args: &[String]) -> CliResult {
         decode_max_wait: Duration::from_micros(decode_max_wait_us),
         decode_priority,
         prefill_chunk,
-        kv: Some(Arc::clone(&kv_mgr)),
+        kv: kv_mgr,
+        fleet: fleet.clone(),
         // Replays audit conservation after the drain; the steady closed-loop
         // path keeps the ledger (unbounded per-request memory) off.
         lifecycle_ledger: trace.is_some(),
@@ -344,7 +378,7 @@ fn cmd_serve(args: &[String]) -> CliResult {
             }
         }
         println!("{}", report.json().to_string_pretty());
-        export_traces(&recorder, workers, &trace_out, &spans_out)?;
+        export_traces(&recorder, workers, fleet.as_deref(), &trace_out, &spans_out)?;
         return Ok(());
     }
 
@@ -382,15 +416,17 @@ fn cmd_serve(args: &[String]) -> CliResult {
     }
     let report = handle.shutdown()?;
     println!("{}", report.json().to_string_pretty());
-    export_traces(&recorder, workers, &trace_out, &spans_out)?;
+    export_traces(&recorder, workers, fleet.as_deref(), &trace_out, &spans_out)?;
     Ok(())
 }
 
 /// Write the flight recorder's snapshot to whichever export formats the
-/// run asked for (no-op when tracing was off).
+/// run asked for (no-op when tracing was off). Fleet runs export the
+/// per-chip process-group layout (one Perfetto process per chip).
 fn export_traces(
     recorder: &Option<Arc<FlightRecorder>>,
     workers: usize,
+    fleet: Option<&Fleet>,
     trace_out: &Option<std::path::PathBuf>,
     spans_out: &Option<std::path::PathBuf>,
 ) -> CliResult {
@@ -399,7 +435,14 @@ fn export_traces(
     };
     let events = rec.snapshot();
     if let Some(p) = trace_out {
-        chrome_trace(&events, workers).to_file(p)?;
+        let doc = match fleet {
+            Some(f) => {
+                let ids: Vec<String> = f.chips.iter().map(|c| c.spec.id.clone()).collect();
+                trex::obs::chrome_trace_fleet(&events, &ids)
+            }
+            None => chrome_trace(&events, workers),
+        };
+        doc.to_file(p)?;
         println!(
             "wrote Chrome trace ({} events, open in Perfetto / chrome://tracing): {}",
             events.len(),

@@ -109,6 +109,60 @@ pub fn chrome_trace(events: &[SpanEvent], n_workers: usize) -> Json {
     ])
 }
 
+/// Fleet variant of [`chrome_trace`]: worker lane *i* is chip *i*'s
+/// execution track, rendered as its **own process group** (`pid 10+i`,
+/// named after the chip) so Perfetto shows one group per chip. The
+/// admission and KV service lanes stay under `pid 1` ("pool shared") and
+/// the per-stream lifecycle view stays `pid 2`, exactly as in the
+/// single-chip export.
+pub fn chrome_trace_fleet(events: &[SpanEvent], chip_ids: &[String]) -> Json {
+    let n_chips = chip_ids.len();
+    let mut out: Vec<Json> = Vec::with_capacity(events.len() + 16);
+    out.push(process_name(1, "pool shared"));
+    out.push(process_name(2, "streams"));
+    for (i, id) in chip_ids.iter().enumerate() {
+        out.push(process_name(10 + i as u64, &format!("chip:{id}")));
+    }
+    let mut named_lanes: Vec<u32> = Vec::new();
+    let mut named_streams: Vec<u64> = Vec::new();
+    for ev in events {
+        // Execution view: chip lanes get their own pid, service lanes
+        // share pid 1.
+        let lane = ev.lane as usize;
+        let (pid, name) = if lane < n_chips {
+            (10 + lane as u64, format!("worker-{lane}"))
+        } else if lane == n_chips {
+            (1, "admit".to_string())
+        } else {
+            (1, "kv-arena".to_string())
+        };
+        if !named_lanes.contains(&ev.lane) {
+            named_lanes.push(ev.lane);
+            out.push(thread_name(pid, ev.lane as u64, &name));
+        }
+        out.push(complete_event(ev, pid, ev.lane as u64));
+        // Stream view: identical to the single-chip export.
+        if ev.id != 0 && (ev.kind.is_lifecycle() || ev.kind == SpanKind::Shed) {
+            if !named_streams.contains(&ev.id) {
+                named_streams.push(ev.id);
+                out.push(thread_name(2, ev.id, &format!("req-{}", ev.id)));
+            }
+            out.push(complete_event(ev, 2, ev.id));
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::str("ms")),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("schema_version", Json::num(REPORT_SCHEMA_VERSION as f64)),
+                ("producer", Json::str("trex")),
+            ]),
+        ),
+    ])
+}
+
 /// Render `events` as JSONL: one span object per line, in input order.
 pub fn spans_jsonl(events: &[SpanEvent]) -> String {
     let mut s = String::new();
@@ -190,6 +244,40 @@ mod tests {
             .map(|e| e.opt("dur").unwrap().as_f64().unwrap())
             .sum();
         assert!((total - 45.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_trace_groups_one_process_per_chip() {
+        let events = vec![
+            span(5, SpanKind::Prefill, 0, 0.0, 10.0),   // chip p0's worker lane
+            span(5, SpanKind::DecodeStep, 1, 12.0, 20.0), // chip d0's worker lane
+            span(5, SpanKind::Admit, 2, 0.0, 0.0),      // admit service lane
+            span(5, SpanKind::KvMigrate, 3, 11.0, 11.0), // kv service lane
+        ];
+        let chips = vec!["p0".to_string(), "d0".to_string()];
+        let doc = chrome_trace_fleet(&events, &chips);
+        let parsed = Json::parse(&doc.to_string()).expect("valid JSON");
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap().to_vec();
+        let pid_of = |e: &Json| e.opt("pid").and_then(|p| p.as_f64().ok()).unwrap_or(-1.0);
+        // One process-name metadata record per chip, pids 10 and 11.
+        let procs: Vec<String> = evs
+            .iter()
+            .filter(|e| e.opt("name").and_then(|n| n.as_str().ok()) == Some("process_name"))
+            .filter(|e| pid_of(e) >= 10.0)
+            .map(|e| {
+                e.get("args").unwrap().get("name").unwrap().as_str().unwrap().to_string()
+            })
+            .collect();
+        assert_eq!(procs, vec!["chip:p0".to_string(), "chip:d0".to_string()]);
+        // Chip-lane spans land in their chip's process; service lanes stay
+        // under the shared pool process (pid 1).
+        let complete: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.opt("ph").and_then(|p| p.as_str().ok()) == Some("X"))
+            .collect();
+        let exec_pids: Vec<f64> =
+            complete.iter().filter(|e| pid_of(e) != 2.0).map(|e| pid_of(e)).collect();
+        assert_eq!(exec_pids, vec![10.0, 11.0, 1.0, 1.0]);
     }
 
     #[test]

@@ -14,8 +14,13 @@ fn span_from_chrome(ev: &Json) -> Option<SpanEvent> {
     if ev.opt("ph").and_then(|p| p.as_str().ok()) != Some("X") {
         return None;
     }
-    // Worker view only — every span appears there exactly once.
-    if ev.opt("pid").and_then(|p| p.as_f64().ok()) != Some(1.0) {
+    // Worker view only — every span appears there exactly once. Single-chip
+    // traces put all worker lanes under pid 1; fleet traces
+    // ([`crate::obs::export::chrome_trace_fleet`]) group each chip's lanes
+    // under pid 10+chip while the shared admit/kv lanes stay on pid 1. The
+    // stream view (pid 2) duplicates lifecycle spans and is always skipped.
+    let pid = ev.opt("pid").and_then(|p| p.as_f64().ok())?;
+    if pid != 1.0 && pid < 10.0 {
         return None;
     }
     let kind = SpanKind::from_name(ev.opt("name")?.as_str().ok()?)?;
@@ -102,6 +107,7 @@ struct PhaseAgg {
 pub fn summarize(events: &[SpanEvent], topk: usize) -> Json {
     let mut phases: BTreeMap<&'static str, PhaseAgg> = BTreeMap::new();
     let mut per_req: BTreeMap<u64, (f64, u64, f64, f64)> = BTreeMap::new(); // e2e, steps, chip_us, chip_uj
+    let mut per_lane: BTreeMap<u32, PhaseAgg> = BTreeMap::new(); // lane == chip in fleet traces
     let mut door_sheds: Vec<f64> = Vec::new();
     let mut late_sheds: Vec<f64> = Vec::new();
     for ev in events {
@@ -112,6 +118,15 @@ pub fn summarize(events: &[SpanEvent], topk: usize) -> Json {
         agg.chip_uj += ev.chip_uj;
         agg.ema_bytes += ev.ema_bytes;
         agg.ema_kv_bytes += ev.ema_kv_bytes;
+        if ev.chip_us > 0.0 || ev.chip_uj > 0.0 {
+            let l = per_lane.entry(ev.lane).or_default();
+            l.count += 1;
+            l.wall_us += ev.dur_us();
+            l.chip_us += ev.chip_us;
+            l.chip_uj += ev.chip_uj;
+            l.ema_bytes += ev.ema_bytes;
+            l.ema_kv_bytes += ev.ema_kv_bytes;
+        }
         match ev.kind {
             SpanKind::DoorShed => door_sheds.push(ev.t_start_us),
             SpanKind::Shed => late_sheds.push(ev.t_start_us),
@@ -169,10 +184,31 @@ pub fn summarize(events: &[SpanEvent], topk: usize) -> Json {
             .collect(),
     );
 
+    // Per-lane chip-time attribution. Workers are bound 1:1 to chips in
+    // fleet pools, so in a fleet trace each lane *is* a chip and this is
+    // the per-chip µs/µJ split; in single-chip traces it is the per-worker
+    // split of one modeled chip.
+    let lanes_json = Json::Obj(
+        per_lane
+            .iter()
+            .map(|(lane, a)| {
+                (
+                    format!("lane{lane}"),
+                    Json::obj(vec![
+                        ("count", Json::num(a.count as f64)),
+                        ("chip_us", Json::num(a.chip_us)),
+                        ("chip_uj", Json::num(a.chip_uj)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+
     let timeline = ShedTimeline::from_instants(&door_sheds, &late_sheds, 20);
     Json::obj(vec![
         ("events", Json::num(events.len() as f64)),
         ("phases", phase_json),
+        ("lanes", lanes_json),
         ("slowest", slowest_json),
         ("shed_timeline", timeline.to_json()),
     ])
@@ -199,6 +235,22 @@ pub fn render_summary(summary: &Json) -> String {
                 f("chip_uj"),
                 f("ema_bytes"),
             ));
+        }
+    }
+    if let Some(Ok(lanes)) = summary.opt("lanes").map(|l| l.as_obj()) {
+        if !lanes.is_empty() {
+            s.push_str("\nper-lane chip time (lane == chip in fleet traces):\n");
+            for (name, a) in lanes {
+                let f = |key: &str| a.opt(key).and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+                s.push_str(&format!(
+                    "  {:<14} {:>8.0} {:>26} {:>12.2} {:>12.3}\n",
+                    name,
+                    f("count"),
+                    "",
+                    f("chip_us"),
+                    f("chip_uj"),
+                ));
+            }
         }
     }
     s.push_str("\nslowest requests (by e2e):\n");
@@ -286,6 +338,32 @@ mod tests {
         }
         assert!(parse_trace("").is_err());
         assert!(parse_trace("not json").is_err());
+    }
+
+    #[test]
+    fn fleet_traces_parse_and_attribute_lanes() {
+        use crate::obs::export::chrome_trace_fleet;
+        let mut events = sample_events();
+        // Move request 1's decode steps to chip lane 1 so the summary has
+        // chip time on two lanes.
+        for ev in events.iter_mut() {
+            if ev.kind == SpanKind::DecodeStep {
+                ev.lane = 1;
+            }
+        }
+        let chips = vec!["p0".to_string(), "d0".to_string()];
+        let doc = chrome_trace_fleet(&events, &chips).to_string();
+        // Fleet traces group chip lanes under pid 10+chip; parsing must
+        // still see every span exactly once (stream view skipped).
+        let parsed = parse_trace(&doc).unwrap();
+        assert_eq!(parsed.len(), events.len());
+        let s = summarize(&parsed, 3);
+        let lanes = s.get("lanes").unwrap();
+        let lane0 = lanes.get("lane0").unwrap();
+        let lane1 = lanes.get("lane1").unwrap();
+        assert_eq!(lane0.get("chip_us").unwrap().as_f64().unwrap(), 25.0);
+        assert_eq!(lane1.get("chip_us").unwrap().as_f64().unwrap(), 23.0);
+        assert!(render_summary(&s).contains("per-lane chip time"));
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub mod inspect;
 pub mod span;
 pub mod timeseries;
 
-pub use export::{chrome_trace, dump_anomaly, spans_jsonl};
+pub use export::{chrome_trace, chrome_trace_fleet, dump_anomaly, spans_jsonl};
 pub use inspect::{parse_trace, render_summary, summarize};
 pub use span::{DumpOnce, FlightRecorder, SpanEvent, SpanKind, SpanWriter, DEFAULT_LANE_CAPACITY};
 pub use timeseries::{ShedTimeline, Snapshot, Telemetry, TelemetryConfig};

@@ -48,6 +48,9 @@ pub enum SpanKind {
     KvEvict,
     /// A shared KV prefix copy-on-write-forked at divergence (marker).
     KvCowFork,
+    /// KV pages migrated between chips' arenas (marker; fleet mode —
+    /// `ema_bytes` carries the priced transfer).
+    KvMigrate,
     /// Response built (marker; terminal).
     Complete,
     /// Admitted request shed post-admission (marker; terminal).
@@ -66,6 +69,7 @@ impl SpanKind {
             SpanKind::KvSwap => "kv_swap",
             SpanKind::KvEvict => "kv_evict",
             SpanKind::KvCowFork => "kv_cow_fork",
+            SpanKind::KvMigrate => "kv_migrate",
             SpanKind::Complete => "complete",
             SpanKind::Shed => "shed",
         }
@@ -82,6 +86,7 @@ impl SpanKind {
             "kv_swap" => SpanKind::KvSwap,
             "kv_evict" => SpanKind::KvEvict,
             "kv_cow_fork" => SpanKind::KvCowFork,
+            "kv_migrate" => SpanKind::KvMigrate,
             "complete" => SpanKind::Complete,
             "shed" => SpanKind::Shed,
             _ => return None,
@@ -386,6 +391,7 @@ mod tests {
             SpanKind::KvSwap,
             SpanKind::KvEvict,
             SpanKind::KvCowFork,
+            SpanKind::KvMigrate,
             SpanKind::Complete,
             SpanKind::Shed,
         ] {

@@ -435,14 +435,18 @@ impl StepPlan {
 }
 
 /// Pool-wide registry of compiled step plans, shared by every worker the
-/// way the `SimCache` is: one compile per `(model, batch, quant)` key no
-/// matter how many engines serve decode traffic. The model name is part of
-/// the key — a registry shared by engines simulating different perf models
-/// must never hand one model's plan to the other. (Engines additionally
-/// cache the `Arc` per group width, so this map is off the per-token path.)
+/// way the `SimCache` is: one compile per `(model, batch, quant, chip)` key
+/// no matter how many engines serve decode traffic. The model name is part
+/// of the key — a registry shared by engines simulating different perf
+/// models must never hand one model's plan to the other — and so is the
+/// chip scope: a fleet runs chips at different operating points, and a
+/// plan's pre-priced coefficients are only valid for the `HwConfig` that
+/// compiled them. Single-chip pools use scope 0 throughout. (Engines
+/// additionally cache the `Arc` per group width, so this map is off the
+/// per-token path.)
 #[derive(Debug, Default)]
 pub struct PlanRegistry {
-    plans: RwLock<HashMap<(String, usize, u64), Arc<StepPlan>>>,
+    plans: RwLock<HashMap<(String, usize, u64, u64), Arc<StepPlan>>>,
 }
 
 impl PlanRegistry {
@@ -450,8 +454,8 @@ impl PlanRegistry {
         Self::default()
     }
 
-    /// The plan for `(model, batch, quant)`, compiling it (under the write
-    /// lock, exactly once process-wide) if absent.
+    /// The plan for `(model, batch, quant)` at chip scope 0 — the
+    /// single-chip pool's entry point.
     pub fn get_or_compile(
         &self,
         model: &str,
@@ -459,7 +463,22 @@ impl PlanRegistry {
         quant: KvQuant,
         compile: impl FnOnce() -> StepPlan,
     ) -> Arc<StepPlan> {
-        let key = (model.to_string(), batch, quant.bits());
+        self.get_or_compile_scoped(0, model, batch, quant, compile)
+    }
+
+    /// The plan for `(model, batch, quant, chip scope)`, compiling it
+    /// (under the write lock, exactly once process-wide) if absent. Fleet
+    /// workers pass their chip index + 1 so chips at different operating
+    /// points never share pre-priced coefficients.
+    pub fn get_or_compile_scoped(
+        &self,
+        scope: u64,
+        model: &str,
+        batch: usize,
+        quant: KvQuant,
+        compile: impl FnOnce() -> StepPlan,
+    ) -> Arc<StepPlan> {
+        let key = (model.to_string(), batch, quant.bits(), scope);
         if let Some(p) = self.plans.read().unwrap().get(&key) {
             return Arc::clone(p);
         }
@@ -593,5 +612,17 @@ mod tests {
         });
         assert_eq!(plan.model, other.name);
         assert_eq!(reg.len(), 4);
+        // A different CHIP SCOPE is a different plan — fleet chips run at
+        // different operating points, so pre-priced coefficients never
+        // cross chips; scope 0 is exactly the unscoped entry point.
+        let pinned = hw.pinned_at_vdd(0.45);
+        reg.get_or_compile_scoped(2, &m.name, 4, KvQuant::Fp16, || {
+            StepPlan::compile_budgeted(&pinned, &m, 4, KvQuant::Fp16)
+        });
+        assert_eq!(reg.len(), 5);
+        reg.get_or_compile_scoped(0, &m.name, 4, KvQuant::Fp16, || {
+            unreachable!("scope 0 must hit the unscoped entry's plan")
+        });
+        assert_eq!(reg.len(), 5);
     }
 }

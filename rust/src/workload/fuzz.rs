@@ -34,6 +34,7 @@ use crate::config::{HwConfig, ModelConfig};
 use crate::coordinator::{
     BatcherConfig, DecodePolicy, Engine, EngineConfig, Lifecycle, PoolConfig, Request, Server,
 };
+use crate::fleet::{ChipRole, ChipSpec, Fleet};
 use crate::kv::{KvArenaConfig, KvManager, KvQuant};
 use crate::obs::{dump_anomaly, FlightRecorder};
 use crate::runtime::{artifacts, ArtifactSet};
@@ -81,6 +82,12 @@ pub struct Scenario {
     /// Drop the token receiver instead of auditing it (dropping must be
     /// harmless; skips the token-ordering check).
     drop_tokens: bool,
+    /// Heterogeneous fleet shape: one `(role, vdd)` per chip. Empty runs
+    /// the classic single-arena pool; non-empty binds one worker per chip
+    /// with its own tiny KV arena, so placement, chain migration, and
+    /// sheds racing mid-migration streams all get fuzzed. The residual
+    /// invariant then applies to EVERY chip's arena.
+    fleet: Vec<(ChipRole, f64)>,
     pub reqs: Vec<ReqSpec>,
 }
 
@@ -135,6 +142,18 @@ impl Scenario {
                 }
             })
             .collect();
+        // Fleet draws come LAST on purpose: appending them after every
+        // pre-existing draw keeps each seed's pool knobs and schedule
+        // bit-identical to what that seed produced before fleets existed
+        // (old failing seeds still replay their old scenarios).
+        let fleet = if rng.f64() < 0.5 {
+            Vec::new()
+        } else {
+            let n_chips = 1 + rng.below(4);
+            let roles = [ChipRole::General, ChipRole::Prefill, ChipRole::Decode];
+            let vdds = [0.45, 0.60, 0.85];
+            (0..n_chips).map(|_| (roles[rng.below(3)], vdds[rng.below(3)])).collect()
+        };
         Scenario {
             seed,
             workers,
@@ -150,16 +169,26 @@ impl Scenario {
             admit_oversub,
             early_shutdown,
             drop_tokens,
+            fleet,
             reqs,
         }
     }
 
     /// One-line pool-knob description for failure reports.
     pub fn describe(&self) -> String {
+        let fleet = if self.fleet.is_empty() {
+            "none".to_string()
+        } else {
+            self.fleet
+                .iter()
+                .map(|(r, v)| format!("{}@{v:.2}V", r.name()))
+                .collect::<Vec<_>>()
+                .join(",")
+        };
         format!(
             "workers={} queue_depth={} max_inflight={} prefill_chunk={} \
              decode={:?} wait_us={} priority={} batcher_wait_us={} \
-             kv={}x{}pages oversub={} early_shutdown={} drop_tokens={}",
+             kv={}x{}pages oversub={} early_shutdown={} drop_tokens={} fleet=[{fleet}]",
             self.workers,
             self.queue_depth,
             self.max_inflight,
@@ -358,9 +387,31 @@ fn exec(sc: &Scenario, reqs: &[ReqSpec], dump_to: Option<&Path>) -> (Vec<String>
     let mut arena = KvArenaConfig::for_pool(&hw, &pm, sc.kv_quant, Some(sc.kv_pages));
     arena.admit_oversub = sc.admit_oversub;
     let kv = Arc::new(KvManager::new(&hw, &pm, arena));
-    let recorder = Arc::new(FlightRecorder::for_pool(sc.workers, 4096));
+    // Heterogeneous-fleet scenarios: one worker per chip, each with its own
+    // tiny arena (the scenario's page budget) so eviction, chain migration
+    // and sheds racing mid-migration streams fire under fuzz pressure.
+    let fleet = if sc.fleet.is_empty() {
+        None
+    } else {
+        let specs: Vec<ChipSpec> = sc
+            .fleet
+            .iter()
+            .enumerate()
+            .map(|(i, (role, vdd))| {
+                let mut s = ChipSpec::with_role(format!("c{i}"), *role, *vdd);
+                s.kv_pages = Some(sc.kv_pages);
+                s
+            })
+            .collect();
+        match Fleet::build(specs, &hw, &pm, sc.kv_quant) {
+            Ok(f) => Some(Arc::new(f)),
+            Err(e) => return (vec![format!("fleet build failed: {e}")], None),
+        }
+    };
+    let n_workers = fleet.as_ref().map(|f| f.n_chips()).unwrap_or(sc.workers);
+    let recorder = Arc::new(FlightRecorder::for_pool(n_workers, 4096));
     let pool = PoolConfig {
-        workers: sc.workers,
+        workers: n_workers,
         queue_depth: sc.queue_depth,
         max_inflight: sc.max_inflight,
         affinity: true,
@@ -368,7 +419,8 @@ fn exec(sc: &Scenario, reqs: &[ReqSpec], dump_to: Option<&Path>) -> (Vec<String>
         decode_max_wait: Duration::from_micros(sc.decode_max_wait_us),
         decode_priority: sc.decode_priority,
         prefill_chunk: sc.prefill_chunk,
-        kv: Some(Arc::clone(&kv)),
+        kv: if fleet.is_some() { None } else { Some(Arc::clone(&kv)) },
+        fleet: fleet.clone(),
         lifecycle_ledger: true,
         recorder: Some(Arc::clone(&recorder)),
         telemetry: None,
@@ -477,10 +529,27 @@ fn exec(sc: &Scenario, reqs: &[ReqSpec], dump_to: Option<&Path>) -> (Vec<String>
         None => violations.push("lifecycle ledger unexpectedly disabled".to_string()),
     }
 
-    // Invariant 2 — zero KV residual after drain.
-    let residual = kv.residual();
-    if !residual.is_clean() {
-        violations.push(format!("kv arena residual after drain: {residual:?}"));
+    // Invariant 2 — zero KV residual after drain, on EVERY chip: a stream
+    // shed mid-migration holds state on both its source and target arenas,
+    // and both must end clean.
+    match &fleet {
+        Some(f) => {
+            for (i, chip) in f.chips.iter().enumerate() {
+                let residual = chip.kv.residual();
+                if !residual.is_clean() {
+                    violations.push(format!(
+                        "kv residual on chip {i} ('{}') after drain: {residual:?}",
+                        chip.spec.id
+                    ));
+                }
+            }
+        }
+        None => {
+            let residual = kv.residual();
+            if !residual.is_clean() {
+                violations.push(format!("kv arena residual after drain: {residual:?}"));
+            }
+        }
     }
 
     // Invariant 3 — no token event after its stream shed (and none for a
@@ -566,6 +635,44 @@ mod tests {
             }
         }
         assert!(shared > 0, "no seed in 0..32 produced prefix-mates");
+    }
+
+    #[test]
+    fn fleets_actually_mix_shapes() {
+        // The per-chip residual and migration invariants are vacuous if no
+        // scenario ever draws a multi-chip or role-split fleet.
+        let mut multi = 0usize;
+        let mut mixed_roles = 0usize;
+        for seed in 0..64u64 {
+            let sc = Scenario::from_seed(seed);
+            if sc.fleet.len() > 1 {
+                multi += 1;
+            }
+            let mut roles: Vec<&str> = sc.fleet.iter().map(|(r, _)| r.name()).collect();
+            roles.sort_unstable();
+            roles.dedup();
+            if roles.len() > 1 {
+                mixed_roles += 1;
+            }
+        }
+        assert!(multi > 0, "no seed in 0..64 drew a multi-chip fleet");
+        assert!(mixed_roles > 0, "no seed in 0..64 drew a role-split fleet");
+    }
+
+    #[test]
+    fn forced_fleet_scenario_holds_invariants() {
+        // A deterministic fleet shape with an early shutdown: streams shed
+        // mid-migration must release pages on BOTH the source and target
+        // chips, which the per-chip residual check below would catch.
+        let mut sc = Scenario::from_seed(0xF1EE7);
+        sc.early_shutdown = true;
+        sc.fleet = vec![
+            (ChipRole::Prefill, 0.85),
+            (ChipRole::Decode, 0.45),
+            (ChipRole::Decode, 0.45),
+        ];
+        let (violations, _) = exec(&sc, &sc.reqs, None);
+        assert!(violations.is_empty(), "{violations:?}");
     }
 
     #[test]
