@@ -1,0 +1,333 @@
+//! fig12-slo — runtime DVFS governor + SLO-aware admission vs the static
+//! operating points of fig7: does closing the loop buy µJ/token at equal
+//! SLO attainment?
+//!
+//! fig7's VDD/frequency sweep is an *offline* menu: pick 0.85 V and every
+//! token pays 0.339 nJ/cycle whether the queue is deep or empty; pick
+//! 0.45 V and tokens cost 0.119 nJ/cycle but take 7.5× longer, blowing any
+//! latency target the moment load arrives. The governor walks that same
+//! table at runtime: it watches the telemetry sampler's per-interval
+//! decode-µs/token percentiles and per-chip queue depths, drops a chip one
+//! operating point when the frequency-ratio projection says the SLO still
+//! holds at the lower point, boosts on queue bursts or observed breaches,
+//! and re-costs the chip's step-plan scope on every re-point (plans are
+//! compiled per operating point — a stale plan is a correctness bug).
+//!
+//! Three runs over the same diurnal open-loop trace (paced valleys with
+//! short bursts), two general chips each:
+//!
+//! * **static max**: both chips pinned at 0.85 V (fig7's fast point) —
+//!   this run is also the probe that calibrates the SLO target
+//!   (2.5× its observed worst interval p95);
+//! * **static min**: both chips pinned at 0.45 V (fig7's frugal point);
+//! * **governed**: chips start at 0.85 V, governor on with the calibrated
+//!   SLO target.
+//!
+//! Attainment is the token-weighted fraction of telemetry intervals whose
+//! decode p95 met the target. The claim: the governed fleet lands within a
+//! point of the static-max attainment while spending ≥15% fewer µJ/token,
+//! and the static-min fleet shows why the cheap point can't simply be
+//! pinned — it breaches.
+//!
+//! `--test` (CI smoke): small trace; asserts the energy saving, the
+//! attainment ordering, that re-points actually happened (and settled
+//! below 0.85 V), that no step was ever priced against a stale plan, and
+//! that the ledger + every chip arena drain clean.
+
+use std::sync::Arc;
+use std::time::Duration;
+use trex::bench_util::{banner, table};
+use trex::config::{HwConfig, ModelConfig};
+use trex::control::{GovernorConfig, SloTarget};
+use trex::coordinator::{BatcherConfig, Engine, EngineConfig, PoolConfig, Request, Server};
+use trex::fleet::{ChipSpec, Fleet};
+use trex::kv::KvQuant;
+use trex::obs::{Snapshot, TelemetryConfig};
+use trex::runtime::ArtifactSet;
+
+const MAX_SEQ: usize = 32;
+const D: usize = 64;
+const PROMPT: usize = 6;
+const GEN: usize = 8;
+
+struct SloOutcome {
+    tokens: u64,
+    chip_uj: f64,
+    snaps: Vec<Snapshot>,
+    repoints: u64,
+    stale_plan_hits: u64,
+    final_vdds: Vec<f64>,
+    door_sheds: u64,
+}
+
+impl SloOutcome {
+    fn uj_per_token(&self) -> f64 {
+        self.chip_uj / (self.tokens as f64).max(1.0)
+    }
+
+    /// Token-weighted fraction of non-empty telemetry intervals whose
+    /// decode p95 met the target.
+    fn attainment(&self, target_us: f64) -> f64 {
+        let (mut total, mut ok) = (0u64, 0u64);
+        for s in &self.snaps {
+            if s.interval_tokens == 0 {
+                continue;
+            }
+            total += s.interval_tokens;
+            if s.interval_us_p95 <= target_us {
+                ok += s.interval_tokens;
+            }
+        }
+        if total == 0 {
+            1.0
+        } else {
+            ok as f64 / total as f64
+        }
+    }
+
+    /// Worst non-empty interval p95 — the probe statistic the SLO target
+    /// is calibrated from.
+    fn worst_p95(&self) -> f64 {
+        self.snaps
+            .iter()
+            .filter(|s| s.interval_tokens > 0)
+            .map(|s| s.interval_us_p95)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Diurnal arrival gaps, µs: long paced valleys with short gap-free bursts
+/// (two "days" worth). Valleys keep queues shallow so the governor can
+/// drop; bursts exercise the boost path.
+fn diurnal_gaps(n: usize) -> Vec<u64> {
+    let day = (n / 2).max(1);
+    let burst = (day / 8).max(1);
+    (0..n)
+        .map(|i| {
+            let phase = i % day;
+            if phase < burst {
+                0 // burst: back-to-back arrivals
+            } else {
+                350 // valley: paced
+            }
+        })
+        .collect()
+}
+
+/// Run the diurnal trace against a two-chip general fleet at `vdd` and
+/// account tokens, modeled energy, and telemetry intervals. `governor`
+/// turns the control plane on (SLO target included); statics run the exact
+/// PR-9 pool.
+fn run(
+    vdd: f64,
+    governor: Option<GovernorConfig>,
+    slo: Option<SloTarget>,
+    gaps: &[u64],
+) -> SloOutcome {
+    let hw = HwConfig::default();
+    let pm = ModelConfig::tiny();
+    let fleet = Arc::new(
+        Fleet::build(
+            vec![ChipSpec::general("g0", vdd), ChipSpec::general("g1", vdd)],
+            &hw,
+            &pm,
+            KvQuant::Fp16,
+        )
+        .expect("fleet build"),
+    );
+    let pool = PoolConfig {
+        fleet: Some(Arc::clone(&fleet)),
+        lifecycle_ledger: true,
+        telemetry: Some(TelemetryConfig {
+            interval: Duration::from_micros(1_500),
+            capacity: 4096,
+            ..TelemetryConfig::default()
+        }),
+        slo,
+        governor,
+        batcher: BatcherConfig { max_seq: MAX_SEQ, max_wait: Duration::from_micros(200) },
+        ..PoolConfig::default()
+    };
+    let hw2 = hw.clone();
+    let pm2 = pm.clone();
+    let mut handle = Server::start_pool(
+        move |ctx| {
+            let set = ArtifactSet::reference("fig12s", D, MAX_SEQ)?;
+            Engine::for_worker(
+                set,
+                EngineConfig {
+                    hw: hw2.clone(),
+                    perf_model: pm2.clone(),
+                    self_test: false,
+                    kv_quant: KvQuant::Fp16,
+                    kv_pages: None,
+                },
+                ctx,
+            )
+        },
+        pool,
+    );
+    let metrics = Arc::clone(&handle.metrics);
+    let (resp_rx, tok_rx) = handle.detach_streams();
+    drop(tok_rx);
+    let submitter = handle.submitter();
+
+    for (i, gap) in gaps.iter().enumerate() {
+        if *gap > 0 {
+            std::thread::sleep(Duration::from_micros(*gap));
+        }
+        let mut req = Request::new(i as u64, PROMPT, vec![0.1; PROMPT * D]).with_generate(GEN);
+        // Bounded backpressure retry; an SLO door shed is terminal for the
+        // request (the trace is open-loop — shed traffic does not return).
+        for _ in 0..200 {
+            match submitter.try_submit(req) {
+                Ok(()) => break,
+                Err((r, e)) => {
+                    if e.to_string().contains("slo breach") {
+                        break;
+                    }
+                    req = r;
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+        }
+    }
+
+    let report = handle.shutdown().expect("clean shutdown");
+    assert!(
+        metrics.ledger_audit().is_some_and(|a| a.conserved()),
+        "lifecycle ledger must balance after the drain"
+    );
+    let (mut tokens, mut uj) = (0u64, 0.0f64);
+    for resp in resp_rx.try_iter() {
+        tokens += resp.tokens_generated as u64;
+        uj += resp.chip_uj;
+    }
+    let mut stale = 0u64;
+    let mut final_vdds = Vec::new();
+    for chip in &fleet.chips {
+        let residual = chip.kv.residual();
+        assert!(
+            residual.is_clean(),
+            "chip '{}' holds KV residual after drain: {residual:?}",
+            chip.spec.id
+        );
+        stale += chip.stale_plan_hits();
+        final_vdds.push(chip.current_vdd());
+    }
+    let snaps = report.telemetry.as_ref().map(|t| t.snapshots()).unwrap_or_default();
+    let repoints = report.control.as_ref().map(|c| c.repoints()).unwrap_or(0);
+    let door_sheds = report.control.as_ref().map(|c| c.door_sheds()).unwrap_or(0);
+    SloOutcome {
+        tokens,
+        chip_uj: uj,
+        snaps,
+        repoints,
+        stale_plan_hits: stale,
+        final_vdds,
+        door_sheds,
+    }
+}
+
+fn row(name: &str, r: &SloOutcome, target_us: f64) -> Vec<String> {
+    vec![
+        name.to_string(),
+        format!("{}", r.tokens),
+        format!("{:.1}", r.chip_uj),
+        format!("{:.3}", r.uj_per_token()),
+        format!("{:.1}%", r.attainment(target_us) * 100.0),
+        format!("{}", r.repoints),
+        r.final_vdds.iter().map(|v| format!("{v:.2}")).collect::<Vec<_>>().join("/"),
+    ]
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    banner("fig12-slo: runtime DVFS governor + SLO admission vs fig7's static points");
+
+    let n = if smoke { 160 } else { 640 };
+    let gaps = diurnal_gaps(n);
+    println!(
+        "{n} requests x ({PROMPT}-token prompt + {GEN} decode tokens), diurnal \
+         open-loop trace (paced valleys, gap-free bursts), 2 general chips\n"
+    );
+
+    // Probe + baseline in one: the static max-VDD run calibrates the SLO
+    // target at 2.5x its own worst interval p95.
+    let max = run(0.85, None, None, &gaps);
+    let target_us = max.worst_p95() * 2.5;
+    assert!(target_us > 0.0, "probe run observed no decode intervals");
+    println!("SLO target (decode p95): {target_us:.1} us/token (2.5x static-max probe)\n");
+
+    let min = run(0.45, None, None, &gaps);
+    let gov = run(
+        0.85,
+        Some(GovernorConfig { dwell_us: 3_000.0, ..GovernorConfig::default() }),
+        Some(SloTarget::decode(target_us)),
+        &gaps,
+    );
+
+    table(
+        &["config (2 chips)", "tokens", "total uJ", "uJ/tok", "attainment", "re-points", "final V"],
+        &[
+            row("static 2xG@0.85V (probe)", &max, target_us),
+            row("static 2xG@0.45V", &min, target_us),
+            row("governed (start 0.85V)", &gov, target_us),
+        ],
+    );
+    println!(
+        "\nfig7 is the menu; the governor orders from it at runtime. Valleys let\n\
+         it walk down to the cheapest point whose frequency-ratio projection\n\
+         still clears the target; bursts walk it back up. Every re-point bumps\n\
+         the chip's plan epoch, so each step is priced at the point it ran at\n\
+         ({} governed door sheds).",
+        gov.door_sheds
+    );
+
+    // Acceptance (CI smoke).
+    let (max_uj, gov_uj) = (max.uj_per_token(), gov.uj_per_token());
+    assert!(gov.tokens > 0, "governed fleet generated no tokens");
+    assert_eq!(
+        gov.stale_plan_hits, 0,
+        "no step may be priced against a stale plan after a re-point"
+    );
+    assert_eq!(max.repoints, 0, "static runs must never re-point");
+    assert_eq!(min.repoints, 0, "static runs must never re-point");
+    assert!(
+        gov.repoints >= 2,
+        "governor should have walked down at least two points, saw {}",
+        gov.repoints
+    );
+    assert!(
+        gov.final_vdds.iter().all(|v| *v < 0.85 - 1e-9),
+        "governed chips should settle below 0.85 V, saw {:?}",
+        gov.final_vdds
+    );
+    assert!(
+        gov_uj <= 0.85 * max_uj,
+        "governor must save >=15% uJ/token vs static max: {gov_uj:.3} vs {max_uj:.3}"
+    );
+    assert!(
+        gov.attainment(target_us) >= max.attainment(target_us) - 1e-9,
+        "governed attainment must match the static-max baseline: {:.3} vs {:.3}",
+        gov.attainment(target_us),
+        max.attainment(target_us)
+    );
+    assert!(
+        min.attainment(target_us) < gov.attainment(target_us),
+        "the static-min point must breach where the governor does not: {:.3} vs {:.3}",
+        min.attainment(target_us),
+        gov.attainment(target_us)
+    );
+    println!(
+        "\nfig12-slo OK: {:.3} -> {:.3} uJ/token ({:.0}% saved) at attainment \
+         {:.1}% (static max {:.1}%, static min {:.1}%), {} re-points",
+        max_uj,
+        gov_uj,
+        (1.0 - gov_uj / max_uj) * 100.0,
+        gov.attainment(target_us) * 100.0,
+        max.attainment(target_us) * 100.0,
+        min.attainment(target_us) * 100.0,
+        gov.repoints
+    );
+}

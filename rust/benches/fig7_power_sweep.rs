@@ -2,6 +2,12 @@
 //! 7.12–152.5 mW. Sweeps the operating points (including interpolated ones)
 //! on a fixed workload and reports frequency, modeled average power, peak
 //! power (the measurement anchor), latency and energy.
+//!
+//! This sweep is the *static* menu: every point is pinned for the whole
+//! run. `fig12_slo` uses its endpoints (0.85 V fast, 0.45 V frugal) as
+//! the static baselines the runtime DVFS governor is judged against —
+//! the governor walks this same table dynamically, buying µJ/token in
+//! load valleys without giving up the latency SLO the 0.85 V point sets.
 
 use trex::bench_util::{banner, table};
 use trex::config::{HwConfig, ModelConfig};

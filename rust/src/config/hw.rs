@@ -199,22 +199,35 @@ impl HwConfig {
 
     /// Interpolate an operating point at `vdd` (clamped to the table range).
     pub fn point_at_vdd(&self, vdd: f64) -> OperatingPoint {
+        self.point_at_vdd_checked(vdd).0
+    }
+
+    /// Like [`HwConfig::point_at_vdd`], but the second element reports
+    /// whether `vdd` fell outside the table and was clamped to an edge
+    /// point. Callers that *set* operating points (fleet build, the DVFS
+    /// governor, `sim --vdd`) use this to surface out-of-range requests
+    /// instead of silently running at the nearest corner; a NaN `vdd`
+    /// clamps to the slowest point and reports `clamped = true`.
+    pub fn point_at_vdd_checked(&self, vdd: f64) -> (OperatingPoint, bool) {
         let pts = &self.points;
-        if vdd <= pts[0].vdd {
-            return pts[0];
+        if !(vdd > pts[0].vdd) {
+            return (pts[0], vdd != pts[0].vdd);
         }
         if vdd >= pts[pts.len() - 1].vdd {
-            return pts[pts.len() - 1];
+            return (pts[pts.len() - 1], vdd != pts[pts.len() - 1].vdd);
         }
         for w in pts.windows(2) {
             let (a, b) = (w[0], w[1]);
             if vdd >= a.vdd && vdd <= b.vdd {
                 let t = (vdd - a.vdd) / (b.vdd - a.vdd);
-                return OperatingPoint {
-                    vdd,
-                    freq_mhz: a.freq_mhz + t * (b.freq_mhz - a.freq_mhz),
-                    peak_mw: a.peak_mw + t * (b.peak_mw - a.peak_mw),
-                };
+                return (
+                    OperatingPoint {
+                        vdd,
+                        freq_mhz: a.freq_mhz + t * (b.freq_mhz - a.freq_mhz),
+                        peak_mw: a.peak_mw + t * (b.peak_mw - a.peak_mw),
+                    },
+                    false,
+                );
             }
         }
         unreachable!()
@@ -408,6 +421,27 @@ mod tests {
         // Clamp behaviour
         assert_eq!(hw.point_at_vdd(0.1).freq_mhz, 60.0);
         assert_eq!(hw.point_at_vdd(2.0).freq_mhz, 450.0);
+    }
+
+    #[test]
+    fn point_at_vdd_checked_reports_clamping() {
+        let hw = HwConfig::default();
+        // In-range requests (edges included) are not clamped.
+        assert!(!hw.point_at_vdd_checked(0.45).1);
+        assert!(!hw.point_at_vdd_checked(0.60).1);
+        assert!(!hw.point_at_vdd_checked(0.85).1);
+        // Out-of-range requests clamp to the edge and say so.
+        let (lo, clamped_lo) = hw.point_at_vdd_checked(0.1);
+        assert!(clamped_lo);
+        assert_eq!((lo.vdd, lo.freq_mhz), (0.45, 60.0));
+        let (hi, clamped_hi) = hw.point_at_vdd_checked(2.0);
+        assert!(clamped_hi);
+        assert_eq!((hi.vdd, hi.freq_mhz), (0.85, 450.0));
+        // NaN clamps to the slowest point rather than poisoning pricing.
+        let (nan_pt, nan_clamped) = hw.point_at_vdd_checked(f64::NAN);
+        assert!(nan_clamped);
+        assert_eq!(nan_pt.vdd, 0.45);
+        assert!(hw.point_at_vdd(f64::NAN).freq_mhz == 60.0);
     }
 
     #[test]

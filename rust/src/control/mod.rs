@@ -1,0 +1,370 @@
+//! SLO-driven control plane: a per-chip runtime DVFS governor plus an
+//! SLO-aware admission gate.
+//!
+//! The governor rides the pool's sampler thread. Each telemetry interval it
+//! observes per-interval decode latency percentiles ([`crate::coordinator::
+//! metrics::IntervalStats`]), real queue depth per chip, and KV-arena
+//! occupancy, and re-points each chip's operating voltage within the fig7
+//! table via [`crate::fleet::Chip::repoint`]:
+//!
+//! * **Boost** one point when a chip's queue is deep (a real, wall-clock
+//!   burst signal) or the decode-p95 SLO is breached.
+//! * **Drop** one point when the queue is shallow and KV occupancy is low —
+//!   but, when an SLO is set, only if the *frequency-ratio projection* of
+//!   the observed p95 at the lower point still clears the target with
+//!   headroom. Modeled µs/token scales ~1/freq across fig7 points, so
+//!   `p95 × (freq_now / freq_lower)` is the expected p95 after the drop;
+//!   requiring it under `target × headroom` settles the chip at the
+//!   *cheapest compliant* point instead of oscillating around the target.
+//!
+//! Every accepted re-point bumps the chip's operating-point epoch; the
+//! bound worker engine re-costs its plan scope and sim caches before the
+//! next priced step (plans are compiled per operating point, so a stale
+//! plan would be a correctness bug, not just a perf bug — see
+//! `Engine::sync_operating_point`).
+//!
+//! **Dwell/hysteresis**: a chip re-points at most once per
+//! [`GovernorConfig::dwell_us`] window, so an oscillating load signal
+//! cannot thrash the plan caches. The admission gate has its own
+//! hysteresis: it latches shedding on a p95 breach and releases only once
+//! p95 falls to 95% of the target.
+
+use crate::fleet::{Fleet, Repoint};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Per-class service-level objectives the control plane steers against.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloTarget {
+    /// Decode-latency target: interval p95 µs/token must stay at or under
+    /// this. Drives both the governor's drop projection and the admission
+    /// gate.
+    pub decode_p95_us: f64,
+    /// Optional prefill end-to-end p95 target, µs (reported, not yet
+    /// steered — see ROADMAP follow-ups).
+    pub prefill_p95_us: Option<f64>,
+}
+
+impl SloTarget {
+    /// A decode-only SLO (the common case; `serve --slo-p95-us`).
+    pub fn decode(decode_p95_us: f64) -> SloTarget {
+        SloTarget { decode_p95_us, prefill_p95_us: None }
+    }
+
+    /// Admission-gate update for one telemetry interval: latch shedding on
+    /// a p95 breach, release at 95% of the target (hysteresis so the door
+    /// doesn't flap at the boundary). Empty intervals leave the gate
+    /// unchanged — no tokens is no evidence either way.
+    pub fn update_gate(&self, state: &ControlState, tokens: u64, us_p95: f64) {
+        if tokens == 0 {
+            return;
+        }
+        if us_p95 > self.decode_p95_us {
+            state.set_shedding(true);
+        } else if us_p95 <= self.decode_p95_us * 0.95 {
+            state.set_shedding(false);
+        }
+    }
+}
+
+/// DVFS-governor tuning. Defaults are deliberately conservative: a 50 ms
+/// dwell (≥ several telemetry intervals), boost on a 4-deep queue, drop
+/// only when ≤1 request is waiting and the KV arena is under 90% full.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GovernorConfig {
+    /// Minimum wall-clock µs between re-points of the same chip.
+    pub dwell_us: f64,
+    /// Queue depth (waiting prefill + parked + decode streams) at or above
+    /// which a chip boosts one operating point.
+    pub queue_high: usize,
+    /// Queue depth at or below which a chip may drop one operating point.
+    pub queue_low: usize,
+    /// Drop only if the projected p95 at the lower point stays under
+    /// `target × headroom` (fraction in (0, 1]).
+    pub headroom: f64,
+    /// Never drop while the chip's KV arena occupancy is at or above this
+    /// fraction — a full arena means swap storms, not idle capacity.
+    pub kv_high: f64,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> GovernorConfig {
+        GovernorConfig {
+            dwell_us: 50_000.0,
+            queue_high: 4,
+            queue_low: 1,
+            headroom: 0.9,
+            kv_high: 0.9,
+        }
+    }
+}
+
+/// One telemetry interval's worth of observations, as the sampler hands
+/// them to [`DvfsGovernor::tick`].
+#[derive(Debug, Clone, Copy)]
+pub struct GovernorObs<'a> {
+    /// Wall-clock µs (recorder/sampler clock) at the tick.
+    pub t_us: f64,
+    /// Decode tokens completed in the interval (0 ⇒ percentiles are
+    /// meaningless and the interval is treated as idle).
+    pub tokens: u64,
+    /// Interval decode p50 µs/token.
+    pub us_p50: f64,
+    /// Interval decode p95 µs/token.
+    pub us_p95: f64,
+    /// Per-chip queue depth (waiting + parked + live decode streams).
+    pub queue_depths: &'a [usize],
+    /// Per-chip KV arena occupancy fraction in [0, 1].
+    pub kv_frac: &'a [f64],
+}
+
+/// The per-pool DVFS governor: owns per-chip dwell state, decides at most
+/// one single-step re-point per chip per tick, and applies it through
+/// [`crate::fleet::Chip::repoint`].
+#[derive(Debug)]
+pub struct DvfsGovernor {
+    cfg: GovernorConfig,
+    slo: Option<SloTarget>,
+    /// Last accepted re-point per chip, sampler-clock µs (`-inf` ⇒ never;
+    /// the first tick may re-point immediately).
+    last_repoint_us: Vec<f64>,
+}
+
+impl DvfsGovernor {
+    pub fn new(cfg: GovernorConfig, slo: Option<SloTarget>, n_chips: usize) -> DvfsGovernor {
+        DvfsGovernor { cfg, slo, last_repoint_us: vec![f64::NEG_INFINITY; n_chips] }
+    }
+
+    pub fn config(&self) -> &GovernorConfig {
+        &self.cfg
+    }
+
+    /// One governor tick: for each chip (skipping any still in dwell),
+    /// boost on burst/breach, else consider a projected-safe drop. Returns
+    /// the accepted re-points; the caller records the spans and re-costing
+    /// is the bound engine's obligation via the epoch bump.
+    pub fn tick(&mut self, fleet: &Fleet, obs: &GovernorObs) -> Vec<(usize, Repoint)> {
+        let mut out = Vec::new();
+        for i in 0..fleet.n_chips() {
+            if obs.t_us - self.last_repoint_us[i] < self.cfg.dwell_us {
+                continue;
+            }
+            let chip = fleet.chip(i);
+            let pts = chip.operating_points();
+            let cur = chip.current_point();
+            let queue = obs.queue_depths.get(i).copied().unwrap_or(0);
+            let kv = obs.kv_frac.get(i).copied().unwrap_or(0.0);
+            let breach = self
+                .slo
+                .map(|s| obs.tokens > 0 && obs.us_p95 > s.decode_p95_us)
+                .unwrap_or(false);
+            let target_vdd = if queue >= self.cfg.queue_high || breach {
+                // Boost: first table point strictly above the current one.
+                pts.iter().find(|p| p.vdd > cur.vdd + 1e-9).map(|p| p.vdd)
+            } else if queue <= self.cfg.queue_low && kv < self.cfg.kv_high {
+                // Drop: highest table point strictly below the current one,
+                // if the frequency-ratio projection clears the SLO.
+                pts.iter().rev().find(|p| p.vdd < cur.vdd - 1e-9).and_then(|lower| {
+                    let safe = match self.slo {
+                        None => true,
+                        Some(s) => {
+                            obs.tokens == 0
+                                || obs.us_p95 * (cur.freq_mhz / lower.freq_mhz)
+                                    < s.decode_p95_us * self.cfg.headroom
+                        }
+                    };
+                    safe.then_some(lower.vdd)
+                })
+            } else {
+                None
+            };
+            if let Some(vdd) = target_vdd {
+                if let Some(rp) = chip.repoint(vdd) {
+                    self.last_repoint_us[i] = obs.t_us;
+                    out.push((i, rp));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Shared control-plane state: the admission door reads the shed latch on
+/// every generate submit; the sampler and report readers tally decisions.
+#[derive(Debug, Default)]
+pub struct ControlState {
+    shed_generate: AtomicBool,
+    slo_door_sheds: AtomicU64,
+    dvfs_repoints: AtomicU64,
+}
+
+impl ControlState {
+    pub fn new() -> ControlState {
+        ControlState::default()
+    }
+
+    /// True while the door sheds generate traffic (SLO breach latched).
+    pub fn shedding(&self) -> bool {
+        self.shed_generate.load(Ordering::SeqCst)
+    }
+
+    pub fn set_shedding(&self, on: bool) {
+        self.shed_generate.store(on, Ordering::SeqCst);
+    }
+
+    /// Generate requests rejected by the SLO gate.
+    pub fn door_sheds(&self) -> u64 {
+        self.slo_door_sheds.load(Ordering::SeqCst)
+    }
+
+    pub fn note_door_shed(&self) {
+        self.slo_door_sheds.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Accepted governor re-points, all chips.
+    pub fn repoints(&self) -> u64 {
+        self.dvfs_repoints.load(Ordering::SeqCst)
+    }
+
+    pub fn note_repoint(&self) {
+        self.dvfs_repoints.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HwConfig, ModelConfig};
+    use crate::fleet::ChipSpec;
+    use crate::kv::KvQuant;
+
+    fn fleet(n: usize, vdd: f64) -> Fleet {
+        let specs = (0..n).map(|i| ChipSpec::general(format!("c{i}"), vdd)).collect();
+        Fleet::build(specs, &HwConfig::default(), &ModelConfig::tiny(), KvQuant::Fp16).unwrap()
+    }
+
+    fn obs<'a>(
+        t_us: f64,
+        tokens: u64,
+        us_p95: f64,
+        queues: &'a [usize],
+        kv: &'a [f64],
+    ) -> GovernorObs<'a> {
+        GovernorObs { t_us, tokens, us_p50: us_p95, us_p95, queue_depths: queues, kv_frac: kv }
+    }
+
+    #[test]
+    fn boosts_one_point_on_queue_burst() {
+        let f = fleet(1, 0.65);
+        let mut gov = DvfsGovernor::new(GovernorConfig::default(), None, 1);
+        let reps = gov.tick(&f, &obs(0.0, 0, 0.0, &[8], &[0.1]));
+        assert_eq!(reps.len(), 1);
+        assert_eq!(reps[0].0, 0);
+        assert_eq!(reps[0].1.to_vdd, 0.75, "one step up the fig7 table");
+        assert_eq!(f.chip(0).current_vdd(), 0.75);
+        assert_eq!(f.chip(0).op_epoch(), 1);
+    }
+
+    #[test]
+    fn drops_one_point_when_idle_and_kv_is_cool() {
+        let f = fleet(1, 0.65);
+        let mut gov = DvfsGovernor::new(GovernorConfig::default(), None, 1);
+        let reps = gov.tick(&f, &obs(0.0, 0, 0.0, &[0], &[0.1]));
+        assert_eq!(reps.len(), 1);
+        assert_eq!(reps[0].1.to_vdd, 0.55);
+        // High KV occupancy blocks the drop even when the queue is empty.
+        let f2 = fleet(1, 0.65);
+        let mut gov2 = DvfsGovernor::new(GovernorConfig::default(), None, 1);
+        assert!(gov2.tick(&f2, &obs(0.0, 0, 0.0, &[0], &[0.95])).is_empty());
+    }
+
+    #[test]
+    fn slo_projection_gates_the_drop() {
+        // At 0.65 V (250 MHz) with p95 = 100 µs, the 0.55 V (150 MHz)
+        // projection is 100 × 250/150 ≈ 167 µs. A 200 µs target with 0.9
+        // headroom (threshold 180) accepts the drop; a 170 µs target
+        // (threshold 153) rejects it and the chip holds its point.
+        let f = fleet(1, 0.65);
+        let mut loose =
+            DvfsGovernor::new(GovernorConfig::default(), Some(SloTarget::decode(200.0)), 1);
+        let reps = loose.tick(&f, &obs(0.0, 50, 100.0, &[0], &[0.0]));
+        assert_eq!(reps.len(), 1);
+        assert_eq!(reps[0].1.to_vdd, 0.55);
+
+        let f2 = fleet(1, 0.65);
+        let mut tight =
+            DvfsGovernor::new(GovernorConfig::default(), Some(SloTarget::decode(170.0)), 1);
+        assert!(tight.tick(&f2, &obs(0.0, 50, 100.0, &[0], &[0.0])).is_empty());
+        assert_eq!(f2.chip(0).op_epoch(), 0, "no re-point, no re-cost obligation");
+    }
+
+    #[test]
+    fn slo_breach_boosts_even_with_shallow_queue() {
+        let f = fleet(1, 0.65);
+        let mut gov =
+            DvfsGovernor::new(GovernorConfig::default(), Some(SloTarget::decode(50.0)), 1);
+        let reps = gov.tick(&f, &obs(0.0, 50, 80.0, &[0], &[0.0]));
+        assert_eq!(reps.len(), 1);
+        assert_eq!(reps[0].1.to_vdd, 0.75);
+    }
+
+    #[test]
+    fn dwell_caps_repoints_at_one_per_window_under_oscillating_load() {
+        // Alternate burst/idle observations every 1 ms against a 50 ms
+        // dwell: without hysteresis the chip would flap every tick; with
+        // it, each 50 ms window admits at most one re-point.
+        let f = fleet(1, 0.65);
+        let mut gov = DvfsGovernor::new(GovernorConfig::default(), None, 1);
+        let mut repoints_at = Vec::new();
+        for tick in 0..200u64 {
+            let t_us = tick as f64 * 1_000.0;
+            let (q, kv) = if tick % 2 == 0 { (8, 0.1) } else { (0, 0.1) };
+            for (chip, rp) in gov.tick(&f, &obs(t_us, 0, 0.0, &[q], &[kv])) {
+                assert_eq!(chip, 0);
+                assert!(!rp.clamped);
+                repoints_at.push(t_us);
+            }
+        }
+        assert!(!repoints_at.is_empty());
+        for w in repoints_at.windows(2) {
+            assert!(
+                w[1] - w[0] >= 50_000.0,
+                "re-points {} µs apart violate the 50 ms dwell",
+                w[1] - w[0]
+            );
+        }
+        // Epoch count equals accepted re-points: every one obligates
+        // exactly one plan-scope re-cost.
+        assert_eq!(f.chip(0).op_epoch(), repoints_at.len() as u64);
+    }
+
+    #[test]
+    fn edge_points_saturate() {
+        let f = fleet(1, 0.85);
+        let mut gov = DvfsGovernor::new(GovernorConfig::default(), None, 1);
+        assert!(gov.tick(&f, &obs(0.0, 0, 0.0, &[8], &[0.1])).is_empty(), "no point above max");
+        let f2 = fleet(1, 0.45);
+        let mut gov2 = DvfsGovernor::new(GovernorConfig::default(), None, 1);
+        assert!(gov2.tick(&f2, &obs(0.0, 0, 0.0, &[0], &[0.1])).is_empty(), "no point below min");
+    }
+
+    #[test]
+    fn gate_latches_on_breach_and_releases_with_hysteresis() {
+        let slo = SloTarget::decode(100.0);
+        let st = ControlState::new();
+        assert!(!st.shedding());
+        slo.update_gate(&st, 10, 150.0);
+        assert!(st.shedding(), "breach latches the gate");
+        // In the hysteresis band (95..=100): stays latched.
+        slo.update_gate(&st, 10, 98.0);
+        assert!(st.shedding());
+        // Empty interval: no evidence, no change.
+        slo.update_gate(&st, 0, 0.0);
+        assert!(st.shedding());
+        slo.update_gate(&st, 10, 90.0);
+        assert!(!st.shedding(), "releases at 95% of target");
+        st.note_door_shed();
+        st.note_repoint();
+        assert_eq!(st.door_sheds(), 1);
+        assert_eq!(st.repoints(), 1);
+    }
+}

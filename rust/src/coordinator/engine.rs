@@ -47,6 +47,7 @@ use crate::coordinator::request::{Request, RequestId, Response, TokenEvent};
 use crate::coordinator::server::WorkerCtx;
 use crate::coordinator::sim_cache::{CachedPass, ChunkClaim, PassKey, SimCache};
 use crate::error::{Error, Result};
+use crate::fleet::Fleet;
 use crate::kv::{KvArenaConfig, KvManager, KvQuant};
 use crate::model::{build_decode_step, build_program, Program};
 use crate::obs::{SpanEvent, SpanKind, SpanWriter};
@@ -329,10 +330,30 @@ pub struct Engine {
     /// disabled hot path allocates and locks nothing).
     obs: Option<SpanWriter>,
     /// Plan-registry namespace ([`PlanRegistry::get_or_compile_scoped`]):
-    /// 0 for the single-chip pool (all workers share plans), `chip + 1`
-    /// for a fleet worker — chips at different operating points compile
-    /// different step timings for the same `(model, group, quant)` key.
+    /// 0 for the single-chip pool (all workers share plans); for a fleet
+    /// worker, [`plan_scope_for`]`(chip, epoch)` — chips at different
+    /// operating points compile different step timings for the same
+    /// `(model, group, quant)` key, and the epoch qualifier means a
+    /// re-pointed chip's stale plans are simply never addressable again.
     plan_scope: u64,
+    /// The fleet this engine's chip lives in (`None`: single-chip pool —
+    /// no runtime re-pointing, every `sync_operating_point` is a no-op).
+    fleet: Option<Arc<Fleet>>,
+    /// Index of the bound chip in `fleet` (worker i ↔ chip i).
+    chip: usize,
+    /// Last chip operating-point epoch this engine re-costed at. The DVFS
+    /// governor bumps the chip's epoch on every re-point; the engine
+    /// adopts it — new `HwConfig`, fresh plan scope, cleared caches —
+    /// before the next batch/step it executes.
+    op_epoch: u64,
+}
+
+/// Plan-registry scope for a fleet chip at an operating-point epoch. Low
+/// 16 bits carry `chip + 1` (0 is the single-chip scope), the rest the
+/// epoch, so every `(chip, epoch)` pair prices into a distinct namespace
+/// and a stale plan can never be fetched after a re-point.
+fn plan_scope_for(chip: usize, epoch: u64) -> u64 {
+    (chip as u64 + 1) | (epoch << 16)
 }
 
 impl Engine {
@@ -393,6 +414,9 @@ impl Engine {
             scratch: DecodeScratch::default(),
             obs: None,
             plan_scope: 0,
+            fleet: None,
+            chip: 0,
+            op_epoch: 0,
         })
     }
 
@@ -408,11 +432,12 @@ impl Engine {
         ctx: &WorkerCtx,
     ) -> Result<Self> {
         // Fleet worker: the factory's HwConfig is the catalog's *base*;
-        // this worker runs its bound chip — pinned operating point, GB
-        // override, and a per-chip plan-registry scope (plans compiled at
-        // one chip's frequency must not serve another's).
+        // this worker runs its bound chip — its *current* operating point
+        // (the governor may have re-pointed it already), GB override, and
+        // a per-chip plan-registry scope (plans compiled at one chip's
+        // frequency must not serve another's).
         if let Some(fleet) = &ctx.fleet {
-            cfg.hw = fleet.chip(ctx.worker).hw.clone();
+            cfg.hw = fleet.chip(ctx.worker).current_hw();
         }
         let kv = match &ctx.kv {
             Some(kv) => Arc::clone(kv),
@@ -427,7 +452,13 @@ impl Engine {
         let mut engine =
             Self::with_parts(artifacts, cfg, Arc::clone(&ctx.sim_cache), kv, Arc::clone(&ctx.plans))?;
         engine.obs = ctx.obs.clone();
-        engine.plan_scope = if ctx.fleet.is_some() { ctx.worker as u64 + 1 } else { 0 };
+        if let Some(fleet) = &ctx.fleet {
+            let epoch = fleet.chip(ctx.worker).op_epoch();
+            engine.fleet = Some(Arc::clone(fleet));
+            engine.chip = ctx.worker;
+            engine.op_epoch = epoch;
+            engine.plan_scope = plan_scope_for(ctx.worker, epoch);
+        }
         Ok(engine)
     }
 
@@ -458,6 +489,40 @@ impl Engine {
     /// the longest prefix the GB keeps resident at the class's batch width.
     pub fn decode_cap(&self, class: BatchClass) -> usize {
         self.decode_caps[class.index()]
+    }
+
+    /// Adopt the bound chip's current operating point if the DVFS governor
+    /// re-pointed it since this engine last priced work. Atomic re-cost of
+    /// everything compiled at the old point — plans are compiled per
+    /// operating point, so a stale plan is a *correctness* bug, not just a
+    /// perf bug: new `HwConfig`, fresh (epoch-qualified) plan scope so
+    /// stale registry entries are unreachable, old scope freed, per-engine
+    /// plan handles/memo/scratch dropped, and the chip's sim cache cleared
+    /// (a `PassKey` does not carry the operating point). `decode_caps` are
+    /// GB-byte-derived and a VDD re-point leaves the GB alone, so the
+    /// admission caps streams were admitted under keep holding.
+    ///
+    /// Called at the top of [`Engine::execute`], [`Engine::begin_prefill`]
+    /// and [`Engine::execute_decode`] — every entry point that prices work
+    /// — so the window between a governor re-point and adoption is at most
+    /// the batch/step already executing, which priced coherently at the
+    /// old point.
+    fn sync_operating_point(&mut self) {
+        let Some(fleet) = &self.fleet else { return };
+        let chip = fleet.chip(self.chip);
+        let epoch = chip.op_epoch();
+        if epoch == self.op_epoch {
+            return;
+        }
+        let old_scope = self.plan_scope;
+        self.cfg.hw = chip.current_hw();
+        self.plan_cache = std::array::from_fn(|_| None);
+        self.plan_memo = [PlanMemoSlot::default(); PLAN_MEMO_SLOTS];
+        self.plan_scratch = None;
+        self.sim_cache.clear();
+        self.op_epoch = epoch;
+        self.plan_scope = plan_scope_for(self.chip, epoch);
+        self.plans.invalidate_scope(old_scope);
     }
 
     fn sim_options(&self, gb: GbBudget) -> SimOptions {
@@ -551,6 +616,27 @@ impl Engine {
             self.plan_cache[group] = Some(plan);
         }
         let plan = Arc::clone(self.plan_cache[group].as_ref().expect("cache just filled"));
+        // Stale-plan detector: a plan compiled at a different operating
+        // point than this engine's current one must never price a step.
+        // `sync_operating_point` + epoch-qualified scopes make this
+        // unreachable; if it ever fires (a future re-point path missing an
+        // invalidation), count it on the chip — the fuzzer's invariant
+        // asserts the counter stays zero — and recompile at the current
+        // point so the step still prices correctly.
+        let plan = if plan.point == self.cfg.hw.max_point() {
+            plan
+        } else {
+            if let Some(fleet) = &self.fleet {
+                fleet.chip(self.chip).note_stale_plan();
+            }
+            self.plan_cache[group] = None;
+            Arc::new(StepPlan::compile_budgeted(
+                &self.cfg.hw,
+                &self.cfg.perf_model,
+                group,
+                self.kv.quant(),
+            ))
+        };
         let parts = match self.plan_scratch.take() {
             Some(parts) => parts,
             None => {
@@ -586,6 +672,7 @@ impl Engine {
     /// A request that arrived while another batch was executing therefore
     /// accrues that wait in `queue_us` and can never go negative.
     pub fn execute(&mut self, batch: FormedBatch) -> Result<ExecOutcome> {
+        self.sync_operating_point();
         let t0 = Instant::now();
         let entry = self.artifacts.get(batch.class)?;
         let d = entry.d_model;
@@ -626,6 +713,7 @@ impl Engine {
         batch: FormedBatch,
         chunk_phases: usize,
     ) -> Result<PrefillState> {
+        self.sync_operating_point();
         let t0 = Instant::now();
         let entry = self.artifacts.get(batch.class)?;
         let slot = entry.seq;
@@ -901,6 +989,7 @@ impl Engine {
     /// reference backend accepts any row count; fixed-shape AOT artifacts
     /// would need dedicated decode executables (ROADMAP).
     pub fn execute_decode(&mut self, group: &mut Vec<DecodeState>) -> Result<DecodeOutcome> {
+        self.sync_operating_point();
         let n = group.len();
         if n == 0 {
             return Ok(DecodeOutcome::default());

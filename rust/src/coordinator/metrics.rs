@@ -10,7 +10,7 @@
 use crate::coordinator::request::RequestId;
 use crate::sim::BatchClass;
 use crate::util::json::Json;
-use crate::util::stats::{Reservoir, Running};
+use crate::util::stats::{percentile, Reservoir, Running, RESERVOIR_CAP};
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Instant;
@@ -78,6 +78,29 @@ struct Inner {
     us_per_token: Reservoir,
     /// Modeled per-token decode energy samples (bounded).
     uj_per_token: Reservoir,
+    /// *Interval* window of modeled us/token samples — everything recorded
+    /// since the last [`ServerMetrics::take_interval`] drain. This is the
+    /// DVFS governor's observation signal: the cumulative reservoirs above
+    /// average over the whole run and go numb to load swings, while this
+    /// window is exactly one sampler tick wide. Bounded: past
+    /// [`RESERVOIR_CAP`] samples, new arrivals ring-overwrite the oldest
+    /// (the count stays exact; percentiles cover the most recent window).
+    interval_us: Vec<f64>,
+    /// Tokens recorded into the current interval (including overwritten).
+    interval_seen: u64,
+}
+
+/// One drained sampler interval of decode-token latency
+/// ([`ServerMetrics::take_interval`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct IntervalStats {
+    /// Tokens recorded since the previous drain (exact even when the
+    /// bounded window overwrote old samples).
+    pub tokens: u64,
+    /// Modeled us/token p50 over the interval window (0 when empty).
+    pub us_per_token_p50: f64,
+    /// Modeled us/token p95 over the interval window (0 when empty).
+    pub us_per_token_p95: f64,
 }
 
 /// The counter snapshot the telemetry sampler reads each interval —
@@ -301,6 +324,32 @@ impl ServerMetrics {
         m.tokens_decoded += 1;
         m.us_per_token.push(ev.us_per_token);
         m.uj_per_token.push(ev.chip_uj);
+        // Interval window: bounded ring-overwrite so a sampler that stalls
+        // (or a pool with telemetry off) never grows this without limit.
+        if m.interval_us.len() < RESERVOIR_CAP {
+            m.interval_us.push(ev.us_per_token);
+        } else {
+            let slot = (m.interval_seen as usize) % RESERVOIR_CAP;
+            m.interval_us[slot] = ev.us_per_token;
+        }
+        m.interval_seen += 1;
+    }
+
+    /// Drain the per-interval us/token window: percentiles over everything
+    /// recorded since the previous drain, then reset. One consumer — the
+    /// telemetry sampler calls this once per tick and shares the result
+    /// with the snapshot ring and the DVFS governor. Empty intervals (no
+    /// decode traffic since the last tick) report zeros, never NaN.
+    pub fn take_interval(&self) -> IntervalStats {
+        let mut m = self.inner.lock().unwrap();
+        let stats = IntervalStats {
+            tokens: m.interval_seen,
+            us_per_token_p50: percentile(&m.interval_us, 50.0),
+            us_per_token_p95: percentile(&m.interval_us, 95.0),
+        };
+        m.interval_us.clear();
+        m.interval_seen = 0;
+        stats
     }
 
     /// One decode step executed (any group size), with the step's padding
@@ -624,6 +673,65 @@ mod tests {
         assert_eq!(j.get("e2e_latency_us_p95").unwrap().as_f64().unwrap(), 150.0);
         assert_eq!(j.get("us_per_token_p50").unwrap().as_f64().unwrap(), 250.0);
         assert_eq!(j.get("tokens_decoded").unwrap().as_f64().unwrap(), n as f64);
+    }
+
+    fn tok(us: f64) -> crate::coordinator::request::TokenEvent {
+        crate::coordinator::request::TokenEvent {
+            id: 1,
+            index: 0,
+            past_len: 8,
+            us_per_token: us,
+            chip_uj: 0.1,
+            ema_bytes: 10,
+            group_past_lens: vec![8],
+            worker: 0,
+            emitted: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn interval_window_boundaries_empty_single_and_wrap() {
+        let m = ServerMetrics::new();
+
+        // Empty interval: no decode traffic since the last drain — zeros,
+        // never NaN (the sampler serializes these straight into JSON).
+        let empty = m.take_interval();
+        assert_eq!(empty, IntervalStats::default());
+        assert!(empty.us_per_token_p50 == 0.0 && empty.us_per_token_p95 == 0.0);
+
+        // Single sample: every percentile IS that sample.
+        m.record_token(&tok(123.0));
+        let one = m.take_interval();
+        assert_eq!(one.tokens, 1);
+        assert_eq!(one.us_per_token_p50, 123.0);
+        assert_eq!(one.us_per_token_p95, 123.0);
+
+        // The drain resets the window: the next interval starts empty.
+        assert_eq!(m.take_interval(), IntervalStats::default());
+
+        // Cumulative percentiles are NOT reset by interval drains.
+        assert_eq!(m.sample().us_per_token_p50, 123.0);
+    }
+
+    #[test]
+    fn interval_window_wraps_past_the_cap() {
+        // Overfill the bounded window: the token count stays exact, and
+        // the percentiles cover the most recent RESERVOIR_CAP samples —
+        // the first (low) half was ring-overwritten by the second (high).
+        let m = ServerMetrics::new();
+        let n = RESERVOIR_CAP as u64 * 2;
+        for i in 0..n {
+            let us = if i < RESERVOIR_CAP as u64 { 1.0 } else { 1000.0 };
+            m.record_token(&tok(us));
+        }
+        let iv = m.take_interval();
+        assert_eq!(iv.tokens, n, "count exact despite overwrites");
+        assert_eq!(iv.us_per_token_p50, 1000.0, "window holds the latest samples");
+        assert_eq!(iv.us_per_token_p95, 1000.0);
+        {
+            let inner = m.inner.lock().unwrap();
+            assert!(inner.interval_us.is_empty(), "drain clears the window");
+        }
     }
 
     #[test]

@@ -37,7 +37,9 @@ pub use engine::{
     DecodeOutcome, DecodeState, Engine, EngineConfig, ExecOutcome, PrefillProgress, PrefillState,
     MAX_DECODE_GROUP,
 };
-pub use metrics::{LedgerAudit, Lifecycle, MetricsSample, ServerMetrics, REPORT_SCHEMA_VERSION};
+pub use metrics::{
+    IntervalStats, LedgerAudit, Lifecycle, MetricsSample, ServerMetrics, REPORT_SCHEMA_VERSION,
+};
 pub use request::{Request, RequestId, Response, TokenEvent};
 pub use server::{
     default_workers, PoolConfig, Server, ServerHandle, ServerReport, Submitter, WorkerCtx,

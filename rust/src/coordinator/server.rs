@@ -65,6 +65,7 @@ use crate::coordinator::engine::{
 use crate::coordinator::metrics::ServerMetrics;
 use crate::coordinator::request::{Request, Response, TokenEvent};
 use crate::coordinator::sim_cache::{CacheStats, SimCache};
+use crate::control::{ControlState, DvfsGovernor, GovernorConfig, GovernorObs, SloTarget};
 use crate::error::{Error, Result};
 use crate::fleet::Fleet;
 use crate::kv::KvManager;
@@ -179,8 +180,22 @@ pub struct PoolConfig {
     /// Time-series sampler: when set, a sampler thread captures one
     /// [`Snapshot`] per interval into a [`Telemetry`] ring (and optional
     /// JSONL stream), and watches for shed storms (see
-    /// [`TelemetryConfig`]).
+    /// [`TelemetryConfig`]). A pool with a governor or SLO configured but
+    /// no telemetry synthesizes a default config — the control plane rides
+    /// the sampler thread, so it must exist.
     pub telemetry: Option<TelemetryConfig>,
+    /// SLO targets for the control plane: the sampler gates generate
+    /// admission on interval decode-p95 breaches (with hysteresis), and
+    /// the DVFS governor (when on) uses the target to qualify drops.
+    /// `None` (default): no gate, no SLO term in governor decisions.
+    pub slo: Option<SloTarget>,
+    /// Runtime DVFS governor ([`crate::control`]): rides the sampler
+    /// thread, re-points each chip within its fig7 table from queue depth,
+    /// KV occupancy and interval percentiles. Requires a `fleet` (the
+    /// governor steers per-chip operating points) — ignored without one.
+    /// `None` (default): chips hold their build-time points forever and
+    /// the pool's behavior is identical to a governor-less build.
+    pub governor: Option<GovernorConfig>,
     pub batcher: BatcherConfig,
 }
 
@@ -213,6 +228,8 @@ impl Default for PoolConfig {
             lifecycle_ledger: false,
             recorder: None,
             telemetry: None,
+            slo: None,
+            governor: None,
             batcher: BatcherConfig::default(),
         }
     }
@@ -394,6 +411,14 @@ impl WorkQueue {
         self.len_hint.load(Ordering::Relaxed)
     }
 
+    /// Per-chip work depth (queued prefill batches + parked chunks + decode
+    /// streams between steps) — the governor's real, wall-clock burst
+    /// signal. One lock acquisition for all lanes.
+    fn depths(&self) -> Vec<usize> {
+        let s = self.state.lock().unwrap();
+        s.chips.iter().map(|c| c.prefill_len() + c.parked.len() + c.decode.len()).collect()
+    }
+
     /// Block for the next work item; `None` once the queue is closed and
     /// drained. `warm` is the class the calling worker last executed;
     /// `prefer_prefill` breaks ties when both kinds of work wait (workers
@@ -525,6 +550,9 @@ pub struct Submitter {
     fleet: Option<Arc<Fleet>>,
     /// Admission-door span writer (admit/door-shed markers).
     obs: Option<SpanWriter>,
+    /// Control-plane state: when the sampler's SLO gate latches shedding,
+    /// generate admissions reject at the door until the breach clears.
+    control: Option<Arc<ControlState>>,
     /// Send gate: submits hold the read side across the closed-check +
     /// send, shutdown takes the write side to flip it — so no send can be
     /// in flight when the pool closes, and a submit that returned `Ok` is
@@ -589,6 +617,28 @@ impl Submitter {
                     self.queue_depth
                 )),
             ));
+        }
+        // SLO gate: while the sampler has a decode-p95 breach latched, the
+        // door sheds generate traffic (new decode load is what digs the
+        // breach deeper; encode-only requests pass — they hold no decode
+        // residency). Checked before the KV projection so a shed request
+        // never touches an arena.
+        if req.generate > 0 {
+            if let Some(ctl) = &self.control {
+                if ctl.shedding() {
+                    self.inflight.fetch_sub(1, Ordering::AcqRel);
+                    self.metrics.record_rejected();
+                    ctl.note_door_shed();
+                    self.mark_door_shed(req.id);
+                    return Err((
+                        req,
+                        Error::serve(
+                            "slo breach: decode p95 over target, shedding generate traffic"
+                                .to_string(),
+                        ),
+                    ));
+                }
+            }
         }
         // Generate requests are additionally bounded by the KV arena: the
         // pool won't accept more projected decode state than the arena's
@@ -684,6 +734,7 @@ pub struct ServerHandle {
     fleet: Option<Arc<Fleet>>,
     recorder: Option<Arc<FlightRecorder>>,
     telemetry: Option<Arc<Telemetry>>,
+    control: Option<Arc<ControlState>>,
     sampler: Option<JoinHandle<()>>,
     sampler_stop: Arc<AtomicBool>,
     ingest: Option<JoinHandle<()>>,
@@ -747,6 +798,12 @@ impl ServerHandle {
         self.telemetry.as_ref()
     }
 
+    /// Shared control-plane state (SLO gate + governor counters), when the
+    /// pool was started with an SLO or governor configured.
+    pub fn control(&self) -> Option<&Arc<ControlState>> {
+        self.control.as_ref()
+    }
+
     /// Stop the pool: the ingest thread drains the batcher into the work
     /// queue and closes it, every worker drains the queue dry, then all
     /// threads join. In-flight batches are never dropped.
@@ -794,6 +851,7 @@ impl ServerHandle {
             fleet: self.fleet.clone(),
             recorder: self.recorder.clone(),
             telemetry: self.telemetry.clone(),
+            control: self.control.clone(),
         })
     }
 
@@ -821,6 +879,10 @@ pub struct ServerReport {
     pub recorder: Option<Arc<FlightRecorder>>,
     /// The sampler's snapshot ring (when telemetry was on).
     pub telemetry: Option<Arc<Telemetry>>,
+    /// Control-plane state (when an SLO or governor was configured) — the
+    /// report's `control` JSON key exists only in this case, so static
+    /// configs keep a bit-identical report shape.
+    pub control: Option<Arc<ControlState>>,
 }
 
 impl ServerReport {
@@ -866,6 +928,30 @@ impl ServerReport {
             }
             if let Some(t) = &self.telemetry {
                 m.insert("telemetry_snapshots".to_string(), Json::num(t.taken() as f64));
+            }
+            if let Some(ctl) = &self.control {
+                let chip_vdd: Vec<Json> = self
+                    .fleet
+                    .iter()
+                    .flat_map(|f| f.chips.iter())
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("chip_id", Json::str(&*c.spec.id)),
+                            ("vdd", Json::num(c.current_vdd())),
+                            ("op_epoch", Json::num(c.op_epoch() as f64)),
+                            ("stale_plan_hits", Json::num(c.stale_plan_hits() as f64)),
+                        ])
+                    })
+                    .collect();
+                m.insert(
+                    "control".to_string(),
+                    Json::obj(vec![
+                        ("dvfs_repoints", Json::num(ctl.repoints() as f64)),
+                        ("slo_door_sheds", Json::num(ctl.door_sheds() as f64)),
+                        ("slo_shedding_now", Json::num(if ctl.shedding() { 1.0 } else { 0.0 })),
+                        ("chip_vdd", Json::Arr(chip_vdd)),
+                    ]),
+                );
             }
             m.insert(
                 "workers".to_string(),
@@ -1038,7 +1124,14 @@ impl Server {
         let sampler_stop = Arc::new(AtomicBool::new(false));
         let mut telemetry: Option<Arc<Telemetry>> = None;
         let mut sampler: Option<JoinHandle<()>> = None;
-        if let Some(tcfg) = cfg.telemetry.clone() {
+        // The control plane rides the sampler thread: an SLO or governor
+        // without telemetry configured synthesizes a default sampler
+        // config so the control loop always actually runs.
+        let control: Option<Arc<ControlState>> =
+            (cfg.slo.is_some() || cfg.governor.is_some()).then(|| Arc::new(ControlState::new()));
+        let telemetry_cfg =
+            cfg.telemetry.clone().or_else(|| control.is_some().then(TelemetryConfig::default));
+        if let Some(tcfg) = telemetry_cfg {
             let ring = Arc::new(Telemetry::new(tcfg.capacity));
             telemetry = Some(Arc::clone(&ring));
             let stop = Arc::clone(&sampler_stop);
@@ -1049,6 +1142,14 @@ impl Server {
             let kv_shared = Arc::clone(&kv_shared);
             let sampler_fleet = fleet.clone();
             let rec = recorder.clone();
+            // The governor steers per-chip operating points — without a
+            // fleet there is no chip to re-point, so it stays inert.
+            let governor = match (cfg.governor, &fleet) {
+                (Some(g), Some(_)) => Some(DvfsGovernor::new(g, cfg.slo, n_chips)),
+                _ => None,
+            };
+            let slo = cfg.slo;
+            let ctl = control.clone();
             sampler = Some(
                 std::thread::Builder::new()
                     .name("trex-sampler".to_string())
@@ -1064,6 +1165,9 @@ impl Server {
                             kv_shared,
                             sampler_fleet,
                             rec,
+                            ctl,
+                            governor,
+                            slo,
                         )
                     })
                     .expect("spawn sampler thread"),
@@ -1081,6 +1185,7 @@ impl Server {
                 obs: recorder
                     .as_ref()
                     .map(|r| SpanWriter::new(Arc::clone(r), r.admit_lane())),
+                control: control.clone(),
                 closed: Arc::new(RwLock::new(false)),
                 queue_depth: cfg.queue_depth,
                 max_inflight: cfg.max_inflight,
@@ -1095,6 +1200,7 @@ impl Server {
             fleet,
             recorder,
             telemetry,
+            control,
             sampler,
             sampler_stop,
             ingest: Some(ingest),
@@ -1110,6 +1216,13 @@ impl Server {
 /// configured threshold drains the flight recorder to the anomaly-dump
 /// path, exactly once per run. Takes one closing snapshot at shutdown so
 /// even sub-interval runs record the final state.
+///
+/// The control plane rides here: each interval the sampler drains the
+/// metrics sink's interval window, updates the SLO admission gate, and
+/// runs one governor tick — every accepted re-point bumps the chip's
+/// operating-point epoch (obligating the bound engine to re-cost its plan
+/// scope and sim caches before its next priced step) and records a
+/// [`SpanKind::DvfsRepoint`] marker on the admit lane.
 #[allow(clippy::too_many_arguments)]
 fn sampler_loop(
     cfg: TelemetryConfig,
@@ -1122,6 +1235,9 @@ fn sampler_loop(
     kv_shared: Arc<OnceLock<Arc<KvManager>>>,
     fleet: Option<Arc<Fleet>>,
     recorder: Option<Arc<FlightRecorder>>,
+    control: Option<Arc<ControlState>>,
+    mut governor: Option<DvfsGovernor>,
+    slo: Option<SloTarget>,
 ) {
     use std::io::Write;
     let started = Instant::now();
@@ -1131,9 +1247,56 @@ fn sampler_loop(
     let dump_once = crate::obs::DumpOnce::new();
     let mut last_shed: u64 = 0;
     let interval = cfg.interval.max(Duration::from_micros(100));
+    // Governor-decision markers ride the admit lane: re-points gate what
+    // the door and the workers will see next, and the lane exists whenever
+    // tracing is on.
+    let gov_span =
+        recorder.as_ref().map(|r| SpanWriter::new(Arc::clone(r), r.admit_lane()));
     loop {
         let stopping = stop.load(Ordering::Acquire);
         let m = metrics.sample();
+        // Drain this interval's latency window (exactly once per tick) and
+        // run the control plane on it.
+        let iv = metrics.take_interval();
+        if let (Some(slo), Some(ctl)) = (&slo, &control) {
+            slo.update_gate(ctl, iv.tokens, iv.us_per_token_p95);
+        }
+        if let (Some(gov), Some(f)) = (governor.as_mut(), &fleet) {
+            let depths = queue.depths();
+            let kv_frac: Vec<f64> = f
+                .chips
+                .iter()
+                .map(|c| {
+                    let cap = c.kv.capacity_pages();
+                    if cap == 0 {
+                        0.0
+                    } else {
+                        c.kv.used_pages() as f64 / cap as f64
+                    }
+                })
+                .collect();
+            let obs = GovernorObs {
+                t_us: started.elapsed().as_secs_f64() * 1e6,
+                tokens: iv.tokens,
+                us_p50: iv.us_per_token_p50,
+                us_p95: iv.us_per_token_p95,
+                queue_depths: &depths,
+                kv_frac: &kv_frac,
+            };
+            for (chip_idx, rp) in gov.tick(f, &obs) {
+                if let Some(ctl) = &control {
+                    ctl.note_repoint();
+                }
+                if let Some(w) = &gov_span {
+                    let mut ev =
+                        SpanEvent::marker(SpanKind::DvfsRepoint, chip_idx as u64, w.now_us());
+                    ev.group = chip_idx as u32;
+                    ev.chip_us = rp.from_vdd;
+                    ev.chip_uj = rp.to_vdd;
+                    w.record(ev);
+                }
+            }
+        }
         // The pool's arena is either the configured one or the engines'
         // shared fallback (installed by the first worker); a fleet sums
         // its per-chip arenas into the pool-wide gauges.
@@ -1171,6 +1334,12 @@ fn sampler_loop(
             us_per_token_p95: m.us_per_token_p95,
             uj_per_token_p50: m.uj_per_token_p50,
             uj_per_token_p95: m.uj_per_token_p95,
+            interval_tokens: iv.tokens,
+            interval_us_p50: iv.us_per_token_p50,
+            interval_us_p95: iv.us_per_token_p95,
+            dvfs_repoints: control.as_ref().map(|c| c.repoints()).unwrap_or(0),
+            slo_shedding: control.as_ref().map(|c| c.shedding()).unwrap_or(false),
+            slo_door_sheds: control.as_ref().map(|c| c.door_sheds()).unwrap_or(0),
         };
         ring.push(snap);
         if let Some(f) = &mut out {
@@ -1396,7 +1565,11 @@ fn worker_loop(
                     if let Some(m) = fleet.chips[chip].kv.migrate_out(st.id) {
                         let moved = fleet.chips[target].kv.migrate_in(st.id, &m);
                         if moved > 0 {
-                            let hw = &fleet.chips[chip].hw;
+                            // Priced at the source chip's *current*
+                            // operating point — a re-pointed chip's DMA
+                            // runs at its runtime frequency, not the
+                            // build-time pin.
+                            let hw = fleet.chips[chip].current_hw();
                             st.charge_migration(
                                 hw.dram_ns(moved as usize) * 1e-3,
                                 hw.dram_pj(moved as usize) * 1e-6,

@@ -241,6 +241,19 @@ impl SimCache {
         self.in_flight.lock().unwrap().len()
     }
 
+    /// Drop every cached pass, returning how many were evicted. Hit/miss
+    /// counters and in-flight chunked claims are untouched — a claim's
+    /// owner is mid-simulation and will publish into the fresh map. Used
+    /// when the pricing config a cache's entries were simulated under
+    /// changes (a runtime DVFS re-point): `PassKey` carries no operating
+    /// point, so every entry is stale the moment the chip moves.
+    pub fn clear(&self) -> usize {
+        let mut map = self.map.write().unwrap();
+        let n = map.len();
+        map.clear();
+        n
+    }
+
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
@@ -281,6 +294,24 @@ mod tests {
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.entries), (4, 1, 1));
         assert!((s.hit_rate() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clear_evicts_entries_but_keeps_counters() {
+        let cache = SimCache::new();
+        cache.get_or_simulate(PassKey::prefill(BatchClass::B4, 8), || pass(1.0));
+        cache.get_or_simulate(PassKey::decode(4, 16, KvQuant::Fp16), || pass(2.0));
+        assert_eq!(cache.clear(), 2);
+        assert!(cache.is_empty());
+        // Cleared entries re-simulate (the point: stale pricing is gone)...
+        let mut recomputed = false;
+        cache.get_or_simulate(PassKey::prefill(BatchClass::B4, 8), || {
+            recomputed = true;
+            pass(9.0)
+        });
+        assert!(recomputed);
+        // ...and the lifetime hit/miss history survives the wipe.
+        assert_eq!(cache.stats().misses, 3);
     }
 
     #[test]

@@ -35,7 +35,8 @@ use crate::coordinator::request::RequestId;
 use crate::error::{Error, Result};
 use crate::kv::{KvArenaConfig, KvManager, KvQuant};
 use crate::util::json::Json;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// What phase of the workload a chip is provisioned for. Placement only —
 /// a `Prefill` chip still *can* run decode (and does when the fleet has no
@@ -174,17 +175,107 @@ impl ChipSpec {
     }
 }
 
+/// What one runtime re-point did ([`Chip::repoint`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Repoint {
+    pub from_vdd: f64,
+    pub to_vdd: f64,
+    /// Operating-point epoch after the bump. Engines compare their adopted
+    /// epoch against [`Chip::op_epoch`] before pricing and re-cost their
+    /// plan scope + sim caches on mismatch.
+    pub epoch: u64,
+    /// The requested vdd fell outside the fig7 table and was clamped to an
+    /// edge point ([`HwConfig::point_at_vdd_checked`]).
+    pub clamped: bool,
+}
+
 /// A built fleet chip: spec + pinned hardware + its own KV arena.
 #[derive(Debug)]
 pub struct Chip {
     pub spec: ChipSpec,
     /// The base config pinned at the spec's operating point, GB override
     /// applied. Plans, the simulator and DRAM pricing on this chip's
-    /// worker all run through this.
+    /// worker all run through this *until the first runtime re-point*;
+    /// after one, the worker's engine re-derives its pricing config via
+    /// [`Chip::current_hw`].
     pub hw: HwConfig,
+    /// The base (multi-point fig7 table) config the chip re-points within
+    /// at runtime, GB override applied — `pinned_at_vdd` over this table
+    /// is how every runtime operating point is derived.
+    base_hw: HwConfig,
     /// This chip's KV arena: admission projects against it, residency and
     /// eviction are local to it, migrations move bytes between arenas.
     pub kv: Arc<KvManager>,
+    /// Current runtime operating voltage (== `spec.vdd` until the DVFS
+    /// governor re-points the chip).
+    vdd_now: Mutex<f64>,
+    /// Bumped once per re-point. Epoch 0 is the build-time pinning; a
+    /// worker engine whose adopted epoch trails this value must re-cost
+    /// its plan scope and sim caches before pricing anything.
+    op_epoch: AtomicU64,
+    /// Compiled plans consumed whose operating point mismatched the chip's
+    /// current one — a stale-plan pricing bug. Must stay 0; the fuzzer
+    /// asserts it after every drain.
+    stale_plan_hits: AtomicU64,
+}
+
+impl Chip {
+    /// The chip's current operating voltage.
+    pub fn current_vdd(&self) -> f64 {
+        *self.vdd_now.lock().unwrap()
+    }
+
+    /// Operating-point epoch: 0 until the first runtime re-point.
+    pub fn op_epoch(&self) -> u64 {
+        self.op_epoch.load(Ordering::SeqCst)
+    }
+
+    /// Pricing config for the chip's *current* operating point: the base
+    /// table pinned at [`Chip::current_vdd`]. Identical to [`Chip::hw`]
+    /// at epoch 0.
+    pub fn current_hw(&self) -> HwConfig {
+        self.base_hw.pinned_at_vdd(self.current_vdd())
+    }
+
+    /// Re-point the chip at runtime to the operating point at `vdd`
+    /// (interpolated/clamped over the base fig7 table). Returns `None`
+    /// when the chip is already at that point (no epoch bump — engines
+    /// never re-cost for a no-op). Otherwise bumps the epoch, which
+    /// obligates the bound worker's engine to invalidate its plan scope
+    /// and sim caches before the next priced step.
+    pub fn repoint(&self, vdd: f64) -> Option<Repoint> {
+        let (point, clamped) = self.base_hw.point_at_vdd_checked(vdd);
+        let mut cur = self.vdd_now.lock().unwrap();
+        if point.vdd == *cur {
+            return None;
+        }
+        let from_vdd = *cur;
+        *cur = point.vdd;
+        let epoch = self.op_epoch.fetch_add(1, Ordering::SeqCst) + 1;
+        Some(Repoint { from_vdd, to_vdd: point.vdd, epoch, clamped })
+    }
+
+    /// The fig7 operating-point table this chip re-points within (GB
+    /// override applied) — the DVFS governor's menu of discrete points.
+    pub fn operating_points(&self) -> &[crate::config::OperatingPoint] {
+        &self.base_hw.points
+    }
+
+    /// The chip's current operating point (interpolated over the base
+    /// table at [`Chip::current_vdd`]).
+    pub fn current_point(&self) -> crate::config::OperatingPoint {
+        self.base_hw.point_at_vdd(self.current_vdd())
+    }
+
+    /// Record a stale-plan consumption (see `stale_plan_hits`).
+    pub fn note_stale_plan(&self) {
+        self.stale_plan_hits.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Plans consumed at a mismatched operating point so far (must be 0).
+    pub fn stale_plan_hits(&self) -> u64 {
+        self.stale_plan_hits.load(Ordering::SeqCst)
+    }
 }
 
 /// The built catalog plus deterministic placement. Construct with
@@ -224,20 +315,39 @@ impl Fleet {
                     s.id
                 )));
             }
+            // Catalog parsing already rejects these; programmatically-built
+            // specs get the same chip-indexed guarantee (a NaN vdd would
+            // otherwise pin a NaN operating point and poison all pricing).
+            if !s.vdd.is_finite() || s.vdd <= 0.0 {
+                return Err(Error::config(format!(
+                    "fleet: chip {i} ('{}'): vdd must be a positive voltage, got {}",
+                    s.id, s.vdd
+                )));
+            }
         }
         let mut chips = Vec::with_capacity(specs.len());
         for spec in specs {
-            let mut hw = base_hw.pinned_at_vdd(spec.vdd);
+            let mut base = base_hw.clone();
             if let Some(gb) = spec.gb_bytes {
-                hw.gb_bytes = gb;
+                base.gb_bytes = gb;
             }
+            let hw = base.pinned_at_vdd(spec.vdd);
             hw.validate()?;
             let kv = Arc::new(KvManager::new(
                 &hw,
                 model,
                 KvArenaConfig::for_pool(&hw, model, quant, spec.kv_pages),
             ));
-            chips.push(Chip { spec, hw, kv });
+            let vdd_now = Mutex::new(hw.max_point().vdd);
+            chips.push(Chip {
+                spec,
+                hw,
+                base_hw: base,
+                kv,
+                vdd_now,
+                op_epoch: AtomicU64::new(0),
+                stale_plan_hits: AtomicU64::new(0),
+            });
         }
         let takes = |f: fn(ChipRole) -> bool| {
             let list: Vec<usize> =
@@ -370,6 +480,63 @@ mod tests {
         for id in 0..16u64 {
             assert!(fleet.decode_chip_index(None, id) >= 2);
         }
+    }
+
+    #[test]
+    fn build_rejects_nan_and_negative_vdd_with_chip_index() {
+        for bad in [f64::NAN, -0.45, 0.0, f64::INFINITY] {
+            let specs = vec![
+                ChipSpec::general("ok", 0.65),
+                ChipSpec::general("bad", bad),
+            ];
+            let e = Fleet::build(specs, &HwConfig::default(), &ModelConfig::tiny(), KvQuant::Fp16)
+                .unwrap_err()
+                .to_string();
+            assert!(e.contains("chip 1 ('bad')") && e.contains("positive voltage"), "{e}");
+        }
+    }
+
+    #[test]
+    fn repoint_bumps_epoch_and_reprices_current_hw() {
+        let fleet = build_fleet(vec![ChipSpec::general("g0", 0.85)]);
+        let chip = fleet.chip(0);
+        assert_eq!(chip.op_epoch(), 0);
+        assert_eq!(chip.current_vdd(), 0.85);
+        assert_eq!(chip.current_hw().max_point(), chip.hw.max_point());
+
+        let r = chip.repoint(0.45).expect("a real move");
+        assert_eq!((r.from_vdd, r.to_vdd, r.epoch, r.clamped), (0.85, 0.45, 1, false));
+        assert_eq!(chip.op_epoch(), 1);
+        assert_eq!(chip.current_vdd(), 0.45);
+        let now = chip.current_hw();
+        assert_eq!(now.points.len(), 1, "runtime hw stays one-point pinned");
+        assert!((now.max_point().freq_mhz - 60.0).abs() < 1e-9);
+
+        // Re-pointing to the point already held is a no-op: no epoch bump,
+        // so engines never re-cost for nothing.
+        assert!(chip.repoint(0.45).is_none());
+        assert_eq!(chip.op_epoch(), 1);
+
+        // Out-of-table requests clamp to the edge and say so.
+        let r = chip.repoint(2.0).expect("clamped move");
+        assert!(r.clamped);
+        assert_eq!(r.to_vdd, 0.85);
+        assert_eq!(chip.op_epoch(), 2);
+
+        // Stale-plan counter starts clean and counts notes.
+        assert_eq!(chip.stale_plan_hits(), 0);
+        chip.note_stale_plan();
+        assert_eq!(chip.stale_plan_hits(), 1);
+    }
+
+    #[test]
+    fn repoint_preserves_gb_override() {
+        let mut spec = ChipSpec::general("g0", 0.85);
+        spec.gb_bytes = Some(2 << 20);
+        let fleet = build_fleet(vec![spec]);
+        let chip = fleet.chip(0);
+        chip.repoint(0.55).unwrap();
+        assert_eq!(chip.current_hw().gb_bytes, 2 << 20);
     }
 
     #[test]

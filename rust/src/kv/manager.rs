@@ -901,6 +901,12 @@ impl KvManager {
         self.inner.lock().unwrap().arena.used_pages()
     }
 
+    /// Total arena capacity, pages (used / capacity is the occupancy
+    /// fraction the DVFS governor gates drops on).
+    pub fn capacity_pages(&self) -> usize {
+        self.cfg.capacity_pages
+    }
+
     /// Live (admitted, unreleased) streams.
     pub fn live_streams(&self) -> usize {
         self.inner.lock().unwrap().streams.len()

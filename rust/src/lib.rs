@@ -19,7 +19,8 @@
 //!   global buffer, LPDDR3 DMA) with energy and utilization accounting, the
 //!   dense baseline accelerator used for the paper's comparisons, and the
 //!   paged KV-cache manager that governs decode residency in the GB.
-//! * **System** — [`coordinator`], [`runtime`], [`workload`], [`obs`]: a
+//! * **System** — [`coordinator`], [`control`], [`runtime`], [`workload`],
+//!   [`obs`]: a
 //!   production-shaped serving stack: dynamic batcher, engine,
 //!   multi-threaded server, a PJRT runtime that executes the AOT-compiled
 //!   JAX/Pallas numerics, trace-driven workload tooling (request-trace
@@ -34,6 +35,7 @@ pub mod baseline;
 pub mod bench_util;
 pub mod compress;
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod error;
 pub mod factorize;

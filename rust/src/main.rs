@@ -15,6 +15,9 @@
 //!              [--spans-out FILE]        # span JSONL export
 //!              [--telemetry-out FILE]    # time-series snapshot JSONL
 //!              [--shed-storm-threshold N] # anomaly-dump on shed storms
+//!              [--slo-p95-us F]          # decode-p95 SLO target (gates generate admission)
+//!              [--dvfs]                  # runtime DVFS governor (requires --fleet)
+//!              [--dvfs-dwell-ms N]       # min ms between re-points of one chip (default 50)
 //!   trex fuzz  [--iters N] [--seed S] [--progress-every N] [--dump-dir DIR]
 //!                                        # seeded scenario fuzzer (scheduler invariants)
 //!   trex inspect --trace FILE [--top N] [--json]
@@ -27,6 +30,7 @@ use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
 use std::time::Duration;
 use trex::config::{HwConfig, ModelConfig, WORKLOADS};
+use trex::control::{GovernorConfig, SloTarget};
 use trex::coordinator::{
     default_workers, BatcherConfig, DecodePolicy, Engine, EngineConfig, PoolConfig, Server,
     TraceGenerator,
@@ -94,6 +98,11 @@ fn main() -> CliResult {
                  \n           [--spans-out FILE]  (flight-recorder export, span JSONL)\
                  \n           [--telemetry-out FILE]  (time-series snapshot JSONL, 10ms sampling)\
                  \n           [--shed-storm-threshold N]  (dump the recorder when N sheds hit one interval)\
+                 \n           [--slo-p95-us F]  (decode-p95 SLO target, µs/token: the door sheds\
+                 \n            generate traffic while the interval p95 breaches it)\
+                 \n           [--dvfs] [--dvfs-dwell-ms N]  (runtime DVFS governor, requires --fleet:\
+                 \n            re-points each chip within the fig7 table — boost on bursts/breach,\
+                 \n            drop to the cheapest SLO-compliant point when queues are shallow)\
                  \n  fuzz     [--iters N] [--seed S] [--progress-every N] [--dump-dir DIR]\
                  \n           (seeded scenario fuzzer: random pool configs x request schedules,\
                  \n            checks conservation / kv-leak / token-ordering invariants;\
@@ -190,6 +199,14 @@ fn cmd_serve(args: &[String]) -> CliResult {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(0);
+    // SLO-driven control plane: a decode-p95 target gates generate
+    // admission; --dvfs turns on the runtime governor (per-chip operating
+    // points — meaningless without a fleet, rejected below).
+    let slo_p95_us: Option<f64> =
+        arg_value(args, "--slo-p95-us").map(|s| s.parse()).transpose()?;
+    let dvfs = args.iter().any(|a| a == "--dvfs");
+    let dvfs_dwell_ms: u64 =
+        arg_value(args, "--dvfs-dwell-ms").map(|s| s.parse()).transpose()?.unwrap_or(50);
     let dir = arg_value(args, "--artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(artifacts::default_dir);
@@ -224,6 +241,11 @@ fn cmd_serve(args: &[String]) -> CliResult {
         Some(f) => f.n_chips(),
         None => workers,
     };
+    if dvfs && fleet.is_none() {
+        return Err("--dvfs requires --fleet: the governor re-points per-chip operating \
+                    points, and only a fleet carries runtime-re-pointable chips"
+            .into());
+    }
     if (generate > 0 || trace_generates) && use_pjrt {
         // Decode steps run 1–4-row planes; the AOT executables are
         // fixed-shape, so every step would fail and shed its group. Refuse
@@ -303,6 +325,11 @@ fn cmd_serve(args: &[String]) -> CliResult {
         lifecycle_ledger: trace.is_some(),
         recorder: recorder.clone(),
         telemetry: telemetry_cfg,
+        slo: slo_p95_us.map(SloTarget::decode),
+        governor: dvfs.then(|| GovernorConfig {
+            dwell_us: dvfs_dwell_ms as f64 * 1e3,
+            ..GovernorConfig::default()
+        }),
         batcher: BatcherConfig { max_seq, max_wait: Duration::from_millis(2) },
     };
     let handle = Server::start_pool(

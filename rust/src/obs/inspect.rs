@@ -110,7 +110,17 @@ pub fn summarize(events: &[SpanEvent], topk: usize) -> Json {
     let mut per_lane: BTreeMap<u32, PhaseAgg> = BTreeMap::new(); // lane == chip in fleet traces
     let mut door_sheds: Vec<f64> = Vec::new();
     let mut late_sheds: Vec<f64> = Vec::new();
+    // DVFS re-points per chip: (t_us, from_vdd, to_vdd) — the markers
+    // carry the voltages in chip_us/chip_uj (see [`SpanKind::DvfsRepoint`]).
+    let mut dvfs: BTreeMap<u32, Vec<(f64, f64, f64)>> = BTreeMap::new();
     for ev in events {
+        if ev.kind == SpanKind::DvfsRepoint {
+            // Not chip time: the payload is a voltage transition. Count it
+            // in the phase table but keep it out of every µs/µJ aggregate.
+            phases.entry(ev.kind.name()).or_default().count += 1;
+            dvfs.entry(ev.group).or_default().push((ev.t_start_us, ev.chip_us, ev.chip_uj));
+            continue;
+        }
         let agg = phases.entry(ev.kind.name()).or_default();
         agg.count += 1;
         agg.wall_us += ev.dur_us();
@@ -204,11 +214,43 @@ pub fn summarize(events: &[SpanEvent], topk: usize) -> Json {
             .collect(),
     );
 
+    // Governor-decision summary: total re-points plus each chip's VDD
+    // timeline in trace order.
+    let repoint_total: u64 = dvfs.values().map(|v| v.len() as u64).sum();
+    let dvfs_json = Json::obj(vec![
+        ("repoints", Json::num(repoint_total as f64)),
+        (
+            "chips",
+            Json::Obj(
+                dvfs.iter()
+                    .map(|(chip, moves)| {
+                        (
+                            format!("chip{chip}"),
+                            Json::Arr(
+                                moves
+                                    .iter()
+                                    .map(|(t, from, to)| {
+                                        Json::obj(vec![
+                                            ("t_us", Json::num(*t)),
+                                            ("from_vdd", Json::num(*from)),
+                                            ("to_vdd", Json::num(*to)),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+
     let timeline = ShedTimeline::from_instants(&door_sheds, &late_sheds, 20);
     Json::obj(vec![
         ("events", Json::num(events.len() as f64)),
         ("phases", phase_json),
         ("lanes", lanes_json),
+        ("dvfs", dvfs_json),
         ("slowest", slowest_json),
         ("shed_timeline", timeline.to_json()),
     ])
@@ -250,6 +292,35 @@ pub fn render_summary(summary: &Json) -> String {
                     f("chip_us"),
                     f("chip_uj"),
                 ));
+            }
+        }
+    }
+    let repoints = summary
+        .opt("dvfs")
+        .and_then(|d| d.opt("repoints"))
+        .and_then(|v| v.as_f64().ok())
+        .unwrap_or(0.0);
+    if repoints > 0.0 {
+        s.push_str(&format!("\ndvfs re-points: {repoints:.0}\n"));
+        let chips = summary.opt("dvfs").and_then(|d| d.opt("chips")).map(|c| c.as_obj());
+        if let Some(Ok(chips)) = chips {
+            for (name, moves) in chips {
+                if let Ok(moves) = moves.as_arr() {
+                    let path: Vec<String> = moves
+                        .iter()
+                        .map(|m| {
+                            let f =
+                                |k: &str| m.opt(k).and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+                            format!(
+                                "{:.2}V→{:.2}V @{:.0}us",
+                                f("from_vdd"),
+                                f("to_vdd"),
+                                f("t_us")
+                            )
+                        })
+                        .collect();
+                    s.push_str(&format!("  {:<8} {}\n", name, path.join("; ")));
+                }
             }
         }
     }
@@ -364,6 +435,48 @@ mod tests {
         assert_eq!(lane0.get("chip_us").unwrap().as_f64().unwrap(), 25.0);
         assert_eq!(lane1.get("chip_us").unwrap().as_f64().unwrap(), 23.0);
         assert!(render_summary(&s).contains("per-lane chip time"));
+    }
+
+    #[test]
+    fn dvfs_repoints_summarize_as_per_chip_vdd_timelines() {
+        let mut events = sample_events();
+        // Two re-points on chip 1, one on chip 0 (voltages ride in
+        // chip_us/chip_uj; group = chip).
+        for (chip, t, from, to) in
+            [(1u32, 100.0, 0.85, 0.75), (0u32, 150.0, 0.85, 0.65), (1u32, 200.0, 0.75, 0.65)]
+        {
+            let mut ev = SpanEvent::marker(SpanKind::DvfsRepoint, chip as u64, t);
+            ev.group = chip;
+            ev.chip_us = from;
+            ev.chip_uj = to;
+            events.push(ev);
+        }
+        let s = summarize(&events, 3);
+        let dvfs = s.get("dvfs").unwrap();
+        assert_eq!(dvfs.get("repoints").unwrap().as_f64().unwrap(), 3.0);
+        let chips = dvfs.get("chips").unwrap();
+        let c1 = chips.get("chip1").unwrap().as_arr().unwrap();
+        assert_eq!(c1.len(), 2);
+        assert_eq!(c1[0].get("from_vdd").unwrap().as_f64().unwrap(), 0.85);
+        assert_eq!(c1[1].get("to_vdd").unwrap().as_f64().unwrap(), 0.65);
+        // The markers stay out of the per-lane chip-time attribution (their
+        // payload is volts, not µs/µJ): lane 0 sums exactly the prefill
+        // (25) + decode (23) chip time, no 0.85-volt crumbs added.
+        let lane0 = s.get("lanes").unwrap().get("lane0").unwrap();
+        assert_eq!(lane0.get("chip_us").unwrap().as_f64().unwrap(), 48.0);
+        assert_eq!(
+            s.get("phases").unwrap().get("dvfs_repoint").unwrap().get("count").unwrap()
+                .as_f64()
+                .unwrap(),
+            3.0
+        );
+        let text = render_summary(&s);
+        assert!(text.contains("dvfs re-points: 3"));
+        assert!(text.contains("chip1"));
+        assert!(text.contains("0.85V→0.75V"));
+        // Round-trips through the JSONL exporter like every other kind.
+        let parsed = parse_trace(&spans_jsonl(&events)).unwrap();
+        assert_eq!(parsed.len(), events.len());
     }
 
     #[test]

@@ -51,6 +51,10 @@ pub enum SpanKind {
     /// KV pages migrated between chips' arenas (marker; fleet mode —
     /// `ema_bytes` carries the priced transfer).
     KvMigrate,
+    /// A chip's DVFS governor re-pointed its operating point (marker,
+    /// admit lane; `id`/`group` = chip, `chip_us` = old VDD, `chip_uj` =
+    /// new VDD).
+    DvfsRepoint,
     /// Response built (marker; terminal).
     Complete,
     /// Admitted request shed post-admission (marker; terminal).
@@ -70,6 +74,7 @@ impl SpanKind {
             SpanKind::KvEvict => "kv_evict",
             SpanKind::KvCowFork => "kv_cow_fork",
             SpanKind::KvMigrate => "kv_migrate",
+            SpanKind::DvfsRepoint => "dvfs_repoint",
             SpanKind::Complete => "complete",
             SpanKind::Shed => "shed",
         }
@@ -87,6 +92,7 @@ impl SpanKind {
             "kv_evict" => SpanKind::KvEvict,
             "kv_cow_fork" => SpanKind::KvCowFork,
             "kv_migrate" => SpanKind::KvMigrate,
+            "dvfs_repoint" => SpanKind::DvfsRepoint,
             "complete" => SpanKind::Complete,
             "shed" => SpanKind::Shed,
             _ => return None,
@@ -392,6 +398,7 @@ mod tests {
             SpanKind::KvEvict,
             SpanKind::KvCowFork,
             SpanKind::KvMigrate,
+            SpanKind::DvfsRepoint,
             SpanKind::Complete,
             SpanKind::Shed,
         ] {

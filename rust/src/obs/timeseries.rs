@@ -69,6 +69,20 @@ pub struct Snapshot {
     pub us_per_token_p95: f64,
     pub uj_per_token_p50: f64,
     pub uj_per_token_p95: f64,
+    /// Decode tokens recorded within THIS sampling interval (the us/µJ
+    /// percentiles above are cumulative; these three are one interval
+    /// wide — the DVFS governor's observation signal).
+    pub interval_tokens: u64,
+    pub interval_us_p50: f64,
+    pub interval_us_p95: f64,
+    /// Cumulative DVFS re-points across all chips (0 with the governor
+    /// off or absent).
+    pub dvfs_repoints: u64,
+    /// The SLO admission gate was shedding generate traffic when this
+    /// snapshot was taken.
+    pub slo_shedding: bool,
+    /// Cumulative generate requests shed at the door by the SLO gate.
+    pub slo_door_sheds: u64,
 }
 
 impl Snapshot {
@@ -91,6 +105,12 @@ impl Snapshot {
             ("us_per_token_p95", Json::num(self.us_per_token_p95)),
             ("uj_per_token_p50", Json::num(self.uj_per_token_p50)),
             ("uj_per_token_p95", Json::num(self.uj_per_token_p95)),
+            ("interval_tokens", Json::num(self.interval_tokens as f64)),
+            ("interval_us_p50", Json::num(self.interval_us_p50)),
+            ("interval_us_p95", Json::num(self.interval_us_p95)),
+            ("dvfs_repoints", Json::num(self.dvfs_repoints as f64)),
+            ("slo_shedding", Json::num(if self.slo_shedding { 1.0 } else { 0.0 })),
+            ("slo_door_sheds", Json::num(self.slo_door_sheds as f64)),
         ])
     }
 }
@@ -276,6 +296,30 @@ mod tests {
             REPORT_SCHEMA_VERSION
         );
         assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn snapshot_json_carries_control_plane_fields() {
+        let s = Snapshot {
+            interval_tokens: 42,
+            interval_us_p50: 100.0,
+            interval_us_p95: 250.0,
+            dvfs_repoints: 3,
+            slo_shedding: true,
+            slo_door_sheds: 7,
+            ..Snapshot::default()
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("interval_tokens").unwrap().as_u64().unwrap(), 42);
+        assert_eq!(j.get("interval_us_p95").unwrap().as_f64().unwrap(), 250.0);
+        assert_eq!(j.get("dvfs_repoints").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(j.get("slo_shedding").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(j.get("slo_door_sheds").unwrap().as_u64().unwrap(), 7);
+        // Off/absent control plane: the defaults serialize as zeros — pure
+        // additions, schema version unchanged.
+        let d = Snapshot::default().to_json();
+        assert_eq!(d.get("dvfs_repoints").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(d.get("slo_shedding").unwrap().as_u64().unwrap(), 0);
     }
 
     #[test]

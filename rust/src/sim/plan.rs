@@ -493,6 +493,18 @@ impl PlanRegistry {
         plan
     }
 
+    /// Drop every plan compiled under `scope`, returning how many were
+    /// evicted. A runtime DVFS re-point retires a chip's whole scope: the
+    /// engine moves to a fresh epoch-qualified scope (so stale plans are
+    /// unaddressable immediately) and then invalidates the old one here so
+    /// the registry doesn't accumulate one plan set per re-point forever.
+    pub fn invalidate_scope(&self, scope: u64) -> usize {
+        let mut map = self.plans.write().unwrap();
+        let before = map.len();
+        map.retain(|key, _| key.3 != scope);
+        before - map.len()
+    }
+
     pub fn len(&self) -> usize {
         self.plans.read().unwrap().len()
     }
@@ -624,5 +636,16 @@ mod tests {
             unreachable!("scope 0 must hit the unscoped entry's plan")
         });
         assert_eq!(reg.len(), 5);
+        // Retiring a scope (a DVFS re-point) drops exactly its plans; a
+        // later compile under the same scope is a fresh compile.
+        assert_eq!(reg.invalidate_scope(2), 1);
+        assert_eq!(reg.len(), 4);
+        let mut recompiled = false;
+        reg.get_or_compile_scoped(2, &m.name, 4, KvQuant::Fp16, || {
+            recompiled = true;
+            StepPlan::compile_budgeted(&pinned, &m, 4, KvQuant::Fp16)
+        });
+        assert!(recompiled, "invalidated scope must recompile");
+        assert_eq!(reg.invalidate_scope(99), 0, "unknown scope is a no-op");
     }
 }

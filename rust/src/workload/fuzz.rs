@@ -31,6 +31,7 @@
 //! `cargo run --release -- fuzz --seed <seed> --iters 1`.
 
 use crate::config::{HwConfig, ModelConfig};
+use crate::control::{GovernorConfig, SloTarget};
 use crate::coordinator::{
     BatcherConfig, DecodePolicy, Engine, EngineConfig, Lifecycle, PoolConfig, Request, Server,
 };
@@ -88,6 +89,17 @@ pub struct Scenario {
     /// sheds racing mid-migration streams all get fuzzed. The residual
     /// invariant then applies to EVERY chip's arena.
     fleet: Vec<(ChipRole, f64)>,
+    /// Runtime DVFS governor (fleet scenarios only — inert without chips
+    /// to re-point): re-points race decode steps, and the stale-plan
+    /// invariant (every re-point's epoch bump re-costs the plan scope
+    /// before the next priced step) gets checked under fuzz interleaving.
+    dvfs: bool,
+    /// Governor dwell, µs (small values on purpose: more re-points race
+    /// more steps).
+    dvfs_dwell_us: u64,
+    /// Decode-p95 SLO target: gates generate admission and qualifies
+    /// governor drops.
+    slo_p95_us: Option<f64>,
     pub reqs: Vec<ReqSpec>,
 }
 
@@ -154,6 +166,19 @@ impl Scenario {
             let vdds = [0.45, 0.60, 0.85];
             (0..n_chips).map(|_| (roles[rng.below(3)], vdds[rng.below(3)])).collect()
         };
+        // Governor/SLO draws append after the fleet draws — the same
+        // append-LAST contract: every pre-existing draw keeps its position
+        // in the seed's stream, so old seeds still replay their old
+        // scenarios bit-identically. (Draw unconditionally, gate on the
+        // fleet afterwards, so the stream shape never depends on content.)
+        let dvfs_roll = rng.f64() < 0.4;
+        let dvfs_dwell_us = [1_000, 10_000, 50_000][rng.below(3)];
+        let slo_p95_us = if rng.f64() < 0.3 {
+            Some([500.0, 5_000.0, 50_000.0][rng.below(3)])
+        } else {
+            None
+        };
+        let dvfs = dvfs_roll && !fleet.is_empty();
         Scenario {
             seed,
             workers,
@@ -170,6 +195,9 @@ impl Scenario {
             early_shutdown,
             drop_tokens,
             fleet,
+            dvfs,
+            dvfs_dwell_us,
+            slo_p95_us,
             reqs,
         }
     }
@@ -185,10 +213,20 @@ impl Scenario {
                 .collect::<Vec<_>>()
                 .join(",")
         };
+        let governor = if self.dvfs {
+            format!("dwell_us={}", self.dvfs_dwell_us)
+        } else {
+            "off".to_string()
+        };
+        let slo = match self.slo_p95_us {
+            Some(t) => format!("{t}us"),
+            None => "none".to_string(),
+        };
         format!(
             "workers={} queue_depth={} max_inflight={} prefill_chunk={} \
              decode={:?} wait_us={} priority={} batcher_wait_us={} \
-             kv={}x{}pages oversub={} early_shutdown={} drop_tokens={} fleet=[{fleet}]",
+             kv={}x{}pages oversub={} early_shutdown={} drop_tokens={} fleet=[{fleet}] \
+             dvfs=[{governor}] slo_p95=[{slo}]",
             self.workers,
             self.queue_depth,
             self.max_inflight,
@@ -423,7 +461,14 @@ fn exec(sc: &Scenario, reqs: &[ReqSpec], dump_to: Option<&Path>) -> (Vec<String>
         fleet: fleet.clone(),
         lifecycle_ledger: true,
         recorder: Some(Arc::clone(&recorder)),
+        // `None` is synthesized into a default telemetry config by the pool
+        // whenever the control plane is on (the governor rides the sampler).
         telemetry: None,
+        slo: sc.slo_p95_us.map(SloTarget::decode),
+        governor: sc.dvfs.then(|| GovernorConfig {
+            dwell_us: sc.dvfs_dwell_us as f64,
+            ..GovernorConfig::default()
+        }),
         batcher: BatcherConfig {
             max_seq,
             max_wait: Duration::from_micros(sc.batcher_wait_us),
@@ -542,6 +587,28 @@ fn exec(sc: &Scenario, reqs: &[ReqSpec], dump_to: Option<&Path>) -> (Vec<String>
                         chip.spec.id
                     ));
                 }
+                // Invariant 5 — no stale-plan pricing: every governor
+                // re-point bumps the chip's op epoch, and the engine must
+                // re-cost its plan scope before the next priced step. A
+                // nonzero counter means some step was priced against a plan
+                // compiled for a previous operating point.
+                let stale = chip.stale_plan_hits();
+                if stale != 0 {
+                    violations.push(format!(
+                        "chip {i} ('{}') priced {stale} step(s) against a stale \
+                         plan after a re-point",
+                        chip.spec.id
+                    ));
+                }
+                // And with the governor off, nothing may re-point at all:
+                // static configs must stay bit-identical to governorless runs.
+                if !sc.dvfs && chip.op_epoch() != 0 {
+                    violations.push(format!(
+                        "chip {i} ('{}') re-pointed {} time(s) with the governor off",
+                        chip.spec.id,
+                        chip.op_epoch()
+                    ));
+                }
             }
         }
         None => {
@@ -657,6 +724,40 @@ mod tests {
         }
         assert!(multi > 0, "no seed in 0..64 drew a multi-chip fleet");
         assert!(mixed_roles > 0, "no seed in 0..64 drew a role-split fleet");
+    }
+
+    #[test]
+    fn governor_draws_actually_mix() {
+        // The stale-plan invariant is vacuous if no scenario ever turns the
+        // governor on; same for the SLO door gate.
+        let mut governed = 0usize;
+        let mut slo = 0usize;
+        for seed in 0..64u64 {
+            let sc = Scenario::from_seed(seed);
+            if sc.dvfs {
+                governed += 1;
+            }
+            if sc.slo_p95_us.is_some() {
+                slo += 1;
+            }
+        }
+        assert!(governed > 0, "no seed in 0..64 drew a governed fleet");
+        assert!(slo > 0, "no seed in 0..64 drew an SLO target");
+    }
+
+    #[test]
+    fn forced_governor_scenario_holds_invariants() {
+        // A deterministic governed fleet with a tiny dwell: re-points race
+        // decode steps, so the stale-plan invariant (epoch bump re-costs the
+        // plan scope before the next priced step) is exercised rather than
+        // vacuously true.
+        let mut sc = Scenario::from_seed(0xD7F5);
+        sc.fleet = vec![(ChipRole::General, 0.85), (ChipRole::General, 0.85)];
+        sc.dvfs = true;
+        sc.dvfs_dwell_us = 500;
+        sc.slo_p95_us = Some(5_000.0);
+        let (violations, _) = exec(&sc, &sc.reqs, None);
+        assert!(violations.is_empty(), "{violations:?}");
     }
 
     #[test]

@@ -1,0 +1,265 @@
+//! Control-plane integration over the deterministic reference backend:
+//! governor-off fleet runs stay bit-identical to the pre-control-plane
+//! pool (no re-points, no control section in the report, reproducible
+//! modeled pricing), governor-on runs re-point chips at runtime without
+//! ever pricing a step against a stale plan, and the SLO door sheds
+//! generate traffic while the decode-p95 target is breached.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+use trex::config::{HwConfig, ModelConfig};
+use trex::control::{GovernorConfig, SloTarget};
+use trex::coordinator::{
+    BatcherConfig, Engine, EngineConfig, PoolConfig, Request, Server, ServerHandle,
+};
+use trex::fleet::{ChipSpec, Fleet};
+use trex::kv::KvQuant;
+use trex::obs::{FlightRecorder, SpanKind, TelemetryConfig};
+use trex::runtime::ArtifactSet;
+
+const MAX_SEQ: usize = 32;
+const D: usize = 64;
+
+fn start(pool: PoolConfig) -> ServerHandle {
+    let hw = HwConfig::default();
+    let pm = ModelConfig::tiny();
+    Server::start_pool(
+        move |ctx| {
+            let set = ArtifactSet::reference("ctl", D, MAX_SEQ)?;
+            Engine::for_worker(
+                set,
+                EngineConfig {
+                    hw: hw.clone(),
+                    perf_model: pm.clone(),
+                    self_test: false,
+                    kv_quant: KvQuant::Fp16,
+                    kv_pages: None,
+                },
+                ctx,
+            )
+        },
+        pool,
+    )
+}
+
+fn two_chip_fleet(vdd: f64) -> Arc<Fleet> {
+    Arc::new(
+        Fleet::build(
+            vec![ChipSpec::general("g0", vdd), ChipSpec::general("g1", vdd)],
+            &HwConfig::default(),
+            &ModelConfig::tiny(),
+            KvQuant::Fp16,
+        )
+        .expect("fleet build"),
+    )
+}
+
+/// One serialized pass over a single-chip fleet: submit → await each
+/// response, so decode grouping (and therefore modeled pricing) is a pure
+/// function of the engine, not of thread timing.
+fn serialized_pricing(fleet: &Arc<Fleet>) -> BTreeMap<u64, (f64, f64, usize)> {
+    let handle = start(PoolConfig {
+        fleet: Some(Arc::clone(fleet)),
+        batcher: BatcherConfig { max_seq: MAX_SEQ, max_wait: Duration::ZERO },
+        ..PoolConfig::default()
+    });
+    let mut out = BTreeMap::new();
+    for id in 0..6u64 {
+        let req = Request::new(id, 6, vec![0.1; 6 * D]).with_generate(4);
+        handle.submit(req).unwrap();
+        let resp = handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+        out.insert(resp.id, (resp.chip_us, resp.chip_uj, resp.tokens_generated));
+    }
+    handle.shutdown().unwrap();
+    out
+}
+
+/// Governor off == the pre-control-plane pool: two identical runs price
+/// identically (bit-identical modeled µs/µJ), no chip ever re-points, and
+/// the report carries no control section at all.
+#[test]
+fn governor_off_static_fleet_is_bit_identical_and_never_repoints() {
+    let one_chip = || {
+        Arc::new(
+            Fleet::build(
+                vec![ChipSpec::general("g0", 0.65)],
+                &HwConfig::default(),
+                &ModelConfig::tiny(),
+                KvQuant::Fp16,
+            )
+            .unwrap(),
+        )
+    };
+    let fleet_a = one_chip();
+    let fleet_b = one_chip();
+    let a = serialized_pricing(&fleet_a);
+    let b = serialized_pricing(&fleet_b);
+    assert_eq!(a.len(), 6);
+    for (id, (us_a, uj_a, tok_a)) in &a {
+        let (us_b, uj_b, tok_b) = &b[id];
+        assert_eq!(tok_a, tok_b, "request {id} decoded a different token count");
+        assert_eq!(
+            us_a.to_bits(),
+            us_b.to_bits(),
+            "request {id} modeled chip_us differs across identical static runs"
+        );
+        assert_eq!(
+            uj_a.to_bits(),
+            uj_b.to_bits(),
+            "request {id} modeled chip_uj differs across identical static runs"
+        );
+    }
+    for f in [&fleet_a, &fleet_b] {
+        for chip in &f.chips {
+            assert_eq!(chip.op_epoch(), 0, "static run re-pointed chip '{}'", chip.spec.id);
+            assert_eq!(chip.stale_plan_hits(), 0);
+            assert!((chip.current_vdd() - 0.65).abs() < 1e-12);
+        }
+    }
+
+    // And the report JSON has no control section when nothing configured it.
+    let handle = start(PoolConfig {
+        fleet: Some(two_chip_fleet(0.85)),
+        batcher: BatcherConfig { max_seq: MAX_SEQ, max_wait: Duration::ZERO },
+        ..PoolConfig::default()
+    });
+    handle.submit(Request::new(0, 6, vec![0.1; 6 * D]).with_generate(2)).unwrap();
+    let _ = handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    let report = handle.shutdown().unwrap();
+    let doc = report.json();
+    let obj = doc.as_obj().expect("report is a JSON object");
+    assert!(
+        !obj.contains_key("control"),
+        "governor-off report must not grow a control section"
+    );
+}
+
+/// Governor on: a paced trace against a 0.85 V fleet walks chips down the
+/// fig7 table. Every re-point bumps the chip's plan epoch, the engine
+/// re-costs before the next priced step (zero stale-plan hits), the
+/// re-points land as `dvfs_repoint` span markers, and the report grows a
+/// control section with the per-chip VDD.
+#[test]
+fn governor_repoints_recost_plans_and_emit_spans() {
+    let fleet = two_chip_fleet(0.85);
+    let recorder = Arc::new(FlightRecorder::for_pool(2, 4096));
+    let handle = start(PoolConfig {
+        fleet: Some(Arc::clone(&fleet)),
+        lifecycle_ledger: true,
+        recorder: Some(Arc::clone(&recorder)),
+        telemetry: Some(TelemetryConfig {
+            interval: Duration::from_micros(500),
+            capacity: 4096,
+            ..TelemetryConfig::default()
+        }),
+        governor: Some(GovernorConfig { dwell_us: 500.0, ..GovernorConfig::default() }),
+        batcher: BatcherConfig { max_seq: MAX_SEQ, max_wait: Duration::from_micros(200) },
+        ..PoolConfig::default()
+    });
+    let metrics = Arc::clone(&handle.metrics);
+    // Paced valley: queues stay shallow, so the governor drops.
+    for id in 0..40u64 {
+        std::thread::sleep(Duration::from_micros(800));
+        let req = Request::new(id, 6, vec![0.1; 6 * D]).with_generate(4);
+        handle.submit(req).unwrap();
+    }
+    let mut got = 0;
+    while got < 40 {
+        handle.responses.recv_timeout(Duration::from_secs(30)).expect("drain");
+        got += 1;
+    }
+    let report = handle.shutdown().unwrap();
+    assert!(metrics.ledger_audit().is_some_and(|a| a.conserved()));
+
+    let control = report.control.as_ref().expect("governed run carries control state");
+    assert!(control.repoints() >= 1, "governor never re-pointed on a shallow valley");
+    for chip in &fleet.chips {
+        assert!(
+            chip.op_epoch() >= 1,
+            "chip '{}' never re-pointed (epoch 0)",
+            chip.spec.id
+        );
+        assert!(
+            chip.current_vdd() < 0.85 - 1e-9,
+            "chip '{}' should have dropped below its 0.85 V start, is at {}",
+            chip.spec.id,
+            chip.current_vdd()
+        );
+        assert_eq!(
+            chip.stale_plan_hits(),
+            0,
+            "chip '{}' priced a step against a stale plan after a re-point",
+            chip.spec.id
+        );
+        assert!(chip.kv.residual().is_clean());
+    }
+
+    // Each re-point is a span marker carrying the VDD transition.
+    let events = recorder.snapshot();
+    let repoints: Vec<_> =
+        events.iter().filter(|e| e.kind == SpanKind::DvfsRepoint).collect();
+    assert_eq!(
+        repoints.len() as u64,
+        control.repoints(),
+        "every governor decision must land in the flight recorder"
+    );
+    for ev in &repoints {
+        assert!((ev.group as usize) < fleet.n_chips());
+        assert!(
+            (ev.chip_us - ev.chip_uj).abs() > 1e-9,
+            "a re-point marker must record an actual VDD transition"
+        );
+    }
+
+    // The report grows a control section with the per-chip operating state.
+    let doc = report.json();
+    let ctl = doc.get("control").expect("governed report carries a control section");
+    assert!(ctl.get("dvfs_repoints").and_then(|j| j.as_f64()).unwrap_or(0.0) >= 1.0);
+    let chips = ctl.get("chip_vdd").expect("chip_vdd field").as_arr().expect("chip_vdd array");
+    assert_eq!(chips.len(), fleet.n_chips());
+}
+
+/// SLO admission: an impossible decode-p95 target latches the door shut
+/// for generate traffic after the first sampled interval — chat requests
+/// shed with an SLO-attributed error while embed traffic still passes.
+#[test]
+fn slo_gate_sheds_generate_traffic_on_breach() {
+    let handle = start(PoolConfig {
+        workers: 1,
+        telemetry: Some(TelemetryConfig {
+            interval: Duration::from_micros(500),
+            capacity: 4096,
+            ..TelemetryConfig::default()
+        }),
+        slo: Some(SloTarget::decode(0.001)),
+        batcher: BatcherConfig { max_seq: MAX_SEQ, max_wait: Duration::ZERO },
+        ..PoolConfig::default()
+    });
+    // First request lands before any interval has sampled a breach.
+    handle.submit(Request::new(0, 6, vec![0.1; 6 * D]).with_generate(4)).unwrap();
+    let _ = handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    // Give the sampler a few intervals to observe the breach and latch.
+    std::thread::sleep(Duration::from_millis(20));
+    let ctl = handle.control().expect("slo config creates control state").clone();
+    assert!(ctl.shedding(), "an impossible target must latch the gate");
+
+    let shed = handle
+        .try_submit(Request::new(1, 6, vec![0.1; 6 * D]).with_generate(4))
+        .expect_err("generate traffic must shed while the gate is latched");
+    assert!(
+        shed.1.to_string().contains("slo breach"),
+        "shed error must attribute the SLO: {}",
+        shed.1
+    );
+    assert!(ctl.door_sheds() >= 1);
+
+    // Embed traffic (no decode) is not governed by the decode-p95 gate.
+    handle.try_submit(Request::new(2, 6, vec![0.1; 6 * D])).expect("embed must pass");
+    let resp = handle.responses.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(resp.id, 2);
+    let report = handle.shutdown().unwrap();
+    let doc = report.json();
+    let ctl_json = doc.get("control").expect("slo report carries a control section");
+    assert!(ctl_json.get("slo_door_sheds").and_then(|j| j.as_f64()).unwrap_or(0.0) >= 1.0);
+}
